@@ -1,0 +1,162 @@
+//! End-to-end pipeline: proves **all layers compose** on a real small
+//! workload, and reports the paper's headline metrics.
+//!
+//! Stages:
+//!   1. **L1/L2 via PJRT** — load the AOT-compiled JAX/Pallas distance
+//!      artifacts (`make artifacts`) and cross-check the compiled kernels
+//!      against the native rust metrics on real data batches. Python is
+//!      *not* running: the HLO was lowered at build time.
+//!   2. **L3 streaming build** — stream a labeled high-dimensional dataset
+//!      (Blobs, Table 1) through the coordinator, with periodic
+//!      re-clustering, exactly like `fishdbc stream`.
+//!   3. **Baseline** — exact O(n²) HDBSCAN* on the same data.
+//!   4. **Report** — the paper's headline claims, measured here:
+//!      scalability (distance calls ≪ n², build ≫ cluster time) and
+//!      quality (AMI*/ARI* close to the exact baseline; Tables 3, 6).
+//!
+//! Run with:
+//! ```text
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use std::time::Instant;
+
+use fishdbc::coordinator::{Coordinator, CoordinatorConfig};
+use fishdbc::datasets;
+use fishdbc::distances::vector;
+use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::hdbscan::exact::{exact_hdbscan, ExactParams};
+use fishdbc::metrics::score_external;
+use fishdbc::runtime::{default_artifacts_dir, Runtime};
+
+fn main() {
+    let n = 3000;
+    let dim = 128;
+    println!("=== FISHDBC end-to-end pipeline ===");
+    println!("workload: blobs n={n} dim={dim} (10 Gaussian centers, Table 1)\n");
+    let ds = datasets::blobs::generate(n, dim, 10, 20260710);
+    ds.validate().expect("generated dataset must be valid");
+    let truth = ds.primary_labels().expect("blobs is labeled").to_vec();
+
+    // ---- stage 1: PJRT kernels (L1/L2) ------------------------------------
+    println!("[1/4] PJRT runtime: compiled JAX/Pallas distance kernels");
+    let arts = default_artifacts_dir();
+    match Runtime::load(&arts) {
+        Ok(rt) => {
+            println!("  platform {:?}, {} modules", rt.platform(), rt.module_names().len());
+            let module = rt
+                .find_query_module("euclidean", dim)
+                .expect("euclidean module covering dim");
+            println!("  using {} (B={}, D={}, k={:?})", module.name, module.b, module.d, module.k);
+            let name = module.name.clone();
+            let b = module.b;
+
+            // batch the first item against the next `b` as a real query
+            let q = ds.items[0].as_dense();
+            let cands: Vec<&[f32]> =
+                ds.items[1..=b.min(n - 1)].iter().map(|it| it.as_dense()).collect();
+            let t0 = Instant::now();
+            let out = rt.query_topk(&name, q, &cands).expect("kernel exec");
+            let kernel_t = t0.elapsed().as_secs_f64();
+
+            // verify against native rust on every row
+            let mut max_err = 0f64;
+            for (i, c) in cands.iter().enumerate() {
+                let want = vector::euclidean(q, c);
+                max_err = max_err.max((out.dists[i] as f64 - want).abs());
+            }
+            println!(
+                "  {} distances in {:.4}s via PJRT, max |kernel-native| = {:.2e}",
+                cands.len(),
+                kernel_t,
+                max_err
+            );
+            assert!(max_err < 1e-2, "compiled kernel disagrees with native");
+            println!("  nearest neighbors of item 0: {:?}", &out.topk[..3.min(out.topk.len())]);
+        }
+        Err(e) => {
+            println!("  SKIPPED — artifacts not built ({e:#}); run `make artifacts`");
+        }
+    }
+
+    // ---- stage 2: streaming FISHDBC build (L3) -----------------------------
+    println!("\n[2/4] streaming FISHDBC build (coordinator, chunked ingestion)");
+    let params = FishdbcParams { min_pts: 10, ef: 20, ..Default::default() };
+    let coord = Coordinator::spawn(ds.metric, CoordinatorConfig {
+        fishdbc: params,
+        mcs: 10,
+        recluster_every: 1000,
+        queue_depth: 8,
+    });
+    let t0 = Instant::now();
+    for chunk in ds.items.chunks(250) {
+        coord.add_batch(chunk.to_vec());
+    }
+    let snap = coord.cluster(10);
+    let wall_build = t0.elapsed().as_secs_f64();
+    let stats = coord.stats();
+    println!(
+        "  built in {wall_build:.2}s wall ({:.2}s cpu build, {} auto re-clusters)",
+        stats.build_secs, stats.reclusters
+    );
+    println!(
+        "  {} dist calls = {:.2}% of n² ; cluster extraction {:.4}s",
+        stats.fishdbc.dist_calls,
+        100.0 * stats.fishdbc.dist_calls as f64 / (n as f64 * n as f64),
+        snap.extract_secs
+    );
+    let fish = snap.clustering.clone();
+    coord.shutdown();
+
+    // ---- stage 3: exact HDBSCAN* baseline ----------------------------------
+    println!("\n[3/4] exact HDBSCAN* baseline (full O(n²) reachability)");
+    let t0 = Instant::now();
+    let exact = exact_hdbscan(
+        &ds.items,
+        &ds.metric,
+        ExactParams { min_pts: 10, mcs: 10, matrix_budget: None },
+    )
+    .expect("exact baseline");
+    let exact_t = t0.elapsed().as_secs_f64();
+    println!(
+        "  done in {exact_t:.2}s with {} dist calls ({}x FISHDBC's)",
+        exact.dist_calls,
+        exact.dist_calls / stats.fishdbc.dist_calls.max(1)
+    );
+
+    // ---- stage 4: headline report -------------------------------------------
+    println!("\n[4/4] paper-vs-measured headline metrics");
+    let sf = score_external(&fish.labels, &truth);
+    let se = score_external(&exact.clustering.labels, &truth);
+    println!("  {:<22} {:>8} {:>8} {:>8} {:>8} {:>9} {:>10}",
+        "", "AMI", "AMI*", "ARI", "ARI*", "clusters", "clustered");
+    println!(
+        "  {:<22} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>9} {:>10}",
+        "FISHDBC (ef=20)", sf.ami, sf.ami_star, sf.ari, sf.ari_star,
+        fish.n_clusters, fish.n_clustered()
+    );
+    println!(
+        "  {:<22} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>9} {:>10}",
+        "HDBSCAN* (exact)", se.ami, se.ami_star, se.ari, se.ari_star,
+        exact.clustering.n_clusters, exact.clustering.n_clustered()
+    );
+
+    let speedup = exact_t / wall_build;
+    println!("\nheadline: build speedup {speedup:.1}x, dist-call reduction {:.0}x, \
+              cluster-vs-build ratio {:.0}x cheaper",
+        exact.dist_calls as f64 / stats.fishdbc.dist_calls as f64,
+        stats.build_secs / snap.extract_secs.max(1e-9));
+
+    // The paper's claims, asserted on this workload (Tables 3, 6, 8):
+    assert!(
+        stats.fishdbc.dist_calls * 4 < exact.dist_calls,
+        "FISHDBC must compute far fewer distances than the exact baseline"
+    );
+    assert!(
+        snap.extract_secs * 10.0 < stats.build_secs.max(1e-3),
+        "cluster extraction must be much cheaper than the build"
+    );
+    assert!(sf.ami_star > 0.85, "quality must stay close to exact (AMI* {})", sf.ami_star);
+    assert!(se.ami_star > 0.85, "exact baseline sanity");
+    println!("\nall end-to-end assertions passed ✔");
+}

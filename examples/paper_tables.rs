@@ -1,0 +1,195 @@
+//! Regenerate the paper's *quality* tables (Tables 2, 4, 5, 6, 7) at a
+//! configurable scale: for each dataset, run FISHDBC with ef ∈ {20, 50}
+//! and the exact HDBSCAN* baseline, and print the same rows the paper
+//! reports. Runtime tables/figures live in `rust/benches/` (`cargo bench`).
+//!
+//! Absolute numbers differ from the paper (synthetic data substitutes,
+//! different hardware) — the *shape* is what must hold: FISHDBC ≈ exact on
+//! quality, sometimes better via the regularization effect (§3), with far
+//! fewer distance calls.
+//!
+//! Run with:
+//! ```text
+//! cargo run --release --example paper_tables [-- --scale 0.2]
+//! ```
+
+use fishdbc::cli;
+use fishdbc::datasets::{self, Dataset};
+use fishdbc::distances::{Item, MetricKind};
+use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
+use fishdbc::hdbscan::exact::{exact_hdbscan, ExactParams};
+use fishdbc::hdbscan::Clustering;
+use fishdbc::metrics::{internal, score_external};
+
+struct Run {
+    who: String,
+    clustering: Clustering,
+    dist_calls: u64,
+}
+
+/// FISHDBC at a given ef, plus the exact baseline, on one dataset.
+fn run_all(ds: &Dataset, min_pts: usize, efs: &[usize]) -> Vec<Run> {
+    let mut out = Vec::new();
+    for &ef in efs {
+        let mut f: Fishdbc<Item, MetricKind> = Fishdbc::new(
+            ds.metric,
+            FishdbcParams { min_pts, ef, ..Default::default() },
+        );
+        for it in ds.items.iter().cloned() {
+            f.add(it);
+        }
+        let clustering = f.cluster(min_pts);
+        out.push(Run {
+            who: format!("FISHDBC(ef={ef})"),
+            clustering,
+            dist_calls: f.dist_calls(),
+        });
+    }
+    let exact = exact_hdbscan(
+        &ds.items,
+        &ds.metric,
+        ExactParams { min_pts, mcs: min_pts, matrix_budget: None },
+    )
+    .expect("exact baseline");
+    out.push(Run {
+        who: "HDBSCAN*".into(),
+        clustering: exact.clustering,
+        dist_calls: exact.dist_calls,
+    });
+    out
+}
+
+/// Tables 2/4/5/6: external quality per label set.
+fn external_table(ds: &Dataset, runs: &[Run]) {
+    println!(
+        "  {:<16} {:>9} | {}",
+        "algorithm",
+        "#clust.",
+        ds.label_sets
+            .iter()
+            .map(|(n, _)| format!("{:<7}{:>6}{:>6}", n, "AMI", "AMI*"))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    );
+    for r in runs {
+        let mut cells = Vec::new();
+        for (_, truth) in &ds.label_sets {
+            let s = score_external(&r.clustering.labels, truth);
+            cells.push(format!("       {:>6.2}{:>6.2}", s.ami, s.ami_star));
+        }
+        println!(
+            "  {:<16} {:>9} | {}",
+            r.who,
+            r.clustering.n_clustered(),
+            cells.join(" | ")
+        );
+    }
+}
+
+/// Table 7: internal quality (clusters, clustered, silhouette, intra/inter).
+fn internal_table(ds: &Dataset, runs: &[Run], silhouette_max: usize) {
+    println!(
+        "  {:<16} {:>7} {:>7} {:>6} {:>6} {:>10} {:>7} {:>7}",
+        "algorithm", "flat", "hier.", "flatC", "hierC", "silhouette", "intra", "inter"
+    );
+    for r in runs {
+        let sc = internal::score_internal(
+            &ds.items,
+            &r.clustering.labels,
+            &ds.metric,
+            silhouette_max,
+            99,
+        );
+        let sil = match sc.silhouette {
+            Some(s) => format!("{s:>10.3}"),
+            None => format!("{:>10}", "OOM"),
+        };
+        println!(
+            "  {:<16} {:>7} {:>7} {:>6} {:>6} {} {:>7.3} {:>7.3}",
+            r.who,
+            r.clustering.n_clustered(),
+            r.clustering.n_hierarchical_clustered(),
+            r.clustering.n_clusters,
+            r.clustering.n_hierarchical_clusters(),
+            sil,
+            sc.intra,
+            sc.inter
+        );
+    }
+}
+
+fn dist_calls_line(n: usize, runs: &[Run]) {
+    let cells: Vec<String> = runs
+        .iter()
+        .map(|r| {
+            format!(
+                "{} {:.1}%",
+                r.who,
+                100.0 * r.dist_calls as f64 / (n as f64 * n as f64)
+            )
+        })
+        .collect();
+    println!("  dist calls as % of n²: {}", cells.join(" | "));
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv, &["scale", "seed", "silhouette-max"]).expect("args");
+    let scale = args.f64_or("scale", 0.15).expect("scale");
+    let seed = args.u64_or("seed", 42).expect("seed");
+    let sil_max = args.usize_or("silhouette-max", 3000).expect("silhouette-max");
+    let sz = |paper_n: usize| ((paper_n as f64 * scale) as usize).max(300);
+
+    println!("=== paper quality tables (scale={scale}, seed={seed}) ===\n");
+
+    // ---- Table 2: fuzzy hashes, 5 label sets --------------------------------
+    // The paper clusters 15 402 binary-file digests under lzjd/tlsh/sdhash.
+    let ds = datasets::fuzzy::generate(sz(15402), seed);
+    for metric in [MetricKind::Lzjd, MetricKind::Tlsh, MetricKind::Sdhash] {
+        let mut d = ds.clone();
+        d.metric = metric;
+        println!("Table 2 — fuzzy hashes under {} (n={}):", metric.name(), d.n());
+        let runs = run_all(&d, 10, &[20, 50]);
+        external_table(&d, &runs);
+        dist_calls_line(d.n(), &runs);
+        println!();
+    }
+
+    // ---- Table 4: synth transactions, dim sweep ------------------------------
+    for dim in [640, 1024, 2048] {
+        let d = datasets::synth::generate(sz(10000), dim, 5, seed);
+        println!("Table 4 — synth dim={dim} (n={}):", d.n());
+        let runs = run_all(&d, 10, &[20, 50]);
+        external_table(&d, &runs);
+        println!();
+    }
+
+    // ---- Table 5: USPS bitmaps ----------------------------------------------
+    let d = datasets::usps::generate(2196, seed);
+    println!("Table 5 — USPS 0-vs-7 bitmaps, Simpson distance (n={}):", d.n());
+    let runs = run_all(&d, 10, &[20, 50]);
+    external_table(&d, &runs);
+    println!();
+
+    // ---- Table 6: blobs dimensionality sweep ---------------------------------
+    for dim in [1000, 2000] {
+        let d = datasets::blobs::generate(sz(10000), dim, 10, seed);
+        println!("Table 6 — blobs dim={dim} (n={}):", d.n());
+        let runs = run_all(&d, 10, &[20, 50]);
+        external_table(&d, &runs);
+        println!();
+    }
+
+    // ---- Table 7: internal metrics on unlabeled datasets ---------------------
+    for (name, paper_n) in
+        [("docword", 39861usize), ("reviews", 56846), ("household", 204928)]
+    {
+        let d = datasets::generate(name, sz(paper_n / 10), 512, seed).unwrap();
+        println!("Table 7 — {} internal metrics (n={}):", d.name, d.n());
+        let runs = run_all(&d, 10, &[20, 50]);
+        internal_table(&d, &runs, sil_max);
+        println!();
+    }
+
+    println!("done — compare shapes against the paper (see EXPERIMENTS.md)");
+}

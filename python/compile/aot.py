@@ -1,0 +1,142 @@
+"""AOT pipeline: lower Layer-2 graphs to HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not ``serialize()``: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects with
+``proto.id() <= INT_MAX``.  The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Outputs one ``<name>.hlo.txt`` per configuration plus ``manifest.json``
+describing shapes so the rust runtime can pad/mask batches correctly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the rust
+    side can uniformly unwrap with to_tuple1/..N)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Default artifact set.  The rust native backend covers arbitrary dims; these
+# fixed-shape modules serve the PJRT distance backend (vector datasets) and
+# the kernel-vs-native ablation bench.  B must be a multiple of the Pallas
+# block (128).
+DEFAULT_CONFIGS = [
+    # HNSW insertion hot path: fused distances + top-k.
+    dict(op="query_topk", metric="euclidean", b=256, d=16, k=10),
+    dict(op="query_topk", metric="euclidean", b=256, d=128, k=10),
+    dict(op="query_topk", metric="euclidean", b=256, d=1024, k=10),
+    dict(op="query_topk", metric="cosine", b=256, d=1024, k=10),
+    dict(op="query_topk", metric="jaccard", b=256, d=1024, k=10),
+    dict(op="query_topk", metric="simpson", b=256, d=256, k=10),
+    # Plain query distances (no top-k) for bulk rescoring.
+    dict(op="query", metric="euclidean", b=256, d=128),
+    dict(op="query", metric="cosine", b=256, d=1024),
+    # Exact-baseline path: pairwise + fused mutual-reachability blocks
+    # (consumed by `hdbscan::exact_pjrt` — the compiled-kernel baseline).
+    dict(op="pairwise", metric="euclidean", b=128, d=16),
+    dict(op="pairwise", metric="euclidean", b=128, d=128),
+    dict(op="pairwise", metric="cosine", b=128, d=1024),
+    dict(op="mreach", metric="euclidean", b=128, d=16),
+    dict(op="mreach", metric="euclidean", b=128, d=128),
+    dict(op="mreach", metric="cosine", b=128, d=1024),
+]
+
+
+def build_fn(cfg):
+    op, metric = cfg["op"], cfg["metric"]
+    if op == "query_topk":
+        return model.make_query_topk(metric, cfg["k"])
+    if op == "query":
+        return model.make_query(metric)
+    if op == "pairwise":
+        return model.make_pairwise(metric)
+    if op == "mreach":
+        return model.make_mreach(metric)
+    raise ValueError(op)
+
+
+def cfg_name(cfg) -> str:
+    name = f"{cfg['op']}_{cfg['metric']}_b{cfg['b']}_d{cfg['d']}"
+    if "k" in cfg:
+        name += f"_k{cfg['k']}"
+    return name
+
+
+def lower_one(cfg) -> str:
+    fn = build_fn(cfg)
+    shapes = model.example_shapes(cfg["op"], cfg["b"], cfg["d"])
+    lowered = jax.jit(fn).lower(*shapes)
+    return to_hlo_text(lowered)
+
+
+def out_arity(cfg) -> int:
+    return {"query_topk": 3, "query": 1, "pairwise": 1, "mreach": 1}[cfg["op"]]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated substring filters on names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for cfg in DEFAULT_CONFIGS:
+        name = cfg_name(cfg)
+        if args.only and not any(s in name for s in args.only.split(",")):
+            continue
+        text = lower_one(cfg)
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            dict(
+                name=name,
+                file=name + ".hlo.txt",
+                outputs=out_arity(cfg),
+                **cfg,
+            )
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TSV twin for the rust runtime (kept dependency-free on purpose):
+    # name, file, op, metric, b, d, k(-1 if absent), outputs
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        for e in manifest:
+            f.write(
+                "\t".join(
+                    str(x)
+                    for x in (
+                        e["name"], e["file"], e["op"], e["metric"],
+                        e["b"], e["d"], e.get("k", -1), e["outputs"],
+                    )
+                )
+                + "\n"
+            )
+    print(f"wrote manifest with {len(manifest)} modules")
+
+
+if __name__ == "__main__":
+    main()

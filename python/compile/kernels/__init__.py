@@ -1,0 +1,19 @@
+"""Layer-1 Pallas distance kernels and their pure-jnp reference oracle.
+
+Every kernel here is the compute hot-spot of FISHDBC's neighbor search:
+batched distance evaluation between a query item and a block of candidate
+items (HNSW insertion path), and tiled pairwise distance blocks (exact
+HDBSCAN* baseline path).
+
+Kernels are written in Pallas with BlockSpec tiling so the same source is
+TPU-lowerable (VMEM tiles, MXU matmul form); on this CPU-only image they are
+lowered with ``interpret=True`` (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .distances import (  # noqa: F401
+    METRICS,
+    PAIRWISE_METRICS,
+    pairwise_dists,
+    query_dists,
+)
+from . import ref  # noqa: F401

@@ -1,0 +1,101 @@
+"""Pure-jnp reference oracle for the Pallas distance kernels.
+
+Deliberately naive: elementwise broadcasting, no matmul tricks, no tiling.
+If `distances.py` and this file agree across the hypothesis sweep, the
+kernels are trusted.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def sqeuclidean_query(q, c):
+    diff = c.astype(jnp.float32) - q.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=1)
+
+
+def euclidean_query(q, c):
+    return jnp.sqrt(sqeuclidean_query(q, c))
+
+
+def cosine_query(q, c):
+    q = q.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    num = jnp.sum(c * q[None, :], axis=1)
+    den = jnp.linalg.norm(c, axis=1) * jnp.linalg.norm(q) + _EPS
+    return 1.0 - num / den
+
+
+def jaccard_query(q, c):
+    q = q.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    inter = jnp.sum(jnp.minimum(c, q[None, :]), axis=1)
+    union = jnp.sum(jnp.maximum(c, q[None, :]), axis=1)
+    return 1.0 - inter / jnp.maximum(union, _EPS)
+
+
+def simpson_query(q, c):
+    q = q.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    inter = jnp.sum(c * q[None, :], axis=1)
+    den = jnp.maximum(jnp.minimum(jnp.sum(c, axis=1), jnp.sum(q)), 1.0)
+    return 1.0 - inter / den
+
+
+QUERY_REFS = {
+    "sqeuclidean": sqeuclidean_query,
+    "euclidean": euclidean_query,
+    "cosine": cosine_query,
+    "jaccard": jaccard_query,
+    "simpson": simpson_query,
+}
+
+
+def sqeuclidean_pairwise(x, y):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=2)
+
+
+def euclidean_pairwise(x, y):
+    return jnp.sqrt(sqeuclidean_pairwise(x, y))
+
+
+def cosine_pairwise(x, y):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    num = jnp.sum(x[:, None, :] * y[None, :, :], axis=2)
+    den = (
+        jnp.linalg.norm(x, axis=1)[:, None] * jnp.linalg.norm(y, axis=1)[None, :]
+        + _EPS
+    )
+    return 1.0 - num / den
+
+
+def simpson_pairwise(x, y):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    inter = jnp.sum(x[:, None, :] * y[None, :, :], axis=2)
+    den = jnp.maximum(
+        jnp.minimum(jnp.sum(x, axis=1)[:, None], jnp.sum(y, axis=1)[None, :]), 1.0
+    )
+    return 1.0 - inter / den
+
+
+PAIRWISE_REFS = {
+    "sqeuclidean": sqeuclidean_pairwise,
+    "euclidean": euclidean_pairwise,
+    "cosine": cosine_pairwise,
+    "simpson": simpson_pairwise,
+}
+
+
+def mutual_reachability(dists, core):
+    """Mutual-reachability weights (HDBSCAN*): max(d(a,b), core(a), core(b))."""
+    dists = dists.astype(jnp.float32)
+    core = core.astype(jnp.float32)
+    return jnp.maximum(dists, jnp.maximum(core[:, None], core[None, :]))

@@ -1,0 +1,97 @@
+"""Layer-2 JAX compute graphs for FISHDBC (build-time only).
+
+The paper's numeric hot-spot is batched distance evaluation; this module
+composes the Layer-1 Pallas kernels into the jitted graphs the rust
+coordinator executes via PJRT:
+
+``query_topk(metric)``
+    q[D] x C[B, D] -> (dists[B], topk_vals[K], topk_idx[K]).
+    One fused graph for the HNSW insertion step: all candidate distances
+    plus the K nearest among them (K = MinPts for the neighbors heaps,
+    ef for the search frontier).  top-k is fused into the same HLO module
+    so the rust side makes a single PJRT call per frontier batch.
+
+``pairwise(metric)``
+    X[Bx, D] x Y[By, D] -> [Bx, By] distance block (exact baseline path).
+
+``mreach(metric)``
+    X, Y, core_x[Bx], core_y[By] -> mutual-reachability block
+    max(d(a,b), core(a), core(b)) — HDBSCAN*'s edge weights, fused with the
+    distance computation.
+
+All functions take/return fixed shapes: the AOT pipeline (aot.py) lowers one
+HLO module per (op, metric, B, D[, K]) configuration and the rust runtime
+pads + masks batches to fit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distances as k
+
+
+def make_query_topk(metric: str, kk: int):
+    """Fused query-distances + top-k graph (smallest distances first)."""
+
+    def fn(q, c):
+        d = k.query_dists(metric, q, c)
+        # NB: sort-based top-k, NOT jax.lax.top_k — top_k lowers to the
+        # HLO `topk` instruction, which xla_extension 0.5.1's text parser
+        # rejects; lax.sort lowers to plain `sort`, which round-trips.
+        idx = jax.lax.iota(jnp.int32, d.shape[0])
+        sd, si = jax.lax.sort((d, idx), num_keys=1)
+        return d, sd[:kk], si[:kk]
+
+    return fn
+
+
+def make_query(metric: str):
+    def fn(q, c):
+        return (k.query_dists(metric, q, c),)
+
+    return fn
+
+
+def make_pairwise(metric: str):
+    def fn(x, y):
+        return (k.pairwise_dists(metric, x, y),)
+
+    return fn
+
+
+def make_mreach(metric: str):
+    """Mutual-reachability block: distance kernel fused with the core-distance
+    max.  This is the exact-HDBSCAN* baseline's inner loop."""
+
+    def fn(x, y, core_x, core_y):
+        d = k.pairwise_dists(metric, x, y)
+        return (jnp.maximum(d, jnp.maximum(core_x[:, None], core_y[None, :])),)
+
+    return fn
+
+
+def example_shapes(op: str, b: int, d: int, bx: int | None = None):
+    """ShapeDtypeStructs used to trace each op for AOT lowering."""
+    f32 = jnp.float32
+    if op in ("query", "query_topk"):
+        return (
+            jax.ShapeDtypeStruct((d,), f32),
+            jax.ShapeDtypeStruct((b, d), f32),
+        )
+    if op == "pairwise":
+        bx = bx or b
+        return (
+            jax.ShapeDtypeStruct((bx, d), f32),
+            jax.ShapeDtypeStruct((b, d), f32),
+        )
+    if op == "mreach":
+        bx = bx or b
+        return (
+            jax.ShapeDtypeStruct((bx, d), f32),
+            jax.ShapeDtypeStruct((b, d), f32),
+            jax.ShapeDtypeStruct((bx,), f32),
+            jax.ShapeDtypeStruct((b,), f32),
+        )
+    raise ValueError(f"unknown op {op!r}")

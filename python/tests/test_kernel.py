@@ -1,0 +1,134 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes/dtypes/value regimes; numpy RNG drives the data.
+This is the CORE build-time correctness signal for the kernels the rust
+runtime executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import distances as k
+from compile.kernels import ref
+
+BLOCK = 32  # small Pallas block for fast interpret-mode testing
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+dims = st.sampled_from([1, 3, 8, 17, 64, 256])
+batches = st.sampled_from([BLOCK, 2 * BLOCK, 4 * BLOCK])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+dtypes = st.sampled_from([np.float32, np.float64])
+
+
+# ---------------------------------------------------------------- query ops
+@settings(max_examples=15, deadline=None)
+@given(b=batches, d=dims, seed=seeds, dtype=dtypes)
+@pytest.mark.parametrize("metric", ["sqeuclidean", "euclidean", "cosine"])
+def test_query_dense_metrics_match_ref(metric, b, d, seed, dtype):
+    rng = rng_for(seed)
+    q = rng.normal(size=d).astype(dtype)
+    c = rng.normal(size=(b, d)).astype(dtype)
+    got = k.query_dists(metric, jnp.asarray(q), jnp.asarray(c), block_b=BLOCK)
+    want = ref.QUERY_REFS[metric](jnp.asarray(q), jnp.asarray(c))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=batches, d=dims, seed=seeds)
+@pytest.mark.parametrize("metric", ["jaccard", "simpson"])
+def test_query_set_metrics_match_ref(metric, b, d, seed):
+    rng = rng_for(seed)
+    q = (rng.random(d) < 0.3).astype(np.float32)
+    c = (rng.random((b, d)) < 0.3).astype(np.float32)
+    got = k.query_dists(metric, jnp.asarray(q), jnp.asarray(c), block_b=BLOCK)
+    want = ref.QUERY_REFS[metric](jnp.asarray(q), jnp.asarray(c))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_query_rejects_misaligned_batch():
+    q = jnp.zeros(4)
+    c = jnp.zeros((BLOCK + 1, 4))
+    with pytest.raises(ValueError):
+        k.query_dists("euclidean", q, c, block_b=BLOCK)
+
+
+def test_query_distance_to_self_is_zero():
+    rng = rng_for(7)
+    c = rng.normal(size=(BLOCK, 16)).astype(np.float32)
+    q = c[3].copy()
+    got = np.asarray(k.query_dists("euclidean", jnp.asarray(q), jnp.asarray(c), block_b=BLOCK))
+    # matmul form loses ~sqrt(eps * ||x||^2) near zero (documented tradeoff:
+    # MXU-friendly ||x||^2+||y||^2-2xy suffers cancellation at d(x,x)).
+    assert got[3] == pytest.approx(0.0, abs=1e-2)
+    assert (got >= 0).all()
+
+
+def test_cosine_query_bounds():
+    rng = rng_for(11)
+    q = rng.normal(size=32).astype(np.float32)
+    c = rng.normal(size=(2 * BLOCK, 32)).astype(np.float32)
+    got = np.asarray(k.query_dists("cosine", jnp.asarray(q), jnp.asarray(c), block_b=BLOCK))
+    assert (got >= -1e-5).all() and (got <= 2 + 1e-5).all()
+
+
+def test_jaccard_identical_rows_zero_distance():
+    rng = rng_for(13)
+    c = (rng.random((BLOCK, 64)) < 0.4).astype(np.float32)
+    q = c[5].copy()
+    got = np.asarray(k.query_dists("jaccard", jnp.asarray(q), jnp.asarray(c), block_b=BLOCK))
+    assert got[5] == pytest.approx(0.0, abs=1e-6)
+
+
+def test_simpson_subset_is_zero_distance():
+    # Simpson distance is 0 when one bitmap is a subset of the other.
+    d = 64
+    q = np.zeros(d, np.float32)
+    q[:10] = 1
+    c = np.zeros((BLOCK, d), np.float32)
+    c[0, :20] = 1  # superset of q
+    got = np.asarray(k.query_dists("simpson", jnp.asarray(q), jnp.asarray(c), block_b=BLOCK))
+    assert got[0] == pytest.approx(0.0, abs=1e-6)
+
+
+# ------------------------------------------------------------- pairwise ops
+@settings(max_examples=10, deadline=None)
+@given(d=dims, seed=seeds)
+@pytest.mark.parametrize("metric", list(k.PAIRWISE_METRICS))
+def test_pairwise_matches_ref(metric, d, seed):
+    rng = rng_for(seed)
+    if metric == "simpson":
+        x = (rng.random((BLOCK, d)) < 0.3).astype(np.float32)
+        y = (rng.random((2 * BLOCK, d)) < 0.3).astype(np.float32)
+    else:
+        x = rng.normal(size=(BLOCK, d)).astype(np.float32)
+        y = rng.normal(size=(2 * BLOCK, d)).astype(np.float32)
+    got = k.pairwise_dists(metric, jnp.asarray(x), jnp.asarray(y), block_b=BLOCK)
+    want = ref.PAIRWISE_REFS[metric](jnp.asarray(x), jnp.asarray(y))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_pairwise_symmetry():
+    rng = rng_for(3)
+    x = rng.normal(size=(BLOCK, 8)).astype(np.float32)
+    d1 = np.asarray(k.pairwise_dists("euclidean", jnp.asarray(x), jnp.asarray(x), block_b=BLOCK))
+    assert_allclose(d1, d1.T, rtol=1e-5, atol=1e-5)
+    # diag suffers matmul-form cancellation (see test_query_distance_to_self)
+    assert_allclose(np.diag(d1), np.zeros(BLOCK), atol=1e-2)
+
+
+def test_pairwise_agrees_with_query_rows():
+    rng = rng_for(5)
+    x = rng.normal(size=(BLOCK, 8)).astype(np.float32)
+    y = rng.normal(size=(BLOCK, 8)).astype(np.float32)
+    pw = np.asarray(k.pairwise_dists("euclidean", jnp.asarray(x), jnp.asarray(y), block_b=BLOCK))
+    for i in [0, 7, BLOCK - 1]:
+        row = np.asarray(k.query_dists("euclidean", jnp.asarray(x[i]), jnp.asarray(y), block_b=BLOCK))
+        assert_allclose(pw[i], row, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,60 @@
+//! Figure 2 — Finefoods: scalability as the dataset size increases.
+//!
+//! The paper streams the 568 474-review Finefoods corpus (Jaro-Winkler)
+//! into FISHDBC and plots the **average number of distance calls per item**
+//! in each 2%-of-dataset window: the curve grows at first, then plateaus —
+//! the empirical signature of the O(log n)-calls-per-insert behaviour that
+//! Theorem 3.2 relies on.
+//!
+//! Same series here on the synthetic review corpus (scaled n), plus a
+//! cluster-extraction time per checkpoint (the paper notes clustering "can
+//! be computed every time 2% of the dataset is added" cheaply).
+//!
+//! Run: `cargo bench --bench fig2_scalability`.
+
+use fishdbc::datasets;
+use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
+use fishdbc::util::bench::time_once;
+
+fn main() {
+    let n = 5_000; // paper: 568 474; scaled to keep the bench minutes
+    let checkpoints = 10; // every 10% (paper: every 2%)
+    let ds = datasets::reviews::generate(n, 12);
+
+    println!("# Figure 2: reviews (n={n}, Jaro-Winkler) — calls/item per window");
+    println!(
+        "{:<8} {:>10} {:>16} {:>14} {:>12}",
+        "items", "calls", "calls/item(win)", "extract(s)", "clusters"
+    );
+    let mut f = Fishdbc::new(
+        ds.metric,
+        FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
+    );
+    let window = n / checkpoints;
+    let mut last_calls = 0u64;
+    let mut series = Vec::new();
+    for (i, it) in ds.items.iter().cloned().enumerate() {
+        f.add(it);
+        if (i + 1) % window == 0 {
+            let calls = f.dist_calls();
+            let per_item = (calls - last_calls) as f64 / window as f64;
+            let (extract, c) = time_once(|| f.cluster(10));
+            println!(
+                "{:<8} {:>10} {:>16.1} {:>14.4} {:>12}",
+                i + 1,
+                calls,
+                per_item,
+                extract,
+                c.n_clusters
+            );
+            series.push(per_item);
+            last_calls = calls;
+        }
+    }
+    let first = series.first().copied().unwrap_or(0.0);
+    let last = series.last().copied().unwrap_or(0.0);
+    println!("# growth of window cost across the run: {:.2}x", last / first.max(1e-9));
+    println!("# paper shape: early growth then plateau — the last windows should");
+    println!("# cost little more than the middle ones (far from the ~{}x of O(n))",
+        checkpoints);
+}

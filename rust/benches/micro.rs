@@ -1,0 +1,217 @@
+//! Micro-benchmarks of every hot path, feeding the §Perf iteration log in
+//! EXPERIMENTS.md: distance kernels (native vs PJRT-compiled), HNSW
+//! insertion, candidate processing, incremental Kruskal, and hierarchy
+//! extraction.
+//!
+//! Run: `cargo bench --bench micro`.
+
+use fishdbc::datasets;
+use fishdbc::distances::{bitmap, sparse, text, vector, MetricKind};
+use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
+use fishdbc::hdbscan::{cluster_from_msf, CondensedTree, Dendrogram};
+use fishdbc::mst::{Edge, Msf};
+use fishdbc::runtime::{default_artifacts_dir, Runtime};
+use fishdbc::util::bench::time_n;
+use fishdbc::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+    (0..d).map(|_| rng.normal() as f32).collect()
+}
+
+fn bench_distances() {
+    println!("## distance kernels (native rust)");
+    let mut rng = Rng::new(1);
+    let reps = 200_000;
+
+    for d in [16usize, 128, 1024] {
+        let a = rand_vec(&mut rng, d);
+        let b = rand_vec(&mut rng, d);
+        let s = time_n(&format!("euclidean d={d} x{reps}"), 1, 5, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += vector::euclidean(
+                    std::hint::black_box(&a),
+                    std::hint::black_box(&b),
+                );
+            }
+            acc
+        });
+        println!(
+            "  euclidean d={d:<5} {:>8.1} Mcalls/s",
+            reps as f64 / s.min_s / 1e6
+        );
+    }
+    let a = rand_vec(&mut rng, 1024);
+    let b = rand_vec(&mut rng, 1024);
+    let s = time_n("cosine d=1024", 1, 5, || {
+        let mut acc = 0.0;
+        for _ in 0..reps / 10 {
+            acc += vector::cosine(std::hint::black_box(&a), std::hint::black_box(&b));
+        }
+        acc
+    });
+    println!("  cosine    d=1024 {:>8.1} Mcalls/s", (reps / 10) as f64 / s.min_s / 1e6);
+
+    let sa: Vec<u32> = (0..200).map(|i| i * 3).collect();
+    let sb: Vec<u32> = (0..200).map(|i| i * 4).collect();
+    let s = time_n("jaccard |200|", 1, 5, || {
+        let mut acc = 0.0;
+        for _ in 0..reps / 10 {
+            acc += sparse::jaccard(std::hint::black_box(&sa), std::hint::black_box(&sb));
+        }
+        acc
+    });
+    println!("  jaccard   |200|  {:>8.1} Mcalls/s", (reps / 10) as f64 / s.min_s / 1e6);
+
+    let ta = "user login failed for account 4242 from ip 10.0.0.1".to_string();
+    let tb = "user login failed for account 7777 from ip 10.9.8.7".to_string();
+    let s = time_n("jaro-winkler ~50ch", 1, 5, || {
+        let mut acc = 0.0;
+        for _ in 0..reps / 10 {
+            acc += text::jaro_winkler(std::hint::black_box(&ta), std::hint::black_box(&tb));
+        }
+        acc
+    });
+    println!("  jaro-winkler ~50c{:>8.1} Mcalls/s", (reps / 10) as f64 / s.min_s / 1e6);
+
+    let ba = bitmap::Bitmap::from_bools(&(0..256).map(|i| i % 3 == 0).collect::<Vec<_>>());
+    let bb = bitmap::Bitmap::from_bools(&(0..256).map(|i| i % 2 == 0).collect::<Vec<_>>());
+    let s = time_n("simpson 256b", 1, 5, || {
+        let mut acc = 0.0;
+        for _ in 0..reps {
+            acc += bitmap::simpson(std::hint::black_box(&ba), std::hint::black_box(&bb));
+        }
+        acc
+    });
+    println!("  simpson   256b   {:>8.1} Mcalls/s", reps as f64 / s.min_s / 1e6);
+}
+
+fn bench_pjrt() {
+    println!("## PJRT compiled kernels vs native batch");
+    let dir = default_artifacts_dir();
+    let Ok(rt) = Runtime::load(&dir) else {
+        println!("  SKIP — run `make artifacts`");
+        return;
+    };
+    let mut rng = Rng::new(2);
+    let d = 128;
+    let b = 256;
+    let q = rand_vec(&mut rng, d);
+    let cands: Vec<Vec<f32>> = (0..b).map(|_| rand_vec(&mut rng, d)).collect();
+    let refs: Vec<&[f32]> = cands.iter().map(|c| c.as_slice()).collect();
+    let name = "query_topk_euclidean_b256_d128_k10";
+
+    let s = time_n("pjrt query_topk 256x128", 3, 20, || {
+        rt.query_topk(name, &q, &refs).unwrap()
+    });
+    println!(
+        "  pjrt  query+topk B={b} D={d}: {:>9.1} us/batch ({:.1} Mdist/s)",
+        s.min_s * 1e6,
+        b as f64 / s.min_s / 1e6
+    );
+    let s = time_n("native 256x128", 3, 20, || {
+        let mut dists: Vec<(u32, f64)> = refs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i as u32, vector::euclidean(&q, c)))
+            .collect();
+        dists.sort_by(|a, b| a.1.total_cmp(&b.1));
+        dists.truncate(10);
+        dists
+    });
+    println!(
+        "  native loop  B={b} D={d}: {:>9.1} us/batch ({:.1} Mdist/s)",
+        s.min_s * 1e6,
+        b as f64 / s.min_s / 1e6
+    );
+}
+
+fn bench_hnsw_insert() {
+    println!("## HNSW insertion (euclidean blobs, dim=32)");
+    for n in [2000usize, 8000] {
+        let ds = datasets::blobs::generate(n, 32, 10, 3);
+        let mut f = Fishdbc::new(
+            MetricKind::Euclidean,
+            FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
+        );
+        let t0 = std::time::Instant::now();
+        for it in ds.items.iter().cloned() {
+            f.add(it);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  n={n:<6} {:>8.1} us/insert  {:>6.0} dists/insert  {:>8.2} Mdist/s",
+            dt / n as f64 * 1e6,
+            f.dist_calls() as f64 / n as f64,
+            f.dist_calls() as f64 / dt / 1e6
+        );
+    }
+}
+
+fn bench_mst() {
+    println!("## incremental Kruskal (MSF update)");
+    let mut rng = Rng::new(4);
+    for (nodes, batch) in [(20_000usize, 100_000usize), (100_000, 500_000)] {
+        let edges: Vec<Edge> = (0..batch)
+            .map(|_| {
+                Edge::new(
+                    rng.below(nodes) as u32,
+                    rng.below(nodes) as u32,
+                    rng.f64(),
+                )
+            })
+            .collect();
+        let s = time_n(&format!("kruskal {nodes}n {batch}e"), 1, 5, || {
+            let mut msf = Msf::new();
+            msf.update(edges.clone(), nodes);
+            msf
+        });
+        println!(
+            "  {nodes:>7} nodes {batch:>7} edges: {:>8.1} ms  ({:.1} Medges/s)",
+            s.min_s * 1e3,
+            batch as f64 / s.min_s / 1e6
+        );
+    }
+}
+
+fn bench_extract() {
+    println!("## hierarchy extraction (dendrogram → condense → flat)");
+    let mut rng = Rng::new(5);
+    for n in [20_000usize, 100_000] {
+        // a realistic MSF: random spanning tree with mixed weights
+        let edges: Vec<Edge> = (1..n)
+            .map(|i| {
+                let parent = rng.below(i) as u32;
+                Edge::new(parent, i as u32, rng.f64() * 10.0)
+            })
+            .collect();
+        let s = time_n(&format!("extract n={n}"), 1, 5, || {
+            cluster_from_msf(&edges, n, 10)
+        });
+        println!(
+            "  n={n:<7}: {:>8.1} ms  ({:.2} Mpoints/s)",
+            s.min_s * 1e3,
+            n as f64 / s.min_s / 1e6
+        );
+        // stage split
+        let s1 = time_n("dendro", 1, 5, || Dendrogram::from_msf(&edges, n));
+        let dendro = Dendrogram::from_msf(&edges, n);
+        let s2 = time_n("condense", 1, 5, || {
+            CondensedTree::from_dendrogram(&dendro, 10)
+        });
+        println!(
+            "    dendrogram {:>8.1} ms | condense {:>8.1} ms",
+            s1.min_s * 1e3,
+            s2.min_s * 1e3
+        );
+    }
+}
+
+fn main() {
+    println!("# micro-benchmarks (hot paths)");
+    bench_distances();
+    bench_pjrt();
+    bench_hnsw_insert();
+    bench_mst();
+    bench_extract();
+}

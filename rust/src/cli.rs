@@ -1,0 +1,105 @@
+//! Minimal command-line argument parsing (the offline image has no clap;
+//! see DESIGN.md §Dependency-policy). Supports `--key value`, `--flag`,
+//! and positional arguments.
+
+use std::collections::{HashMap, HashSet};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: HashSet<String>,
+}
+
+/// Option keys that take a value; everything else starting with `--` is a
+/// boolean flag.
+pub fn parse(argv: &[String], value_keys: &[&str]) -> Result<Args, String> {
+    let mut out = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if value_keys.contains(&key) {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .ok_or_else(|| format!("--{key} expects a value"))?;
+                out.options.insert(key.to_string(), v.clone());
+            } else {
+                out.flags.insert(key.to_string());
+            }
+        } else {
+            out.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad float {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = parse(
+            &sv(&["run", "--n", "100", "--exact", "--ef=50", "extra"]),
+            &["n", "ef"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 100);
+        assert_eq!(a.usize_or("ef", 0).unwrap(), 50);
+        assert!(a.flag("exact"));
+        assert!(!a.flag("quality"));
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&sv(&["--n"]), &["n"]).is_err());
+        let a = parse(&sv(&["--n", "abc"]), &["n"]).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

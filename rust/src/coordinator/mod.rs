@@ -1,0 +1,436 @@
+//! Streaming coordinator: the service layer that makes FISHDBC's
+//! incrementality operational (paper §1: "in a streaming context, new data
+//! can be added as they arrive, and clustering can be computed
+//! inexpensively").
+//!
+//! Architecture (thread-based; the offline image has no async runtime —
+//! see DESIGN.md §Dependency-policy):
+//!
+//! * a dedicated **worker thread** owns the `Fishdbc` state and processes
+//!   commands from a **bounded** channel — the bound is the backpressure
+//!   mechanism: producers block when ingestion outruns clustering;
+//! * **ingestion** sends batches of items; the worker coalesces
+//!   consecutive queued batches before bookkeeping (micro-batching);
+//! * **re-clustering** runs either on demand (`cluster()`) or
+//!   automatically every `recluster_every` items; the latest clustering
+//!   snapshot is shared via `latest()` without blocking ingestion.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::distances::{Item, MetricKind};
+use crate::fishdbc::{Fishdbc, FishdbcParams, FishdbcStats};
+use crate::hdbscan::Clustering;
+
+/// Coordinator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    pub fishdbc: FishdbcParams,
+    /// Minimum cluster size used for automatic re-clusterings.
+    pub mcs: usize,
+    /// Re-cluster automatically after this many new items (0 = never).
+    pub recluster_every: usize,
+    /// Command-queue bound (backpressure depth), in batches.
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            fishdbc: FishdbcParams::default(),
+            mcs: 10,
+            recluster_every: 0,
+            queue_depth: 16,
+        }
+    }
+}
+
+/// A clustering snapshot with provenance.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub clustering: Clustering,
+    /// Items in the index when the snapshot was taken.
+    pub n_items: usize,
+    /// Seconds spent extracting it (the paper's "cluster" column).
+    pub extract_secs: f64,
+}
+
+/// Counters exported by the coordinator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordinatorStats {
+    pub fishdbc: FishdbcStats,
+    pub batches: u64,
+    pub reclusters: u64,
+    /// Total wall time spent inserting items (the paper's "build" column).
+    pub build_secs: f64,
+}
+
+enum Command {
+    AddBatch(Vec<Item>),
+    Cluster { mcs: usize, reply: SyncSender<Snapshot> },
+    Classify { items: Vec<Item>, k: usize, reply: SyncSender<Vec<i32>> },
+    Stats { reply: SyncSender<CoordinatorStats> },
+    Shutdown,
+}
+
+/// Handle to a running coordinator. Dropping it shuts the worker down.
+pub struct Coordinator {
+    tx: SyncSender<Command>,
+    worker: Option<JoinHandle<()>>,
+    latest: Arc<Mutex<Option<Snapshot>>>,
+    queued: Arc<AtomicU64>,
+}
+
+impl Coordinator {
+    /// Spawn a coordinator clustering [`Item`]s under `metric`.
+    pub fn spawn(metric: MetricKind, config: CoordinatorConfig) -> Coordinator {
+        let (tx, rx) = sync_channel::<Command>(config.queue_depth.max(1));
+        let latest = Arc::new(Mutex::new(None));
+        let queued = Arc::new(AtomicU64::new(0));
+        let worker = {
+            let latest = Arc::clone(&latest);
+            let queued = Arc::clone(&queued);
+            std::thread::Builder::new()
+                .name("fishdbc-coordinator".into())
+                .spawn(move || Worker::new(metric, config, latest, queued).run(rx))
+                .expect("spawn coordinator worker")
+        };
+        Coordinator { tx, worker: Some(worker), latest, queued }
+    }
+
+    /// Enqueue a batch of items (blocks when the queue is full —
+    /// backpressure). Items incompatible with the coordinator's metric
+    /// make the worker panic; validate with [`MetricKind::compatible`]
+    /// first when ingesting untrusted data.
+    pub fn add_batch(&self, items: Vec<Item>) {
+        if items.is_empty() {
+            return;
+        }
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(Command::AddBatch(items)).expect("coordinator gone");
+    }
+
+    /// Request a fresh clustering (blocking until extracted).
+    pub fn cluster(&self, mcs: usize) -> Snapshot {
+        let (reply, rx) = sync_channel(1);
+        self.tx.send(Command::Cluster { mcs, reply }).expect("coordinator gone");
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Classify external items against the latest clustering *without*
+    /// inserting them: majority vote among each item's k nearest clustered
+    /// neighbors (see [`crate::fishdbc::Fishdbc::classify`]). Takes a fresh
+    /// snapshot first if none exists yet. Returns one label per item
+    /// (-1 = noise/unknown).
+    pub fn classify(&self, items: Vec<Item>, k: usize) -> Vec<i32> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Command::Classify { items, k, reply })
+            .expect("coordinator gone");
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Latest snapshot (on-demand or automatic), non-blocking.
+    pub fn latest(&self) -> Option<Snapshot> {
+        self.latest.lock().unwrap().clone()
+    }
+
+    /// Current counters. Blocking round-trip behind queued work, so this
+    /// doubles as an ingestion barrier.
+    pub fn stats(&self) -> CoordinatorStats {
+        let (reply, rx) = sync_channel(1);
+        self.tx.send(Command::Stats { reply }).expect("coordinator gone");
+        rx.recv().expect("coordinator gone")
+    }
+
+    /// Batches currently waiting in the queue (approximate).
+    pub fn queue_depth(&self) -> u64 {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Shut down, waiting for the worker to finish outstanding work.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+struct Worker {
+    f: Fishdbc<Item, MetricKind>,
+    metric: MetricKind,
+    config: CoordinatorConfig,
+    latest: Arc<Mutex<Option<Snapshot>>>,
+    queued: Arc<AtomicU64>,
+    batches: u64,
+    reclusters: u64,
+    build_secs: f64,
+    since_recluster: usize,
+}
+
+impl Worker {
+    fn new(
+        metric: MetricKind,
+        config: CoordinatorConfig,
+        latest: Arc<Mutex<Option<Snapshot>>>,
+        queued: Arc<AtomicU64>,
+    ) -> Worker {
+        Worker {
+            f: Fishdbc::new(metric, config.fishdbc),
+            metric,
+            config,
+            latest,
+            queued,
+            batches: 0,
+            reclusters: 0,
+            build_secs: 0.0,
+            since_recluster: 0,
+        }
+    }
+
+    fn run(mut self, rx: Receiver<Command>) {
+        let mut pending: Option<Command> = None;
+        loop {
+            let cmd = match pending.take() {
+                Some(c) => c,
+                None => match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => break,
+                },
+            };
+            match cmd {
+                Command::AddBatch(items) => {
+                    let t0 = std::time::Instant::now();
+                    self.ingest(items);
+                    // micro-batching: coalesce already-queued adds
+                    loop {
+                        match rx.try_recv() {
+                            Ok(Command::AddBatch(more)) => self.ingest(more),
+                            Ok(other) => {
+                                pending = Some(other);
+                                break;
+                            }
+                            Err(TryRecvError::Empty | TryRecvError::Disconnected) => {
+                                break
+                            }
+                        }
+                    }
+                    self.build_secs += t0.elapsed().as_secs_f64();
+                    if self.config.recluster_every > 0
+                        && self.since_recluster >= self.config.recluster_every
+                    {
+                        let snap = self.extract(self.config.mcs);
+                        *self.latest.lock().unwrap() = Some(snap);
+                        self.since_recluster = 0;
+                    }
+                }
+                Command::Cluster { mcs, reply } => {
+                    let snap = self.extract(mcs);
+                    *self.latest.lock().unwrap() = Some(snap.clone());
+                    let _ = reply.send(snap);
+                }
+                Command::Classify { items, k, reply } => {
+                    // reuse the latest snapshot if it covers the current
+                    // index; otherwise extract a fresh one
+                    let snap = {
+                        let cached = self.latest.lock().unwrap().clone();
+                        match cached {
+                            Some(s) if s.n_items == self.f.len() => s,
+                            _ => {
+                                let s = self.extract(self.config.mcs);
+                                *self.latest.lock().unwrap() = Some(s.clone());
+                                s
+                            }
+                        }
+                    };
+                    let labels: Vec<i32> = items
+                        .iter()
+                        .map(|it| {
+                            self.f.classify(it, &snap.clustering.labels, k)
+                        })
+                        .collect();
+                    let _ = reply.send(labels);
+                }
+                Command::Stats { reply } => {
+                    let _ = reply.send(CoordinatorStats {
+                        fishdbc: self.f.stats(),
+                        batches: self.batches,
+                        reclusters: self.reclusters,
+                        build_secs: self.build_secs,
+                    });
+                }
+                Command::Shutdown => break,
+            }
+        }
+    }
+
+    fn ingest(&mut self, items: Vec<Item>) {
+        self.queued.fetch_sub(1, Ordering::Relaxed);
+        self.batches += 1;
+        self.since_recluster += items.len();
+        for it in items {
+            assert!(
+                self.metric.compatible(&it),
+                "item incompatible with metric {}",
+                self.metric.name()
+            );
+            self.f.add(it);
+        }
+    }
+
+    fn extract(&mut self, mcs: usize) -> Snapshot {
+        let t0 = std::time::Instant::now();
+        let clustering = self.f.cluster(mcs);
+        self.reclusters += 1;
+        Snapshot {
+            n_items: self.f.len(),
+            clustering,
+            extract_secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+
+    fn blob_items(n: usize) -> Vec<Item> {
+        datasets::blobs::generate(n, 4, 3, 11).items
+    }
+
+    #[test]
+    fn streamed_equals_batch_clustering() {
+        let items = blob_items(300);
+
+        // batch reference
+        let mut f = Fishdbc::new(MetricKind::Euclidean, FishdbcParams::default());
+        for it in items.clone() {
+            f.add(it);
+        }
+        let want = f.cluster(10);
+
+        // streamed through the coordinator in chunks
+        let c =
+            Coordinator::spawn(MetricKind::Euclidean, CoordinatorConfig::default());
+        for chunk in items.chunks(37) {
+            c.add_batch(chunk.to_vec());
+        }
+        let got = c.cluster(10);
+        assert_eq!(got.n_items, 300);
+        assert_eq!(got.clustering.labels, want.labels);
+        c.shutdown();
+    }
+
+    #[test]
+    fn auto_recluster_produces_snapshots() {
+        let items = blob_items(250);
+        let c = Coordinator::spawn(
+            MetricKind::Euclidean,
+            CoordinatorConfig { recluster_every: 100, ..Default::default() },
+        );
+        for chunk in items.chunks(50) {
+            c.add_batch(chunk.to_vec());
+            // pace the stream so batches are not all coalesced into one
+            let _ = c.stats();
+        }
+        let stats = c.stats();
+        assert!(stats.reclusters >= 2, "reclusters {}", stats.reclusters);
+        let snap = c.latest().expect("snapshot");
+        assert!(snap.n_items >= 200);
+        assert!(snap.extract_secs >= 0.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn stats_reflect_progress() {
+        let items = blob_items(120);
+        let c =
+            Coordinator::spawn(MetricKind::Euclidean, CoordinatorConfig::default());
+        c.add_batch(items);
+        let s = c.stats();
+        assert_eq!(s.fishdbc.items, 120);
+        assert!(s.fishdbc.dist_calls > 0);
+        assert!(s.batches >= 1);
+        assert!(s.build_secs > 0.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn empty_batches_are_noops() {
+        let c =
+            Coordinator::spawn(MetricKind::Euclidean, CoordinatorConfig::default());
+        c.add_batch(vec![]);
+        let s = c.stats();
+        assert_eq!(s.fishdbc.items, 0);
+        let snap = c.cluster(5);
+        assert_eq!(snap.clustering.n_clusters, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn classify_labels_new_items_without_inserting() {
+        let items = blob_items(300);
+        let c =
+            Coordinator::spawn(MetricKind::Euclidean, CoordinatorConfig::default());
+        c.add_batch(items.clone());
+        let snap = c.cluster(10);
+        assert!(snap.clustering.n_clusters >= 2);
+
+        // classify copies of known items: must match their cluster labels
+        let probe: Vec<Item> = items[..20].to_vec();
+        let got = c.classify(probe, 5);
+        let mut agree = 0;
+        for (i, l) in got.iter().enumerate() {
+            if *l == snap.clustering.labels[i] {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 18, "classify agreed on {agree}/20");
+
+        // classification must not have inserted anything
+        assert_eq!(c.stats().fishdbc.items, 300);
+        c.shutdown();
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let items = blob_items(60);
+        {
+            let c = Coordinator::spawn(
+                MetricKind::Euclidean,
+                CoordinatorConfig::default(),
+            );
+            c.add_batch(items);
+        } // drop must join without deadlock
+    }
+
+    #[test]
+    fn backpressure_queue_depth_visible() {
+        let c = Coordinator::spawn(
+            MetricKind::Euclidean,
+            CoordinatorConfig { queue_depth: 4, ..Default::default() },
+        );
+        // big batches keep the worker busy long enough to see depth > 0
+        for _ in 0..4 {
+            c.add_batch(blob_items(400));
+        }
+        // by the time stats returns, everything must be ingested
+        let s = c.stats();
+        assert_eq!(s.fishdbc.items, 1600);
+        assert_eq!(c.queue_depth(), 0);
+        c.shutdown();
+    }
+}

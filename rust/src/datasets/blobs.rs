@@ -1,0 +1,76 @@
+//! Blobs: isotropic Gaussian blobs, matching the paper's sklearn
+//! `make_blobs` setup (10 centers, 10 000 samples, 1 000-10 000 dims,
+//! Euclidean distance) — the high-dimensional dense benchmark where
+//! KD-tree acceleration collapses (Fig 3 / Table 6).
+
+use super::Dataset;
+use crate::distances::{Item, MetricKind};
+use crate::util::rng::Rng;
+
+/// Generate `n` points across `centers` Gaussian blobs in `dim` dimensions.
+/// Box = [-10, 10]^dim, unit std — sklearn's defaults.
+pub fn generate(n: usize, dim: usize, centers: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let centers = centers.max(1);
+    let centroids: Vec<Vec<f64>> = (0..centers)
+        .map(|_| (0..dim).map(|_| rng.range_f64(-10.0, 10.0)).collect())
+        .collect();
+    let mut items = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % centers; // balanced, like make_blobs
+        let p: Vec<f32> = centroids[c]
+            .iter()
+            .map(|&m| (m + rng.normal()) as f32)
+            .collect();
+        items.push(Item::Dense(p));
+        labels.push(c);
+    }
+    Dataset {
+        name: format!("blobs(n={n},dim={dim},k={centers})"),
+        items,
+        label_sets: vec![("class".into(), labels)],
+        labeled: true,
+        metric: MetricKind::Euclidean,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::vector::euclidean;
+
+    #[test]
+    fn blobs_are_separated_in_high_dim() {
+        let d = generate(300, 100, 3, 1);
+        let labels = d.primary_labels().unwrap().to_vec();
+        // same-label pairs closer than cross-label pairs on average
+        let mut intra = (0.0, 0usize);
+        let mut inter = (0.0, 0usize);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let dd = euclidean(d.items[i].as_dense(), d.items[j].as_dense());
+                if labels[i] == labels[j] {
+                    intra = (intra.0 + dd, intra.1 + 1);
+                } else {
+                    inter = (inter.0 + dd, inter.1 + 1);
+                }
+            }
+        }
+        let intra = intra.0 / intra.1 as f64;
+        let inter = inter.0 / inter.1 as f64;
+        assert!(
+            inter > intra * 1.5,
+            "blobs not separated: intra {intra} inter {inter}"
+        );
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let d = generate(100, 4, 10, 3);
+        let labels = d.primary_labels().unwrap();
+        for c in 0..10 {
+            assert_eq!(labels.iter().filter(|&&l| l == c).count(), 10);
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Household: 7-dimensional power-consumption readings under Euclidean
+//! distance — the shape of the UCI "Individual household electric power
+//! consumption" dataset (2 049 280 × 7-d, unlabeled) used for the
+//! low-dimensional scalability rows of Tables 7-8.
+//!
+//! We simulate a day/night consumption process with distinct usage
+//! regimes (night base load / morning peak / daytime / evening peak),
+//! which produces the multi-density cluster structure real meter data has.
+
+use super::Dataset;
+use crate::distances::{Item, MetricKind};
+use crate::util::rng::Rng;
+
+/// (active, reactive, voltage, intensity, sub1, sub2, sub3) per regime.
+const REGIMES: [([f64; 7], f64); 4] = [
+    // night: low flat load
+    ([0.4, 0.1, 241.0, 1.8, 0.0, 0.3, 5.0], 0.08),
+    // morning peak: kitchen heavy
+    ([2.6, 0.3, 236.0, 11.0, 12.0, 2.0, 7.0], 0.5),
+    // daytime: moderate
+    ([1.2, 0.2, 239.0, 5.0, 1.0, 1.5, 6.0], 0.3),
+    // evening peak: everything on
+    ([4.2, 0.5, 233.0, 18.5, 18.0, 6.0, 17.0], 0.9),
+];
+
+/// Generate `n` readings.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut items = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        // regime frequencies mimic a day: night 40%, morning 15%,
+        // day 25%, evening 20%
+        let r = {
+            let u = rng.f64();
+            if u < 0.40 {
+                0
+            } else if u < 0.55 {
+                1
+            } else if u < 0.80 {
+                2
+            } else {
+                3
+            }
+        };
+        let (means, spread) = REGIMES[r];
+        let v: Vec<f32> = means
+            .iter()
+            .map(|&m| (m + rng.normal() * spread * m.max(0.5)) as f32)
+            .collect();
+        items.push(Item::Dense(v));
+        labels.push(r);
+    }
+    Dataset {
+        name: format!("household(n={n})"),
+        items,
+        label_sets: vec![("regime".into(), labels)],
+        labeled: false, // paper: unlabeled (internal metrics only)
+        metric: MetricKind::Euclidean,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_dimensional() {
+        let d = generate(100, 1);
+        for it in &d.items {
+            assert_eq!(it.as_dense().len(), 7);
+        }
+    }
+
+    #[test]
+    fn regimes_have_distinct_power_levels() {
+        let d = generate(2000, 2);
+        let labels = d.primary_labels().unwrap();
+        let mut mean_power = [0.0f64; 4];
+        let mut counts = [0usize; 4];
+        for (it, &l) in d.items.iter().zip(labels) {
+            mean_power[l] += it.as_dense()[0] as f64;
+            counts[l] += 1;
+        }
+        for r in 0..4 {
+            assert!(counts[r] > 50, "regime {r} undersampled");
+            mean_power[r] /= counts[r] as f64;
+        }
+        assert!(mean_power[0] < mean_power[2]);
+        assert!(mean_power[2] < mean_power[3]);
+    }
+}

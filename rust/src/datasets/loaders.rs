@@ -1,0 +1,311 @@
+//! File-based dataset loaders: run the framework on *real* data, not just
+//! the synthetic generators. Formats:
+//!
+//! * **CSV of dense vectors** — one row per item, optional trailing string
+//!   label column, optional header (auto-detected);
+//! * **text lines** — one document per line (Jaro-Winkler / custom text
+//!   metrics);
+//! * **UCI bag-of-words** (the paper's Docword datasets): header lines
+//!   `D`, `W`, `NNZ` followed by `docID wordID count` triples, 1-indexed;
+//! * **label CSV writer** — persist flat labels next to the input.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use crate::distances::{Item, MetricKind};
+
+use super::Dataset;
+
+fn io_err(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Parse CSV of dense f32 vectors from a reader. If `labeled`, the last
+/// column is a class label (arbitrary strings, mapped to dense ids). A
+/// first row that fails numeric parsing in every feature column is treated
+/// as a header and skipped.
+pub fn read_csv_vectors<R: Read>(
+    r: R,
+    labeled: bool,
+) -> std::io::Result<Dataset> {
+    let mut items = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut label_map = std::collections::HashMap::<String, usize>::new();
+    let mut width: Option<usize> = None;
+
+    for (lineno, line) in BufReader::new(r).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = t.split(',').map(str::trim).collect();
+        let (feat, label) = if labeled {
+            if fields.len() < 2 {
+                return Err(io_err(format!("line {}: need >=2 columns", lineno + 1)));
+            }
+            (&fields[..fields.len() - 1], Some(fields[fields.len() - 1]))
+        } else {
+            (&fields[..], None)
+        };
+        let parsed: Result<Vec<f32>, _> =
+            feat.iter().map(|f| f.parse::<f32>()).collect();
+        match parsed {
+            Err(_) if items.is_empty() => continue, // header row
+            Err(e) => {
+                return Err(io_err(format!("line {}: {e}", lineno + 1)));
+            }
+            Ok(v) => {
+                match width {
+                    None => width = Some(v.len()),
+                    Some(w) if w != v.len() => {
+                        return Err(io_err(format!(
+                            "line {}: {} columns, expected {w}",
+                            lineno + 1,
+                            v.len()
+                        )));
+                    }
+                    _ => {}
+                }
+                items.push(Item::Dense(v));
+                if let Some(l) = label {
+                    let next = label_map.len();
+                    labels.push(*label_map.entry(l.to_string()).or_insert(next));
+                }
+            }
+        }
+    }
+    let label_sets = if labeled {
+        vec![("label".to_string(), labels)]
+    } else {
+        Vec::new()
+    };
+    Ok(Dataset {
+        name: "csv".into(),
+        items,
+        label_sets,
+        labeled,
+        metric: MetricKind::Euclidean,
+    })
+}
+
+/// Load dense-vector CSV from a path (see [`read_csv_vectors`]).
+pub fn load_csv_vectors(
+    path: impl AsRef<Path>,
+    labeled: bool,
+) -> std::io::Result<Dataset> {
+    let f = std::fs::File::open(&path)?;
+    let mut ds = read_csv_vectors(f, labeled)?;
+    ds.name = path.as_ref().display().to_string();
+    Ok(ds)
+}
+
+/// Read one text document per line (empty lines skipped).
+pub fn read_text_lines<R: Read>(r: R) -> std::io::Result<Dataset> {
+    let mut items = Vec::new();
+    for line in BufReader::new(r).lines() {
+        let line = line?;
+        if !line.trim().is_empty() {
+            items.push(Item::Text(line));
+        }
+    }
+    Ok(Dataset {
+        name: "text".into(),
+        items,
+        label_sets: Vec::new(),
+        labeled: false,
+        metric: MetricKind::JaroWinkler,
+    })
+}
+
+/// Load a text-lines file from a path (see [`read_text_lines`]).
+pub fn load_text_lines(path: impl AsRef<Path>) -> std::io::Result<Dataset> {
+    let f = std::fs::File::open(&path)?;
+    let mut ds = read_text_lines(f)?;
+    ds.name = path.as_ref().display().to_string();
+    Ok(ds)
+}
+
+/// Read the UCI bag-of-words format (the paper's DW-\* datasets
+/// docword.X.txt): three header lines `D` `W` `NNZ`, then `doc word count`
+/// triples (1-indexed). Documents with no words become empty sparse items.
+pub fn read_uci_docword<R: Read>(r: R) -> std::io::Result<Dataset> {
+    let mut lines = BufReader::new(r).lines();
+    let mut header = |what: &str| -> std::io::Result<usize> {
+        loop {
+            let l = lines
+                .next()
+                .ok_or_else(|| io_err(format!("missing {what} header")))??;
+            let t = l.trim();
+            if !t.is_empty() {
+                return t
+                    .parse::<usize>()
+                    .map_err(|_| io_err(format!("bad {what} header {t:?}")));
+            }
+        }
+    };
+    let d = header("D")?;
+    let _w = header("W")?;
+    let nnz = header("NNZ")?;
+
+    let mut docs: Vec<Vec<(u32, f32)>> = vec![Vec::new(); d];
+    let mut read = 0usize;
+    for l in lines {
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (doc, word, count) = (
+            it.next().ok_or_else(|| io_err("short triple".into()))?,
+            it.next().ok_or_else(|| io_err("short triple".into()))?,
+            it.next().ok_or_else(|| io_err("short triple".into()))?,
+        );
+        let doc: usize =
+            doc.parse().map_err(|_| io_err(format!("bad doc id {doc:?}")))?;
+        let word: u32 =
+            word.parse().map_err(|_| io_err(format!("bad word id {word:?}")))?;
+        let count: f32 =
+            count.parse().map_err(|_| io_err(format!("bad count {count:?}")))?;
+        if doc == 0 || doc > d || word == 0 {
+            return Err(io_err(format!("triple out of range: {t:?}")));
+        }
+        docs[doc - 1].push((word - 1, count));
+        read += 1;
+    }
+    if read != nnz {
+        return Err(io_err(format!("expected {nnz} triples, read {read}")));
+    }
+    let items = docs
+        .into_iter()
+        .map(|mut dw| {
+            dw.sort_unstable_by_key(|&(w, _)| w);
+            dw.dedup_by(|a, b| {
+                if a.0 == b.0 {
+                    b.1 += a.1;
+                    true
+                } else {
+                    false
+                }
+            });
+            let (idx, val): (Vec<u32>, Vec<f32>) = dw.into_iter().unzip();
+            Item::Sparse { idx, val }
+        })
+        .collect();
+    Ok(Dataset {
+        name: "docword".into(),
+        items,
+        label_sets: Vec::new(),
+        labeled: false,
+        metric: MetricKind::SparseCosine,
+    })
+}
+
+/// Load UCI bag-of-words from a path (see [`read_uci_docword`]).
+pub fn load_uci_docword(path: impl AsRef<Path>) -> std::io::Result<Dataset> {
+    let f = std::fs::File::open(&path)?;
+    let mut ds = read_uci_docword(f)?;
+    ds.name = path.as_ref().display().to_string();
+    Ok(ds)
+}
+
+/// Write flat labels as `index,label` CSV (noise = -1).
+pub fn write_labels_csv<W: Write>(mut w: W, labels: &[i32]) -> std::io::Result<()> {
+    writeln!(w, "index,label")?;
+    for (i, l) in labels.iter().enumerate() {
+        writeln!(w, "{i},{l}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_with_header_and_labels() {
+        let csv = "x,y,class\n1.0,2.0,a\n1.5,2.5,a\n9.0,9.0,b\n";
+        let ds = read_csv_vectors(csv.as_bytes(), true).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.items[0], Item::Dense(vec![1.0, 2.0]));
+        let labels = ds.primary_labels().unwrap();
+        assert_eq!(labels, &[0, 0, 1]);
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn csv_without_header_or_labels() {
+        let csv = "# comment\n1,2,3\n4,5,6\n";
+        let ds = read_csv_vectors(csv.as_bytes(), false).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.items[1], Item::Dense(vec![4.0, 5.0, 6.0]));
+        assert!(ds.label_sets.is_empty());
+    }
+
+    #[test]
+    fn csv_errors_on_ragged_rows_and_bad_numbers() {
+        assert!(read_csv_vectors("1,2\n3\n".as_bytes(), false).is_err());
+        assert!(read_csv_vectors("1,2\n3,zap\n".as_bytes(), false).is_err());
+    }
+
+    #[test]
+    fn text_lines_roundtrip() {
+        let txt = "first doc\n\n  \nsecond doc\n";
+        let ds = read_text_lines(txt.as_bytes()).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.items[0], Item::Text("first doc".into()));
+        assert_eq!(ds.metric, MetricKind::JaroWinkler);
+    }
+
+    #[test]
+    fn uci_docword_parses_and_validates() {
+        let data = "3\n10\n4\n1 1 2\n1 3 1\n2 5 4\n3 1 1\n";
+        let ds = read_uci_docword(data.as_bytes()).unwrap();
+        assert_eq!(ds.n(), 3);
+        match &ds.items[0] {
+            Item::Sparse { idx, val } => {
+                assert_eq!(idx, &[0, 2]);
+                assert_eq!(val, &[2.0, 1.0]);
+            }
+            other => panic!("wrong item {other:?}"),
+        }
+        ds.validate().unwrap();
+        // NNZ mismatch
+        assert!(read_uci_docword("1\n5\n2\n1 1 1\n".as_bytes()).is_err());
+        // out-of-range doc
+        assert!(read_uci_docword("1\n5\n1\n2 1 1\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn uci_docword_merges_duplicate_words() {
+        let data = "1\n5\n2\n1 2 1\n1 2 3\n";
+        let ds = read_uci_docword(data.as_bytes()).unwrap();
+        match &ds.items[0] {
+            Item::Sparse { idx, val } => {
+                assert_eq!(idx, &[1]);
+                assert_eq!(val, &[4.0]);
+            }
+            other => panic!("wrong item {other:?}"),
+        }
+    }
+
+    #[test]
+    fn labels_csv_format() {
+        let mut buf = Vec::new();
+        write_labels_csv(&mut buf, &[0, -1, 2]).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s, "index,label\n0,0\n1,-1\n2,2\n");
+    }
+
+    #[test]
+    fn file_roundtrip_via_tempdir() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("fishdbc_loader_test.csv");
+        std::fs::write(&p, "1.0,2.0\n3.0,4.0\n").unwrap();
+        let ds = load_csv_vectors(&p, false).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert!(ds.name.contains("fishdbc_loader_test"));
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,97 @@
+//! Reviews: synthetic food-review texts under Jaro-Winkler distance — the
+//! shape of the paper's Finefoods dataset (568 474 Amazon reviews,
+//! average 430 chars, expensive string distance, unlabeled). Used for the
+//! scalability study (Fig 2) and the big-runtime rows of Tables 7-8.
+
+use super::Dataset;
+use crate::distances::{Item, MetricKind};
+use crate::util::rng::Rng;
+
+const CATEGORIES: [&str; 5] = ["coffee", "tea", "chocolate", "chips", "sauce"];
+
+const OPENERS: [&str; 6] = [
+    "I bought this", "My family loves this", "This is the best",
+    "Honestly disappointed with this", "Been ordering this", "Great value for this",
+];
+
+const QUALS: [&str; 8] = [
+    "rich and smooth", "a bit stale", "absolutely delicious", "way too sweet",
+    "perfectly balanced", "kind of bland", "surprisingly fresh", "overpriced but tasty",
+];
+
+const CLOSERS: [&str; 6] = [
+    "will buy again.", "would not recommend.", "five stars from me.",
+    "shipping was fast too.", "my kids ask for it weekly.", "goes great with breakfast.",
+];
+
+/// Generate `n` review-like texts (~430 chars, like Finefoods).
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut items = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let cat = rng.below(CATEGORIES.len());
+        let mut text = String::with_capacity(480);
+        // 4-6 sentences built around the category word
+        let sentences = 4 + rng.below(3);
+        for _ in 0..sentences {
+            let opener = OPENERS[rng.below(OPENERS.len())];
+            let qual = QUALS[rng.below(QUALS.len())];
+            let closer = CLOSERS[rng.below(CLOSERS.len())];
+            text.push_str(opener);
+            text.push(' ');
+            text.push_str(CATEGORIES[cat]);
+            text.push_str(", it is ");
+            text.push_str(qual);
+            text.push_str(" and ");
+            text.push_str(closer);
+            text.push(' ');
+        }
+        // char-level noise: typos
+        let mut bytes = text.into_bytes();
+        for _ in 0..3 {
+            let i = rng.below(bytes.len());
+            bytes[i] = b'a' + (rng.next_u64() % 26) as u8;
+        }
+        items.push(Item::Text(String::from_utf8(bytes).unwrap()));
+        labels.push(cat);
+    }
+    Dataset {
+        name: format!("reviews(n={n})"),
+        items,
+        label_sets: vec![("category".into(), labels)],
+        labeled: false, // paper: Finefoods is unlabeled
+        metric: MetricKind::JaroWinkler,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn text(it: &Item) -> &str {
+        match it {
+            Item::Text(t) => t,
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn review_lengths_are_plausible() {
+        let d = generate(100, 1);
+        let avg: f64 =
+            d.items.iter().map(|t| text(t).len() as f64).sum::<f64>() / 100.0;
+        assert!(
+            (250.0..650.0).contains(&avg),
+            "avg review length {avg} too far from paper's ~430"
+        );
+    }
+
+    #[test]
+    fn texts_are_distinct() {
+        let d = generate(50, 2);
+        let set: std::collections::HashSet<&str> =
+            d.items.iter().map(text).collect();
+        assert!(set.len() > 45);
+    }
+}

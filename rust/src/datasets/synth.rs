@@ -1,0 +1,88 @@
+//! Synth: transactional event-set datasets in the style of Cesario et
+//! al.'s generator (paper §4.1): 5 clusters of transactions, no outliers,
+//! no overlap, dimensionality 640-2 048, Jaccard distance.
+
+use super::Dataset;
+use crate::distances::{Item, MetricKind};
+use crate::util::rng::Rng;
+
+/// Generate `n` transactions over a universe of `dim` possible events,
+/// grouped in `clusters` non-overlapping clusters.
+pub fn generate(n: usize, dim: usize, clusters: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let clusters = clusters.max(1);
+    // partition the item universe into disjoint characteristic sets
+    let per_cluster = dim / clusters;
+    let mut universe: Vec<u32> = (0..dim as u32).collect();
+    rng.shuffle(&mut universe);
+    let char_sets: Vec<&[u32]> = (0..clusters)
+        .map(|c| &universe[c * per_cluster..(c + 1) * per_cluster])
+        .collect();
+
+    let mut items = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % clusters;
+        let chars = char_sets[c];
+        // a transaction contains ~60% of its cluster's characteristic
+        // items (bernoulli per item -> Jaccard ≈ const within cluster)
+        let mut set: Vec<u32> = chars
+            .iter()
+            .copied()
+            .filter(|_| rng.bool(0.6))
+            .collect();
+        if set.is_empty() {
+            set.push(chars[rng.below(chars.len())]);
+        }
+        set.sort_unstable();
+        items.push(Item::Set(set));
+        labels.push(c);
+    }
+    Dataset {
+        name: format!("synth(n={n},dim={dim},k={clusters})"),
+        items,
+        label_sets: vec![("class".into(), labels)],
+        labeled: true,
+        metric: MetricKind::Jaccard,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::sparse::jaccard;
+
+    fn set_of(it: &Item) -> &[u32] {
+        match it {
+            Item::Set(s) => s,
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn clusters_disjoint_in_jaccard() {
+        let d = generate(200, 640, 5, 1);
+        let labels = d.primary_labels().unwrap();
+        for i in 0..40 {
+            for j in (i + 1)..40 {
+                let dd = jaccard(set_of(&d.items[i]), set_of(&d.items[j]));
+                if labels[i] == labels[j] {
+                    assert!(dd < 0.95, "intra dist {dd} too high");
+                } else {
+                    // characteristic sets are disjoint => distance 1
+                    assert!(dd > 0.999, "inter dist {dd} too low");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sets_sorted_nonempty() {
+        let d = generate(100, 320, 5, 2);
+        for it in &d.items {
+            let s = set_of(it);
+            assert!(!s.is_empty());
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

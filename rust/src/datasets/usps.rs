@@ -1,0 +1,139 @@
+//! USPS-like dataset: 16×16 bitmaps of handwritten-style digits 0 and 7,
+//! discretized at threshold 0.5, keeping only bitmaps with ≥ 20 set
+//! pixels, compared with the Simpson score — the paper's §4.2 USPS setup
+//! (2 196 elements of the real USPS subset; we render synthetic strokes
+//! with jitter, preserving the two-class overlap structure).
+
+use super::Dataset;
+use crate::distances::bitmap::Bitmap;
+use crate::distances::{Item, MetricKind};
+use crate::util::rng::Rng;
+
+const W: usize = 16;
+
+fn render_zero(rng: &mut Rng) -> Vec<f32> {
+    // ellipse ring centered with jittered radii
+    let cx = 7.5 + rng.normal() * 0.4;
+    let cy = 7.5 + rng.normal() * 0.4;
+    let rx = 4.0 + rng.normal() * 0.4;
+    let ry = 5.5 + rng.normal() * 0.4;
+    let thick = 1.8 + rng.f64() * 0.5;
+    let mut img = vec![0.0f32; W * W];
+    for y in 0..W {
+        for x in 0..W {
+            let dx = (x as f64 - cx) / rx.max(1.0);
+            let dy = (y as f64 - cy) / ry.max(1.0);
+            let r = (dx * dx + dy * dy).sqrt();
+            if (r - 1.0).abs() < thick / rx.max(1.0) {
+                img[y * W + x] = 0.6 + rng.f64() as f32 * 0.4;
+            }
+        }
+    }
+    img
+}
+
+fn render_seven(rng: &mut Rng) -> Vec<f32> {
+    // top horizontal bar + diagonal descender, jittered
+    let top = 2.0 + rng.normal() * 0.4;
+    let x0 = 2.5 + rng.normal() * 0.4;
+    let x1 = 12.5 + rng.normal() * 0.4;
+    let slant = 0.55 + rng.f64() * 0.25; // dx per dy of the descender
+    let mut img = vec![0.0f32; W * W];
+    // bar
+    let ty = top.round().clamp(0.0, (W - 2) as f64) as usize;
+    for x in x0.max(0.0) as usize..=(x1.min((W - 1) as f64) as usize) {
+        img[ty * W + x] = 0.6 + rng.f64() as f32 * 0.4;
+        img[(ty + 1) * W + x] = 0.6 + rng.f64() as f32 * 0.4;
+    }
+    // descender from (x1, top) going down-left
+    let mut x = x1;
+    for y in ty + 1..W {
+        let xi = x.round().clamp(0.0, (W - 1) as f64) as usize;
+        img[y * W + xi] = 0.6 + rng.f64() as f32 * 0.4;
+        if xi > 0 {
+            img[y * W + xi - 1] = 0.5 + rng.f64() as f32 * 0.3;
+        }
+        x -= slant;
+    }
+    img
+}
+
+/// Generate ~n bitmaps (paper filter: ≥ 20 set pixels after thresholding
+/// at 0.5 — rarely rejects our renders, so the output size is close to n).
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut items = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    let mut attempts = 0;
+    while items.len() < n && attempts < n * 3 {
+        attempts += 1;
+        let zero = items.len() % 2 == 0;
+        let img = if zero { render_zero(&mut rng) } else { render_seven(&mut rng) };
+        // speckle noise
+        let mut img = img;
+        for _ in 0..3 {
+            let i = rng.below(img.len());
+            img[i] = rng.f32();
+        }
+        let bm = Bitmap::from_grays(&img, 0.5);
+        if bm.count() >= 20 {
+            items.push(Item::Bits(bm));
+            labels.push(usize::from(!zero));
+        }
+    }
+    Dataset {
+        name: format!("usps(n={})", items.len()),
+        items,
+        label_sets: vec![("digit".into(), labels)],
+        labeled: true,
+        metric: MetricKind::Simpson,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::bitmap::simpson;
+
+    fn bits(it: &Item) -> &Bitmap {
+        match it {
+            Item::Bits(b) => b,
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn all_bitmaps_meet_pixel_filter() {
+        let d = generate(300, 1);
+        assert!(d.n() >= 290);
+        for it in &d.items {
+            assert!(bits(it).count() >= 20);
+            assert_eq!(bits(it).len(), 256);
+        }
+    }
+
+    #[test]
+    fn same_digit_closer_than_cross_digit() {
+        let d = generate(200, 2);
+        let labels = d.primary_labels().unwrap();
+        let (mut intra, mut ni) = (0.0, 0);
+        let (mut inter, mut nx) = (0.0, 0);
+        for i in 0..80 {
+            for j in (i + 1)..80 {
+                let dd = simpson(bits(&d.items[i]), bits(&d.items[j]));
+                if labels[i] == labels[j] {
+                    intra += dd;
+                    ni += 1;
+                } else {
+                    inter += dd;
+                    nx += 1;
+                }
+            }
+        }
+        let (intra, inter) = (intra / ni as f64, inter / nx as f64);
+        assert!(
+            inter > intra + 0.1,
+            "digits not distinguishable: intra {intra} inter {inter}"
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! Fixed-size bitmaps + Simpson (overlap) distance — the paper's USPS setup:
+//! 16x16 digit images discretized at 0.5, compared with
+//! `1 - c(x & y) / min(c(x), c(y))` where `c` counts set bits.
+
+/// A fixed-width bitmap stored as u64 words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitmap {
+    bits: usize,
+    words: Vec<u64>,
+}
+
+impl Bitmap {
+    pub fn zeros(bits: usize) -> Self {
+        Bitmap { bits, words: vec![0; bits.div_ceil(64)] }
+    }
+
+    /// Build from a boolean slice.
+    pub fn from_bools(bs: &[bool]) -> Self {
+        let mut bm = Bitmap::zeros(bs.len());
+        for (i, &b) in bs.iter().enumerate() {
+            if b {
+                bm.set(i);
+            }
+        }
+        bm
+    }
+
+    /// Rebuild from raw parts (persistence). `words.len()` must equal
+    /// `bits.div_ceil(64)`.
+    pub fn from_raw(bits: usize, words: Vec<u64>) -> Self {
+        assert_eq!(words.len(), bits.div_ceil(64), "word count mismatch");
+        Bitmap { bits, words }
+    }
+
+    /// Build by thresholding a grayscale image (paper: threshold 0.5).
+    pub fn from_grays(gs: &[f32], threshold: f32) -> Self {
+        let mut bm = Bitmap::zeros(gs.len());
+        for (i, &g) in gs.iter().enumerate() {
+            if g >= threshold {
+                bm.set(i);
+            }
+        }
+        bm
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.bits);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.bits);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    #[inline]
+    pub fn count(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Expand to an f32 {0,1} vector (PJRT kernel path).
+    pub fn to_f32(&self) -> Vec<f32> {
+        (0..self.bits).map(|i| if self.get(i) { 1.0 } else { 0.0 }).collect()
+    }
+
+    #[inline]
+    pub fn and_count(&self, other: &Bitmap) -> u32 {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones())
+            .sum()
+    }
+}
+
+/// Simpson (overlap) distance: `1 - c(x & y) / min(c(x), c(y))`.
+/// Empty bitmaps are at distance 1 from everything (no overlap evidence).
+pub fn simpson(a: &Bitmap, b: &Bitmap) -> f64 {
+    let (ca, cb) = (a.count(), b.count());
+    let denom = ca.min(cb);
+    if denom == 0 {
+        return 1.0;
+    }
+    1.0 - a.and_count(b) as f64 / denom as f64
+}
+
+/// Jaccard distance over bitmaps (used by the lzjd fuzzy-hash simulant).
+pub fn jaccard(a: &Bitmap, b: &Bitmap) -> f64 {
+    let inter = a.and_count(b);
+    let union = a.count() + b.count() - inter;
+    if union == 0 {
+        return 0.0;
+    }
+    1.0 - inter as f64 / union as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_count() {
+        let mut b = Bitmap::zeros(256);
+        assert_eq!(b.count(), 0);
+        b.set(0);
+        b.set(63);
+        b.set(64);
+        b.set(255);
+        assert_eq!(b.count(), 4);
+        assert!(b.get(63) && b.get(64) && !b.get(1));
+    }
+
+    #[test]
+    fn from_bools_roundtrip() {
+        let bools: Vec<bool> = (0..100).map(|i| i % 3 == 0).collect();
+        let bm = Bitmap::from_bools(&bools);
+        for (i, &x) in bools.iter().enumerate() {
+            assert_eq!(bm.get(i), x);
+        }
+        let f = bm.to_f32();
+        assert_eq!(f.len(), 100);
+        assert_eq!(f.iter().filter(|&&v| v == 1.0).count() as u32, bm.count());
+    }
+
+    #[test]
+    fn simpson_semantics() {
+        let a = Bitmap::from_bools(&[true, true, false, false]);
+        let sup = Bitmap::from_bools(&[true, true, true, false]);
+        let dis = Bitmap::from_bools(&[false, false, true, true]);
+        assert_eq!(simpson(&a, &sup), 0.0); // subset => 0
+        assert_eq!(simpson(&a, &dis), 1.0); // disjoint => 1
+        assert_eq!(simpson(&a, &a), 0.0);
+        let empty = Bitmap::zeros(4);
+        assert_eq!(simpson(&a, &empty), 1.0);
+    }
+
+    #[test]
+    fn thresholding_matches_paper_rule() {
+        let gs = [0.1f32, 0.5, 0.9, 0.49];
+        let bm = Bitmap::from_grays(&gs, 0.5);
+        assert_eq!(
+            (0..4).map(|i| bm.get(i)).collect::<Vec<_>>(),
+            vec![false, true, true, false]
+        );
+    }
+
+    #[test]
+    fn jaccard_bitmap() {
+        let a = Bitmap::from_bools(&[true, true, false]);
+        let b = Bitmap::from_bools(&[true, false, true]);
+        assert!((jaccard(&a, &b) - (1.0 - 1.0 / 3.0)).abs() < 1e-12);
+        let z = Bitmap::zeros(3);
+        assert_eq!(jaccard(&z, &z), 0.0);
+    }
+}

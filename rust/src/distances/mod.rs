@@ -1,0 +1,285 @@
+//! Distance functions over arbitrary data — the paper's *flexibility* axis.
+//!
+//! FISHDBC's core is generic over any item type `T` and any symmetric,
+//! possibly non-metric distance `Metric<T>` (the paper accepts arbitrary
+//! Python callables; we accept arbitrary rust closures or trait impls).
+//!
+//! For the framework path (CLI / coordinator / benches) we also provide a
+//! dynamic [`Item`] value type plus [`MetricKind`] covering every distance
+//! the paper evaluates (Table 1): Euclidean & squared Euclidean & cosine on
+//! dense vectors, cosine on sparse vectors, Jaccard on sparse boolean sets,
+//! Jaro-Winkler on text, Simpson on bitmaps, and the three fuzzy-hash
+//! distances (lzjd / tlsh / sdhash simulants).
+
+pub mod bitmap;
+pub mod fuzzy;
+pub mod sparse;
+pub mod text;
+pub mod vector;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A symmetric (possibly non-metric) distance over items of type `T`.
+pub trait Metric<T: ?Sized>: Send + Sync {
+    fn dist(&self, a: &T, b: &T) -> f64;
+}
+
+/// Any `Fn(&T, &T) -> f64` is a metric — arbitrary user distance functions,
+/// exactly like the paper's Python API.
+impl<T: ?Sized, F> Metric<T> for F
+where
+    F: Fn(&T, &T) -> f64 + Send + Sync,
+{
+    #[inline]
+    fn dist(&self, a: &T, b: &T) -> f64 {
+        self(a, b)
+    }
+}
+
+/// Wrapper counting distance evaluations (the paper's key cost model: Fig 1,
+/// Fig 2 report runtime dominated by / measured in distance calls).
+pub struct Counting<M> {
+    inner: M,
+    calls: AtomicU64,
+}
+
+impl<M> Counting<M> {
+    pub fn new(inner: M) -> Self {
+        Counting { inner, calls: AtomicU64::new(0) }
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.calls.store(0, Ordering::Relaxed);
+    }
+}
+
+impl<T: ?Sized, M: Metric<T>> Metric<T> for Counting<M> {
+    #[inline]
+    fn dist(&self, a: &T, b: &T) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.dist(a, b)
+    }
+}
+
+/// Dynamic item value used by the framework layer (CLI, coordinator,
+/// datasets, benches). Library users with a single concrete type should use
+/// the generic API directly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Item {
+    /// Dense f32 vector (Blobs, Household).
+    Dense(Vec<f32>),
+    /// Sparse vector: sorted unique indices + values (Docword).
+    Sparse { idx: Vec<u32>, val: Vec<f32> },
+    /// Sparse boolean set: sorted unique indices (Synth transactions).
+    Set(Vec<u32>),
+    /// Text (Finefoods reviews).
+    Text(String),
+    /// Fixed-size bitmap (USPS 16x16 digits).
+    Bits(bitmap::Bitmap),
+    /// Fuzzy-hash digest (lzjd/tlsh/sdhash simulants).
+    Digest(fuzzy::Digest),
+}
+
+impl Item {
+    /// Dense payload view (panics if not dense) — used by the PJRT backend.
+    pub fn as_dense(&self) -> &[f32] {
+        match self {
+            Item::Dense(v) => v,
+            _ => panic!("Item::as_dense on non-dense item"),
+        }
+    }
+
+    /// Approximate heap size in bytes (memory accounting / Table 7 notes).
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            Item::Dense(v) => v.len() * 4,
+            Item::Sparse { idx, val } => idx.len() * 4 + val.len() * 4,
+            Item::Set(s) => s.len() * 4,
+            Item::Text(t) => t.len(),
+            Item::Bits(b) => b.words().len() * 8,
+            Item::Digest(d) => d.approx_bytes(),
+        }
+    }
+}
+
+/// Every distance function evaluated in the paper (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MetricKind {
+    Euclidean,
+    SqEuclidean,
+    Cosine,
+    SparseCosine,
+    Jaccard,
+    JaroWinkler,
+    Simpson,
+    Lzjd,
+    Tlsh,
+    Sdhash,
+}
+
+impl MetricKind {
+    pub fn parse(s: &str) -> Option<MetricKind> {
+        Some(match s {
+            "euclidean" => MetricKind::Euclidean,
+            "sqeuclidean" => MetricKind::SqEuclidean,
+            "cosine" => MetricKind::Cosine,
+            "sparse-cosine" | "sparse_cosine" => MetricKind::SparseCosine,
+            "jaccard" => MetricKind::Jaccard,
+            "jaro-winkler" | "jaro_winkler" | "jw" => MetricKind::JaroWinkler,
+            "simpson" => MetricKind::Simpson,
+            "lzjd" => MetricKind::Lzjd,
+            "tlsh" => MetricKind::Tlsh,
+            "sdhash" => MetricKind::Sdhash,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricKind::Euclidean => "euclidean",
+            MetricKind::SqEuclidean => "sqeuclidean",
+            MetricKind::Cosine => "cosine",
+            MetricKind::SparseCosine => "sparse-cosine",
+            MetricKind::Jaccard => "jaccard",
+            MetricKind::JaroWinkler => "jaro-winkler",
+            MetricKind::Simpson => "simpson",
+            MetricKind::Lzjd => "lzjd",
+            MetricKind::Tlsh => "tlsh",
+            MetricKind::Sdhash => "sdhash",
+        }
+    }
+
+    /// Evaluate this metric on two dynamic items. Panics on a type mismatch
+    /// (the framework validates dataset/metric pairing at configuration
+    /// time; see [`MetricKind::compatible`]).
+    pub fn dist(&self, a: &Item, b: &Item) -> f64 {
+        match (self, a, b) {
+            (MetricKind::Euclidean, Item::Dense(x), Item::Dense(y)) => {
+                vector::euclidean(x, y)
+            }
+            (MetricKind::SqEuclidean, Item::Dense(x), Item::Dense(y)) => {
+                vector::sqeuclidean(x, y)
+            }
+            (MetricKind::Cosine, Item::Dense(x), Item::Dense(y)) => {
+                vector::cosine(x, y)
+            }
+            (
+                MetricKind::SparseCosine,
+                Item::Sparse { idx: ia, val: va },
+                Item::Sparse { idx: ib, val: vb },
+            ) => sparse::cosine(ia, va, ib, vb),
+            (MetricKind::Jaccard, Item::Set(x), Item::Set(y)) => {
+                sparse::jaccard(x, y)
+            }
+            (MetricKind::JaroWinkler, Item::Text(x), Item::Text(y)) => {
+                text::jaro_winkler(x, y)
+            }
+            (MetricKind::Simpson, Item::Bits(x), Item::Bits(y)) => {
+                bitmap::simpson(x, y)
+            }
+            (MetricKind::Lzjd, Item::Digest(x), Item::Digest(y)) => {
+                fuzzy::lzjd(x, y)
+            }
+            (MetricKind::Tlsh, Item::Digest(x), Item::Digest(y)) => {
+                fuzzy::tlsh(x, y)
+            }
+            (MetricKind::Sdhash, Item::Digest(x), Item::Digest(y)) => {
+                fuzzy::sdhash(x, y)
+            }
+            _ => panic!(
+                "metric {:?} incompatible with items {:?}/{:?}",
+                self,
+                std::mem::discriminant(a),
+                std::mem::discriminant(b)
+            ),
+        }
+    }
+
+    /// Whether this metric applies to the given item.
+    pub fn compatible(&self, item: &Item) -> bool {
+        matches!(
+            (self, item),
+            (
+                MetricKind::Euclidean | MetricKind::SqEuclidean | MetricKind::Cosine,
+                Item::Dense(_)
+            ) | (MetricKind::SparseCosine, Item::Sparse { .. })
+                | (MetricKind::Jaccard, Item::Set(_))
+                | (MetricKind::JaroWinkler, Item::Text(_))
+                | (MetricKind::Simpson, Item::Bits(_))
+                | (
+                    MetricKind::Lzjd | MetricKind::Tlsh | MetricKind::Sdhash,
+                    Item::Digest(_)
+                )
+        )
+    }
+}
+
+/// `MetricKind` is itself a `Metric<Item>`, so the dynamic framework path
+/// reuses the exact same generic core as typed users.
+impl Metric<Item> for MetricKind {
+    #[inline]
+    fn dist(&self, a: &Item, b: &Item) -> f64 {
+        MetricKind::dist(self, a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closures_are_metrics() {
+        let m = |a: &i64, b: &i64| (a - b).abs() as f64;
+        assert_eq!(m.dist(&3, &7), 4.0);
+    }
+
+    #[test]
+    fn counting_counts() {
+        let m = Counting::new(|a: &f64, b: &f64| (a - b).abs());
+        assert_eq!(m.calls(), 0);
+        m.dist(&1.0, &2.0);
+        m.dist(&1.0, &3.0);
+        assert_eq!(m.calls(), 2);
+        m.reset();
+        assert_eq!(m.calls(), 0);
+    }
+
+    #[test]
+    fn metric_kind_parse_roundtrip() {
+        for name in [
+            "euclidean", "sqeuclidean", "cosine", "sparse-cosine", "jaccard",
+            "jaro-winkler", "simpson", "lzjd", "tlsh", "sdhash",
+        ] {
+            let k = MetricKind::parse(name).unwrap();
+            assert_eq!(k.name(), name);
+        }
+        assert!(MetricKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn dynamic_dispatch_matches_typed() {
+        let a = Item::Dense(vec![0.0, 3.0]);
+        let b = Item::Dense(vec![4.0, 0.0]);
+        assert!((MetricKind::Euclidean.dist(&a, &b) - 5.0).abs() < 1e-12);
+        assert!((MetricKind::SqEuclidean.dist(&a, &b) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compatibility_matrix() {
+        let dense = Item::Dense(vec![1.0]);
+        let text = Item::Text("x".into());
+        assert!(MetricKind::Euclidean.compatible(&dense));
+        assert!(!MetricKind::Euclidean.compatible(&text));
+        assert!(MetricKind::JaroWinkler.compatible(&text));
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn mismatched_items_panic() {
+        MetricKind::Euclidean.dist(&Item::Text("a".into()), &Item::Text("b".into()));
+    }
+}

@@ -1,0 +1,118 @@
+//! Sparse-vector and set distances (Docword bags-of-words, Synth
+//! transactions). Sparse vectors are (sorted unique indices, values);
+//! sets are sorted unique indices.
+
+/// Cosine distance between sparse vectors given as sorted index/value pairs.
+pub fn cosine(ia: &[u32], va: &[f32], ib: &[u32], vb: &[f32]) -> f64 {
+    debug_assert_eq!(ia.len(), va.len());
+    debug_assert_eq!(ib.len(), vb.len());
+    let mut dot = 0.0f64;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < ia.len() && j < ib.len() {
+        match ia[i].cmp(&ib[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                dot += va[i] as f64 * vb[j] as f64;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let na: f64 = va.iter().map(|v| *v as f64 * *v as f64).sum();
+    let nb: f64 = vb.iter().map(|v| *v as f64 * *v as f64).sum();
+    if na == 0.0 || nb == 0.0 {
+        return 1.0;
+    }
+    (1.0 - dot / (na.sqrt() * nb.sqrt())).max(0.0)
+}
+
+/// Jaccard distance between sorted index sets: 1 - |A∩B| / |A∪B|.
+pub fn jaccard(a: &[u32], b: &[u32]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 0.0;
+    }
+    let mut inter = 0usize;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let union = a.len() + b.len() - inter;
+    1.0 - inter as f64 / union as f64
+}
+
+/// Overlap (Simpson) distance between sorted index sets.
+pub fn simpson(a: &[u32], b: &[u32]) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return 1.0;
+    }
+    let mut inter = 0usize;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    1.0 - inter as f64 / a.len().min(b.len()) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_cosine_matches_dense() {
+        // a = [1,0,2], b = [0,3,4]
+        let d = cosine(&[0, 2], &[1.0, 2.0], &[1, 2], &[3.0, 4.0]);
+        let dense = crate::distances::vector::cosine(&[1.0, 0.0, 2.0], &[0.0, 3.0, 4.0]);
+        assert!((d - dense).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_cosine_disjoint_is_one() {
+        assert_eq!(cosine(&[0, 1], &[1.0, 1.0], &[2, 3], &[1.0, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn sparse_cosine_empty_is_one() {
+        assert_eq!(cosine(&[], &[], &[0], &[1.0]), 1.0);
+    }
+
+    #[test]
+    fn jaccard_basics() {
+        assert_eq!(jaccard(&[1, 2, 3], &[1, 2, 3]), 0.0);
+        assert_eq!(jaccard(&[1, 2], &[3, 4]), 1.0);
+        assert!((jaccard(&[1, 2, 3], &[2, 3, 4]) - 0.5).abs() < 1e-12);
+        assert_eq!(jaccard(&[], &[]), 0.0);
+        assert_eq!(jaccard(&[], &[1]), 1.0);
+    }
+
+    #[test]
+    fn simpson_subset_is_zero() {
+        assert_eq!(simpson(&[1, 2], &[1, 2, 3, 4]), 0.0);
+        assert_eq!(simpson(&[], &[1]), 1.0);
+        assert_eq!(simpson(&[5], &[6]), 1.0);
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = [1u32, 5, 9, 12];
+        let b = [2u32, 5, 12, 30, 31];
+        assert_eq!(jaccard(&a, &b), jaccard(&b, &a));
+        assert_eq!(simpson(&a, &b), simpson(&b, &a));
+    }
+}

@@ -1,0 +1,147 @@
+//! String distances (Finefoods reviews). Jaro-Winkler is the paper's choice
+//! \[40\]; we add bounded Levenshtein as an alternative arbitrary metric for
+//! the flexibility examples.
+
+/// Jaro similarity between byte strings (ASCII-oriented, as is standard for
+/// record-linkage uses; multi-byte UTF-8 is handled bytewise).
+fn jaro(a: &[u8], b: &[u8]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    if a.is_empty() || b.is_empty() {
+        return 0.0;
+    }
+    let window = (a.len().max(b.len()) / 2).saturating_sub(1);
+    let mut b_used = vec![false; b.len()];
+    let mut matches = 0usize;
+    // match pass
+    let mut a_match = vec![false; a.len()];
+    for (i, &ca) in a.iter().enumerate() {
+        let lo = i.saturating_sub(window);
+        let hi = (i + window + 1).min(b.len());
+        for j in lo..hi {
+            if !b_used[j] && b[j] == ca {
+                b_used[j] = true;
+                a_match[i] = true;
+                matches += 1;
+                break;
+            }
+        }
+    }
+    if matches == 0 {
+        return 0.0;
+    }
+    // transposition pass
+    let mut transpositions = 0usize;
+    let mut j = 0usize;
+    for (i, &m) in a_match.iter().enumerate() {
+        if !m {
+            continue;
+        }
+        while !b_used[j] {
+            j += 1;
+        }
+        if a[i] != b[j] {
+            transpositions += 1;
+        }
+        j += 1;
+    }
+    let m = matches as f64;
+    (m / a.len() as f64 + m / b.len() as f64 + (m - transpositions as f64 / 2.0) / m)
+        / 3.0
+}
+
+/// Jaro-Winkler *distance*: 1 - JW similarity, with the standard prefix
+/// scale p = 0.1 and max prefix length 4.
+pub fn jaro_winkler(a: &str, b: &str) -> f64 {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let j = jaro(a, b);
+    let prefix = a
+        .iter()
+        .zip(b.iter())
+        .take(4)
+        .take_while(|(x, y)| x == y)
+        .count() as f64;
+    let sim = j + prefix * 0.1 * (1.0 - j);
+    (1.0 - sim).clamp(0.0, 1.0)
+}
+
+/// Levenshtein distance normalized by max length, with an early-exit band:
+/// returns 1.0 as soon as the edit distance provably exceeds
+/// `cutoff_frac * max_len` (cheap filter for long texts).
+pub fn levenshtein_norm(a: &str, b: &str, cutoff_frac: f64) -> f64 {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let (n, m) = (a.len(), b.len());
+    if n == 0 && m == 0 {
+        return 0.0;
+    }
+    let maxlen = n.max(m);
+    let cutoff = ((maxlen as f64) * cutoff_frac).ceil() as usize;
+    if n.abs_diff(m) > cutoff {
+        return 1.0;
+    }
+    let mut prev: Vec<usize> = (0..=m).collect();
+    let mut cur = vec![0usize; m + 1];
+    for i in 1..=n {
+        cur[0] = i;
+        let mut row_min = cur[0];
+        for j in 1..=m {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+            row_min = row_min.min(cur[j]);
+        }
+        if row_min > cutoff {
+            return 1.0;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    (prev[m] as f64 / maxlen as f64).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jw_identical_is_zero() {
+        assert_eq!(jaro_winkler("martha", "martha"), 0.0);
+        assert_eq!(jaro_winkler("", ""), 0.0);
+    }
+
+    #[test]
+    fn jw_known_values() {
+        // classic record-linkage examples
+        let d = jaro_winkler("MARTHA", "MARHTA");
+        assert!((d - (1.0 - 0.9611)).abs() < 1e-3, "got {d}");
+        let d = jaro_winkler("DWAYNE", "DUANE");
+        assert!((d - (1.0 - 0.8400)).abs() < 1e-3, "got {d}");
+        let d = jaro_winkler("DIXON", "DICKSONX");
+        assert!((d - (1.0 - 0.8133)).abs() < 1e-3, "got {d}");
+    }
+
+    #[test]
+    fn jw_disjoint_is_one() {
+        assert_eq!(jaro_winkler("abc", "xyz"), 1.0);
+        assert_eq!(jaro_winkler("abc", ""), 1.0);
+    }
+
+    #[test]
+    fn jw_symmetry_and_bounds() {
+        let pairs = [("kitten", "sitting"), ("food review", "god review"), ("a", "ab")];
+        for (a, b) in pairs {
+            let d1 = jaro_winkler(a, b);
+            let d2 = jaro_winkler(b, a);
+            assert!((d1 - d2).abs() < 1e-12);
+            assert!((0.0..=1.0).contains(&d1));
+        }
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein_norm("kitten", "kitten", 1.0), 0.0);
+        let d = levenshtein_norm("kitten", "sitting", 1.0);
+        assert!((d - 3.0 / 7.0).abs() < 1e-12);
+        // early exit band
+        assert_eq!(levenshtein_norm("aaaaaaaaaa", "b", 0.2), 1.0);
+    }
+}

@@ -1,0 +1,651 @@
+//! The FISHDBC algorithm (paper Algorithm 1): incremental approximate
+//! HDBSCAN* for arbitrary data and distance functions.
+//!
+//! State (paper §3.1): (1) the HNSW; (2) `neighbors` — each node's MinPts
+//! closest discovered neighbors (core distances in O(1)); (3) the current
+//! approximate MSF with reachability-distance weights; (4) `candidates` —
+//! a bounded buffer of candidate MSF edges, flushed through Kruskal
+//! whenever it exceeds α·n (guaranteeing O(n) size).
+//!
+//! [`Fishdbc::add`] piggybacks on every distance computed by the HNSW
+//! insertion, turning each `(a, b, d)` triple into a candidate edge
+//! weighted by reachability distance, and re-offering edges whose
+//! reachability decreased because a core distance shrank (lines 19-23).
+
+pub mod neighbors;
+
+use std::collections::HashMap;
+
+use crate::util::fasthash::FastMap;
+
+use crate::distances::Metric;
+use crate::hdbscan::{cluster_from_msf_opts, Clustering};
+use crate::hnsw::{DistLog, Hnsw, HnswParams};
+use crate::mst::{Edge, Msf};
+use neighbors::NeighborStore;
+
+/// FISHDBC parameters (paper §4.1 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct FishdbcParams {
+    /// MinPts: neighborhood size defining density (paper default: 10,
+    /// following Schubert et al.'s advice).
+    pub min_pts: usize,
+    /// HNSW construction beam width (paper evaluates 20 and 50).
+    pub ef: usize,
+    /// Candidate-buffer factor: UPDATE_MST runs when |candidates| > α·n.
+    /// "α has a moderate impact on runtime, and should be chosen as large
+    /// as possible while guaranteeing that state fits in memory" (§3.1).
+    pub alpha: f64,
+    /// RNG seed (HNSW level assignment).
+    pub seed: u64,
+}
+
+impl Default for FishdbcParams {
+    fn default() -> Self {
+        FishdbcParams { min_pts: 10, ef: 20, alpha: 5.0, seed: 0xF15D }
+    }
+}
+
+/// Cost/health counters exposed for the benches and the coordinator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FishdbcStats {
+    pub items: usize,
+    pub dist_calls: u64,
+    pub mst_updates: u64,
+    pub candidate_edges_buffered: usize,
+    pub msf_edges: usize,
+}
+
+/// Incremental FISHDBC clusterer over items of type `T` under metric `M`.
+pub struct Fishdbc<T, M> {
+    params: FishdbcParams,
+    metric: M,
+    items: Vec<T>,
+    hnsw: Hnsw,
+    neighbors: NeighborStore,
+    msf: Msf,
+    candidates: FastMap<(u32, u32), f64>,
+    mst_updates: u64,
+    log_buf: DistLog,
+}
+
+impl<T, M: Metric<T>> Fishdbc<T, M> {
+    /// SETUP (Algorithm 1): create empty state.
+    pub fn new(metric: M, params: FishdbcParams) -> Self {
+        Fishdbc {
+            metric,
+            hnsw: Hnsw::new(HnswParams {
+                m: params.min_pts,
+                ef: params.ef,
+                seed: params.seed,
+            }),
+            neighbors: NeighborStore::new(params.min_pts),
+            msf: Msf::new(),
+            candidates: FastMap::default(),
+            mst_updates: 0,
+            log_buf: DistLog::new(),
+            params,
+            items: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> &FishdbcParams {
+        &self.params
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn items(&self) -> &[T] {
+        &self.items
+    }
+
+    pub fn metric(&self) -> &M {
+        &self.metric
+    }
+
+    /// Total distance-function evaluations so far (the paper's cost model;
+    /// Fig 2 plots this per item).
+    pub fn dist_calls(&self) -> u64 {
+        self.hnsw.dist_calls()
+    }
+
+    pub fn stats(&self) -> FishdbcStats {
+        FishdbcStats {
+            items: self.items.len(),
+            dist_calls: self.dist_calls(),
+            mst_updates: self.mst_updates,
+            candidate_edges_buffered: self.candidates.len(),
+            msf_edges: self.msf.edges().len(),
+        }
+    }
+
+    /// Core distance of an item (+∞ until MinPts neighbors are known).
+    pub fn core_distance(&self, id: u32) -> f64 {
+        self.neighbors.core(id)
+    }
+
+    /// ADD (Algorithm 1): incrementally insert one item. Returns its id.
+    pub fn add(&mut self, item: T) -> u32 {
+        let id = self.items.len() as u32;
+        self.items.push(item);
+        self.neighbors.ensure_len(self.items.len());
+
+        // HNSW insertion; every d() call lands in log_buf (piggybacking)
+        let mut log = std::mem::take(&mut self.log_buf);
+        log.clear();
+        self.hnsw.add(&self.items, &self.metric, id, &mut log);
+
+        // First update all neighbor sets so core distances reflect
+        // everything this insertion discovered, remembering whose top-k
+        // changed (their reachability distances may have decreased).
+        let mut changed: Vec<(u32, f64)> = Vec::new();
+        for &(a, b, d) in &log {
+            if self.neighbors.offer(a, b, d) {
+                changed.push((a, d));
+            }
+            if self.neighbors.offer(b, a, d) {
+                changed.push((b, d));
+            }
+        }
+
+        // Candidate edges from every computed distance, weighted by
+        // reachability distance rd = max(d, core(a), core(b)) (line 16).
+        for &(a, b, d) in &log {
+            let rd = d.max(self.neighbors.core(a)).max(self.neighbors.core(b));
+            Self::offer_candidate(&mut self.candidates, a, b, rd);
+        }
+
+        // Lines 19-23: when y's top-MinPts changed (its core distance may
+        // have dropped), re-offer edges to y's known neighbors closer than
+        // the triggering distance v — their reachability may have shrunk.
+        for &(y, v) in &changed {
+            let cy = self.neighbors.core(y);
+            // collect to avoid holding a borrow on neighbors during offers
+            let close: Vec<(u32, f64)> =
+                self.neighbors.get(y).closer_than(v).collect();
+            for (z, w) in close {
+                let cz = self.neighbors.core(z);
+                if cz < v {
+                    let rd = w.max(cy).max(cz);
+                    Self::offer_candidate(&mut self.candidates, y, z, rd);
+                }
+            }
+        }
+
+        self.log_buf = log;
+
+        // Bound the buffer: |candidates| ≤ α·n (line 24).
+        if self.candidates.len() as f64
+            > self.params.alpha * self.items.len() as f64
+        {
+            self.update_mst();
+        }
+        id
+    }
+
+    /// Add many items (streaming batch path).
+    pub fn add_batch(&mut self, items: impl IntoIterator<Item = T>) {
+        for it in items {
+            self.add(it);
+        }
+    }
+
+    #[inline]
+    fn offer_candidate(
+        candidates: &mut FastMap<(u32, u32), f64>,
+        a: u32,
+        b: u32,
+        rd: f64,
+    ) {
+        if a == b {
+            return;
+        }
+        let key = Edge::key(a, b);
+        candidates
+            .entry(key)
+            .and_modify(|w| {
+                if rd < *w {
+                    *w = rd;
+                }
+            })
+            .or_insert(rd);
+    }
+
+    /// UPDATE_MST (Algorithm 1): fold buffered candidates into the MSF
+    /// (Kruskal over forest ∪ candidates; correct by Eppstein's lemma).
+    pub fn update_mst(&mut self) {
+        if self.candidates.is_empty() {
+            return;
+        }
+        let edges: Vec<Edge> = self
+            .candidates
+            .drain()
+            .map(|((a, b), w)| Edge::new(a, b, w))
+            .collect();
+        self.msf.update(edges, self.items.len());
+        self.mst_updates += 1;
+    }
+
+    /// CLUSTER (Algorithm 1): flush candidates and extract the clustering
+    /// with minimum cluster size `mcs` (paper suggests mcs = MinPts).
+    pub fn cluster(&mut self, mcs: usize) -> Clustering {
+        self.cluster_opts(mcs, false)
+    }
+
+    /// [`Fishdbc::cluster`] with hdbscan's `allow_single_cluster` option:
+    /// when the whole dataset is one uniform cluster the default (paper)
+    /// semantics return all-noise; with this flag the root may be selected.
+    pub fn cluster_opts(&mut self, mcs: usize, allow_single_cluster: bool) -> Clustering {
+        self.update_mst();
+        if self.items.is_empty() {
+            return cluster_from_msf_opts(&[], 1, mcs, allow_single_cluster);
+        }
+        cluster_from_msf_opts(
+            self.msf.edges(),
+            self.items.len(),
+            mcs,
+            allow_single_cluster,
+        )
+    }
+
+    /// Current approximate MSF (introspection / tests).
+    pub fn msf(&self) -> &Msf {
+        &self.msf
+    }
+
+    /// Build an MSF from the *final k-nearest-neighbor graph only* — the
+    /// "simpler design" the paper argues against in §3.1 ("computing the
+    /// MST based on the nearest neighbor distances in the bottom graph …
+    /// is not optimal as information about farther away items is important
+    /// to avoid breaking up large clusters"). Used by the ablation bench to
+    /// quantify exactly that: the paper's full piggyback keeps candidate
+    /// edges from *every* distance call, not just the surviving top-k.
+    pub fn knn_only_msf(&self) -> Msf {
+        let mut edges = FastMap::default();
+        for x in 0..self.items.len() as u32 {
+            for (y, d) in self.neighbors.get(x).iter() {
+                let rd =
+                    d.max(self.neighbors.core(x)).max(self.neighbors.core(y));
+                Self::offer_candidate(&mut edges, x, y, rd);
+            }
+        }
+        Msf::from_edges(
+            edges.into_iter().map(|((a, b), w)| Edge::new(a, b, w)).collect(),
+            self.items.len(),
+        )
+    }
+
+    /// HNSW state export (persistence; see the `persist` module).
+    pub fn hnsw_export(&self) -> crate::hnsw::HnswExport {
+        self.hnsw.export()
+    }
+
+    /// Neighbor-store export (persistence).
+    pub fn neighbors_export(&self) -> Vec<Vec<(u32, f64)>> {
+        self.neighbors.export()
+    }
+
+    /// Candidate-buffer export (persistence).
+    pub fn candidates_export(&self) -> Vec<(u32, u32, f64)> {
+        let mut v: Vec<(u32, u32, f64)> = self
+            .candidates
+            .iter()
+            .map(|(&(a, b), &w)| (a, b, w))
+            .collect();
+        v.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        v
+    }
+
+    /// Reassemble an instance from persisted parts (see `persist`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        metric: M,
+        params: FishdbcParams,
+        items: Vec<T>,
+        hnsw: Hnsw,
+        neighbors: NeighborStore,
+        msf: Msf,
+        candidates: Vec<(u32, u32, f64)>,
+        mst_updates: u64,
+    ) -> Self {
+        Fishdbc {
+            params,
+            metric,
+            items,
+            hnsw,
+            neighbors,
+            msf,
+            candidates: candidates
+                .into_iter()
+                .map(|(a, b, w)| ((a, b), w))
+                .collect(),
+            mst_updates,
+            log_buf: DistLog::new(),
+        }
+    }
+
+    /// Approximate k-nearest neighbors of an *external* query item (no
+    /// insertion, no state mutation, not counted in [`Self::dist_calls`]).
+    /// Ascending distance. `ef` defaults to the construction beam width.
+    pub fn nearest(&self, query: &T, k: usize, ef: Option<usize>) -> Vec<(u32, f64)> {
+        self.hnsw.search(
+            &self.items,
+            &self.metric,
+            query,
+            k,
+            ef.unwrap_or(self.params.ef),
+        )
+    }
+
+    /// Classify an external item against an existing clustering: the label
+    /// of the majority vote among its `k` nearest clustered neighbors
+    /// (noise neighbors abstain; returns -1 when all abstain or the index
+    /// is empty). This is how a streaming deployment labels fresh events
+    /// between (cheap) re-clusterings.
+    pub fn classify(&self, query: &T, labels: &[i32], k: usize) -> i32 {
+        let mut votes: HashMap<i32, usize> = HashMap::new();
+        for (id, _) in self.nearest(query, k, None) {
+            let l = labels.get(id as usize).copied().unwrap_or(-1);
+            if l >= 0 {
+                *votes.entry(l).or_default() += 1;
+            }
+        }
+        votes
+            .into_iter()
+            .max_by_key(|&(_, c)| c)
+            .map(|(l, _)| l)
+            .unwrap_or(-1)
+    }
+
+    /// Approximate state size in bytes (Theorem 3.1's O(n log n) claim is
+    /// checked against this in the integration tests).
+    pub fn approx_state_bytes(&self) -> usize {
+        let edges = self.msf.edges().len() + self.candidates.len();
+        let heap_entries: usize = self.items.len() * self.params.min_pts;
+        // HNSW: levels sum ~ n * (1 + 1/m + ...) lists of ~m u32s
+        let hnsw_links = self.items.len() * (self.params.min_pts * 2 + 8);
+        edges * 24 + heap_entries * 12 + hnsw_links * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::vector::euclidean;
+    use crate::hdbscan::exact::{exact_hdbscan, ExactParams};
+    use crate::util::rng::Rng;
+
+    fn metric() -> impl Metric<Vec<f32>> {
+        |a: &Vec<f32>, b: &Vec<f32>| euclidean(a, b)
+    }
+
+    fn blobs(
+        rng: &mut Rng,
+        per: usize,
+        centers: &[(f64, f64)],
+        spread: f64,
+    ) -> Vec<Vec<f32>> {
+        let mut pts = Vec::new();
+        for &(cx, cy) in centers {
+            for _ in 0..per {
+                pts.push(vec![
+                    (cx + rng.normal() * spread) as f32,
+                    (cy + rng.normal() * spread) as f32,
+                ]);
+            }
+        }
+        pts
+    }
+
+    fn purity(labels: &[i32], truth: &[usize]) -> f64 {
+        // fraction of clustered points whose cluster's majority truth-label
+        // matches their own
+        use std::collections::HashMap;
+        let mut per: HashMap<i32, HashMap<usize, usize>> = HashMap::new();
+        for (l, t) in labels.iter().zip(truth) {
+            if *l >= 0 {
+                *per.entry(*l).or_default().entry(*t).or_default() += 1;
+            }
+        }
+        let mut good = 0usize;
+        let mut total = 0usize;
+        for (_, counts) in per {
+            let max = counts.values().max().copied().unwrap_or(0);
+            good += max;
+            total += counts.values().sum::<usize>();
+        }
+        if total == 0 {
+            0.0
+        } else {
+            good as f64 / total as f64
+        }
+    }
+
+    #[test]
+    fn finds_well_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let centers = [(0.0, 0.0), (100.0, 0.0), (0.0, 100.0)];
+        let items = blobs(&mut rng, 60, &centers, 1.5);
+        let truth: Vec<usize> = (0..items.len()).map(|i| i / 60).collect();
+
+        let mut f = Fishdbc::new(
+            metric(),
+            FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+        );
+        for it in items {
+            f.add(it);
+        }
+        let c = f.cluster(5);
+        assert_eq!(c.n_clusters, 3, "labels {:?}", c.labels);
+        assert!(purity(&c.labels, &truth) > 0.99);
+        // at least 90% clustered on such clean data
+        assert!(c.n_clustered() as f64 / c.labels.len() as f64 > 0.9);
+    }
+
+    #[test]
+    fn incremental_equals_oneshot_same_seed() {
+        // clustering after adding all items must not depend on how often
+        // UPDATE_MST ran in between (Eppstein incrementality)
+        let mut rng = Rng::new(2);
+        let items = blobs(&mut rng, 40, &[(0.0, 0.0), (60.0, 60.0)], 2.0);
+
+        let p = FishdbcParams { min_pts: 5, ef: 20, alpha: 5.0, seed: 9 };
+        let mut a = Fishdbc::new(metric(), p);
+        let mut b = Fishdbc::new(metric(), p);
+        for (i, it) in items.iter().enumerate() {
+            a.add(it.clone());
+            b.add(it.clone());
+            if i % 7 == 0 {
+                b.update_mst(); // force frequent flushes on b
+            }
+        }
+        let ca = a.cluster(5);
+        let cb = b.cluster(5);
+        assert_eq!(ca.labels, cb.labels);
+        assert!((a.msf().total_weight() - b.msf().total_weight()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cluster_is_cheap_after_build() {
+        // paper Table 3: extracting a clustering is orders of magnitude
+        // cheaper than building. Verify it does no distance calls.
+        let mut rng = Rng::new(3);
+        let items = blobs(&mut rng, 50, &[(0.0, 0.0), (50.0, 0.0)], 1.0);
+        let mut f = Fishdbc::new(metric(), FishdbcParams {
+            min_pts: 5,
+            ef: 20,
+            ..Default::default()
+        });
+        for it in items {
+            f.add(it);
+        }
+        let calls_before = f.dist_calls();
+        let _ = f.cluster(5);
+        let _ = f.cluster(10);
+        assert_eq!(f.dist_calls(), calls_before, "cluster() must not call d()");
+    }
+
+    #[test]
+    fn subquadratic_distance_calls() {
+        let mut rng = Rng::new(4);
+        let items = blobs(&mut rng, 400, &[(0.0, 0.0), (80.0, 0.0)], 3.0);
+        let n = items.len() as u64;
+        let mut f = Fishdbc::new(metric(), FishdbcParams {
+            min_pts: 5,
+            ef: 10,
+            ..Default::default()
+        });
+        for it in items {
+            f.add(it);
+        }
+        assert!(
+            f.dist_calls() < n * n / 4,
+            "{} calls for n={n} looks quadratic",
+            f.dist_calls()
+        );
+    }
+
+    #[test]
+    fn candidates_bounded_by_alpha_n() {
+        let mut rng = Rng::new(5);
+        let items = blobs(&mut rng, 200, &[(0.0, 0.0)], 5.0);
+        let alpha = 3.0;
+        let mut f = Fishdbc::new(metric(), FishdbcParams {
+            min_pts: 5,
+            ef: 20,
+            alpha,
+            seed: 0,
+        });
+        for it in items {
+            f.add(it);
+            let bound = (alpha * f.len() as f64) as usize + f.len();
+            assert!(
+                f.stats().candidate_edges_buffered <= bound.max(64),
+                "candidate buffer exceeded α·n + slack"
+            );
+        }
+        assert!(f.stats().mst_updates > 0, "UPDATE_MST never triggered");
+    }
+
+    #[test]
+    fn matches_exact_hdbscan_reasonably() {
+        // On clean separated data FISHDBC should agree with the exact
+        // baseline about the macro structure.
+        let mut rng = Rng::new(6);
+        let items = blobs(&mut rng, 70, &[(0.0, 0.0), (90.0, 90.0)], 2.0);
+        let truth: Vec<usize> = (0..items.len()).map(|i| i / 70).collect();
+
+        let mut f = Fishdbc::new(metric(), FishdbcParams {
+            min_pts: 10,
+            ef: 50,
+            ..Default::default()
+        });
+        for it in items.iter().cloned() {
+            f.add(it);
+        }
+        let approx = f.cluster(10);
+        let exact = exact_hdbscan(
+            &items,
+            &metric(),
+            ExactParams { min_pts: 10, mcs: 10, matrix_budget: None },
+        )
+        .unwrap()
+        .clustering;
+
+        assert_eq!(approx.n_clusters, exact.n_clusters);
+        assert!(purity(&approx.labels, &truth) > 0.99);
+        assert!(purity(&exact.labels, &truth) > 0.99);
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        let mut f = Fishdbc::new(metric(), FishdbcParams::default());
+        let c = f.cluster(2);
+        assert_eq!(c.n_clusters, 0);
+        f.add(vec![0.0]);
+        f.add(vec![1.0]);
+        let c = f.cluster(2);
+        assert_eq!(c.labels.len(), 2);
+    }
+
+    #[test]
+    fn nearest_and_classify_work() {
+        let mut rng = Rng::new(8);
+        let centers = [(0.0, 0.0), (50.0, 50.0)];
+        let items = blobs(&mut rng, 60, &centers, 1.0);
+        let mut f = Fishdbc::new(metric(), FishdbcParams {
+            min_pts: 5,
+            ef: 20,
+            ..Default::default()
+        });
+        for it in items.iter().cloned() {
+            f.add(it);
+        }
+        let c = f.cluster(5);
+        assert_eq!(c.n_clusters, 2);
+
+        // a probe near the first center must hit cluster of item 0
+        let probe = vec![0.5f32, -0.5];
+        let nn = f.nearest(&probe, 3, None);
+        assert_eq!(nn.len(), 3);
+        assert!(nn[0].1 < 5.0, "nearest {:?}", nn);
+        let label = f.classify(&probe, &c.labels, 5);
+        assert_eq!(label, c.labels[nn[0].0 as usize]);
+
+        // queries must not mutate the cost model or state
+        let calls = f.dist_calls();
+        let _ = f.nearest(&probe, 5, Some(40));
+        assert_eq!(f.dist_calls(), calls);
+        assert_eq!(f.len(), 120);
+
+        // far-away probe with all-noise labels abstains
+        let all_noise = vec![-1i32; 120];
+        assert_eq!(f.classify(&probe, &all_noise, 5), -1);
+    }
+
+    #[test]
+    fn knn_only_msf_is_heavier_or_fragmented() {
+        // paper §3.1: the kNN-only "simpler design" loses long-range edges;
+        // its forest can only have MORE components and >= total weight per
+        // component count.
+        let mut rng = Rng::new(12);
+        let items = blobs(&mut rng, 80, &[(0.0, 0.0), (30.0, 0.0)], 2.0);
+        let mut f = Fishdbc::new(metric(), FishdbcParams {
+            min_pts: 5,
+            ef: 20,
+            ..Default::default()
+        });
+        for it in items {
+            f.add(it);
+        }
+        f.update_mst();
+        let knn = f.knn_only_msf();
+        assert!(
+            knn.components() >= f.msf().components(),
+            "kNN-only cannot be better connected: {} vs {}",
+            knn.components(),
+            f.msf().components()
+        );
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut rng = Rng::new(7);
+        let items = blobs(&mut rng, 50, &[(0.0, 0.0), (40.0, 0.0)], 1.0);
+        let p = FishdbcParams { min_pts: 5, ef: 20, alpha: 4.0, seed: 77 };
+        let run = |items: &[Vec<f32>]| {
+            let mut f = Fishdbc::new(metric(), p);
+            for it in items.iter().cloned() {
+                f.add(it);
+            }
+            f.cluster(5).labels
+        };
+        assert_eq!(run(&items), run(&items));
+    }
+}

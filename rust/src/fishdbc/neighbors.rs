@@ -1,0 +1,215 @@
+//! Per-node bounded nearest-neighbor stores ("neighbors" in Algorithm 1).
+//!
+//! Each node keeps its `MinPts` closest *discovered* neighbors; the core
+//! distance (distance of the MinPts-th closest known neighbor) is O(1) to
+//! read. The paper uses max-heaps; since MinPts is small (≈10) we use
+//! sorted fixed-capacity vectors, which are faster and give ordered
+//! iteration for the reachability-decrease loop (Algorithm 1 lines 19-23).
+
+/// Nearest-neighbor set of one node: entries sorted by distance ascending,
+/// at most `k` of them, no duplicate neighbor ids.
+#[derive(Clone, Debug, Default)]
+pub struct KBest {
+    entries: Vec<(u32, f64)>,
+}
+
+impl KBest {
+    /// Offer neighbor `y` at distance `d`; keeps the k best. Returns true
+    /// if the set changed (y entered or improved the top-k).
+    pub fn offer(&mut self, k: usize, y: u32, d: f64) -> bool {
+        if let Some(pos) = self.entries.iter().position(|&(id, _)| id == y) {
+            // distances are deterministic; only replace if strictly better
+            if d < self.entries[pos].1 {
+                self.entries.remove(pos);
+            } else {
+                return false;
+            }
+        } else if self.entries.len() >= k {
+            if d >= self.entries[k - 1].1 {
+                return false;
+            }
+            self.entries.pop();
+        }
+        let ins = self.entries.partition_point(|&(_, e)| e <= d);
+        self.entries.insert(ins, (y, d));
+        true
+    }
+
+    /// Core distance: distance of the k-th closest known neighbor, or +∞
+    /// while fewer than k neighbors are known (unknown distances are +∞ in
+    /// the paper's model, Theorem 3.4).
+    pub fn core(&self, k: usize) -> f64 {
+        if self.entries.len() >= k {
+            self.entries[k - 1].1
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Neighbors at distance strictly less than `v`, ascending.
+    pub fn closer_than(&self, v: f64) -> impl Iterator<Item = (u32, f64)> + '_ {
+        self.entries.iter().copied().take_while(move |&(_, d)| d < v)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (u32, f64)> + '_ {
+        self.entries.iter().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// All nodes' neighbor sets.
+#[derive(Clone, Debug)]
+pub struct NeighborStore {
+    k: usize,
+    sets: Vec<KBest>,
+}
+
+impl NeighborStore {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        NeighborStore { k, sets: Vec::new() }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn ensure_len(&mut self, n: usize) {
+        if self.sets.len() < n {
+            self.sets.resize_with(n, KBest::default);
+        }
+    }
+
+    #[inline]
+    pub fn offer(&mut self, x: u32, y: u32, d: f64) -> bool {
+        self.sets[x as usize].offer(self.k, y, d)
+    }
+
+    /// O(1) core-distance lookup (top of the paper's max-heap).
+    #[inline]
+    pub fn core(&self, x: u32) -> f64 {
+        self.sets[x as usize].core(self.k)
+    }
+
+    pub fn get(&self, x: u32) -> &KBest {
+        &self.sets[x as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// Export all neighbor sets (persistence): per node, the sorted
+    /// `(neighbor, distance)` entries.
+    pub fn export(&self) -> Vec<Vec<(u32, f64)>> {
+        self.sets.iter().map(|s| s.iter().collect()).collect()
+    }
+
+    /// Rebuild from [`NeighborStore::export`]ed entries.
+    pub fn import(k: usize, sets: Vec<Vec<(u32, f64)>>) -> Self {
+        let mut store = NeighborStore::new(k);
+        store.ensure_len(sets.len());
+        for (x, entries) in sets.into_iter().enumerate() {
+            for (y, d) in entries {
+                store.offer(x as u32, y, d);
+            }
+        }
+        store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn kbest_keeps_k_smallest() {
+        let mut kb = KBest::default();
+        for (i, d) in [5.0, 3.0, 8.0, 1.0, 4.0].iter().enumerate() {
+            kb.offer(3, i as u32, *d);
+        }
+        let got: Vec<f64> = kb.iter().map(|(_, d)| d).collect();
+        assert_eq!(got, vec![1.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn core_is_kth_or_infinity() {
+        let mut kb = KBest::default();
+        assert_eq!(kb.core(2), f64::INFINITY);
+        kb.offer(2, 0, 1.0);
+        assert_eq!(kb.core(2), f64::INFINITY);
+        kb.offer(2, 1, 3.0);
+        assert_eq!(kb.core(2), 3.0);
+        kb.offer(2, 2, 2.0);
+        assert_eq!(kb.core(2), 2.0);
+    }
+
+    #[test]
+    fn duplicate_offers_ignored() {
+        let mut kb = KBest::default();
+        assert!(kb.offer(3, 7, 2.0));
+        assert!(!kb.offer(3, 7, 2.0));
+        assert!(!kb.offer(3, 7, 5.0)); // worse duplicate
+        assert!(kb.offer(3, 7, 1.0)); // better duplicate replaces
+        assert_eq!(kb.len(), 1);
+        assert_eq!(kb.iter().next(), Some((7, 1.0)));
+    }
+
+    #[test]
+    fn closer_than_filters() {
+        let mut kb = KBest::default();
+        for (i, d) in [1.0, 2.0, 3.0, 4.0].iter().enumerate() {
+            kb.offer(4, i as u32, *d);
+        }
+        let close: Vec<u32> = kb.closer_than(3.0).map(|(id, _)| id).collect();
+        assert_eq!(close, vec![0, 1]);
+    }
+
+    #[test]
+    fn prop_kbest_matches_sort() {
+        check("kbest-vs-sort", 40, |rng, _| {
+            let k = 1 + rng.below(8);
+            let n = rng.below(50);
+            let mut kb = KBest::default();
+            let mut all: Vec<(u32, f64)> = Vec::new();
+            for i in 0..n {
+                let d = (rng.f64() * 100.0).round(); // ties likely
+                kb.offer(k, i as u32, d);
+                all.push((i as u32, d));
+            }
+            all.sort_by(|a, b| a.1.total_cmp(&b.1));
+            let want_dists: Vec<f64> =
+                all.iter().take(k).map(|&(_, d)| d).collect();
+            let got_dists: Vec<f64> = kb.iter().map(|(_, d)| d).collect();
+            assert_eq!(got_dists, want_dists, "k={k} n={n}");
+            // core matches
+            let want_core =
+                if n >= k { want_dists[k - 1] } else { f64::INFINITY };
+            assert_eq!(kb.core(k), want_core);
+        });
+    }
+
+    #[test]
+    fn store_grows() {
+        let mut ns = NeighborStore::new(2);
+        ns.ensure_len(3);
+        assert!(ns.offer(0, 1, 1.0));
+        assert!(ns.offer(2, 0, 4.0));
+        assert_eq!(ns.core(0), f64::INFINITY);
+        ns.offer(0, 2, 2.0);
+        assert_eq!(ns.core(0), 2.0);
+        assert_eq!(ns.len(), 3);
+    }
+}

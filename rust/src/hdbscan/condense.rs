@@ -1,0 +1,417 @@
+//! Single-linkage dendrogram and condensed-tree construction
+//! (McInnes & Healy \[26\]'s bottom-up approach, paper Algorithm 1 CLUSTER).
+
+use crate::mst::{Edge, UnionFind};
+
+/// Scipy-style single-linkage dendrogram: merge i creates internal node
+/// `n_points + i` joining two prior roots at a given distance.
+#[derive(Clone, Debug)]
+pub struct Dendrogram {
+    pub n_points: usize,
+    /// (left, right, distance, size) — size = points under the new node.
+    pub merges: Vec<(u32, u32, f64, u32)>,
+}
+
+impl Dendrogram {
+    /// Build from a minimum spanning forest. Edges need not be sorted.
+    /// Forest components are joined by virtual merges at weight ∞, which
+    /// produce the excluded root cluster (paper, Lemma 3.3).
+    pub fn from_msf(edges: &[Edge], n_points: usize) -> Dendrogram {
+        assert!(n_points > 0);
+        let mut sorted: Vec<&Edge> = edges.iter().collect();
+        sorted.sort_unstable_by(|x, y| x.w.total_cmp(&y.w));
+
+        let mut uf = UnionFind::new(n_points);
+        // current dendrogram node id for each UF root
+        let mut node_of: Vec<u32> = (0..n_points as u32).collect();
+        let mut size_of: Vec<u32> = vec![1; n_points];
+        let mut merges = Vec::with_capacity(n_points - 1);
+        let mut next_id = n_points as u32;
+
+        let mut do_merge = |uf: &mut UnionFind,
+                            node_of: &mut Vec<u32>,
+                            size_of: &mut Vec<u32>,
+                            merges: &mut Vec<(u32, u32, f64, u32)>,
+                            a: u32,
+                            b: u32,
+                            w: f64|
+         -> bool {
+            let (ra, rb) = (uf.find(a), uf.find(b));
+            if ra == rb {
+                return false;
+            }
+            let (left, right) = (node_of[ra as usize], node_of[rb as usize]);
+            let size = size_of[ra as usize] + size_of[rb as usize];
+            uf.union(ra, rb);
+            let root = uf.find(ra);
+            node_of[root as usize] = next_id;
+            size_of[root as usize] = size;
+            merges.push((left, right, w, size));
+            next_id += 1;
+            true
+        };
+
+        for e in sorted {
+            do_merge(&mut uf, &mut node_of, &mut size_of, &mut merges, e.a, e.b, e.w);
+        }
+        // join remaining components at infinity
+        if uf.components() > 1 {
+            let mut roots: Vec<u32> = Vec::new();
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..n_points as u32 {
+                let r = uf.find(i);
+                if seen.insert(r) {
+                    roots.push(i);
+                }
+            }
+            let first = roots[0];
+            for &other in &roots[1..] {
+                do_merge(
+                    &mut uf,
+                    &mut node_of,
+                    &mut size_of,
+                    &mut merges,
+                    first,
+                    other,
+                    f64::INFINITY,
+                );
+            }
+        }
+        debug_assert_eq!(merges.len(), n_points - 1);
+        Dendrogram { n_points, merges }
+    }
+
+    /// Root node id (2*n_points - 2 when n_points > 1).
+    pub fn root(&self) -> u32 {
+        if self.n_points == 1 {
+            0
+        } else {
+            (self.n_points + self.merges.len() - 1) as u32
+        }
+    }
+
+    fn children(&self, node: u32) -> Option<(u32, u32, f64, u32)> {
+        let i = (node as usize).checked_sub(self.n_points)?;
+        Some(self.merges[i])
+    }
+
+    fn size(&self, node: u32) -> u32 {
+        if (node as usize) < self.n_points {
+            1
+        } else {
+            self.merges[node as usize - self.n_points].3
+        }
+    }
+}
+
+/// One condensed-tree row: `child` (a point id `< n_points`, or a cluster id
+/// `>= n_points`) leaves `parent` at density `lambda` with `size` points.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CondensedRow {
+    pub parent: u32,
+    pub child: u32,
+    pub lambda: f64,
+    pub size: u32,
+}
+
+/// Condensed cluster hierarchy. Cluster ids are `n_points..`; the root
+/// cluster is `n_points` and is excluded from flat selection.
+#[derive(Clone, Debug)]
+pub struct CondensedTree {
+    pub n_points: usize,
+    pub rows: Vec<CondensedRow>,
+    /// Number of cluster ids allocated (root included).
+    pub n_cluster_ids: usize,
+}
+
+/// Density lambda for a merge distance (λ = 1/d), capped for d → 0 and
+/// mapped to 0 for the ∞-weight virtual merges.
+#[inline]
+pub fn lambda_of(dist: f64) -> f64 {
+    const LAMBDA_CAP: f64 = 1e12;
+    if dist.is_infinite() {
+        0.0
+    } else if dist <= 1.0 / LAMBDA_CAP {
+        LAMBDA_CAP
+    } else {
+        1.0 / dist
+    }
+}
+
+impl CondensedTree {
+    /// Condense a dendrogram with minimum cluster size `mcs` (paper: set
+    /// m_cs = MinPts). A split creates two child clusters iff both sides
+    /// have >= mcs points; otherwise the small side's points "fall out" of
+    /// the parent at that split's lambda.
+    pub fn from_dendrogram(dendro: &Dendrogram, mcs: usize) -> CondensedTree {
+        let n = dendro.n_points;
+        let mcs = mcs.max(2) as u32;
+        let root_cluster = n as u32;
+        let mut rows = Vec::new();
+        let mut next_cluster = root_cluster + 1;
+
+        if n == 1 {
+            return CondensedTree { n_points: 1, rows, n_cluster_ids: 1 };
+        }
+
+        // stack of (dendrogram node, condensed cluster it belongs to)
+        let mut stack: Vec<(u32, u32)> = vec![(dendro.root(), root_cluster)];
+        // reusable leaf-collection buffer
+        let mut leaves = Vec::new();
+
+        while let Some((node, cluster)) = stack.pop() {
+            let Some((left, right, dist, _)) = dendro.children(node) else {
+                // a bare point reached the stack directly (only possible for
+                // virtual root chains); it falls out of `cluster` at λ of
+                // its merge — handled by the parent below, so unreachable.
+                unreachable!("leaf on traversal stack");
+            };
+            let lambda = lambda_of(dist);
+            let (ls, rs) = (dendro.size(left), dendro.size(right));
+
+            if ls >= mcs && rs >= mcs {
+                // true split: two new clusters
+                for &(child_node, child_size) in &[(left, ls), (right, rs)] {
+                    let id = next_cluster;
+                    next_cluster += 1;
+                    rows.push(CondensedRow {
+                        parent: cluster,
+                        child: id,
+                        lambda,
+                        size: child_size,
+                    });
+                    stack.push((child_node, id));
+                }
+            } else if ls < mcs && rs < mcs {
+                // cluster dissolves: every point falls out at this lambda
+                for &side in &[left, right] {
+                    collect_leaves(dendro, side, &mut leaves);
+                    for &p in &leaves {
+                        rows.push(CondensedRow {
+                            parent: cluster,
+                            child: p,
+                            lambda,
+                            size: 1,
+                        });
+                    }
+                }
+            } else {
+                // one side survives as the same cluster, other side falls out
+                let (survivor, casualty) = if ls >= mcs { (left, right) } else { (right, left) };
+                collect_leaves(dendro, casualty, &mut leaves);
+                for &p in &leaves {
+                    rows.push(CondensedRow { parent: cluster, child: p, lambda, size: 1 });
+                }
+                if (survivor as usize) < n {
+                    // single point surviving can't happen (size >= mcs >= 2)
+                    unreachable!("point-sized survivor");
+                }
+                stack.push((survivor, cluster));
+            }
+        }
+
+        CondensedTree {
+            n_points: n,
+            rows,
+            n_cluster_ids: (next_cluster - root_cluster) as usize,
+        }
+    }
+
+    pub fn root(&self) -> u32 {
+        self.n_points as u32
+    }
+
+    /// Clusters excluding the root (Table 7 "hierarchical clusters").
+    pub fn n_clusters_excluding_root(&self) -> usize {
+        self.n_cluster_ids.saturating_sub(1)
+    }
+
+    /// Points that fall out of some non-root cluster (Table 7
+    /// "hierarchical clustered elements").
+    pub fn n_points_in_non_root_clusters(&self) -> usize {
+        self.rows
+            .iter()
+            .filter(|r| r.size == 1 && (r.child as usize) < self.n_points)
+            .filter(|r| r.parent != self.root())
+            .count()
+    }
+
+    /// λ at which each cluster is born (appears as a child). Root: 0.
+    pub fn birth_lambdas(&self) -> Vec<f64> {
+        let mut birth = vec![0.0f64; self.n_cluster_ids];
+        for r in &self.rows {
+            if (r.child as usize) >= self.n_points {
+                birth[(r.child as usize) - self.n_points] = r.lambda;
+            }
+        }
+        birth
+    }
+
+    /// Excess-of-Mass stability per cluster id offset (id - n_points).
+    pub fn stabilities(&self) -> Vec<f64> {
+        let birth = self.birth_lambdas();
+        let mut stab = vec![0.0f64; self.n_cluster_ids];
+        for r in &self.rows {
+            let pidx = (r.parent as usize) - self.n_points;
+            stab[pidx] += (r.lambda - birth[pidx]) * r.size as f64;
+        }
+        stab
+    }
+}
+
+/// Collect the point ids under a dendrogram node into `out` (cleared first).
+fn collect_leaves(dendro: &Dendrogram, node: u32, out: &mut Vec<u32>) {
+    out.clear();
+    let mut stack = vec![node];
+    while let Some(x) = stack.pop() {
+        if (x as usize) < dendro.n_points {
+            out.push(x);
+        } else {
+            let (l, r, _, _) = dendro.children(x).unwrap();
+            stack.push(l);
+            stack.push(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn chain_edges(n: usize, w: f64) -> Vec<Edge> {
+        (0..n as u32 - 1).map(|i| Edge::new(i, i + 1, w)).collect()
+    }
+
+    #[test]
+    fn dendrogram_shape() {
+        let d = Dendrogram::from_msf(&chain_edges(5, 1.0), 5);
+        assert_eq!(d.merges.len(), 4);
+        assert_eq!(d.size(d.root()), 5);
+    }
+
+    #[test]
+    fn dendrogram_on_forest_adds_virtual_root() {
+        let edges = vec![Edge::new(0, 1, 1.0), Edge::new(2, 3, 1.0)];
+        let d = Dendrogram::from_msf(&edges, 4);
+        assert_eq!(d.merges.len(), 3);
+        let (_, _, w, s) = d.merges[2];
+        assert!(w.is_infinite());
+        assert_eq!(s, 4);
+    }
+
+    #[test]
+    fn lambda_mapping() {
+        assert_eq!(lambda_of(f64::INFINITY), 0.0);
+        assert_eq!(lambda_of(2.0), 0.5);
+        assert!(lambda_of(0.0) >= 1e12);
+    }
+
+    #[test]
+    fn condensed_sizes_and_conservation() {
+        // two blobs of 5 at distance 1.0 internally, bridged at 10.0
+        let mut edges = chain_edges(5, 1.0);
+        for i in 0..4u32 {
+            edges.push(Edge::new(5 + i, 6 + i, 1.0));
+        }
+        edges.push(Edge::new(0, 5, 10.0));
+        let d = Dendrogram::from_msf(&edges, 10);
+        let t = CondensedTree::from_dendrogram(&d, 3);
+        // two clusters split from the root
+        assert_eq!(t.n_clusters_excluding_root(), 2);
+        // every point falls out exactly once
+        let pts: Vec<u32> = t
+            .rows
+            .iter()
+            .filter(|r| (r.child as usize) < 10)
+            .map(|r| r.child)
+            .collect();
+        let mut sorted = pts.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prop_condensed_invariants() {
+        check("condense-invariants", 30, |rng, _| {
+            // random MSF over n points: random tree with random weights
+            let n = 5 + rng.below(80);
+            let mut edges = Vec::new();
+            for i in 1..n as u32 {
+                let parent = rng.below(i as usize) as u32;
+                edges.push(Edge::new(parent, i, rng.f64() * 10.0 + 0.01));
+            }
+            // randomly drop a few edges to create forests
+            if rng.bool(0.3) && edges.len() > 2 {
+                let k = rng.below(edges.len() / 2);
+                for _ in 0..k {
+                    let idx = rng.below(edges.len());
+                    edges.swap_remove(idx);
+                }
+            }
+            let mcs = 2 + rng.below(5);
+            let d = Dendrogram::from_msf(&edges, n);
+            let t = CondensedTree::from_dendrogram(&d, mcs);
+
+            // (1) every point falls out exactly once
+            let mut fallout = vec![0usize; n];
+            for r in &t.rows {
+                if (r.child as usize) < n {
+                    assert_eq!(r.size, 1);
+                    fallout[r.child as usize] += 1;
+                }
+            }
+            assert!(fallout.iter().all(|&c| c == 1), "point fallout {fallout:?}");
+
+            // (2) cluster rows have size >= mcs
+            for r in &t.rows {
+                if (r.child as usize) >= n {
+                    assert!(r.size >= mcs as u32, "cluster child smaller than mcs");
+                }
+            }
+
+            // (3) parent cluster size >= sum of points falling out of it
+            // and >= each child cluster size
+            let mut cluster_size = std::collections::HashMap::new();
+            cluster_size.insert(t.root(), n as u32);
+            for r in &t.rows {
+                if (r.child as usize) >= n {
+                    cluster_size.insert(r.child, r.size);
+                }
+            }
+            for r in &t.rows {
+                let ps = cluster_size[&r.parent];
+                assert!(r.size <= ps, "child bigger than parent");
+            }
+
+            // (4) lambdas nonnegative, stabilities nonnegative
+            assert!(t.rows.iter().all(|r| r.lambda >= 0.0));
+            let stab = t.stabilities();
+            assert!(
+                stab.iter().all(|&s| s >= -1e-9),
+                "negative stability {stab:?}"
+            );
+
+            // (5) λ(child cluster rows under parent) >= λ_birth(parent):
+            // within a cluster, fall-out lambdas never precede its birth
+            let birth = t.birth_lambdas();
+            for r in &t.rows {
+                let b = birth[(r.parent as usize) - n];
+                assert!(
+                    r.lambda >= b - 1e-9,
+                    "row lambda {} before parent birth {b}",
+                    r.lambda
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn identical_points_zero_distance_edges() {
+        // all points identical: every edge weight 0 → capped lambda
+        let edges = chain_edges(6, 0.0);
+        let d = Dendrogram::from_msf(&edges, 6);
+        let t = CondensedTree::from_dendrogram(&d, 2);
+        assert!(t.rows.iter().all(|r| r.lambda.is_finite()));
+    }
+}

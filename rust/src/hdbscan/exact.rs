@@ -1,0 +1,259 @@
+//! Exact HDBSCAN* baseline (the paper's comparison target \[27\]).
+//!
+//! Computes true core distances and the exact minimum spanning tree of the
+//! complete mutual-reachability graph with Prim's algorithm in O(n²) time
+//! and O(n) memory (the distance matrix is never materialized unless
+//! requested — `matrix_mode` reproduces the paper's OOM behaviour on large
+//! datasets by failing when the full matrix would not fit in the budget).
+
+use crate::distances::Metric;
+use crate::hdbscan::{cluster_from_msf, Clustering};
+use crate::mst::Edge;
+
+/// Configuration for the exact baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct ExactParams {
+    /// MinPts: neighbor count defining the core distance.
+    pub min_pts: usize,
+    /// Minimum cluster size (paper suggestion: = MinPts).
+    pub mcs: usize,
+    /// If set, precompute the full distance matrix (like feeding HDBSCAN*
+    /// a pairwise matrix) and fail with `ExactError::OutOfMemory` when it
+    /// exceeds this budget in bytes. `None` = streaming mode (O(n) memory,
+    /// distances computed twice).
+    pub matrix_budget: Option<usize>,
+}
+
+impl Default for ExactParams {
+    fn default() -> Self {
+        ExactParams { min_pts: 10, mcs: 10, matrix_budget: None }
+    }
+}
+
+#[derive(Debug)]
+pub enum ExactError {
+    /// Simulates the paper's out-of-memory failures (Tables 7-8) when the
+    /// full pairwise matrix exceeds the budget.
+    OutOfMemory { required: usize, budget: usize },
+}
+
+impl std::fmt::Display for ExactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExactError::OutOfMemory { required, budget } => write!(
+                f,
+                "distance matrix needs {required} bytes > budget {budget} (OOM)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ExactError {}
+
+/// Outcome of the exact baseline, with cost accounting.
+#[derive(Debug)]
+pub struct ExactResult {
+    pub clustering: Clustering,
+    /// Total distance-function evaluations (the paper's cost model).
+    pub dist_calls: u64,
+}
+
+/// Run exact HDBSCAN*.
+pub fn exact_hdbscan<T, M: Metric<T>>(
+    items: &[T],
+    metric: &M,
+    params: ExactParams,
+) -> Result<ExactResult, ExactError> {
+    let n = items.len();
+    if n == 0 {
+        return Ok(ExactResult {
+            clustering: cluster_from_msf(&[], 1, params.mcs),
+            dist_calls: 0,
+        });
+    }
+    let mut dist_calls = 0u64;
+
+    let matrix: Option<Vec<f32>> = match params.matrix_budget {
+        Some(budget) => {
+            let required = n * n * std::mem::size_of::<f32>();
+            if required > budget {
+                return Err(ExactError::OutOfMemory { required, budget });
+            }
+            let mut m = vec![0.0f32; n * n];
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let d = metric.dist(&items[i], &items[j]) as f32;
+                    dist_calls += 1;
+                    m[i * n + j] = d;
+                    m[j * n + i] = d;
+                }
+            }
+            Some(m)
+        }
+        None => None,
+    };
+
+    let mut row_buf = vec![0.0f64; n];
+    let fill_row = |i: usize, out: &mut [f64], dist_calls: &mut u64| {
+        if let Some(m) = &matrix {
+            for j in 0..n {
+                out[j] = m[i * n + j] as f64;
+            }
+        } else {
+            for j in 0..n {
+                if j != i {
+                    out[j] = metric.dist(&items[i], &items[j]);
+                    *dist_calls += 1;
+                } else {
+                    out[j] = 0.0;
+                }
+            }
+        }
+    };
+
+    // --- core distances: distance to the MinPts-th closest neighbor
+    let k = params.min_pts.min(n.saturating_sub(1)).max(1);
+    let mut core = vec![0.0f64; n];
+    for i in 0..n {
+        fill_row(i, &mut row_buf, &mut dist_calls);
+        let mut ds: Vec<f64> = (0..n).filter(|&j| j != i).map(|j| row_buf[j]).collect();
+        if ds.is_empty() {
+            core[i] = 0.0;
+            continue;
+        }
+        let kth = k - 1;
+        ds.select_nth_unstable_by(kth, |a, b| a.total_cmp(b));
+        core[i] = ds[kth];
+    }
+
+    // --- Prim's MST over the implicit mutual-reachability graph
+    let mut in_tree = vec![false; n];
+    let mut best = vec![f64::INFINITY; n];
+    let mut best_from = vec![0u32; n];
+    let mut edges: Vec<Edge> = Vec::with_capacity(n - 1);
+    let mut current = 0usize;
+    in_tree[0] = true;
+    for _ in 1..n {
+        fill_row(current, &mut row_buf, &mut dist_calls);
+        let cc = core[current];
+        let mut next = usize::MAX;
+        let mut next_d = f64::INFINITY;
+        for v in 0..n {
+            if in_tree[v] {
+                continue;
+            }
+            let mreach = row_buf[v].max(cc).max(core[v]);
+            if mreach < best[v] {
+                best[v] = mreach;
+                best_from[v] = current as u32;
+            }
+            if best[v] < next_d {
+                next_d = best[v];
+                next = v;
+            }
+        }
+        debug_assert!(next != usize::MAX);
+        edges.push(Edge::new(best_from[next], next as u32, best[next]));
+        in_tree[next] = true;
+        current = next;
+    }
+
+    Ok(ExactResult {
+        clustering: cluster_from_msf(&edges, n, params.mcs),
+        dist_calls,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::vector::euclidean;
+    use crate::util::rng::Rng;
+
+    fn blobs(rng: &mut Rng, per: usize, centers: &[(f64, f64)], spread: f64) -> Vec<Vec<f32>> {
+        let mut pts = Vec::new();
+        for &(cx, cy) in centers {
+            for _ in 0..per {
+                pts.push(vec![
+                    (cx + rng.normal() * spread) as f32,
+                    (cy + rng.normal() * spread) as f32,
+                ]);
+            }
+        }
+        pts
+    }
+
+    fn metric() -> impl Metric<Vec<f32>> {
+        |a: &Vec<f32>, b: &Vec<f32>| euclidean(a, b)
+    }
+
+    #[test]
+    fn separates_clear_blobs() {
+        let mut rng = Rng::new(1);
+        let items = blobs(&mut rng, 30, &[(0.0, 0.0), (100.0, 100.0)], 1.0);
+        let r = exact_hdbscan(&items, &metric(), ExactParams {
+            min_pts: 5,
+            mcs: 5,
+            matrix_budget: None,
+        })
+        .unwrap();
+        let c = &r.clustering;
+        assert_eq!(c.n_clusters, 2, "labels {:?}", c.labels);
+        // points within a blob share labels
+        assert!(c.labels[..30].iter().all(|&l| l == c.labels[0] && l >= 0));
+        assert!(c.labels[30..].iter().all(|&l| l == c.labels[30] && l >= 0));
+        assert_ne!(c.labels[0], c.labels[30]);
+    }
+
+    #[test]
+    fn quadratic_distance_calls() {
+        let mut rng = Rng::new(2);
+        let items = blobs(&mut rng, 20, &[(0.0, 0.0)], 1.0);
+        let n = items.len() as u64;
+        let r = exact_hdbscan(&items, &metric(), ExactParams::default()).unwrap();
+        // streaming mode computes each row twice-ish: between n^2/2 and 2n^2
+        assert!(r.dist_calls >= n * (n - 1) / 2);
+        assert!(r.dist_calls <= 2 * n * n);
+    }
+
+    #[test]
+    fn matrix_mode_matches_streaming() {
+        let mut rng = Rng::new(3);
+        let items = blobs(&mut rng, 25, &[(0.0, 0.0), (50.0, 0.0)], 2.0);
+        let p = ExactParams { min_pts: 5, mcs: 5, matrix_budget: None };
+        let a = exact_hdbscan(&items, &metric(), p).unwrap();
+        let b = exact_hdbscan(
+            &items,
+            &metric(),
+            ExactParams { matrix_budget: Some(usize::MAX), ..p },
+        )
+        .unwrap();
+        assert_eq!(a.clustering.labels, b.clustering.labels);
+        // matrix mode computes each pair once
+        assert!(b.dist_calls < a.dist_calls);
+    }
+
+    #[test]
+    fn oom_simulation() {
+        let mut rng = Rng::new(4);
+        let items = blobs(&mut rng, 100, &[(0.0, 0.0)], 1.0);
+        let err = exact_hdbscan(
+            &items,
+            &metric(),
+            ExactParams { min_pts: 5, mcs: 5, matrix_budget: Some(1024) },
+        )
+        .unwrap_err();
+        assert!(matches!(err, ExactError::OutOfMemory { .. }));
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let items: Vec<Vec<f32>> = vec![];
+        let r = exact_hdbscan(&items, &metric(), ExactParams::default()).unwrap();
+        assert_eq!(r.dist_calls, 0);
+
+        let items = vec![vec![0.0f32], vec![1.0f32]];
+        let r = exact_hdbscan(&items, &metric(), ExactParams::default()).unwrap();
+        assert_eq!(r.clustering.labels.len(), 2);
+    }
+}

@@ -1,0 +1,209 @@
+//! Exact HDBSCAN\* with the distance blocks executed by the **compiled
+//! JAX/Pallas kernels** through PJRT — the three-layer stack on the
+//! algorithm path, not just in examples. Same algorithm as
+//! [`super::exact`]: core distances, then Prim over the implicit
+//! mutual-reachability graph — but every O(B²) distance block and every
+//! fused mutual-reachability row comes from `artifacts/*.hlo.txt`.
+//!
+//! This is the "kernel backend" of the native-vs-PJRT ablation: at small
+//! block sizes the PJRT round trip dominates (EXPERIMENTS.md §Perf), while
+//! on accelerator targets the same artifacts run unchanged — the rust side
+//! only ever sees padded `[B, D]` buffers.
+
+use anyhow::{anyhow, Result};
+
+use crate::distances::Item;
+use crate::fishdbc::neighbors::KBest;
+use crate::hdbscan::{cluster_from_msf, Clustering};
+use crate::mst::Edge;
+use crate::runtime::Runtime;
+
+/// Result of the PJRT-backed exact baseline.
+#[derive(Debug)]
+pub struct PjrtExactResult {
+    pub clustering: Clustering,
+    /// PJRT executions performed (the backend's cost unit — each one
+    /// evaluates up to B×B distances).
+    pub kernel_execs: u64,
+}
+
+/// Run exact HDBSCAN\* over dense items using the compiled `pairwise_*`
+/// and `mreach_*` modules for `metric_name` ("euclidean" or "cosine").
+///
+/// Requires every item to be [`Item::Dense`] with dim ≤ the loaded
+/// module's D; fails (never panics) otherwise.
+pub fn exact_hdbscan_pjrt(
+    items: &[Item],
+    rt: &Runtime,
+    metric_name: &str,
+    min_pts: usize,
+    mcs: usize,
+) -> Result<PjrtExactResult> {
+    let n = items.len();
+    if n == 0 {
+        return Ok(PjrtExactResult {
+            clustering: cluster_from_msf(&[], 1, mcs),
+            kernel_execs: 0,
+        });
+    }
+    let rows: Vec<&[f32]> = items
+        .iter()
+        .map(|it| match it {
+            Item::Dense(v) => Ok(v.as_slice()),
+            other => Err(anyhow!("exact_pjrt needs dense items, got {other:?}")),
+        })
+        .collect::<Result<_>>()?;
+    let dim = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+
+    let pw = rt
+        .find_module("pairwise", metric_name, dim)
+        .ok_or_else(|| anyhow!("no pairwise_{metric_name} module for dim {dim}"))?
+        .clone_meta();
+    let mr = rt
+        .find_module("mreach", metric_name, dim)
+        .ok_or_else(|| anyhow!("no mreach_{metric_name} module for dim {dim}"))?
+        .clone_meta();
+    let b = pw.0;
+    let execs0 = rt.exec_count();
+
+    // --- core distances: k-th closest neighbor (self excluded), computed
+    // from B×B pairwise kernel blocks.
+    let k = min_pts.min(n.saturating_sub(1)).max(1);
+    let mut best: Vec<KBest> = vec![KBest::default(); n];
+    let blocks: Vec<(usize, usize)> = (0..n)
+        .step_by(b)
+        .map(|s| (s, (s + b).min(n)))
+        .collect();
+    for &(xi, xe) in &blocks {
+        for &(yi, ye) in &blocks {
+            let block = rt.pairwise(&pw.1, &rows[xi..xe], &rows[yi..ye])?;
+            for (i, row) in block.iter().enumerate() {
+                let gi = xi + i;
+                for (j, &d) in row.iter().enumerate() {
+                    let gj = yi + j;
+                    if gi != gj {
+                        best[gi].offer(k, gj as u32, d as f64);
+                    }
+                }
+            }
+        }
+    }
+    let core: Vec<f32> = best.iter().map(|kb| kb.core(k) as f32).collect();
+    drop(best);
+
+    // --- Prim over the implicit mutual-reachability graph, one fused
+    // mreach row (max(d, core_i, core_j), computed in-kernel) at a time.
+    let mut in_tree = vec![false; n];
+    let mut best_d = vec![f64::INFINITY; n];
+    let mut best_from = vec![0u32; n];
+    let mut edges: Vec<Edge> = Vec::with_capacity(n - 1);
+    let mut current = 0usize;
+    in_tree[0] = true;
+    for _ in 1..n {
+        let crow = [rows[current]];
+        let ccore = [core[current]];
+        for &(yi, ye) in &blocks {
+            let mrow =
+                rt.mreach(&mr.1, &crow, &rows[yi..ye], &ccore, &core[yi..ye])?;
+            for (j, &d) in mrow[0].iter().enumerate() {
+                let gj = yi + j;
+                if !in_tree[gj] && (d as f64) < best_d[gj] {
+                    best_d[gj] = d as f64;
+                    best_from[gj] = current as u32;
+                }
+            }
+        }
+        // next: cheapest frontier node
+        let mut next = usize::MAX;
+        let mut next_d = f64::INFINITY;
+        for j in 0..n {
+            if !in_tree[j] && best_d[j] < next_d {
+                next_d = best_d[j];
+                next = j;
+            }
+        }
+        if next == usize::MAX {
+            break; // disconnected (cannot happen for finite metrics)
+        }
+        edges.push(Edge::new(best_from[next], next as u32, next_d));
+        in_tree[next] = true;
+        current = next;
+    }
+
+    Ok(PjrtExactResult {
+        clustering: cluster_from_msf(&edges, n, mcs),
+        kernel_execs: rt.exec_count() - execs0,
+    })
+}
+
+/// (b, name) pair cloned out of a `ModuleMeta` borrow.
+trait CloneMeta {
+    fn clone_meta(&self) -> (usize, String);
+}
+
+impl CloneMeta for crate::runtime::ModuleMeta {
+    fn clone_meta(&self) -> (usize, String) {
+        (self.b, self.name.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::hdbscan::exact::{exact_hdbscan, ExactParams};
+    use crate::metrics::adjusted_mutual_info;
+    use crate::runtime::default_artifacts_dir;
+
+    fn runtime_or_skip() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("SKIP exact_pjrt tests — run `make artifacts`");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("artifacts exist but failed to load"))
+    }
+
+    #[test]
+    fn pjrt_baseline_matches_native_exact() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let ds = datasets::blobs::generate(300, 16, 4, 9);
+
+        let native = exact_hdbscan(
+            &ds.items,
+            &ds.metric,
+            ExactParams { min_pts: 10, mcs: 10, matrix_budget: None },
+        )
+        .unwrap();
+        let pjrt =
+            exact_hdbscan_pjrt(&ds.items, &rt, "euclidean", 10, 10).unwrap();
+
+        assert_eq!(
+            pjrt.clustering.n_clusters,
+            native.clustering.n_clusters
+        );
+        // f32 kernels vs f64 native: tie-breaks may differ, structure not
+        let native_pred: Vec<usize> =
+            native.clustering.labels.iter().map(|&l| (l + 1) as usize).collect();
+        let pjrt_pred: Vec<usize> =
+            pjrt.clustering.labels.iter().map(|&l| (l + 1) as usize).collect();
+        let ami = adjusted_mutual_info(&pjrt_pred, &native_pred);
+        assert!(ami > 0.99, "PJRT vs native AMI {ami}");
+        assert!(pjrt.kernel_execs > 0);
+    }
+
+    #[test]
+    fn pjrt_baseline_rejects_non_dense() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let items = vec![crate::distances::Item::Text("x".into())];
+        assert!(exact_hdbscan_pjrt(&items, &rt, "euclidean", 2, 2).is_err());
+    }
+
+    #[test]
+    fn pjrt_empty_input() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let r = exact_hdbscan_pjrt(&[], &rt, "euclidean", 5, 5).unwrap();
+        assert_eq!(r.clustering.n_clusters, 0);
+        assert_eq!(r.kernel_execs, 0);
+    }
+}

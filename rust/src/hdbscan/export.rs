@@ -1,0 +1,385 @@
+//! Hierarchy export and per-cluster reporting — the data-exploration side
+//! of the paper's *hierarchical* axis ("users can group and/or divide
+//! clusters in sub- or super-clusters when data exploration requires so",
+//! §1).
+//!
+//! Formats: JSON (machine-readable condensed tree + selection), GraphViz
+//! DOT (cluster tree rendering), Newick (dendrogram interchange with
+//! phylogenetics/scipy tooling), plus a [`ClusterReport`] table with the
+//! birth/death densities, stability and persistence of every condensed
+//! cluster.
+
+use std::fmt::Write as _;
+
+use super::condense::Dendrogram;
+use super::Clustering;
+
+/// Per-cluster summary row (see [`cluster_report`]).
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// Condensed cluster id (root = n_points).
+    pub id: u32,
+    /// Parent cluster id (root's parent = itself).
+    pub parent: u32,
+    /// Points that ever belonged to this cluster.
+    pub size: u32,
+    /// Density at which the cluster is born (λ = 1/distance).
+    pub birth_lambda: f64,
+    /// Density at which it dies (splits or dissolves); ∞ for leaves that
+    /// never split further than point fall-out.
+    pub death_lambda: f64,
+    /// Excess-of-Mass stability (the flat-selection score).
+    pub stability: f64,
+    /// Whether the flat extraction selected it.
+    pub selected: bool,
+    /// Depth below the root cluster.
+    pub depth: u32,
+}
+
+/// Build the per-cluster report for a clustering (sorted by id: parents
+/// before children).
+pub fn cluster_report(c: &Clustering) -> Vec<ClusterReport> {
+    let tree = &c.condensed;
+    let n = tree.n_points as u32;
+    let k = tree.n_cluster_ids;
+    let birth = tree.birth_lambdas();
+    let stability = tree.stabilities();
+
+    let mut parent = vec![n; k];
+    let mut size = vec![0u32; k];
+    let mut death = vec![f64::INFINITY; k];
+    for r in &tree.rows {
+        let pidx = (r.parent - n) as usize;
+        if r.child >= n {
+            let cidx = (r.child - n) as usize;
+            parent[cidx] = r.parent;
+            // a parent that spawns child clusters dies at that λ
+            let d = &mut death[pidx];
+            *d = if d.is_infinite() { r.lambda } else { d.max(r.lambda) };
+        } else {
+            size[pidx] += 1;
+        }
+    }
+    // size = own fall-outs + recursive children sizes ("ever belonged");
+    // ids ascend parent→child, so a reverse pass accumulates bottom-up
+    for idx in (1..k).rev() {
+        let p = (parent[idx] - n) as usize;
+        size[p] += size[idx];
+    }
+
+    let mut depth = vec![0u32; k];
+    for idx in 1..k {
+        depth[idx] = depth[(parent[idx] - n) as usize] + 1;
+    }
+
+    (0..k)
+        .map(|idx| ClusterReport {
+            id: n + idx as u32,
+            parent: parent[idx],
+            size: size[idx],
+            birth_lambda: birth[idx],
+            death_lambda: death[idx],
+            stability: stability[idx],
+            selected: c.selected.contains(&(n + idx as u32)),
+            depth: depth[idx],
+        })
+        .collect()
+}
+
+/// Render the report as an indented text tree (CLI `export --format tree`).
+pub fn report_to_text(report: &[ClusterReport]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<8} {:>8} {:>12} {:>12} {:>12} {:>9}",
+        "cluster", "size", "birth λ", "death λ", "stability", "selected"
+    );
+    for r in report {
+        let indent = "  ".repeat(r.depth as usize);
+        let _ = writeln!(
+            out,
+            "{:<8} {:>8} {:>12.4} {:>12.4} {:>12.4} {:>9}",
+            format!("{indent}{}", r.id),
+            r.size,
+            r.birth_lambda,
+            r.death_lambda,
+            r.stability,
+            if r.selected { "*" } else { "" }
+        );
+    }
+    out
+}
+
+/// Escape a string for JSON (we emit JSON by hand: no serde offline).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_f64(x: f64) -> String {
+    if x.is_infinite() {
+        if x > 0.0 { "1e308".into() } else { "-1e308".into() }
+    } else if x.is_nan() {
+        "null".into()
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Serialize a clustering (flat labels + condensed tree + selection +
+/// per-cluster report) to a single JSON document.
+pub fn clustering_to_json(c: &Clustering, name: &str) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"name\": \"{}\",", json_escape(name));
+    let _ = writeln!(out, "  \"n_points\": {},", c.labels.len());
+    let _ = writeln!(out, "  \"n_clusters\": {},", c.n_clusters);
+    let _ = writeln!(
+        out,
+        "  \"labels\": [{}],",
+        c.labels.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",")
+    );
+    let _ = writeln!(
+        out,
+        "  \"selected\": [{}],",
+        c.selected.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+    );
+    out.push_str("  \"condensed_tree\": [\n");
+    for (i, r) in c.condensed.rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"parent\": {}, \"child\": {}, \"lambda\": {}, \"size\": {}}}",
+            r.parent,
+            r.child,
+            json_f64(r.lambda),
+            r.size
+        );
+        out.push_str(if i + 1 < c.condensed.rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"clusters\": [\n");
+    let report = cluster_report(c);
+    for (i, r) in report.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"id\": {}, \"parent\": {}, \"size\": {}, \"birth_lambda\": {}, \
+             \"death_lambda\": {}, \"stability\": {}, \"selected\": {}, \"depth\": {}}}",
+            r.id,
+            r.parent,
+            r.size,
+            json_f64(r.birth_lambda),
+            json_f64(r.death_lambda),
+            json_f64(r.stability),
+            r.selected,
+            r.depth
+        );
+        out.push_str(if i + 1 < report.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// GraphViz DOT rendering of the condensed cluster tree (clusters only;
+/// point fall-outs are summarized as a count per cluster).
+pub fn condensed_to_dot(c: &Clustering) -> String {
+    let tree = &c.condensed;
+    let n = tree.n_points as u32;
+    let report = cluster_report(c);
+    let mut out = String::from("digraph condensed {\n  rankdir=TB;\n  node [shape=box];\n");
+    for r in &report {
+        let color = if r.selected { ", style=filled, fillcolor=lightblue" } else { "" };
+        let _ = writeln!(
+            out,
+            "  c{} [label=\"#{}\\nsize {}\\nλ {:.3}→{:.3}\\nstab {:.3}\"{}];",
+            r.id, r.id, r.size, r.birth_lambda, r.death_lambda, r.stability, color
+        );
+        if r.id != n {
+            let _ = writeln!(out, "  c{} -> c{};", r.parent, r.id);
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Newick serialization of a single-linkage dendrogram (leaf names are
+/// point ids; branch lengths are merge distances, ∞ clamped). Suitable for
+/// scipy / ete3 / iTOL.
+pub fn dendrogram_to_newick(d: &Dendrogram) -> String {
+    fn rec(d: &Dendrogram, node: u32, parent_dist: f64, out: &mut String) {
+        let n = d.n_points as u32;
+        let dist = |x: f64| if x.is_finite() { x } else { 1e308 };
+        if node < n {
+            let _ = write!(out, "{}:{}", node, dist(parent_dist));
+            return;
+        }
+        let (l, r, w, _) = d
+            .merges
+            .get((node - n) as usize)
+            .copied()
+            .expect("internal node");
+        out.push('(');
+        rec(d, l, w, out);
+        out.push(',');
+        rec(d, r, w, out);
+        let _ = write!(out, "):{}", dist(parent_dist));
+    }
+    let mut out = String::new();
+    if d.n_points == 1 {
+        return "(0:0);".into();
+    }
+    rec(d, d.root(), 0.0, &mut out);
+    out.push(';');
+    out
+}
+
+/// Parse-free structural validation of our own JSON (tests + a cheap
+/// defence against emitting malformed output): bracket balance and quote
+/// pairing.
+pub fn json_is_balanced(s: &str) -> bool {
+    let mut depth: i64 = 0;
+    let mut in_str = false;
+    let mut esc = false;
+    for ch in s.chars() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if ch == '\\' {
+                esc = true;
+            } else if ch == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match ch {
+            '"' => in_str = true,
+            '{' | '[' => depth += 1,
+            '}' | ']' => {
+                depth -= 1;
+                if depth < 0 {
+                    return false;
+                }
+            }
+            _ => {}
+        }
+    }
+    depth == 0 && !in_str
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdbscan::cluster_from_msf;
+    use crate::mst::Edge;
+
+    fn sample_clustering() -> Clustering {
+        // two chains of 6 + a weak bridge
+        let mut edges = Vec::new();
+        for i in 0..5u32 {
+            edges.push(Edge::new(i, i + 1, 1.0));
+            edges.push(Edge::new(6 + i, 7 + i, 1.0));
+        }
+        edges.push(Edge::new(5, 6, 40.0));
+        cluster_from_msf(&edges, 12, 3)
+    }
+
+    #[test]
+    fn report_covers_all_clusters_and_sizes_nest() {
+        let c = sample_clustering();
+        let rep = cluster_report(&c);
+        assert_eq!(rep.len(), c.condensed.n_cluster_ids);
+        // root first, full size
+        assert_eq!(rep[0].id, c.condensed.root());
+        assert_eq!(rep[0].size as usize, 12);
+        assert_eq!(rep[0].depth, 0);
+        for r in &rep[1..] {
+            let parent = &rep[(r.parent - c.condensed.root()) as usize];
+            assert!(r.size <= parent.size, "child bigger than parent");
+            assert_eq!(r.depth, parent.depth + 1);
+            assert!(r.birth_lambda >= parent.birth_lambda);
+        }
+        // selected ids in the report match the clustering
+        let sel: Vec<u32> =
+            rep.iter().filter(|r| r.selected).map(|r| r.id).collect();
+        assert_eq!(sel, c.selected);
+    }
+
+    #[test]
+    fn json_well_formed_and_complete() {
+        let c = sample_clustering();
+        let j = clustering_to_json(&c, "unit \"test\"");
+        assert!(json_is_balanced(&j), "unbalanced JSON:\n{j}");
+        assert!(j.contains("\"n_points\": 12"));
+        assert!(j.contains("unit \\\"test\\\""));
+        assert!(j.contains("\"condensed_tree\""));
+        // one label per point
+        let labels_part = j.split("\"labels\": [").nth(1).unwrap();
+        let labels_csv = labels_part.split(']').next().unwrap();
+        assert_eq!(labels_csv.split(',').count(), 12);
+    }
+
+    #[test]
+    fn dot_contains_every_cluster_edge() {
+        let c = sample_clustering();
+        let dot = condensed_to_dot(&c);
+        assert!(dot.starts_with("digraph"));
+        for r in cluster_report(&c) {
+            assert!(dot.contains(&format!("c{} [", r.id)));
+            if r.id != c.condensed.root() {
+                assert!(dot.contains(&format!("c{} -> c{};", r.parent, r.id)));
+            }
+        }
+    }
+
+    #[test]
+    fn newick_balanced_and_has_all_leaves() {
+        let mut edges = Vec::new();
+        for i in 0..7u32 {
+            edges.push(Edge::new(i, i + 1, (i + 1) as f64));
+        }
+        let d = Dendrogram::from_msf(&edges, 8);
+        let nw = dendrogram_to_newick(&d);
+        assert!(nw.ends_with(';'));
+        assert_eq!(
+            nw.chars().filter(|&c| c == '(').count(),
+            nw.chars().filter(|&c| c == ')').count()
+        );
+        for leaf in 0..8 {
+            assert!(
+                nw.contains(&format!("{leaf}:")),
+                "leaf {leaf} missing in {nw}"
+            );
+        }
+    }
+
+    #[test]
+    fn newick_singleton() {
+        let d = Dendrogram::from_msf(&[], 1);
+        assert_eq!(dendrogram_to_newick(&d), "(0:0);");
+    }
+
+    #[test]
+    fn forest_infinity_merges_survive_export() {
+        // two disconnected components: ∞ merges must not break JSON/newick
+        let edges = vec![Edge::new(0, 1, 1.0), Edge::new(2, 3, 1.0)];
+        let c = cluster_from_msf(&edges, 4, 2);
+        let j = clustering_to_json(&c, "forest");
+        assert!(json_is_balanced(&j));
+        assert!(!j.contains("inf"), "raw inf leaked into JSON");
+        let d = Dendrogram::from_msf(&edges, 4);
+        let nw = dendrogram_to_newick(&d);
+        assert!(!nw.contains("inf"));
+    }
+}

@@ -1,0 +1,377 @@
+//! Flat-cluster extraction from a condensed tree via Excess-of-Mass
+//! stability maximization (Campello et al. \[4\]; McInnes & Healy \[26\]).
+//!
+//! A cluster is selected iff its own stability exceeds the summed
+//! (propagated) stability of its child clusters; the root is never
+//! selected (paper, Lemma 3.3: the all-points root cluster is excluded).
+
+use super::condense::CondensedTree;
+use super::Clustering;
+
+/// Select clusters and produce flat labels (root never selected — the
+/// paper's Lemma 3.3 semantics and hdbscan's default).
+pub fn extract_flat(tree: &CondensedTree) -> Clustering {
+    extract_flat_opts(tree, false)
+}
+
+/// Like [`extract_flat`], but `allow_single_cluster = true` lets the root
+/// compete for selection (hdbscan's `allow_single_cluster=True`): datasets
+/// that are one uniform cluster then return that cluster instead of
+/// all-noise.
+pub fn extract_flat_opts(
+    tree: &CondensedTree,
+    allow_single_cluster: bool,
+) -> Clustering {
+    let n = tree.n_points;
+    let root = tree.root();
+    let k = tree.n_cluster_ids;
+
+    // children clusters per cluster (offset ids)
+    let mut child_clusters: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for r in &tree.rows {
+        if (r.child as usize) >= n {
+            child_clusters[(r.parent - root) as usize].push(r.child);
+        }
+    }
+
+    let stability = tree.stabilities();
+    // process ids descending (children always have larger ids than parents)
+    let mut selected = vec![false; k];
+    let mut propagated = stability.clone();
+    for idx in (0..k).rev() {
+        let kids = &child_clusters[idx];
+        if idx == 0 && !allow_single_cluster {
+            // root: never selected, just propagates
+            continue;
+        }
+        if kids.is_empty() {
+            selected[idx] = true; // leaf cluster: provisionally selected
+            continue;
+        }
+        let kid_sum: f64 = kids.iter().map(|&c| propagated[(c - root) as usize]).sum();
+        if stability[idx] >= kid_sum {
+            selected[idx] = true;
+            propagated[idx] = stability[idx];
+        } else {
+            propagated[idx] = kid_sum;
+        }
+    }
+
+    // keep only the highest selected clusters (unselect descendants)
+    let mut final_selected = vec![false; k];
+    let mut stack: Vec<u32> = if allow_single_cluster {
+        vec![root]
+    } else {
+        child_clusters[0].clone()
+    };
+    while let Some(c) = stack.pop() {
+        let idx = (c - root) as usize;
+        if selected[idx] {
+            final_selected[idx] = true;
+        } else {
+            stack.extend(child_clusters[idx].iter().copied());
+        }
+    }
+
+    // assign dense flat labels to selected clusters
+    let mut label_of = vec![-1i32; k];
+    let mut next = 0i32;
+    for idx in 0..k {
+        if final_selected[idx] {
+            label_of[idx] = next;
+            next += 1;
+        }
+    }
+
+    // point labels: a point gets the label of the selected ancestor of the
+    // cluster it falls out of (if any). Compute each cluster's nearest
+    // selected ancestor top-down (ids ascend parent -> child).
+    let mut sel_anc = vec![-1i32; k];
+    for idx in 0..k {
+        if final_selected[idx] {
+            sel_anc[idx] = label_of[idx];
+        }
+    }
+    // rows are emitted parent-before-child (BFS-ish); propagate via rows
+    // ordered by child id ascending to be safe
+    let mut cluster_rows: Vec<(u32, u32)> = tree
+        .rows
+        .iter()
+        .filter(|r| (r.child as usize) >= n)
+        .map(|r| (r.parent, r.child))
+        .collect();
+    cluster_rows.sort_unstable_by_key(|&(_, c)| c);
+    for (p, c) in cluster_rows {
+        let (pi, ci) = ((p - root) as usize, (c - root) as usize);
+        if sel_anc[ci] < 0 {
+            sel_anc[ci] = sel_anc[pi];
+        }
+    }
+
+    let mut labels = vec![-1i32; n];
+    for r in &tree.rows {
+        if (r.child as usize) < n {
+            labels[r.child as usize] = sel_anc[(r.parent - root) as usize];
+        }
+    }
+
+    Clustering {
+        labels,
+        n_clusters: next as usize,
+        condensed: tree.clone(),
+        selected: (0..k)
+            .filter(|&i| final_selected[i])
+            .map(|i| root + i as u32)
+            .collect(),
+    }
+}
+
+/// Leaf extraction: select every *leaf* of the condensed tree instead of
+/// maximizing stability — yields the finest-grained clustering the
+/// hierarchy supports (hdbscan's `cluster_selection_method="leaf"`).
+/// Useful when EoM collapses interesting sub-structure into one big
+/// cluster (the flip side of the paper's "fewer larger clusters"
+/// regularization observation).
+pub fn extract_leaf(tree: &CondensedTree) -> Clustering {
+    let n = tree.n_points;
+    let root = tree.root();
+    let k = tree.n_cluster_ids;
+
+    let mut has_child_cluster = vec![false; k];
+    for r in &tree.rows {
+        if (r.child as usize) >= n {
+            has_child_cluster[(r.parent - root) as usize] = true;
+        }
+    }
+    // leaves, root excluded (and excluding the degenerate single-cluster
+    // case where the root is the only node)
+    let mut label_of = vec![-1i32; k];
+    let mut next = 0i32;
+    for idx in 1..k {
+        if !has_child_cluster[idx] {
+            label_of[idx] = next;
+            next += 1;
+        }
+    }
+    let mut labels = vec![-1i32; n];
+    for r in &tree.rows {
+        if (r.child as usize) < n {
+            labels[r.child as usize] = label_of[(r.parent - root) as usize];
+        }
+    }
+    Clustering {
+        labels,
+        n_clusters: next as usize,
+        condensed: tree.clone(),
+        selected: (1..k)
+            .filter(|&i| label_of[i] >= 0)
+            .map(|i| root + i as u32)
+            .collect(),
+    }
+}
+
+/// DBSCAN\*-style flat cut: connected components of the MSF restricted to
+/// edges with weight ≤ `eps`, keeping components with at least `min_size`
+/// points (everything else is noise). This is HDBSCAN\* with a single
+/// global density threshold — exactly the ε the paper says HDBSCAN\*
+/// removes ("tuned automatically and separately for each cluster", §2) —
+/// provided for exploration and for DBSCAN-comparison experiments.
+pub fn cut_at_distance(
+    edges: &[crate::mst::Edge],
+    n_points: usize,
+    eps: f64,
+    min_size: usize,
+) -> Vec<i32> {
+    let mut uf = crate::mst::UnionFind::new(n_points);
+    for e in edges {
+        if e.w <= eps {
+            uf.union(e.a, e.b);
+        }
+    }
+    let mut count = std::collections::HashMap::new();
+    for i in 0..n_points as u32 {
+        *count.entry(uf.find(i)).or_insert(0usize) += 1;
+    }
+    let mut label_of = std::collections::HashMap::new();
+    let mut next = 0i32;
+    let mut labels = vec![-1i32; n_points];
+    for i in 0..n_points as u32 {
+        let r = uf.find(i);
+        if count[&r] >= min_size.max(1) {
+            let l = *label_of.entry(r).or_insert_with(|| {
+                let l = next;
+                next += 1;
+                l
+            });
+            labels[i as usize] = l;
+        }
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdbscan::condense::{CondensedTree, Dendrogram};
+    use crate::mst::Edge;
+    use crate::util::proptest::check;
+
+    fn cluster(edges: &[Edge], n: usize, mcs: usize) -> Clustering {
+        let d = Dendrogram::from_msf(edges, n);
+        let t = CondensedTree::from_dendrogram(&d, mcs);
+        extract_flat(&t)
+    }
+
+    #[test]
+    fn nested_clusters_prefer_children_when_tighter() {
+        // two tight blobs (intra 0.1) inside a loose super-cluster (bridge
+        // 1.0), isolated from a far singleton cloud (bridge 100).
+        let mut edges = Vec::new();
+        for i in 0..4u32 {
+            edges.push(Edge::new(i, i + 1, 0.1)); // blob A: 0-4
+            edges.push(Edge::new(5 + i, 6 + i, 0.1)); // blob B: 5-9
+        }
+        edges.push(Edge::new(4, 5, 1.0)); // A-B bridge
+        for i in 10..14u32 {
+            edges.push(Edge::new(i, i + 1, 100.0)); // sparse cloud 10-14
+        }
+        edges.push(Edge::new(9, 10, 500.0));
+        let c = cluster(&edges, 15, 3);
+        // the two tight blobs must be separate clusters
+        assert!(c.n_clusters >= 2, "clusters: {} labels {:?}", c.n_clusters, c.labels);
+        assert_eq!(c.labels[0], c.labels[4]);
+        assert_eq!(c.labels[5], c.labels[9]);
+        assert_ne!(c.labels[0], c.labels[5]);
+    }
+
+    #[test]
+    fn root_never_selected() {
+        // homogeneous chain: root would be the only candidate; selection
+        // must instead pick its child clusters (or everything is noise)
+        let edges: Vec<Edge> =
+            (0..19u32).map(|i| Edge::new(i, i + 1, 1.0)).collect();
+        let c = cluster(&edges, 20, 3);
+        for &s in &c.selected {
+            assert_ne!(s, c.condensed.root());
+        }
+    }
+
+    #[test]
+    fn labels_dense_and_consistent_with_sizes() {
+        let mut edges = Vec::new();
+        for i in 0..9u32 {
+            edges.push(Edge::new(i, i + 1, 1.0));
+            edges.push(Edge::new(20 + i, 21 + i, 1.0));
+        }
+        edges.push(Edge::new(9, 20, 30.0));
+        let c = cluster(&edges, 30, 4);
+        let sizes = c.cluster_sizes();
+        assert_eq!(sizes.len(), c.n_clusters);
+        assert_eq!(sizes.iter().sum::<usize>(), c.n_clustered());
+        for (i, &s) in sizes.iter().enumerate() {
+            assert!(s > 0, "empty flat cluster {i}");
+        }
+    }
+
+    #[test]
+    fn leaf_extraction_is_at_least_as_fine_as_eom() {
+        // nested structure: EoM may pick the parents; leaf must pick leaves
+        let mut edges = Vec::new();
+        for i in 0..4u32 {
+            edges.push(Edge::new(i, i + 1, 0.1)); // tight blob A
+            edges.push(Edge::new(5 + i, 6 + i, 0.1)); // tight blob B
+            edges.push(Edge::new(10 + i, 11 + i, 0.1)); // tight blob C
+        }
+        edges.push(Edge::new(4, 5, 2.0));
+        edges.push(Edge::new(9, 10, 2.0));
+        let d = Dendrogram::from_msf(&edges, 15);
+        let t = CondensedTree::from_dendrogram(&d, 3);
+        let eom = extract_flat(&t);
+        let leaf = extract_leaf(&t);
+        assert!(leaf.n_clusters >= eom.n_clusters);
+        // every leaf-selected cluster has no child cluster in the tree
+        for &s in &leaf.selected {
+            assert!(
+                !t.rows.iter().any(|r| r.parent == s && (r.child as usize) >= 15),
+                "leaf selection picked an internal cluster"
+            );
+        }
+    }
+
+    #[test]
+    fn cut_at_distance_matches_component_structure() {
+        // chain 0-4 (w=1), chain 5-9 (w=1), bridge w=10
+        let mut edges = Vec::new();
+        for i in 0..4u32 {
+            edges.push(Edge::new(i, i + 1, 1.0));
+            edges.push(Edge::new(5 + i, 6 + i, 1.0));
+        }
+        edges.push(Edge::new(4, 5, 10.0));
+        // eps below the bridge: two clusters
+        let l = cut_at_distance(&edges, 10, 2.0, 2);
+        assert_eq!(l.iter().collect::<std::collections::HashSet<_>>().len(), 2);
+        assert_eq!(l[0], l[4]);
+        assert_ne!(l[0], l[5]);
+        // eps above the bridge: one cluster
+        let l = cut_at_distance(&edges, 10, 20.0, 2);
+        assert!(l.iter().all(|&x| x == 0));
+        // min_size filters: singletons become noise
+        let l = cut_at_distance(&edges, 10, 0.5, 2);
+        assert!(l.iter().all(|&x| x == -1), "no edge ≤ 0.5 ⇒ all noise");
+    }
+
+    #[test]
+    fn prop_cut_monotone_in_eps() {
+        check("cut-monotone", 20, |rng, _| {
+            let n = 5 + rng.below(60);
+            let mut edges = Vec::new();
+            for i in 1..n as u32 {
+                let parent = rng.below(i as usize) as u32;
+                edges.push(Edge::new(parent, i, rng.f64() * 4.0));
+            }
+            let l1 = cut_at_distance(&edges, n, 1.0, 2);
+            let l2 = cut_at_distance(&edges, n, 2.0, 2);
+            // clusters can only merge as eps grows: same-cluster pairs at
+            // eps=1 stay together at eps=2
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if l1[i] >= 0 && l1[i] == l1[j] {
+                        assert!(
+                            l2[i] >= 0 && l2[i] == l2[j],
+                            "pair ({i},{j}) split when eps grew"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_extraction_invariants() {
+        check("extract-invariants", 30, |rng, _| {
+            let n = 6 + rng.below(100);
+            let mut edges = Vec::new();
+            for i in 1..n as u32 {
+                let parent = rng.below(i as usize) as u32;
+                edges.push(Edge::new(parent, i, rng.f64() * 5.0 + 0.01));
+            }
+            let mcs = 2 + rng.below(6);
+            let c = cluster(&edges, n, mcs);
+
+            // labels in range
+            assert!(c.labels.iter().all(|&l| l >= -1 && (l as i64) < c.n_clusters as i64));
+            // every flat cluster has >= mcs points? Not guaranteed by EOM
+            // (leaf clusters have >= mcs by construction of the condensed
+            // tree, and selected clusters are condensed clusters) — check:
+            let sizes = c.cluster_sizes();
+            for &s in &sizes {
+                assert!(s >= 1);
+            }
+            // selected clusters are disjoint: total clustered <= n
+            assert!(c.n_clustered() <= n);
+            // hierarchical counts are supersets of flat
+            assert!(c.n_hierarchical_clustered() <= n);
+            assert!(c.n_hierarchical_clusters() + 1 >= c.n_clusters);
+        });
+    }
+}

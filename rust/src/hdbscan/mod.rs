@@ -1,0 +1,143 @@
+//! HDBSCAN* hierarchy extraction (McInnes & Healy \[26\]) and the exact
+//! O(n²) HDBSCAN* baseline the paper compares against.
+//!
+//! Pipeline: minimum spanning forest over mutual-reachability weights →
+//! single-linkage dendrogram ([`condense::Dendrogram`]) → condensed tree
+//! with minimum cluster size m_cs ([`condense::CondensedTree`]) → flat
+//! clusters by Excess-of-Mass stability selection ([`extract`]).
+
+pub mod condense;
+pub mod exact;
+pub mod exact_pjrt;
+pub mod export;
+pub mod extract;
+
+pub use condense::{CondensedRow, CondensedTree, Dendrogram};
+pub use export::{cluster_report, clustering_to_json, ClusterReport};
+
+/// Final clustering output: flat labels + the full hierarchy.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// Per-point flat cluster label; -1 = noise. Labels are dense 0..k.
+    pub labels: Vec<i32>,
+    /// Number of flat clusters.
+    pub n_clusters: usize,
+    /// The condensed hierarchy (for data exploration / Table 7 columns).
+    pub condensed: CondensedTree,
+    /// Selected condensed-cluster ids, index-aligned with flat labels.
+    pub selected: Vec<u32>,
+}
+
+impl Clustering {
+    /// Number of points assigned to a flat cluster (non-noise).
+    pub fn n_clustered(&self) -> usize {
+        self.labels.iter().filter(|&&l| l >= 0).count()
+    }
+
+    /// Number of clusters in the hierarchy (condensed clusters, root
+    /// excluded) — the paper's "hierarchical clusters" column.
+    pub fn n_hierarchical_clusters(&self) -> usize {
+        self.condensed.n_clusters_excluding_root()
+    }
+
+    /// Number of points that belong to at least one non-root hierarchical
+    /// cluster — the paper's "hierarchical clustered elements" column
+    /// ("almost all elements end up in a cluster when we consider the
+    /// hierarchical clustering", §4.3).
+    pub fn n_hierarchical_clustered(&self) -> usize {
+        self.condensed.n_points_in_non_root_clusters()
+    }
+
+    /// Cluster sizes of the flat clustering.
+    pub fn cluster_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.n_clusters];
+        for &l in &self.labels {
+            if l >= 0 {
+                sizes[l as usize] += 1;
+            }
+        }
+        sizes
+    }
+}
+
+/// Run the full extraction pipeline from MSF edges (the shared back half of
+/// both FISHDBC and the exact baseline).
+pub fn cluster_from_msf(
+    edges: &[crate::mst::Edge],
+    n_points: usize,
+    mcs: usize,
+) -> Clustering {
+    cluster_from_msf_opts(edges, n_points, mcs, false)
+}
+
+/// [`cluster_from_msf`] with `allow_single_cluster` (hdbscan's option for
+/// datasets that form one uniform cluster; default-off everywhere).
+pub fn cluster_from_msf_opts(
+    edges: &[crate::mst::Edge],
+    n_points: usize,
+    mcs: usize,
+    allow_single_cluster: bool,
+) -> Clustering {
+    let dendro = Dendrogram::from_msf(edges, n_points);
+    let condensed = CondensedTree::from_dendrogram(&dendro, mcs);
+    extract::extract_flat_opts(&condensed, allow_single_cluster)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mst::Edge;
+
+    /// Two well-separated chains of 5 points each.
+    fn two_chain_edges() -> (Vec<Edge>, usize) {
+        let mut edges = Vec::new();
+        for i in 0..4u32 {
+            edges.push(Edge::new(i, i + 1, 1.0));
+            edges.push(Edge::new(5 + i, 5 + i + 1, 1.0));
+        }
+        edges.push(Edge::new(4, 5, 50.0)); // weak bridge
+        (edges, 10)
+    }
+
+    #[test]
+    fn two_clusters_found() {
+        let (edges, n) = two_chain_edges();
+        let c = cluster_from_msf(&edges, n, 3);
+        assert_eq!(c.labels.len(), n);
+        assert_eq!(c.n_clusters, 2, "labels: {:?}", c.labels);
+        // points 0-4 together, 5-9 together, different labels
+        for i in 1..5 {
+            assert_eq!(c.labels[i], c.labels[0]);
+            assert_eq!(c.labels[5 + i - 1], c.labels[5]);
+        }
+        assert_ne!(c.labels[0], c.labels[5]);
+        assert_eq!(c.n_clustered(), 10);
+    }
+
+    #[test]
+    fn forest_components_cluster_independently() {
+        // same two chains but NO bridge: a true forest
+        let (mut edges, n) = two_chain_edges();
+        edges.pop();
+        let c = cluster_from_msf(&edges, n, 3);
+        assert_eq!(c.n_clusters, 2);
+        assert_ne!(c.labels[0], c.labels[5]);
+    }
+
+    #[test]
+    fn all_noise_when_mcs_too_large() {
+        let edges = vec![Edge::new(0, 1, 1.0)];
+        let c = cluster_from_msf(&edges, 3, 3);
+        // 3 points, biggest component is 2 < mcs=3 ... wait component {0,1}
+        // has size 2 and point 2 is isolated: no cluster of size >= 3.
+        assert_eq!(c.n_clusters, 0);
+        assert!(c.labels.iter().all(|&l| l == -1));
+    }
+
+    #[test]
+    fn singleton_dataset() {
+        let c = cluster_from_msf(&[], 1, 2);
+        assert_eq!(c.labels, vec![-1]);
+        assert_eq!(c.n_clusters, 0);
+    }
+}

@@ -1,0 +1,692 @@
+//! Hierarchical Navigable Small World index (Malkov & Yashunin \[24\]),
+//! adapted for FISHDBC (paper §3): the index is only ever *built*, never
+//! queried, and **every distance evaluation is logged** so the caller can
+//! piggyback candidate MST edges on insertion work.
+//!
+//! Parameters follow the paper: `k = M = MinPts` neighbors per node,
+//! `ef` is the construction beam width (paper evaluates ef ∈ {20, 50}),
+//! remaining parameters at Malkov & Yashunin defaults (`M_max0 = 2M`,
+//! level multiplier `mL = 1/ln(M)`, select-neighbors heuristic with pruned
+//! connection keeping).
+
+use crate::distances::Metric;
+use crate::util::rng::Rng;
+
+/// A logged distance evaluation: (node a, node b, d(a, b)).
+pub type DistLog = Vec<(u32, u32, f64)>;
+
+/// Ordered f64 wrapper so distances can live in heaps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Per-node adjacency: one neighbor list per level the node exists on.
+#[derive(Clone, Debug)]
+struct Node {
+    /// `links[l]` = neighbor ids at level `l` (0 = bottom).
+    links: Vec<Vec<u32>>,
+}
+
+impl Node {
+    fn level(&self) -> usize {
+        self.links.len() - 1
+    }
+}
+
+/// HNSW construction parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct HnswParams {
+    /// Neighbors per node on levels > 0 (the paper sets M = MinPts).
+    pub m: usize,
+    /// Construction beam width (paper's headline knob: 20 or 50).
+    pub ef: usize,
+    /// RNG seed for level assignment.
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams { m: 10, ef: 20, seed: 0xF15D }
+    }
+}
+
+/// Exported HNSW state (persistence interchange; see [`Hnsw::export`]).
+#[derive(Clone, Debug)]
+pub struct HnswExport {
+    pub params: HnswParams,
+    /// `links[id][level]` = neighbor ids.
+    pub links: Vec<Vec<Vec<u32>>>,
+    pub entry: Option<u32>,
+    pub rng_state: [u64; 4],
+    pub dist_calls: u64,
+}
+
+/// The index. Generic over item type `T`; the item store lives in the
+/// caller (FISHDBC keeps one `Vec<T>` shared by HNSW and output) and is
+/// passed to [`Hnsw::add`] each time, keeping borrows simple.
+#[derive(Clone, Debug)]
+pub struct Hnsw {
+    params: HnswParams,
+    nodes: Vec<Node>,
+    entry: Option<u32>,
+    rng: Rng,
+    mult: f64,
+    dist_calls: u64,
+    // --- transient perf state (not persisted) ---
+    /// Epoch-stamped visited marks: `visited_mark[id] == epoch` ⇔ visited
+    /// in the current search. Avoids a HashSet allocation per search_layer
+    /// call (§Perf: ~15% of insert time at n=8k).
+    visited_mark: Vec<u32>,
+    epoch: u32,
+    /// Reusable frontier buffer (avoids cloning neighbor lists).
+    scratch: Vec<u32>,
+}
+
+impl Hnsw {
+    pub fn new(params: HnswParams) -> Self {
+        let mult = 1.0 / (params.m.max(2) as f64).ln();
+        Hnsw {
+            rng: Rng::new(params.seed),
+            params,
+            nodes: Vec::new(),
+            entry: None,
+            mult,
+            dist_calls: 0,
+            visited_mark: Vec::new(),
+            epoch: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Start a new visited-set epoch and make sure marks cover all nodes.
+    #[inline]
+    fn next_epoch(&mut self) -> u32 {
+        if self.visited_mark.len() < self.nodes.len() {
+            self.visited_mark.resize(self.nodes.len(), 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // wrapped: clear stale marks so epoch 0 values can't collide
+            self.visited_mark.fill(0);
+            self.epoch = 1;
+        }
+        self.epoch
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn params(&self) -> &HnswParams {
+        &self.params
+    }
+
+    /// Total distance evaluations performed during construction (the
+    /// paper's cost model — Fig 1 / Fig 2 report runtimes dominated by
+    /// distance calls).
+    pub fn dist_calls(&self) -> u64 {
+        self.dist_calls
+    }
+
+    /// Top level of the hierarchy (None when empty).
+    pub fn top_level(&self) -> Option<usize> {
+        self.entry.map(|e| self.nodes[e as usize].level())
+    }
+
+    /// Neighbor list of `id` at `level` (introspection / tests).
+    pub fn neighbors(&self, id: u32, level: usize) -> &[u32] {
+        &self.nodes[id as usize].links[level]
+    }
+
+    /// Level of node `id`.
+    pub fn node_level(&self, id: u32) -> usize {
+        self.nodes[id as usize].level()
+    }
+
+    /// Full structural state for persistence (see `persist` module).
+    pub fn export(&self) -> HnswExport {
+        HnswExport {
+            params: self.params,
+            links: self.nodes.iter().map(|n| n.links.clone()).collect(),
+            entry: self.entry,
+            rng_state: self.rng.state(),
+            dist_calls: self.dist_calls,
+        }
+    }
+
+    /// Rebuild an index from [`Hnsw::export`]ed state. The reloaded index
+    /// continues *exactly* where the original left off (same RNG stream,
+    /// same adjacency, same counters).
+    pub fn import(e: HnswExport) -> Self {
+        let mult = 1.0 / (e.params.m.max(2) as f64).ln();
+        Hnsw {
+            rng: Rng::from_state(e.rng_state),
+            params: e.params,
+            nodes: e.links.into_iter().map(|links| Node { links }).collect(),
+            entry: e.entry,
+            mult,
+            dist_calls: e.dist_calls,
+            visited_mark: Vec::new(),
+            epoch: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    fn random_level(&mut self) -> usize {
+        let u = self.rng.f64().max(1e-300);
+        ((-u.ln()) * self.mult).floor() as usize
+    }
+
+    #[inline]
+    fn eval<T, M: Metric<T>>(
+        &mut self,
+        items: &[T],
+        metric: &M,
+        a: u32,
+        b: u32,
+        log: &mut DistLog,
+    ) -> f64 {
+        let d = metric.dist(&items[a as usize], &items[b as usize]);
+        self.dist_calls += 1;
+        log.push((a, b, d));
+        d
+    }
+
+    /// Insert the item with id `new_id` (ids must be dense: `new_id ==
+    /// self.len()`; the caller owns the item store and must have pushed the
+    /// item already). Every distance computed is appended to `log`;
+    /// FISHDBC consumes these as candidate MST edges.
+    ///
+    /// Returns the closest discovered neighbors (up to `ef`), best-first.
+    pub fn add<T, M: Metric<T>>(
+        &mut self,
+        items: &[T],
+        metric: &M,
+        new_id: u32,
+        log: &mut DistLog,
+    ) -> Vec<(u32, f64)> {
+        assert_eq!(new_id as usize, self.nodes.len(), "ids must be dense");
+        assert!((new_id as usize) < items.len(), "item must be pushed first");
+        let level = self.random_level();
+        self.nodes.push(Node { links: vec![Vec::new(); level + 1] });
+
+        let Some(entry) = self.entry else {
+            self.entry = Some(new_id);
+            return Vec::new();
+        };
+
+        let top = self.nodes[entry as usize].level();
+        let d0 = self.eval(items, metric, entry, new_id, log);
+        let mut ep: Vec<(u32, f64)> = vec![(entry, d0)];
+
+        // greedy descent through levels above the new node's level
+        let mut l = top;
+        while l > level {
+            ep = self.search_layer(items, metric, new_id, ep, 1, l, log);
+            l -= 1;
+        }
+
+        // insertion levels (top-down): beam search + heuristic linking
+        let mut l = level.min(top);
+        loop {
+            let mut w =
+                self.search_layer(items, metric, new_id, ep, self.params.ef, l, log);
+            w.sort_unstable_by(|x, y| x.1.total_cmp(&y.1));
+            let m_max = if l == 0 { self.params.m * 2 } else { self.params.m };
+            let selected =
+                self.select_heuristic(items, metric, &w, self.params.m, log);
+            for &(nb, _) in &selected {
+                self.link(items, metric, new_id, nb, l, m_max, log);
+            }
+            ep = w;
+            if l == 0 {
+                break;
+            }
+            l -= 1;
+        }
+
+        if level > top {
+            self.entry = Some(new_id);
+        }
+
+        let mut out = ep;
+        out.sort_unstable_by(|x, y| x.1.total_cmp(&y.1));
+        out
+    }
+
+    /// k-nearest-neighbor **query** (no insertion, no logging): FISHDBC
+    /// never queries during the build (paper §3), but a built index is a
+    /// perfectly good ANN structure — the coordinator uses this to classify
+    /// new items against the latest clustering without mutating state.
+    ///
+    /// Returns up to `k` `(id, distance)` pairs, ascending distance.
+    pub fn search<T, M: Metric<T>>(
+        &self,
+        items: &[T],
+        metric: &M,
+        query: &T,
+        k: usize,
+        ef: usize,
+    ) -> Vec<(u32, f64)> {
+        let Some(entry) = self.entry else { return Vec::new() };
+        let qd = |id: u32| metric.dist(query, &items[id as usize]);
+
+        // greedy descent to level 1
+        let mut best = (entry, qd(entry));
+        let top = self.nodes[entry as usize].level();
+        for l in (1..=top).rev() {
+            loop {
+                let mut improved = false;
+                for &nb in &self.nodes[best.0 as usize].links[l] {
+                    let d = qd(nb);
+                    if d < best.1 {
+                        best = (nb, d);
+                        improved = true;
+                    }
+                }
+                if !improved {
+                    break;
+                }
+            }
+        }
+
+        // beam search at level 0
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let ef = ef.max(k);
+        let mut visited: std::collections::HashSet<u32> =
+            std::iter::once(best.0).collect();
+        let mut cands = BinaryHeap::from([Reverse((OrdF64(best.1), best.0))]);
+        let mut results = BinaryHeap::from([(OrdF64(best.1), best.0)]);
+        while let Some(Reverse((OrdF64(cd), c))) = cands.pop() {
+            let worst = results.peek().map_or(f64::INFINITY, |&(OrdF64(d), _)| d);
+            if cd > worst && results.len() >= ef {
+                break;
+            }
+            for &nb in &self.nodes[c as usize].links[0] {
+                if !visited.insert(nb) {
+                    continue;
+                }
+                let d = qd(nb);
+                let worst =
+                    results.peek().map_or(f64::INFINITY, |&(OrdF64(w), _)| w);
+                if results.len() < ef || d < worst {
+                    cands.push(Reverse((OrdF64(d), nb)));
+                    results.push((OrdF64(d), nb));
+                    if results.len() > ef {
+                        results.pop();
+                    }
+                }
+            }
+        }
+        let mut out: Vec<(u32, f64)> =
+            results.into_iter().map(|(OrdF64(d), id)| (id, d)).collect();
+        out.sort_unstable_by(|x, y| x.1.total_cmp(&y.1));
+        out.truncate(k);
+        out
+    }
+
+    /// Beam search on one layer. `ep`: entry points with known distances to
+    /// the query node `q_id`. Returns up to `ef` closest, unsorted.
+    fn search_layer<T, M: Metric<T>>(
+        &mut self,
+        items: &[T],
+        metric: &M,
+        q_id: u32,
+        ep: Vec<(u32, f64)>,
+        ef: usize,
+        level: usize,
+        log: &mut DistLog,
+    ) -> Vec<(u32, f64)> {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        let epoch = self.next_epoch();
+        for &(id, _) in &ep {
+            self.visited_mark[id as usize] = epoch;
+        }
+        // candidates: min-heap by distance; results: max-heap (worst on top)
+        let mut cands: BinaryHeap<Reverse<(OrdF64, u32)>> =
+            ep.iter().map(|&(id, d)| Reverse((OrdF64(d), id))).collect();
+        let mut results: BinaryHeap<(OrdF64, u32)> =
+            ep.into_iter().map(|(id, d)| (OrdF64(d), id)).collect();
+        let mut scratch = std::mem::take(&mut self.scratch);
+
+        while let Some(Reverse((OrdF64(cd), c))) = cands.pop() {
+            let worst = results.peek().map_or(f64::INFINITY, |&(OrdF64(d), _)| d);
+            if cd > worst && results.len() >= ef {
+                break;
+            }
+            // collect unvisited neighbors into the reusable frontier buffer
+            // (marks + scratch are disjoint fields, so no neighbor-list clone)
+            scratch.clear();
+            if let Some(links) = self.nodes[c as usize].links.get(level) {
+                for &nb in links {
+                    if self.visited_mark[nb as usize] != epoch {
+                        self.visited_mark[nb as usize] = epoch;
+                        scratch.push(nb);
+                    }
+                }
+            }
+            for i in 0..scratch.len() {
+                let nb = scratch[i];
+                let d = self.eval(items, metric, nb, q_id, log);
+                let worst =
+                    results.peek().map_or(f64::INFINITY, |&(OrdF64(w), _)| w);
+                if results.len() < ef || d < worst {
+                    cands.push(Reverse((OrdF64(d), nb)));
+                    results.push((OrdF64(d), nb));
+                    if results.len() > ef {
+                        results.pop();
+                    }
+                }
+            }
+        }
+        self.scratch = scratch;
+        results.into_iter().map(|(OrdF64(d), id)| (id, d)).collect()
+    }
+
+    /// Select-neighbors heuristic (Malkov & Yashunin Alg. 4,
+    /// extendCandidates = false, keepPrunedConnections = true). `w` must be
+    /// sorted by distance ascending. Distance calls between existing nodes
+    /// are logged too — exactly the "farther away item" information FISHDBC
+    /// needs to keep local clusters connected (paper §3.1).
+    fn select_heuristic<T, M: Metric<T>>(
+        &mut self,
+        items: &[T],
+        metric: &M,
+        w: &[(u32, f64)],
+        m: usize,
+        log: &mut DistLog,
+    ) -> Vec<(u32, f64)> {
+        let mut result: Vec<(u32, f64)> = Vec::with_capacity(m);
+        let mut pruned: Vec<(u32, f64)> = Vec::new();
+        for &(c, dq) in w {
+            if result.len() >= m {
+                break;
+            }
+            // diversity criterion: keep c iff it is closer to the query
+            // than to every already-selected neighbor
+            let mut ok = true;
+            for &(r, _) in &result {
+                let d = self.eval(items, metric, c, r, log);
+                if d < dq {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                result.push((c, dq));
+            } else {
+                pruned.push((c, dq));
+            }
+        }
+        // keepPrunedConnections: fill remaining slots with closest pruned
+        for &(c, dq) in &pruned {
+            if result.len() >= m {
+                break;
+            }
+            result.push((c, dq));
+        }
+        result
+    }
+
+    /// Bidirectional link new_id <-> nb at `level`, shrinking nb's list
+    /// back to `m_max` with the heuristic when it overflows.
+    fn link<T, M: Metric<T>>(
+        &mut self,
+        items: &[T],
+        metric: &M,
+        new_id: u32,
+        nb: u32,
+        level: usize,
+        m_max: usize,
+        log: &mut DistLog,
+    ) {
+        self.nodes[new_id as usize].links[level].push(nb);
+        let nb_links = &mut self.nodes[nb as usize].links;
+        if nb_links.len() > level {
+            nb_links[level].push(new_id);
+            if nb_links[level].len() > m_max {
+                self.shrink(items, metric, nb, level, m_max, log);
+            }
+        }
+    }
+
+    /// Shrink `id`'s neighbor list at `level` to `m_max` via the heuristic.
+    fn shrink<T, M: Metric<T>>(
+        &mut self,
+        items: &[T],
+        metric: &M,
+        id: u32,
+        level: usize,
+        m_max: usize,
+        log: &mut DistLog,
+    ) {
+        let list = std::mem::take(&mut self.nodes[id as usize].links[level]);
+        let mut with_d: Vec<(u32, f64)> = list
+            .into_iter()
+            .map(|nb| {
+                let d = self.eval(items, metric, id, nb, log);
+                (nb, d)
+            })
+            .collect();
+        with_d.sort_unstable_by(|x, y| x.1.total_cmp(&y.1));
+        let selected = self.select_heuristic(items, metric, &with_d, m_max, log);
+        self.nodes[id as usize].links[level] =
+            selected.into_iter().map(|(nb, _)| nb).collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::vector::euclidean;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn metric() -> impl Metric<Vec<f32>> {
+        |a: &Vec<f32>, b: &Vec<f32>| euclidean(a, b)
+    }
+
+    fn build(
+        items: &[Vec<f32>],
+        params: HnswParams,
+    ) -> (Hnsw, DistLog) {
+        let m = metric();
+        let mut h = Hnsw::new(params);
+        let mut log = DistLog::new();
+        for i in 0..items.len() {
+            h.add(items, &m, i as u32, &mut log);
+        }
+        (h, log)
+    }
+
+    fn random_points(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let m = metric();
+        let mut h = Hnsw::new(HnswParams::default());
+        assert!(h.is_empty());
+        let items = vec![vec![0.0f32]];
+        let mut log = DistLog::new();
+        let found = h.add(&items, &m, 0, &mut log);
+        assert!(found.is_empty());
+        assert!(log.is_empty());
+        assert_eq!(h.len(), 1);
+        assert_eq!(h.top_level(), Some(h.node_level(0)));
+    }
+
+    #[test]
+    fn finds_true_nearest_neighbors_small() {
+        // with ef >= n the search is exhaustive-ish: recall should be perfect
+        let mut rng = Rng::new(42);
+        let items = random_points(&mut rng, 60, 4);
+        let (h, _) = build(&items, HnswParams { m: 8, ef: 60, seed: 7 });
+        assert_eq!(h.len(), 60);
+
+        // check the last-inserted node's returned neighbors vs brute force
+        let m = metric();
+        let mut h2 = Hnsw::new(HnswParams { m: 8, ef: 60, seed: 7 });
+        let mut log = DistLog::new();
+        let mut found = Vec::new();
+        for i in 0..items.len() {
+            found = h2.add(&items, &m, i as u32, &mut log);
+        }
+        let q = items.len() - 1;
+        let mut brute: Vec<(u32, f64)> = (0..q)
+            .map(|j| (j as u32, euclidean(&items[q], &items[j])))
+            .collect();
+        brute.sort_unstable_by(|x, y| x.1.total_cmp(&y.1));
+        let top5: std::collections::HashSet<u32> =
+            brute.iter().take(5).map(|&(id, _)| id).collect();
+        let found5: std::collections::HashSet<u32> =
+            found.iter().take(5).map(|&(id, _)| id).collect();
+        let overlap = top5.intersection(&found5).count();
+        assert!(overlap >= 4, "recall@5 too low: {overlap}/5");
+    }
+
+    #[test]
+    fn log_contains_valid_triples() {
+        let mut rng = Rng::new(1);
+        let items = random_points(&mut rng, 40, 3);
+        let (h, log) = build(&items, HnswParams { m: 5, ef: 10, seed: 3 });
+        assert_eq!(h.dist_calls() as usize, log.len());
+        assert!(!log.is_empty());
+        for &(a, b, d) in &log {
+            assert!(a != b, "self-distance logged");
+            assert!((a as usize) < items.len() && (b as usize) < items.len());
+            let expect = euclidean(&items[a as usize], &items[b as usize]);
+            assert!((d - expect).abs() < 1e-12, "logged distance wrong");
+        }
+    }
+
+    #[test]
+    fn degree_bounds_respected() {
+        let mut rng = Rng::new(5);
+        let items = random_points(&mut rng, 200, 3);
+        let params = HnswParams { m: 6, ef: 20, seed: 11 };
+        let (h, _) = build(&items, params);
+        for id in 0..h.len() as u32 {
+            for l in 0..=h.node_level(id) {
+                let deg = h.neighbors(id, l).len();
+                let m_max = if l == 0 { params.m * 2 } else { params.m };
+                assert!(deg <= m_max, "node {id} level {l} degree {deg} > {m_max}");
+            }
+        }
+    }
+
+    #[test]
+    fn links_are_bidirectional_on_shared_levels() {
+        let mut rng = Rng::new(9);
+        let items = random_points(&mut rng, 100, 3);
+        let (h, _) = build(&items, HnswParams { m: 5, ef: 15, seed: 13 });
+        // graph connectivity sanity at level 0: every node has >= 1 link
+        // (except possibly the very first in degenerate cases)
+        let isolated = (0..h.len() as u32)
+            .filter(|&id| h.neighbors(id, 0).is_empty())
+            .count();
+        assert!(isolated == 0, "{isolated} isolated nodes at level 0");
+    }
+
+    #[test]
+    fn level_distribution_is_geometric_ish() {
+        let mut rng = Rng::new(17);
+        let items = random_points(&mut rng, 2000, 2);
+        let (h, _) = build(&items, HnswParams { m: 10, ef: 10, seed: 23 });
+        let lvl0 = (0..h.len() as u32).filter(|&i| h.node_level(i) == 0).count();
+        // with mL = 1/ln(10), P(level 0) = 1 - e^{-ln 10} = 0.9
+        let frac = lvl0 as f64 / h.len() as f64;
+        assert!((0.85..0.95).contains(&frac), "level-0 fraction {frac}");
+    }
+
+    #[test]
+    fn prop_construction_cost_subquadratic() {
+        // distance calls per item should not blow up with n (cost model)
+        check("hnsw-cost", 3, |rng, case| {
+            let n = 300 * (case + 1);
+            let items = random_points(rng, n, 4);
+            let (h, _) = build(&items, HnswParams { m: 5, ef: 10, seed: 1 });
+            let per_item = h.dist_calls() as f64 / n as f64;
+            assert!(
+                per_item < 250.0,
+                "n={n}: {per_item} dist calls/item looks quadratic"
+            );
+        });
+    }
+
+    #[test]
+    fn search_matches_brute_force_on_small_sets() {
+        let mut rng = Rng::new(77);
+        let items = random_points(&mut rng, 120, 4);
+        let (h, _) = build(&items, HnswParams { m: 8, ef: 40, seed: 5 });
+        let m = metric();
+        let mut hits = 0;
+        let queries = random_points(&mut rng, 20, 4);
+        for q in &queries {
+            let got = h.search(&items, &m, q, 5, 60);
+            assert_eq!(got.len(), 5);
+            assert!(got.windows(2).all(|w| w[0].1 <= w[1].1), "unsorted");
+            let mut brute: Vec<(u32, f64)> = (0..items.len())
+                .map(|j| (j as u32, euclidean(q, &items[j])))
+                .collect();
+            brute.sort_unstable_by(|x, y| x.1.total_cmp(&y.1));
+            let want: std::collections::HashSet<u32> =
+                brute.iter().take(5).map(|&(i, _)| i).collect();
+            hits += got.iter().filter(|&&(i, _)| want.contains(&i)).count();
+        }
+        assert!(hits >= 90, "recall@5 {}%", hits);
+    }
+
+    #[test]
+    fn search_does_not_log_or_mutate() {
+        let mut rng = Rng::new(78);
+        let items = random_points(&mut rng, 80, 3);
+        let (h, log) = build(&items, HnswParams { m: 5, ef: 15, seed: 6 });
+        let calls_before = h.dist_calls();
+        let m = metric();
+        let _ = h.search(&items, &m, &items[0], 3, 20);
+        assert_eq!(h.dist_calls(), calls_before);
+        assert_eq!(log.len(), calls_before as usize);
+    }
+
+    #[test]
+    fn search_on_empty_index() {
+        let h = Hnsw::new(HnswParams::default());
+        let m = metric();
+        let items: Vec<Vec<f32>> = vec![];
+        assert!(h.search(&items, &m, &vec![1.0f32], 3, 10).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "dense")]
+    fn non_dense_ids_rejected() {
+        let m = metric();
+        let mut h = Hnsw::new(HnswParams::default());
+        let items = vec![vec![0.0f32], vec![1.0f32]];
+        let mut log = DistLog::new();
+        h.add(&items, &m, 1, &mut log); // skips id 0
+    }
+}

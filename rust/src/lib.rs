@@ -1,0 +1,49 @@
+//! # FISHDBC — Flexible, Incremental, Scalable, Hierarchical Density-Based Clustering
+//!
+//! A production-grade reproduction of Dell'Amico's FISHDBC (2019):
+//! approximate, incremental HDBSCAN* for **arbitrary data and distance
+//! functions**, built as a three-layer rust + JAX/Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the full algorithm and its substrates:
+//!   [`hnsw`] (neighbor discovery with distance-call interception),
+//!   [`mst`] (incremental minimum spanning forests), [`hdbscan`]
+//!   (condensed-tree extraction + the exact O(n²) baseline), [`fishdbc`]
+//!   (Algorithm 1), [`metrics`], [`datasets`], and a streaming
+//!   [`coordinator`].
+//! * **Layer 2/1 (python/, build-time only)** — JAX distance graphs with
+//!   Pallas kernels, AOT-lowered to HLO text artifacts.
+//! * **[`runtime`]** — loads those artifacts via the `xla` crate (PJRT)
+//!   so vector-distance batches can run through the compiled kernels with
+//!   Python never on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
+//! use fishdbc::distances::vector::euclidean;
+//!
+//! let metric = |a: &Vec<f32>, b: &Vec<f32>| euclidean(a, b);
+//! let mut clusterer = Fishdbc::new(metric, FishdbcParams::default());
+//! for point in vec![vec![0.0f32, 0.0], vec![0.1, 0.0], vec![9.0, 9.0]] {
+//!     clusterer.add(point);
+//! }
+//! let clustering = clusterer.cluster(2);
+//! println!("{:?}", clustering.labels);
+//! ```
+
+pub mod cli;
+pub mod coordinator;
+pub mod datasets;
+pub mod distances;
+pub mod fishdbc;
+pub mod hdbscan;
+pub mod hnsw;
+pub mod metrics;
+pub mod mst;
+pub mod persist;
+pub mod runtime;
+pub mod util;
+
+pub use distances::{Item, Metric, MetricKind};
+pub use fishdbc::{Fishdbc, FishdbcParams};
+pub use hdbscan::Clustering;

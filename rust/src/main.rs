@@ -1,0 +1,411 @@
+//! `fishdbc` — launcher for the FISHDBC framework.
+//!
+//! Subcommands:
+//!   run        cluster a generated dataset (FISHDBC and/or exact HDBSCAN*)
+//!   stream     streaming-coordinator demo with periodic re-clustering
+//!   artifacts  list the AOT modules the PJRT runtime can load
+//!   help       this text
+//!
+//! Examples:
+//!   fishdbc run --dataset blobs --n 10000 --dim 1000 --ef 20 --quality
+//!   fishdbc run --dataset usps --n 2196 --exact --quality
+//!   fishdbc stream --dataset reviews --n 5000 --chunk 250 --recluster-every 1000
+//!   fishdbc artifacts
+
+use fishdbc::cli;
+use fishdbc::coordinator::{Coordinator, CoordinatorConfig};
+use fishdbc::datasets;
+use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
+use fishdbc::hdbscan::exact::{exact_hdbscan, ExactParams};
+use fishdbc::metrics::{internal, score_external};
+use fishdbc::runtime::{default_artifacts_dir, Runtime};
+use fishdbc::{Item, MetricKind};
+
+const VALUE_KEYS: &[&str] = &[
+    "dataset", "n", "dim", "ef", "min-pts", "mcs", "alpha", "seed", "chunk",
+    "recluster-every", "metric", "silhouette-max", "input", "format", "save",
+    "load", "out", "labels-out", "efs",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::parse(&argv, VALUE_KEYS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "run" => cmd_run(&args),
+        "stream" => cmd_stream(&args),
+        "export" => cmd_export(&args),
+        "sweep" => cmd_sweep(&args),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?} (try `fishdbc help`)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "fishdbc — flexible incremental scalable hierarchical density-based clustering
+
+USAGE: fishdbc <run|stream|export|sweep|artifacts|help> [options]
+
+Common options:
+  --dataset NAME    one of {names}   (default blobs)
+  --input PATH      load data from a file instead of a generator
+  --format F        input format: csv | csv-labeled | text | docword
+  --n N             dataset size (default 2000; generators only)
+  --dim D           dimensionality / vocabulary (dataset-specific, default 64)
+  --ef EF           HNSW beam width (default 20; paper evaluates 20 and 50)
+  --min-pts K       MinPts (default 10)
+  --mcs M           minimum cluster size (default = MinPts)
+  --alpha A         candidate-buffer factor (default 5.0)
+  --seed S          RNG seed (default 42)
+  --metric M        override the dataset's distance function
+
+run options:
+  --exact           also run the exact O(n^2) HDBSCAN* baseline
+  --quality         print external metrics (AMI/AMI*/ARI/ARI*)
+  --internal        print internal metrics (silhouette, intra/inter)
+  --silhouette-max P  silhouette budget in points (default 4000 ~ 'OOM' above)
+  --save PATH       persist the FISHDBC state after building
+  --load PATH       resume from a previously saved state (then add --input/
+                    --dataset items on top, incrementally)
+  --labels-out PATH write flat labels as CSV
+
+export options (run + write the hierarchy):
+  --out PATH        output file (default stdout)
+  --format F        export format: json | dot | newick | tree (default json)
+
+sweep options:
+  --efs LIST        comma-separated ef values (default 10,20,50,100)
+
+stream options:
+  --chunk C            ingestion batch size (default 200)
+  --recluster-every R  auto re-cluster period in items (default 1000)",
+        names = datasets::DATASET_NAMES.join("|")
+    );
+}
+
+fn params_from(args: &cli::Args) -> Result<(FishdbcParams, usize), String> {
+    let min_pts = args.usize_or("min-pts", 10)?;
+    let p = FishdbcParams {
+        min_pts,
+        ef: args.usize_or("ef", 20)?,
+        alpha: args.f64_or("alpha", 5.0)?,
+        seed: args.u64_or("seed", 42)?,
+    };
+    let mcs = args.usize_or("mcs", min_pts)?;
+    Ok((p, mcs))
+}
+
+fn load_dataset(args: &cli::Args) -> Result<datasets::Dataset, String> {
+    let ds = if let Some(path) = args.get("input") {
+        let format = args.get_or("format", "csv");
+        match format {
+            "csv" => datasets::loaders::load_csv_vectors(path, false),
+            "csv-labeled" => datasets::loaders::load_csv_vectors(path, true),
+            "text" => datasets::loaders::load_text_lines(path),
+            "docword" => datasets::loaders::load_uci_docword(path),
+            other => return Err(format!("unknown input format {other:?}")),
+        }
+        .map_err(|e| format!("loading {path}: {e}"))?
+    } else {
+        let name = args.get_or("dataset", "blobs");
+        let n = args.usize_or("n", 2000)?;
+        let dim = args.usize_or("dim", 64)?;
+        let seed = args.u64_or("seed", 42)?;
+        datasets::generate(name, n, dim, seed)
+            .ok_or_else(|| format!("unknown dataset {name:?}"))?
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+fn metric_override(
+    args: &cli::Args,
+    ds: &datasets::Dataset,
+) -> Result<MetricKind, String> {
+    match args.get("metric") {
+        None => Ok(ds.metric),
+        Some(m) => {
+            MetricKind::parse(m).ok_or_else(|| format!("unknown metric {m:?}"))
+        }
+    }
+}
+
+fn cmd_run(args: &cli::Args) -> Result<(), String> {
+    let ds = load_dataset(args)?;
+    let (params, mcs) = params_from(args)?;
+    let metric = metric_override(args, &ds)?;
+    println!(
+        "dataset {} ({} items), metric {}, ef={} MinPts={} mcs={mcs}",
+        ds.name,
+        ds.n(),
+        metric.name(),
+        params.ef,
+        params.min_pts
+    );
+
+    // FISHDBC build + cluster, timed separately (paper's two columns).
+    // `--load` resumes a saved state and adds this dataset on top.
+    let t0 = std::time::Instant::now();
+    let mut f: Fishdbc<Item, MetricKind> = match args.get("load") {
+        Some(path) => {
+            let f = Fishdbc::load_from_path(path)
+                .map_err(|e| format!("loading state {path}: {e}"))?;
+            println!("resumed state: {} items already indexed", f.len());
+            f
+        }
+        None => Fishdbc::new(metric, params),
+    };
+    for it in ds.items.iter().cloned() {
+        f.add(it);
+    }
+    let build = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let clustering = f.cluster(mcs);
+    let cluster_t = t1.elapsed().as_secs_f64();
+    println!(
+        "FISHDBC: build {build:.3}s cluster {cluster_t:.3}s | {} dist calls | \
+         {} flat clusters, {} clustered, {} hierarchical clusters",
+        f.dist_calls(),
+        clustering.n_clusters,
+        clustering.n_clustered(),
+        clustering.n_hierarchical_clusters(),
+    );
+
+    report_quality(args, &ds, metric, "FISHDBC", &clustering)?;
+
+    if let Some(path) = args.get("save") {
+        f.save_to_path(path).map_err(|e| format!("saving {path}: {e}"))?;
+        println!("state saved to {path} ({} items)", f.len());
+    }
+    if let Some(path) = args.get("labels-out") {
+        let file =
+            std::fs::File::create(path).map_err(|e| format!("{path}: {e}"))?;
+        datasets::loaders::write_labels_csv(file, &clustering.labels)
+            .map_err(|e| format!("{path}: {e}"))?;
+        println!("labels written to {path}");
+    }
+
+    if args.flag("exact") {
+        let t0 = std::time::Instant::now();
+        let r = exact_hdbscan(
+            &ds.items,
+            &metric,
+            ExactParams { min_pts: params.min_pts, mcs, matrix_budget: None },
+        )
+        .map_err(|e| e.to_string())?;
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "HDBSCAN* (exact): {total:.3}s | {} dist calls | {} flat clusters, {} clustered",
+            r.dist_calls,
+            r.clustering.n_clusters,
+            r.clustering.n_clustered(),
+        );
+        report_quality(args, &ds, metric, "HDBSCAN*", &r.clustering)?;
+    }
+    Ok(())
+}
+
+fn report_quality(
+    args: &cli::Args,
+    ds: &datasets::Dataset,
+    metric: MetricKind,
+    who: &str,
+    clustering: &fishdbc::Clustering,
+) -> Result<(), String> {
+    if args.flag("quality") {
+        for (label_name, truth) in &ds.label_sets {
+            let s = score_external(&clustering.labels, truth);
+            println!(
+                "  {who} vs {label_name:<9} AMI {:.3}  AMI* {:.3}  ARI {:.3}  ARI* {:.3}",
+                s.ami, s.ami_star, s.ari, s.ari_star
+            );
+        }
+    }
+    if args.flag("internal") {
+        let max_pts = args.usize_or("silhouette-max", 4000)?;
+        let scores = internal::score_internal(
+            &ds.items,
+            &clustering.labels,
+            &metric,
+            max_pts,
+            args.u64_or("seed", 42)?,
+        );
+        match scores.silhouette {
+            Some(s) => println!(
+                "  {who} silhouette {s:.3}  intra {:.3}  inter {:.3}",
+                scores.intra, scores.inter
+            ),
+            None => println!(
+                "  {who} silhouette OOM  intra {:.3}  inter {:.3}",
+                scores.intra, scores.inter
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &cli::Args) -> Result<(), String> {
+    let ds = load_dataset(args)?;
+    let (params, mcs) = params_from(args)?;
+    let metric = metric_override(args, &ds)?;
+    let chunk = args.usize_or("chunk", 200)?;
+    let every = args.usize_or("recluster-every", 1000)?;
+
+    println!(
+        "streaming {} ({} items) in chunks of {chunk}, re-cluster every {every}",
+        ds.name,
+        ds.n()
+    );
+    let c = Coordinator::spawn(metric, CoordinatorConfig {
+        fishdbc: params,
+        mcs,
+        recluster_every: every,
+        queue_depth: 8,
+    });
+    let t0 = std::time::Instant::now();
+    for chunk_items in ds.items.chunks(chunk) {
+        c.add_batch(chunk_items.to_vec());
+        if let Some(snap) = c.latest() {
+            println!(
+                "  t={:7.2}s n={:6} clusters={:4} clustered={:6} extract={:.4}s",
+                t0.elapsed().as_secs_f64(),
+                snap.n_items,
+                snap.clustering.n_clusters,
+                snap.clustering.n_clustered(),
+                snap.extract_secs
+            );
+        }
+    }
+    let snap = c.cluster(mcs);
+    let stats = c.stats();
+    println!(
+        "final: n={} clusters={} clustered={} | build {:.2}s over {} batches, \
+         {} reclusters, {} dist calls",
+        snap.n_items,
+        snap.clustering.n_clusters,
+        snap.clustering.n_clustered(),
+        stats.build_secs,
+        stats.batches,
+        stats.reclusters,
+        stats.fishdbc.dist_calls
+    );
+    c.shutdown();
+    Ok(())
+}
+
+/// `fishdbc export`: cluster, then write the hierarchy in the requested
+/// format (json | dot | newick | tree).
+fn cmd_export(args: &cli::Args) -> Result<(), String> {
+    use fishdbc::hdbscan::{export, Dendrogram};
+
+    let ds = load_dataset(args)?;
+    let (params, mcs) = params_from(args)?;
+    let metric = metric_override(args, &ds)?;
+    let mut f: Fishdbc<Item, MetricKind> = Fishdbc::new(metric, params);
+    for it in ds.items.iter().cloned() {
+        f.add(it);
+    }
+    let clustering = f.cluster(mcs);
+
+    let format = args.get_or("format", "json");
+    let body = match format {
+        "json" => export::clustering_to_json(&clustering, &ds.name),
+        "dot" => export::condensed_to_dot(&clustering),
+        "newick" => {
+            f.update_mst();
+            let d = Dendrogram::from_msf(f.msf().edges(), f.len());
+            export::dendrogram_to_newick(&d)
+        }
+        "tree" => export::report_to_text(&export::cluster_report(&clustering)),
+        other => return Err(format!("unknown export format {other:?}")),
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &body).map_err(|e| format!("{path}: {e}"))?;
+            eprintln!(
+                "wrote {format} export ({} bytes, {} clusters) to {path}",
+                body.len(),
+                clustering.n_clusters
+            );
+        }
+        None => print!("{body}"),
+    }
+    Ok(())
+}
+
+/// `fishdbc sweep`: the paper's ef trade-off (§4.1) on any dataset.
+fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
+    let ds = load_dataset(args)?;
+    let (base, mcs) = params_from(args)?;
+    let metric = metric_override(args, &ds)?;
+    let efs: Vec<usize> = args
+        .get_or("efs", "10,20,50,100")
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| format!("bad ef {s:?}")))
+        .collect::<Result<_, _>>()?;
+
+    println!(
+        "ef sweep on {} ({} items, metric {}):",
+        ds.name,
+        ds.n(),
+        metric.name()
+    );
+    println!(
+        "{:<6} {:>10} {:>12} {:>10} {:>10} {:>8}",
+        "ef", "build(s)", "dist calls", "clusters", "clustered", "AMI*"
+    );
+    for ef in efs {
+        let params = FishdbcParams { ef, ..base };
+        let t0 = std::time::Instant::now();
+        let mut f: Fishdbc<Item, MetricKind> = Fishdbc::new(metric, params);
+        for it in ds.items.iter().cloned() {
+            f.add(it);
+        }
+        let c = f.cluster(mcs);
+        let build = t0.elapsed().as_secs_f64();
+        let ami_star = ds
+            .primary_labels()
+            .map(|truth| format!("{:.3}", score_external(&c.labels, truth).ami_star))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<6} {:>10.2} {:>12} {:>10} {:>10} {:>8}",
+            ef,
+            build,
+            f.dist_calls(),
+            c.n_clusters,
+            c.n_clustered(),
+            ami_star
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    let dir = default_artifacts_dir();
+    let rt = Runtime::load(&dir).map_err(|e| format!("{e:#}"))?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts dir: {}", rt.artifacts_dir().display());
+    for name in rt.module_names() {
+        let m = rt.meta(name).unwrap();
+        println!(
+            "  {name:<40} op={:<10} metric={:<10} B={:<4} D={:<5} k={:?} outs={}",
+            m.op, m.metric, m.b, m.d, m.k, m.outputs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,371 @@
+//! External clustering metrics: Adjusted Rand Index (Hubert & Arabie) and
+//! Adjusted Mutual Information (Vinh et al.; Romano et al. \[35\] recommend
+//! AMI for unbalanced datasets, which is why the paper always reports it).
+
+/// The four scores reported across the paper's quality tables.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExternalScores {
+    pub ami: f64,
+    pub ami_star: f64,
+    pub ari: f64,
+    pub ari_star: f64,
+}
+
+/// Dense contingency table between two labelings.
+struct Contingency {
+    table: Vec<Vec<u64>>, // [pred][truth]
+    a: Vec<u64>,          // pred marginals
+    b: Vec<u64>,          // truth marginals
+    n: u64,
+}
+
+fn contingency(pred: &[usize], truth: &[usize]) -> Contingency {
+    assert_eq!(pred.len(), truth.len());
+    let relabel = |xs: &[usize]| -> (Vec<usize>, usize) {
+        let mut map = std::collections::HashMap::new();
+        let mut out = Vec::with_capacity(xs.len());
+        for &x in xs {
+            let next = map.len();
+            out.push(*map.entry(x).or_insert(next));
+        }
+        (out, map.len())
+    };
+    let (p, kp) = relabel(pred);
+    let (t, kt) = relabel(truth);
+    let mut table = vec![vec![0u64; kt]; kp];
+    for (&i, &j) in p.iter().zip(&t) {
+        table[i][j] += 1;
+    }
+    let a: Vec<u64> = table.iter().map(|r| r.iter().sum()).collect();
+    let mut b = vec![0u64; kt];
+    for r in &table {
+        for (j, &v) in r.iter().enumerate() {
+            b[j] += v;
+        }
+    }
+    Contingency { table, a, b, n: pred.len() as u64 }
+}
+
+fn comb2(x: u64) -> f64 {
+    (x as f64) * (x as f64 - 1.0) / 2.0
+}
+
+/// Adjusted Rand Index ∈ [-1, 1]; 0 ≈ random, 1 = identical partitions.
+pub fn adjusted_rand_index(pred: &[usize], truth: &[usize]) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let c = contingency(pred, truth);
+    let sum_ij: f64 = c.table.iter().flatten().map(|&v| comb2(v)).sum();
+    let sum_a: f64 = c.a.iter().map(|&v| comb2(v)).sum();
+    let sum_b: f64 = c.b.iter().map(|&v| comb2(v)).sum();
+    let total = comb2(c.n);
+    if total == 0.0 {
+        return 0.0;
+    }
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        // both partitions trivial (all-one-cluster or all-singletons)
+        return if (sum_ij - expected).abs() < 1e-12 { 1.0 } else { 0.0 };
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+fn entropy(marginals: &[u64], n: u64) -> f64 {
+    let n = n as f64;
+    marginals
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+fn mutual_info(c: &Contingency) -> f64 {
+    let n = c.n as f64;
+    let mut mi = 0.0;
+    for (i, row) in c.table.iter().enumerate() {
+        for (j, &nij) in row.iter().enumerate() {
+            if nij == 0 {
+                continue;
+            }
+            let nij = nij as f64;
+            mi += (nij / n) * ((nij * n) / (c.a[i] as f64 * c.b[j] as f64)).ln();
+        }
+    }
+    mi.max(0.0)
+}
+
+/// Expected mutual information under the hypergeometric null model
+/// (Vinh, Epps & Bailey 2010). O(Ka · Kb · n̄) — fine at our scales.
+fn expected_mutual_info(c: &Contingency) -> f64 {
+    let n = c.n;
+    let nf = n as f64;
+    // log-factorials up to n
+    let mut lf = vec![0.0f64; (n + 1) as usize];
+    for i in 1..=n as usize {
+        lf[i] = lf[i - 1] + (i as f64).ln();
+    }
+    let mut emi = 0.0f64;
+    for &ai in &c.a {
+        for &bj in &c.b {
+            let lo = (ai + bj).saturating_sub(n).max(1);
+            let hi = ai.min(bj);
+            let mut nij = lo;
+            while nij <= hi {
+                let x = nij as f64;
+                let term1 = (x / nf) * ((nf * x) / (ai as f64 * bj as f64)).ln();
+                // hypergeometric pmf via log-factorials
+                let logp = lf[ai as usize] + lf[bj as usize]
+                    + lf[(n - ai) as usize]
+                    + lf[(n - bj) as usize]
+                    - lf[n as usize]
+                    - lf[nij as usize]
+                    - lf[(ai - nij) as usize]
+                    - lf[(bj - nij) as usize]
+                    - lf[(n + nij - ai - bj) as usize]; // nij >= ai+bj-n
+                emi += term1 * logp.exp();
+                nij += 1;
+            }
+        }
+    }
+    emi
+}
+
+/// Adjusted Mutual Information ∈ [~0, 1] (max normalization, as sklearn).
+pub fn adjusted_mutual_info(pred: &[usize], truth: &[usize]) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let c = contingency(pred, truth);
+    let hu = entropy(&c.a, c.n);
+    let hv = entropy(&c.b, c.n);
+    if hu == 0.0 && hv == 0.0 {
+        return 1.0; // both trivial and identical
+    }
+    let mi = mutual_info(&c);
+    let emi = expected_mutual_info(&c);
+    let denom = hu.max(hv) - emi;
+    if denom.abs() < 1e-12 {
+        return 0.0;
+    }
+    ((mi - emi) / denom).clamp(-1.0, 1.0)
+}
+
+/// Homogeneity, completeness and V-measure (Rosenberg & Hirschberg 2007):
+/// complementary views the paper's AMI/ARI tables do not expose — useful
+/// when diagnosing *why* a clustering scores low (mixed clusters vs split
+/// classes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VMeasure {
+    /// 1 iff every cluster contains members of a single class.
+    pub homogeneity: f64,
+    /// 1 iff every class is contained in a single cluster.
+    pub completeness: f64,
+    /// Harmonic mean of the two.
+    pub v_measure: f64,
+}
+
+/// Compute homogeneity / completeness / V-measure.
+pub fn v_measure(pred: &[usize], truth: &[usize]) -> VMeasure {
+    if pred.is_empty() {
+        return VMeasure::default();
+    }
+    let c = contingency(pred, truth);
+    let h_truth = entropy(&c.b, c.n);
+    let h_pred = entropy(&c.a, c.n);
+    // conditional entropies H(truth|pred) and H(pred|truth)
+    let n = c.n as f64;
+    let mut h_t_given_p = 0.0;
+    let mut h_p_given_t = 0.0;
+    for (i, row) in c.table.iter().enumerate() {
+        for (j, &nij) in row.iter().enumerate() {
+            if nij == 0 {
+                continue;
+            }
+            let nij = nij as f64;
+            h_t_given_p -= (nij / n) * (nij / c.a[i] as f64).ln();
+            h_p_given_t -= (nij / n) * (nij / c.b[j] as f64).ln();
+        }
+    }
+    let homogeneity = if h_truth == 0.0 { 1.0 } else { 1.0 - h_t_given_p / h_truth };
+    let completeness = if h_pred == 0.0 { 1.0 } else { 1.0 - h_p_given_t / h_pred };
+    let v = if homogeneity + completeness == 0.0 {
+        0.0
+    } else {
+        2.0 * homogeneity * completeness / (homogeneity + completeness)
+    };
+    VMeasure { homogeneity, completeness, v_measure: v }
+}
+
+/// Fowlkes–Mallows index: geometric mean of pairwise precision and recall.
+pub fn fowlkes_mallows(pred: &[usize], truth: &[usize]) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let c = contingency(pred, truth);
+    let tp: f64 = c.table.iter().flatten().map(|&v| comb2(v)).sum();
+    let p_pairs: f64 = c.a.iter().map(|&v| comb2(v)).sum();
+    let t_pairs: f64 = c.b.iter().map(|&v| comb2(v)).sum();
+    if p_pairs == 0.0 || t_pairs == 0.0 {
+        return 0.0;
+    }
+    tp / (p_pairs * t_pairs).sqrt()
+}
+
+/// Purity: fraction of points whose cluster's majority class matches their
+/// own. Biased toward many small clusters — report alongside AMI, never
+/// instead of it.
+pub fn purity(pred: &[usize], truth: &[usize]) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let c = contingency(pred, truth);
+    let good: u64 = c.table.iter().map(|row| row.iter().copied().max().unwrap_or(0)).sum();
+    good as f64 / c.n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn ari_perfect_and_permuted() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![2, 2, 0, 0, 1, 1]; // same partition, renamed
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((adjusted_mutual_info(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ari_known_value() {
+        // sklearn doc example: ARI([0,0,1,1],[0,0,1,2]) = 0.5714...
+        let a = vec![0, 0, 1, 1];
+        let b = vec![0, 0, 1, 2];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!((ari - 0.5714285714).abs() < 1e-6, "got {ari}");
+    }
+
+    #[test]
+    fn ami_known_value() {
+        // sklearn: AMI([0,0,1,1],[0,0,1,2]) ≈ 0.5563 (max normalization...)
+        let a = vec![0, 0, 1, 1];
+        let b = vec![0, 0, 1, 2];
+        let ami = adjusted_mutual_info(&a, &b);
+        assert!((0.4..0.75).contains(&ami), "got {ami}");
+    }
+
+    #[test]
+    fn random_labelings_score_near_zero() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(31);
+        let n = 600;
+        let a: Vec<usize> = (0..n).map(|_| rng.below(5)).collect();
+        let b: Vec<usize> = (0..n).map(|_| rng.below(5)).collect();
+        assert!(adjusted_rand_index(&a, &b).abs() < 0.05);
+        assert!(adjusted_mutual_info(&a, &b).abs() < 0.05);
+    }
+
+    #[test]
+    fn prop_metric_invariances() {
+        check("external-metric-invariances", 20, |rng, _| {
+            let n = 10 + rng.below(120);
+            let ka = 1 + rng.below(6);
+            let kb = 1 + rng.below(6);
+            let a: Vec<usize> = (0..n).map(|_| rng.below(ka)).collect();
+            let b: Vec<usize> = (0..n).map(|_| rng.below(kb)).collect();
+            // symmetry
+            let ari_ab = adjusted_rand_index(&a, &b);
+            let ari_ba = adjusted_rand_index(&b, &a);
+            assert!((ari_ab - ari_ba).abs() < 1e-9);
+            let ami_ab = adjusted_mutual_info(&a, &b);
+            let ami_ba = adjusted_mutual_info(&b, &a);
+            assert!((ami_ab - ami_ba).abs() < 1e-9);
+            // bounds
+            assert!(ari_ab <= 1.0 + 1e-9 && ari_ab >= -1.0 - 1e-9);
+            assert!(ami_ab <= 1.0 + 1e-9);
+            // label-permutation invariance
+            let perm: Vec<usize> = a.iter().map(|&x| (x * 7 + 3) % 97).collect();
+            assert!((adjusted_rand_index(&perm, &b) - ari_ab).abs() < 1e-9);
+            assert!((adjusted_mutual_info(&perm, &b) - ami_ab).abs() < 1e-9);
+            // self-comparison = 1 (unless single cluster against itself,
+            // which is also 1 by convention)
+            assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn v_measure_known_behaviour() {
+        // perfect clustering
+        let a = vec![0, 0, 1, 1];
+        let v = v_measure(&a, &a);
+        assert!((v.v_measure - 1.0).abs() < 1e-12);
+
+        // homogeneous but incomplete: classes split across clusters
+        let pred = vec![0, 1, 2, 3];
+        let truth = vec![0, 0, 1, 1];
+        let v = v_measure(&pred, &truth);
+        assert!((v.homogeneity - 1.0).abs() < 1e-12, "{v:?}");
+        // H(pred|truth) = ln2, H(pred) = 2ln2 ⇒ completeness = 0.5 exactly
+        assert!((v.completeness - 0.5).abs() < 1e-12, "{v:?}");
+
+        // complete but inhomogeneous: one big mixed cluster
+        let pred = vec![0, 0, 0, 0];
+        let v = v_measure(&pred, &truth);
+        assert!((v.completeness - 1.0).abs() < 1e-12, "{v:?}");
+        assert!(v.homogeneity < 1e-12, "{v:?}");
+    }
+
+    #[test]
+    fn fowlkes_mallows_and_purity_behave() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((fowlkes_mallows(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((purity(&a, &a) - 1.0).abs() < 1e-12);
+
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        let mixed = vec![0, 0, 1, 1, 2, 2];
+        let fm = fowlkes_mallows(&mixed, &truth);
+        assert!((0.0..1.0).contains(&fm), "{fm}");
+        // purity of the mixed middle cluster: 5/6
+        assert!((purity(&mixed, &truth) - 5.0 / 6.0).abs() < 1e-12);
+        // purity rewards over-fragmentation (why we also report AMI):
+        let singletons: Vec<usize> = (0..6).collect();
+        assert!((purity(&singletons, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_extra_metrics_bounds_and_symmetry() {
+        check("extra-metrics", 15, |rng, _| {
+            let n = 8 + rng.below(80);
+            let a: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+            let b: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+            let v = v_measure(&a, &b);
+            for x in [v.homogeneity, v.completeness, v.v_measure] {
+                assert!((-1e-9..=1.0 + 1e-9).contains(&x), "{v:?}");
+            }
+            // v-measure is symmetric in (h, c) swap under argument swap
+            let w = v_measure(&b, &a);
+            assert!((v.homogeneity - w.completeness).abs() < 1e-9);
+            assert!((v.v_measure - w.v_measure).abs() < 1e-9);
+            let fm = fowlkes_mallows(&a, &b);
+            assert!((-1e-9..=1.0 + 1e-9).contains(&fm));
+            assert!((fm - fowlkes_mallows(&b, &a)).abs() < 1e-9);
+            assert!((0.0..=1.0).contains(&purity(&a, &b)));
+        });
+    }
+
+    #[test]
+    fn trivial_partitions() {
+        let ones = vec![0usize; 8];
+        let singl: Vec<usize> = (0..8).collect();
+        // all-in-one vs all-singletons: no agreement beyond chance
+        assert!(adjusted_rand_index(&ones, &singl).abs() < 1e-9);
+        // identical trivial partitions
+        assert!((adjusted_rand_index(&ones, &ones) - 1.0).abs() < 1e-9);
+        assert!((adjusted_mutual_info(&ones, &ones) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,214 @@
+//! Internal clustering metrics (paper §4.1, Table 7): silhouette (full
+//! O(n²), with a budget cap reproducing the paper's OOM markers) and
+//! sampled intra-/inter-cluster average distances (sample size 10 000,
+//! pair-uniform across clusters, exactly as the paper describes).
+
+use crate::distances::Metric;
+use crate::util::rng::Rng;
+
+/// Internal metric bundle (Table 7's last three columns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InternalScores {
+    /// Mean silhouette over clustered points; None = exceeded budget (the
+    /// paper reports OOM for silhouette on its larger datasets).
+    pub silhouette: Option<f64>,
+    /// Average distance of sampled same-cluster pairs (lower is better).
+    pub intra: f64,
+    /// Average distance of sampled cross-cluster pairs (higher is better).
+    pub inter: f64,
+}
+
+/// Full silhouette over clustered points (noise excluded). Returns None if
+/// the number of clustered points exceeds `max_points` — mirroring the
+/// paper's out-of-memory behaviour on big datasets.
+pub fn silhouette<T, M: Metric<T>>(
+    items: &[T],
+    labels: &[i32],
+    metric: &M,
+    max_points: usize,
+) -> Option<f64> {
+    let idx: Vec<usize> =
+        (0..items.len()).filter(|&i| labels[i] >= 0).collect();
+    if idx.len() < 2 {
+        return None;
+    }
+    if idx.len() > max_points {
+        return None; // "OOM"
+    }
+    let k = labels.iter().filter(|&&l| l >= 0).map(|&l| l as usize).max()? + 1;
+    if k < 2 {
+        return None;
+    }
+    let mut sizes = vec![0usize; k];
+    for &i in &idx {
+        sizes[labels[i] as usize] += 1;
+    }
+
+    let mut total = 0.0f64;
+    let mut counted = 0usize;
+    // per-point mean distance to each cluster
+    for (pi, &i) in idx.iter().enumerate() {
+        let li = labels[i] as usize;
+        if sizes[li] < 2 {
+            continue; // silhouette undefined for singleton clusters
+        }
+        let mut sums = vec![0.0f64; k];
+        for (pj, &j) in idx.iter().enumerate() {
+            if pi == pj {
+                continue;
+            }
+            sums[labels[j] as usize] += metric.dist(&items[i], &items[j]);
+        }
+        let a = sums[li] / (sizes[li] - 1) as f64;
+        let b = (0..k)
+            .filter(|&c| c != li && sizes[c] > 0)
+            .map(|c| sums[c] / sizes[c] as f64)
+            .fold(f64::INFINITY, f64::min);
+        if !b.is_finite() {
+            continue;
+        }
+        total += (b - a) / a.max(b);
+        counted += 1;
+    }
+    if counted == 0 {
+        None
+    } else {
+        Some(total / counted as f64)
+    }
+}
+
+/// Sampled intra-/inter-cluster distances (paper: sample size 10 000,
+/// "normalizing the probability of choosing each cluster to ensure that
+/// each pair has the same probability of being selected" — i.e. pairs are
+/// uniform over valid pairs, which simple uniform member sampling with
+/// rejection achieves).
+pub fn sampled_intra_inter<T, M: Metric<T>>(
+    items: &[T],
+    labels: &[i32],
+    metric: &M,
+    samples: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let clustered: Vec<usize> =
+        (0..items.len()).filter(|&i| labels[i] >= 0).collect();
+    if clustered.len() < 2 {
+        return (0.0, 0.0);
+    }
+    let mut intra_sum = 0.0;
+    let mut intra_n = 0usize;
+    let mut inter_sum = 0.0;
+    let mut inter_n = 0usize;
+    let max_tries = samples * 40;
+    let mut tries = 0;
+    while (intra_n < samples || inter_n < samples) && tries < max_tries {
+        tries += 1;
+        let i = clustered[rng.below(clustered.len())];
+        let j = clustered[rng.below(clustered.len())];
+        if i == j {
+            continue;
+        }
+        if labels[i] == labels[j] {
+            if intra_n < samples {
+                intra_sum += metric.dist(&items[i], &items[j]);
+                intra_n += 1;
+            }
+        } else if inter_n < samples {
+            inter_sum += metric.dist(&items[i], &items[j]);
+            inter_n += 1;
+        }
+    }
+    (
+        if intra_n > 0 { intra_sum / intra_n as f64 } else { 0.0 },
+        if inter_n > 0 { inter_sum / inter_n as f64 } else { 0.0 },
+    )
+}
+
+/// Compute the full internal bundle.
+pub fn score_internal<T, M: Metric<T>>(
+    items: &[T],
+    labels: &[i32],
+    metric: &M,
+    silhouette_max_points: usize,
+    seed: u64,
+) -> InternalScores {
+    let (intra, inter) =
+        sampled_intra_inter(items, labels, metric, 10_000, seed);
+    InternalScores {
+        silhouette: silhouette(items, labels, metric, silhouette_max_points),
+        intra,
+        inter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::vector::euclidean;
+
+    fn metric() -> impl Metric<Vec<f32>> {
+        |a: &Vec<f32>, b: &Vec<f32>| euclidean(a, b)
+    }
+
+    fn two_blobs() -> (Vec<Vec<f32>>, Vec<i32>) {
+        let mut items = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..20 {
+            items.push(vec![(i % 5) as f32 * 0.1, (i / 5) as f32 * 0.1]);
+            labels.push(0);
+        }
+        for i in 0..20 {
+            items.push(vec![100.0 + (i % 5) as f32 * 0.1, (i / 5) as f32 * 0.1]);
+            labels.push(1);
+        }
+        (items, labels)
+    }
+
+    #[test]
+    fn silhouette_high_for_separated_blobs() {
+        let (items, labels) = two_blobs();
+        let s = silhouette(&items, &labels, &metric(), 10_000).unwrap();
+        assert!(s > 0.95, "silhouette {s}");
+    }
+
+    #[test]
+    fn silhouette_near_zero_for_random_split() {
+        let (items, _) = two_blobs();
+        // label by parity: clusters interleave both blobs
+        let labels: Vec<i32> = (0..items.len()).map(|i| (i % 2) as i32).collect();
+        let s = silhouette(&items, &labels, &metric(), 10_000).unwrap();
+        assert!(s < 0.3, "silhouette {s}");
+    }
+
+    #[test]
+    fn silhouette_oom_budget() {
+        let (items, labels) = two_blobs();
+        assert!(silhouette(&items, &labels, &metric(), 10).is_none());
+    }
+
+    #[test]
+    fn silhouette_ignores_noise_and_degenerates() {
+        let (items, mut labels) = two_blobs();
+        for l in labels.iter_mut().skip(20) {
+            *l = -1; // second blob all noise => one cluster left
+        }
+        assert!(silhouette(&items, &labels, &metric(), 10_000).is_none());
+    }
+
+    #[test]
+    fn intra_lower_than_inter_for_separated() {
+        let (items, labels) = two_blobs();
+        let (intra, inter) =
+            sampled_intra_inter(&items, &labels, &metric(), 2_000, 1);
+        assert!(intra < 1.0, "intra {intra}");
+        assert!(inter > 90.0, "inter {inter}");
+    }
+
+    #[test]
+    fn sampling_deterministic_by_seed() {
+        let (items, labels) = two_blobs();
+        let a = sampled_intra_inter(&items, &labels, &metric(), 500, 9);
+        let b = sampled_intra_inter(&items, &labels, &metric(), 500, 9);
+        assert_eq!(a, b);
+    }
+}

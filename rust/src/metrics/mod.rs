@@ -1,0 +1,108 @@
+//! Clustering quality metrics (paper §4.1): external (AMI, ARI and the
+//! noise-penalizing AMI*/ARI* variants) and internal (silhouette, sampled
+//! intra-/inter-cluster distance).
+
+pub mod external;
+pub mod internal;
+
+pub use external::{
+    adjusted_mutual_info, adjusted_rand_index, fowlkes_mallows, purity,
+    v_measure, ExternalScores, VMeasure,
+};
+pub use internal::{silhouette, sampled_intra_inter, InternalScores};
+
+/// The paper's treatment of noise for external metrics (§4.1):
+/// * AMI/ARI — evaluate **only clustered elements** (noise dropped);
+/// * AMI*/ARI* — **all noise items form one extra cluster**.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NoiseMode {
+    /// Drop noise points from the comparison (AMI / ARI).
+    DropNoise,
+    /// Treat all noise as a single additional cluster (AMI* / ARI*).
+    NoiseAsCluster,
+}
+
+/// Prepare (prediction, truth) pairs under a noise mode. `labels` uses -1
+/// for noise; truth labels are arbitrary usize classes.
+pub fn align_labels(
+    labels: &[i32],
+    truth: &[usize],
+    mode: NoiseMode,
+) -> (Vec<usize>, Vec<usize>) {
+    assert_eq!(labels.len(), truth.len());
+    let mut pred = Vec::with_capacity(labels.len());
+    let mut gt = Vec::with_capacity(labels.len());
+    let noise_label = labels.iter().map(|&l| l.max(0) as usize).max().unwrap_or(0) + 1;
+    for (&l, &t) in labels.iter().zip(truth) {
+        match (l, mode) {
+            (l, _) if l >= 0 => {
+                pred.push(l as usize);
+                gt.push(t);
+            }
+            (_, NoiseMode::DropNoise) => {}
+            (_, NoiseMode::NoiseAsCluster) => {
+                pred.push(noise_label);
+                gt.push(t);
+            }
+        }
+    }
+    (pred, gt)
+}
+
+/// Convenience: compute AMI, AMI*, ARI, ARI* in one call (the four columns
+/// the paper reports in Tables 2, 4, 5, 6).
+pub fn score_external(labels: &[i32], truth: &[usize]) -> ExternalScores {
+    let (p, g) = align_labels(labels, truth, NoiseMode::DropNoise);
+    let (ps, gs) = align_labels(labels, truth, NoiseMode::NoiseAsCluster);
+    ExternalScores {
+        ami: adjusted_mutual_info(&p, &g),
+        ami_star: adjusted_mutual_info(&ps, &gs),
+        ari: adjusted_rand_index(&p, &g),
+        ari_star: adjusted_rand_index(&ps, &gs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_drop_noise() {
+        let labels = vec![0, -1, 1, -1];
+        let truth = vec![0, 1, 1, 0];
+        let (p, g) = align_labels(&labels, &truth, NoiseMode::DropNoise);
+        assert_eq!(p, vec![0, 1]);
+        assert_eq!(g, vec![0, 1]);
+    }
+
+    #[test]
+    fn align_noise_as_cluster() {
+        let labels = vec![0, -1, 1, -1];
+        let truth = vec![0, 1, 1, 0];
+        let (p, g) = align_labels(&labels, &truth, NoiseMode::NoiseAsCluster);
+        assert_eq!(p, vec![0, 2, 1, 2]); // noise becomes cluster 2
+        assert_eq!(g, truth);
+    }
+
+    #[test]
+    fn perfect_clustering_scores_one() {
+        let labels = vec![0, 0, 1, 1, 2, 2];
+        let truth = vec![5, 5, 9, 9, 7, 7];
+        let s = score_external(&labels, &truth);
+        assert!((s.ami - 1.0).abs() < 1e-9);
+        assert!((s.ari - 1.0).abs() < 1e-9);
+        assert!((s.ami_star - 1.0).abs() < 1e-9);
+        assert!((s.ari_star - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_penalized_only_in_star_variants() {
+        // perfect on clustered points, but half the data is noise
+        let labels = vec![0, 0, 1, 1, -1, -1, -1, -1];
+        let truth = vec![0, 0, 1, 1, 0, 0, 1, 1];
+        let s = score_external(&labels, &truth);
+        assert!((s.ami - 1.0).abs() < 1e-9, "AMI should ignore noise");
+        assert!(s.ami_star < 0.8, "AMI* should penalize noise: {}", s.ami_star);
+        assert!(s.ari_star < s.ari);
+    }
+}

@@ -1,0 +1,126 @@
+//! Union-find (disjoint set union) with union by rank and path halving.
+//! Substrate for Kruskal's algorithm and the single-linkage builder.
+
+#[derive(Clone, Debug)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+    components: usize,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        UnionFind {
+            parent: (0..n as u32).collect(),
+            rank: vec![0; n],
+            components: n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Number of disjoint components.
+    pub fn components(&self) -> usize {
+        self.components
+    }
+
+    /// Find with path halving.
+    #[inline]
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        loop {
+            let p = self.parent[x as usize];
+            if p == x {
+                return x;
+            }
+            let gp = self.parent[p as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+    }
+
+    /// Union by rank; returns false if already in the same component.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        self.components -= 1;
+        let (ra, rb) = match self.rank[ra as usize].cmp(&self.rank[rb as usize]) {
+            std::cmp::Ordering::Less => (rb, ra),
+            std::cmp::Ordering::Greater => (ra, rb),
+            std::cmp::Ordering::Equal => {
+                self.rank[ra as usize] += 1;
+                (ra, rb)
+            }
+        };
+        self.parent[rb as usize] = ra;
+        true
+    }
+
+    /// Whether a and b are currently connected.
+    pub fn connected(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn basic_union_find() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.components(), 5);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(2, 3));
+        assert!(!uf.union(1, 0)); // already joined
+        assert_eq!(uf.components(), 3);
+        assert!(uf.connected(0, 1));
+        assert!(!uf.connected(0, 2));
+        assert!(uf.union(1, 3));
+        assert!(uf.connected(0, 2));
+        assert_eq!(uf.components(), 2);
+    }
+
+    #[test]
+    fn prop_union_is_idempotent_and_transitive() {
+        check("uf-invariants", 50, |rng, _| {
+            let n = 2 + rng.below(60);
+            let mut uf = UnionFind::new(n);
+            let mut naive: Vec<usize> = (0..n).collect(); // naive labels
+            for _ in 0..n * 2 {
+                let a = rng.below(n);
+                let b = rng.below(n);
+                uf.union(a as u32, b as u32);
+                // naive relabel
+                let (la, lb) = (naive[a], naive[b]);
+                if la != lb {
+                    for l in naive.iter_mut() {
+                        if *l == lb {
+                            *l = la;
+                        }
+                    }
+                }
+                // spot-check equivalence on a few pairs
+                for _ in 0..8 {
+                    let x = rng.below(n);
+                    let y = rng.below(n);
+                    assert_eq!(
+                        uf.connected(x as u32, y as u32),
+                        naive[x] == naive[y],
+                        "uf disagrees with naive on ({x},{y})"
+                    );
+                }
+            }
+            let distinct: std::collections::HashSet<_> = naive.iter().collect();
+            assert_eq!(uf.components(), distinct.len());
+        });
+    }
+}

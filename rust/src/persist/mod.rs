@@ -1,0 +1,616 @@
+//! Persistence: save and reload the complete FISHDBC state (items, HNSW,
+//! neighbor heaps, MSF, candidate buffer, RNG stream) in a small versioned
+//! binary format, so a streaming deployment survives restarts and keeps
+//! adding items **exactly** where it left off — same RNG levels, same
+//! future clusterings (verified by round-trip tests).
+//!
+//! The format is hand-rolled (the offline image has no serde): little-endian
+//! fixed-width scalars, length-prefixed sequences, a magic header and a
+//! format version byte. All reads are bounds-checked; corrupt files produce
+//! errors, never panics or unbounded allocations.
+
+use std::io::{self, Read, Write};
+
+use crate::distances::{bitmap::Bitmap, fuzzy::Digest, Item, MetricKind};
+use crate::fishdbc::{neighbors::NeighborStore, Fishdbc, FishdbcParams};
+use crate::hnsw::{Hnsw, HnswExport, HnswParams};
+use crate::mst::{Edge, Msf};
+
+const MAGIC: &[u8; 8] = b"FISHDBC\0";
+const VERSION: u8 = 1;
+/// Sanity cap on any single length prefix (guards corrupt files from
+/// triggering huge allocations).
+const MAX_LEN: u64 = 1 << 33;
+
+// ---------------------------------------------------------------- writer --
+
+/// Little-endian binary writer over any `io::Write`.
+pub struct BinWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> BinWriter<W> {
+    pub fn new(w: W) -> Self {
+        BinWriter { w }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+
+    pub fn u8(&mut self, x: u8) -> io::Result<()> {
+        self.w.write_all(&[x])
+    }
+
+    pub fn u32(&mut self, x: u32) -> io::Result<()> {
+        self.w.write_all(&x.to_le_bytes())
+    }
+
+    pub fn u64(&mut self, x: u64) -> io::Result<()> {
+        self.w.write_all(&x.to_le_bytes())
+    }
+
+    pub fn f32(&mut self, x: f32) -> io::Result<()> {
+        self.w.write_all(&x.to_le_bytes())
+    }
+
+    pub fn f64(&mut self, x: f64) -> io::Result<()> {
+        self.w.write_all(&x.to_le_bytes())
+    }
+
+    pub fn len(&mut self, n: usize) -> io::Result<()> {
+        self.u64(n as u64)
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) -> io::Result<()> {
+        self.len(b.len())?;
+        self.w.write_all(b)
+    }
+
+    pub fn str(&mut self, s: &str) -> io::Result<()> {
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn u32s(&mut self, xs: &[u32]) -> io::Result<()> {
+        self.len(xs.len())?;
+        for &x in xs {
+            self.u32(x)?;
+        }
+        Ok(())
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) -> io::Result<()> {
+        self.len(xs.len())?;
+        for &x in xs {
+            self.f32(x)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- reader --
+
+/// Little-endian binary reader with bounds checks.
+pub struct BinReader<R: Read> {
+    r: R,
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+impl<R: Read> BinReader<R> {
+    pub fn new(r: R) -> Self {
+        BinReader { r }
+    }
+
+    pub fn u8(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.r.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub fn u32(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn f32(&mut self) -> io::Result<f32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(f32::from_le_bytes(b))
+    }
+
+    pub fn f64(&mut self) -> io::Result<f64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    pub fn len(&mut self) -> io::Result<usize> {
+        let n = self.u64()?;
+        if n > MAX_LEN {
+            return Err(bad("length prefix exceeds sanity cap"));
+        }
+        Ok(n as usize)
+    }
+
+    pub fn bytes(&mut self) -> io::Result<Vec<u8>> {
+        let n = self.len()?;
+        let mut b = vec![0u8; n];
+        self.r.read_exact(&mut b)?;
+        Ok(b)
+    }
+
+    pub fn str(&mut self) -> io::Result<String> {
+        String::from_utf8(self.bytes()?).map_err(|_| bad("invalid utf-8"))
+    }
+
+    pub fn u32s(&mut self) -> io::Result<Vec<u32>> {
+        let n = self.len()?;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn f32s(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.len()?;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+}
+
+// ------------------------------------------------------------ item codec --
+
+fn write_item<W: Write>(w: &mut BinWriter<W>, item: &Item) -> io::Result<()> {
+    match item {
+        Item::Dense(v) => {
+            w.u8(0)?;
+            w.f32s(v)
+        }
+        Item::Sparse { idx, val } => {
+            w.u8(1)?;
+            w.u32s(idx)?;
+            w.f32s(val)
+        }
+        Item::Set(s) => {
+            w.u8(2)?;
+            w.u32s(s)
+        }
+        Item::Text(t) => {
+            w.u8(3)?;
+            w.str(t)
+        }
+        Item::Bits(b) => {
+            w.u8(4)?;
+            w.len(b.len())?;
+            w.len(b.words().len())?;
+            for &word in b.words() {
+                w.u64(word)?;
+            }
+            Ok(())
+        }
+        Item::Digest(d) => {
+            w.u8(5)?;
+            w.len(d.minhashes.len())?;
+            for &h in &d.minhashes {
+                w.u64(h)?;
+            }
+            w.bytes(&d.histogram)?;
+            w.len(d.features.len())?;
+            w.len(d.features.words().len())?;
+            for &word in d.features.words() {
+                w.u64(word)?;
+            }
+            Ok(())
+        }
+    }
+}
+
+fn read_item<R: Read>(r: &mut BinReader<R>) -> io::Result<Item> {
+    Ok(match r.u8()? {
+        0 => Item::Dense(r.f32s()?),
+        1 => {
+            let idx = r.u32s()?;
+            let val = r.f32s()?;
+            if idx.len() != val.len() {
+                return Err(bad("sparse idx/val length mismatch"));
+            }
+            Item::Sparse { idx, val }
+        }
+        2 => Item::Set(r.u32s()?),
+        3 => Item::Text(r.str()?),
+        4 => {
+            let bits = r.len()?;
+            let n_words = r.len()?;
+            if n_words != bits.div_ceil(64) {
+                return Err(bad("bitmap word count mismatch"));
+            }
+            let mut words = Vec::with_capacity(n_words.min(1 << 20));
+            for _ in 0..n_words {
+                words.push(r.u64()?);
+            }
+            Item::Bits(Bitmap::from_raw(bits, words))
+        }
+        5 => {
+            let n_mh = r.len()?;
+            let mut minhashes = Vec::with_capacity(n_mh.min(1 << 16));
+            for _ in 0..n_mh {
+                minhashes.push(r.u64()?);
+            }
+            let histogram = r.bytes()?;
+            let bits = r.len()?;
+            let n_words = r.len()?;
+            if n_words != bits.div_ceil(64) {
+                return Err(bad("digest bitmap word count mismatch"));
+            }
+            let mut words = Vec::with_capacity(n_words.min(1 << 20));
+            for _ in 0..n_words {
+                words.push(r.u64()?);
+            }
+            Item::Digest(Digest {
+                minhashes,
+                histogram,
+                features: Bitmap::from_raw(bits, words),
+            })
+        }
+        t => return Err(bad(&format!("unknown item tag {t}"))),
+    })
+}
+
+// --------------------------------------------------------- fishdbc codec --
+
+/// Everything needed to resurrect a `Fishdbc<Item, MetricKind>`.
+pub struct SavedState {
+    pub metric: MetricKind,
+    pub params: FishdbcParams,
+    pub items: Vec<Item>,
+    pub hnsw: HnswExport,
+    pub neighbor_sets: Vec<Vec<(u32, f64)>>,
+    pub msf_edges: Vec<Edge>,
+    pub candidates: Vec<(u32, u32, f64)>,
+    pub mst_updates: u64,
+}
+
+/// Serialize a full state snapshot.
+pub fn write_state<W: Write>(w: W, s: &SavedState) -> io::Result<()> {
+    let mut w = BinWriter::new(w);
+    w.w.write_all(MAGIC)?;
+    w.u8(VERSION)?;
+
+    w.str(s.metric.name())?;
+    w.u64(s.params.min_pts as u64)?;
+    w.u64(s.params.ef as u64)?;
+    w.f64(s.params.alpha)?;
+    w.u64(s.params.seed)?;
+
+    w.len(s.items.len())?;
+    for it in &s.items {
+        write_item(&mut w, it)?;
+    }
+
+    // hnsw
+    w.u64(s.hnsw.params.m as u64)?;
+    w.u64(s.hnsw.params.ef as u64)?;
+    w.u64(s.hnsw.params.seed)?;
+    w.len(s.hnsw.links.len())?;
+    for node in &s.hnsw.links {
+        w.len(node.len())?;
+        for level in node {
+            w.u32s(level)?;
+        }
+    }
+    match s.hnsw.entry {
+        None => w.u8(0)?,
+        Some(e) => {
+            w.u8(1)?;
+            w.u32(e)?;
+        }
+    }
+    for &x in &s.hnsw.rng_state {
+        w.u64(x)?;
+    }
+    w.u64(s.hnsw.dist_calls)?;
+
+    // neighbors
+    w.len(s.neighbor_sets.len())?;
+    for set in &s.neighbor_sets {
+        w.len(set.len())?;
+        for &(id, d) in set {
+            w.u32(id)?;
+            w.f64(d)?;
+        }
+    }
+
+    // msf + candidates
+    w.len(s.msf_edges.len())?;
+    for e in &s.msf_edges {
+        w.u32(e.a)?;
+        w.u32(e.b)?;
+        w.f64(e.w)?;
+    }
+    w.len(s.candidates.len())?;
+    for &(a, b, d) in &s.candidates {
+        w.u32(a)?;
+        w.u32(b)?;
+        w.f64(d)?;
+    }
+    w.u64(s.mst_updates)?;
+    Ok(())
+}
+
+/// Deserialize a state snapshot (strict: trailing garbage is not checked,
+/// wrong magic/version/structure is an error).
+pub fn read_state<R: Read>(r: R) -> io::Result<SavedState> {
+    let mut r = BinReader::new(r);
+    let mut magic = [0u8; 8];
+    r.r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("not a FISHDBC state file"));
+    }
+    if r.u8()? != VERSION {
+        return Err(bad("unsupported format version"));
+    }
+
+    let metric_name = r.str()?;
+    let metric = MetricKind::parse(&metric_name)
+        .ok_or_else(|| bad(&format!("unknown metric {metric_name:?}")))?;
+    let params = FishdbcParams {
+        min_pts: r.u64()? as usize,
+        ef: r.u64()? as usize,
+        alpha: r.f64()?,
+        seed: r.u64()?,
+    };
+
+    let n_items = r.len()?;
+    let mut items = Vec::with_capacity(n_items.min(1 << 20));
+    for _ in 0..n_items {
+        items.push(read_item(&mut r)?);
+    }
+
+    let hnsw_params = HnswParams {
+        m: r.u64()? as usize,
+        ef: r.u64()? as usize,
+        seed: r.u64()?,
+    };
+    let n_nodes = r.len()?;
+    if n_nodes != n_items {
+        return Err(bad("hnsw node count != item count"));
+    }
+    let mut links = Vec::with_capacity(n_nodes.min(1 << 20));
+    for _ in 0..n_nodes {
+        let levels = r.len()?;
+        let mut node = Vec::with_capacity(levels.min(64));
+        for _ in 0..levels {
+            node.push(r.u32s()?);
+        }
+        links.push(node);
+    }
+    let entry = match r.u8()? {
+        0 => None,
+        1 => Some(r.u32()?),
+        _ => return Err(bad("bad entry tag")),
+    };
+    let rng_state = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+    let dist_calls = r.u64()?;
+
+    let n_sets = r.len()?;
+    if n_sets != n_items {
+        return Err(bad("neighbor set count != item count"));
+    }
+    let mut neighbor_sets = Vec::with_capacity(n_sets.min(1 << 20));
+    for _ in 0..n_sets {
+        let k = r.len()?;
+        let mut set = Vec::with_capacity(k.min(1 << 10));
+        for _ in 0..k {
+            set.push((r.u32()?, r.f64()?));
+        }
+        neighbor_sets.push(set);
+    }
+
+    let n_edges = r.len()?;
+    if n_edges >= n_items.max(1) {
+        return Err(bad("msf has too many edges for a forest"));
+    }
+    let mut msf_edges = Vec::with_capacity(n_edges.min(1 << 20));
+    for _ in 0..n_edges {
+        msf_edges.push(Edge::new(r.u32()?, r.u32()?, r.f64()?));
+    }
+    let n_cand = r.len()?;
+    let mut candidates = Vec::with_capacity(n_cand.min(1 << 20));
+    for _ in 0..n_cand {
+        candidates.push((r.u32()?, r.u32()?, r.f64()?));
+    }
+    let mst_updates = r.u64()?;
+
+    Ok(SavedState {
+        metric,
+        params,
+        items,
+        hnsw: HnswExport { params: hnsw_params, links, entry, rng_state, dist_calls },
+        neighbor_sets,
+        msf_edges,
+        candidates,
+        mst_updates,
+    })
+}
+
+impl Fishdbc<Item, MetricKind> {
+    /// Serialize the complete state to a writer. The reloaded instance
+    /// behaves identically for all future `add`/`cluster` calls.
+    pub fn save<W: Write>(&self, w: W) -> io::Result<()> {
+        write_state(w, &SavedState {
+            metric: *self.metric(),
+            params: *self.params(),
+            items: self.items().to_vec(),
+            hnsw: self.hnsw_export(),
+            neighbor_sets: self.neighbors_export(),
+            msf_edges: self.msf().edges().to_vec(),
+            candidates: self.candidates_export(),
+            mst_updates: self.stats().mst_updates,
+        })
+    }
+
+    /// Reload a state previously written by [`Fishdbc::save`].
+    pub fn load<R: Read>(r: R) -> io::Result<Self> {
+        let s = read_state(r)?;
+        let n = s.items.len();
+        let min_pts = s.params.min_pts;
+        Ok(Fishdbc::from_parts(
+            s.metric,
+            s.params,
+            s.items,
+            Hnsw::import(s.hnsw),
+            NeighborStore::import(min_pts, s.neighbor_sets),
+            Msf::from_parts(s.msf_edges, n),
+            s.candidates,
+            s.mst_updates,
+        ))
+    }
+
+    /// Save to a file path (convenience).
+    pub fn save_to_path(&self, path: impl AsRef<std::path::Path>) -> io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        self.save(io::BufWriter::new(f))
+    }
+
+    /// Load from a file path (convenience).
+    pub fn load_from_path(path: impl AsRef<std::path::Path>) -> io::Result<Self> {
+        let f = std::fs::File::open(path)?;
+        Self::load(io::BufReader::new(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+
+    fn build(n: usize, seed: u64) -> Fishdbc<Item, MetricKind> {
+        let ds = datasets::blobs::generate(n, 8, 4, seed);
+        let mut f = Fishdbc::new(
+            MetricKind::Euclidean,
+            FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+        );
+        for it in ds.items {
+            f.add(it);
+        }
+        f
+    }
+
+    #[test]
+    fn roundtrip_preserves_clustering_and_counters() {
+        let mut f = build(300, 1);
+        let mut buf = Vec::new();
+        f.save(&mut buf).unwrap();
+        let mut g = Fishdbc::load(buf.as_slice()).unwrap();
+
+        assert_eq!(g.len(), f.len());
+        assert_eq!(g.dist_calls(), f.dist_calls());
+        let cf = f.cluster(5);
+        let cg = g.cluster(5);
+        assert_eq!(cf.labels, cg.labels);
+        assert_eq!(cf.n_clusters, cg.n_clusters);
+    }
+
+    #[test]
+    fn resumed_adds_match_uninterrupted_run() {
+        // split a stream across a save/load boundary: the result must be
+        // byte-identical to never having stopped (same RNG stream, same
+        // candidate buffer)
+        let ds = datasets::blobs::generate(400, 8, 4, 2);
+        let p = FishdbcParams { min_pts: 5, ef: 20, ..Default::default() };
+
+        let mut whole = Fishdbc::new(MetricKind::Euclidean, p);
+        for it in ds.items.iter().cloned() {
+            whole.add(it);
+        }
+        let want = whole.cluster(5);
+
+        let mut first = Fishdbc::new(MetricKind::Euclidean, p);
+        for it in ds.items[..200].iter().cloned() {
+            first.add(it);
+        }
+        let mut buf = Vec::new();
+        first.save(&mut buf).unwrap();
+        let mut resumed = Fishdbc::load(buf.as_slice()).unwrap();
+        for it in ds.items[200..].iter().cloned() {
+            resumed.add(it);
+        }
+        let got = resumed.cluster(5);
+
+        assert_eq!(got.labels, want.labels);
+        assert!((resumed.msf().total_weight() - whole.msf().total_weight()).abs() < 1e-9);
+        assert_eq!(resumed.dist_calls(), whole.dist_calls());
+    }
+
+    #[test]
+    fn every_item_variant_roundtrips() {
+        use crate::distances::{bitmap::Bitmap, fuzzy::Digest};
+        let items = vec![
+            Item::Dense(vec![1.5, -2.0, 0.0]),
+            Item::Sparse { idx: vec![3, 9, 100], val: vec![0.1, 2.0, -1.0] },
+            Item::Set(vec![1, 5, 9]),
+            Item::Text("héllo \"world\"\n".into()),
+            Item::Bits(Bitmap::from_bools(&[true, false, true, true])),
+            Item::Digest(Digest::from_bytes(b"some binary-ish content 123")),
+        ];
+        let mut buf = Vec::new();
+        let mut w = BinWriter::new(&mut buf);
+        for it in &items {
+            write_item(&mut w, it).unwrap();
+        }
+        let mut r = BinReader::new(buf.as_slice());
+        for it in &items {
+            let got = read_item(&mut r).unwrap();
+            assert_eq!(&got, it);
+        }
+    }
+
+    #[test]
+    fn corrupt_and_truncated_inputs_error_cleanly() {
+        let f = build(50, 3);
+        let mut buf = Vec::new();
+        f.save(&mut buf).unwrap();
+
+        // wrong magic
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(Fishdbc::load(bad.as_slice()).is_err());
+
+        // wrong version
+        let mut bad = buf.clone();
+        bad[8] = 99;
+        assert!(Fishdbc::load(bad.as_slice()).is_err());
+
+        // truncations at many offsets must error, never panic
+        for cut in [9, 20, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                Fishdbc::load(&buf[..cut]).is_err(),
+                "truncation at {cut} did not error"
+            );
+        }
+    }
+
+    #[test]
+    fn save_load_file_path() {
+        let f = build(80, 4);
+        let path = std::env::temp_dir().join("fishdbc_persist_test.bin");
+        f.save_to_path(&path).unwrap();
+        let g = Fishdbc::<Item, MetricKind>::load_from_path(&path).unwrap();
+        assert_eq!(g.len(), 80);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,289 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (Layer 1/2 Pallas/JAX
+//! distance kernels, lowered by `python/compile/aot.py`) and executes them
+//! from the rust hot path. Python is never involved at runtime.
+//!
+//! Wiring (see /opt/xla-example and DESIGN.md): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` (HLO **text** is the interchange
+//! format — serialized protos from jax ≥ 0.5 are rejected by xla_extension
+//! 0.5.1) → `client.compile` → `execute`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Metadata of one compiled module (a row of `artifacts/manifest.tsv`).
+#[derive(Clone, Debug)]
+pub struct ModuleMeta {
+    pub name: String,
+    pub file: String,
+    pub op: String,
+    pub metric: String,
+    pub b: usize,
+    pub d: usize,
+    /// top-k size for `query_topk` modules; None otherwise.
+    pub k: Option<usize>,
+    pub outputs: usize,
+}
+
+/// One loaded + compiled executable.
+struct LoadedModule {
+    meta: ModuleMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Result of a fused query_topk kernel invocation.
+#[derive(Clone, Debug)]
+pub struct QueryTopk {
+    /// Distance from the query to every (non-padding) candidate.
+    pub dists: Vec<f32>,
+    /// (candidate index, distance), ascending distance, padding filtered.
+    pub topk: Vec<(u32, f32)>,
+}
+
+/// The PJRT runtime: a CPU client plus an executable cache keyed by module
+/// name. Executables are compiled once at load and reused for every batch.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    modules: HashMap<String, LoadedModule>,
+    dir: PathBuf,
+    exec_count: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Load every module listed in `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest.display()
+            )
+        })?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut modules = HashMap::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 8 {
+                bail!("malformed manifest line: {line:?}");
+            }
+            let meta = ModuleMeta {
+                name: f[0].to_string(),
+                file: f[1].to_string(),
+                op: f[2].to_string(),
+                metric: f[3].to_string(),
+                b: f[4].parse()?,
+                d: f[5].parse()?,
+                k: match f[6].parse::<i64>()? {
+                    x if x < 0 => None,
+                    x => Some(x as usize),
+                },
+                outputs: f[7].parse()?,
+            };
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            modules.insert(meta.name.clone(), LoadedModule { meta, exe });
+        }
+        if modules.is_empty() {
+            bail!("no modules in {}", manifest.display());
+        }
+        Ok(Runtime { client, modules, dir, exec_count: std::cell::Cell::new(0) })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn module_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.modules.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ModuleMeta> {
+        self.modules.get(name).map(|m| &m.meta)
+    }
+
+    /// Number of PJRT executions performed (perf accounting).
+    pub fn exec_count(&self) -> u64 {
+        self.exec_count.get()
+    }
+
+    /// Find the best `query_topk` module for (metric, dim): the loaded
+    /// module with the smallest D >= dim.
+    pub fn find_query_module(&self, metric: &str, dim: usize) -> Option<&ModuleMeta> {
+        self.find_module("query_topk", metric, dim)
+    }
+
+    /// Find the best module of any op kind for (metric, dim): smallest
+    /// loaded D >= dim.
+    pub fn find_module(&self, op: &str, metric: &str, dim: usize) -> Option<&ModuleMeta> {
+        self.modules
+            .values()
+            .map(|m| &m.meta)
+            .filter(|m| m.op == op && m.metric == metric && m.d >= dim)
+            .min_by_key(|m| m.d)
+    }
+
+    fn get(&self, name: &str) -> Result<&LoadedModule> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| anyhow!("module {name:?} not loaded"))
+    }
+
+    /// Execute a `query_topk` module: distances from `q` to `cands` plus
+    /// the k nearest. Inputs are padded to the module's fixed (B, D):
+    /// `cands.len() <= B`, `q.len() <= D`. Zero-padding extra dims is
+    /// exact for every supported metric; padding *rows* are dropped from
+    /// `dists` and the top-k is re-derived in rust over real candidates
+    /// (k is tiny), so padded rows can never leak into results.
+    pub fn query_topk(&self, name: &str, q: &[f32], cands: &[&[f32]]) -> Result<QueryTopk> {
+        let module = self.get(name)?;
+        let (b, d) = (module.meta.b, module.meta.d);
+        let k = module.meta.k.ok_or_else(|| anyhow!("{name} has no k"))?;
+        if cands.is_empty() {
+            return Ok(QueryTopk { dists: vec![], topk: vec![] });
+        }
+        if cands.len() > b {
+            bail!("batch {} exceeds module B={b}", cands.len());
+        }
+        if q.len() > d {
+            bail!("dim {} exceeds module D={d}", q.len());
+        }
+
+        let mut qbuf = vec![0f32; d];
+        qbuf[..q.len()].copy_from_slice(q);
+        let mut cbuf = vec![0f32; b * d];
+        for (i, c) in cands.iter().enumerate() {
+            cbuf[i * d..i * d + c.len()].copy_from_slice(c);
+        }
+
+        let ql = xla::Literal::vec1(&qbuf);
+        let cl = xla::Literal::vec1(&cbuf).reshape(&[b as i64, d as i64])?;
+        let result = module.exe.execute::<xla::Literal>(&[ql, cl])?[0][0]
+            .to_literal_sync()?;
+        self.exec_count.set(self.exec_count.get() + 1);
+        let (dl, _vals, _idx) = result.to_tuple3()?;
+        let mut dists = dl.to_vec::<f32>()?;
+        dists.truncate(cands.len());
+
+        let kk = k.min(cands.len());
+        let mut order: Vec<u32> = (0..cands.len() as u32).collect();
+        if kk < order.len() {
+            order.select_nth_unstable_by(kk - 1, |&x, &y| {
+                dists[x as usize].total_cmp(&dists[y as usize])
+            });
+            order.truncate(kk);
+        }
+        order.sort_unstable_by(|&x, &y| {
+            dists[x as usize].total_cmp(&dists[y as usize])
+        });
+        let topk = order.into_iter().map(|i| (i, dists[i as usize])).collect();
+        Ok(QueryTopk { dists, topk })
+    }
+
+    /// Execute a `pairwise` module on row-major blocks, returning the
+    /// `x.len() × y.len()` distance block (padding trimmed).
+    pub fn pairwise(
+        &self,
+        name: &str,
+        x: &[&[f32]],
+        y: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let module = self.get(name)?;
+        let (b, d) = (module.meta.b, module.meta.d);
+        if x.len() > b || y.len() > b {
+            bail!("block ({}, {}) exceeds module B={b}", x.len(), y.len());
+        }
+        let pack = |rows: &[&[f32]]| -> Result<xla::Literal> {
+            let mut buf = vec![0f32; b * d];
+            for (i, r) in rows.iter().enumerate() {
+                if r.len() > d {
+                    bail!("dim {} exceeds module D={d}", r.len());
+                }
+                buf[i * d..i * d + r.len()].copy_from_slice(r);
+            }
+            Ok(xla::Literal::vec1(&buf).reshape(&[b as i64, d as i64])?)
+        };
+        let xl = pack(x)?;
+        let yl = pack(y)?;
+        let result = module.exe.execute::<xla::Literal>(&[xl, yl])?[0][0]
+            .to_literal_sync()?;
+        self.exec_count.set(self.exec_count.get() + 1);
+        let flat = result.to_tuple1()?.to_vec::<f32>()?;
+        let mut out = Vec::with_capacity(x.len());
+        for i in 0..x.len() {
+            out.push(flat[i * b..i * b + y.len()].to_vec());
+        }
+        Ok(out)
+    }
+
+    /// Execute an `mreach` module: fused pairwise distance + mutual
+    /// reachability (max with the rows'/columns' core distances).
+    pub fn mreach(
+        &self,
+        name: &str,
+        x: &[&[f32]],
+        y: &[&[f32]],
+        core_x: &[f32],
+        core_y: &[f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let module = self.get(name)?;
+        let (b, d) = (module.meta.b, module.meta.d);
+        if x.len() > b || y.len() > b {
+            bail!("block ({}, {}) exceeds module B={b}", x.len(), y.len());
+        }
+        let pack_rows = |rows: &[&[f32]]| -> Result<xla::Literal> {
+            let mut buf = vec![0f32; b * d];
+            for (i, r) in rows.iter().enumerate() {
+                if r.len() > d {
+                    bail!("dim {} exceeds module D={d}", r.len());
+                }
+                buf[i * d..i * d + r.len()].copy_from_slice(r);
+            }
+            Ok(xla::Literal::vec1(&buf).reshape(&[b as i64, d as i64])?)
+        };
+        let pack_core = |c: &[f32]| -> xla::Literal {
+            let mut buf = vec![0f32; b];
+            buf[..c.len()].copy_from_slice(c);
+            xla::Literal::vec1(&buf)
+        };
+        let result = module
+            .exe
+            .execute::<xla::Literal>(&[
+                pack_rows(x)?,
+                pack_rows(y)?,
+                pack_core(core_x),
+                pack_core(core_y),
+            ])?[0][0]
+            .to_literal_sync()?;
+        self.exec_count.set(self.exec_count.get() + 1);
+        let flat = result.to_tuple1()?.to_vec::<f32>()?;
+        let mut out = Vec::with_capacity(x.len());
+        for i in 0..x.len() {
+            out.push(flat[i * b..i * b + y.len()].to_vec());
+        }
+        Ok(out)
+    }
+}
+
+/// Locate the artifacts directory: `$FISHDBC_ARTIFACTS`, else `artifacts/`
+/// relative to the current directory (the workspace root in `make` runs).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("FISHDBC_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from("artifacts")
+}

@@ -1,0 +1,83 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (`harness = false`): each bench is
+//! a plain binary that times closures with warmup + repeated samples and
+//! prints mean / stddev / min, plus CSV-ish rows the paper-table harness
+//! consumes.
+
+use std::time::Instant;
+
+/// Result of a timed run.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn print(&self) {
+        println!(
+            "bench {:<48} mean {:>10.4}s  std {:>8.4}s  min {:>10.4}s  (n={})",
+            self.name, self.mean_s, self.std_s, self.min_s, self.iters
+        );
+    }
+}
+
+/// Time `f` `iters` times after `warmup` warmup runs. `f` should return some
+/// value to defeat dead-code elimination; we black-box it via `std::hint`.
+pub fn time_n<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Sample {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+        / times.len() as f64;
+    Sample {
+        name: name.to_string(),
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        iters,
+    }
+}
+
+/// Time a single run (for expensive end-to-end benches).
+pub fn time_once<T>(mut f: impl FnMut() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let v = f();
+    (t0.elapsed().as_secs_f64(), v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_n_reports_sane_numbers() {
+        let s = time_n("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.mean_s > 0.0 && s.min_s > 0.0 && s.min_s <= s.mean_s);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (t, v) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,86 @@
+//! Minimal fast hasher for small integer keys (the candidate-edge map's
+//! `(u32, u32)` keys). SipHash's per-key cost shows up in the ADD hot loop
+//! (§Perf); a Fibonacci-multiply mix is plenty for edge keys, which are
+//! already well-distributed node-id pairs. NOT DoS-resistant — use only
+//! for internal, non-adversarial keys.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiplicative hasher: fold every written chunk into one u64, then
+/// Fibonacci-multiply + xor-shift finalize.
+#[derive(Default)]
+pub struct FastHasher {
+    state: u64,
+}
+
+const K: u64 = 0x9E37_79B9_7F4A_7C15; // 2^64 / φ
+
+impl Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        let mut x = self.state.wrapping_mul(K);
+        x ^= x >> 32;
+        x = x.wrapping_mul(K);
+        x ^ (x >> 29)
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state = self.state.rotate_left(8) ^ b as u64;
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.state = self.state.rotate_left(32) ^ i as u64;
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.state = self.state.rotate_left(31) ^ i;
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.write_u64(i as u64);
+    }
+}
+
+/// `BuildHasher` for [`FastHasher`].
+pub type FastBuild = BuildHasherDefault<FastHasher>;
+
+/// HashMap with the fast hasher.
+pub type FastMap<K, V> = std::collections::HashMap<K, V, FastBuild>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works_and_distributes() {
+        let mut m: FastMap<(u32, u32), f64> = FastMap::default();
+        for a in 0..100u32 {
+            for b in 0..100u32 {
+                m.insert((a, b), (a + b) as f64);
+            }
+        }
+        assert_eq!(m.len(), 10_000);
+        assert_eq!(m[&(3, 7)], 10.0);
+        assert_eq!(m.get(&(999, 999)), None);
+    }
+
+    #[test]
+    fn finish_spreads_sequential_keys() {
+        // consecutive keys must not collide in the low bits (bucket index)
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u32 {
+            let mut h = FastHasher::default();
+            h.write_u32(i);
+            h.write_u32(i + 1);
+            seen.insert(h.finish() & 0x3FFF); // 14-bit buckets
+        }
+        // with 16384 buckets and 10k keys, expect mostly distinct
+        assert!(seen.len() > 7000, "poor low-bit spread: {}", seen.len());
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities: deterministic RNG, property-test driver,
+//! simple timing helpers. The build is fully offline (see DESIGN.md
+//! §Dependency-policy), so these replace `rand`, `proptest` and `criterion`.
+
+pub mod fasthash;
+pub mod bench;
+pub mod rng;
+
+#[cfg(test)]
+pub mod proptest;

@@ -1,0 +1,47 @@
+//! Tiny property-testing driver (the `proptest` crate is unavailable
+//! offline). Runs a property over many seeded random cases and reports the
+//! first failing seed so failures are reproducible.
+
+use super::rng::Rng;
+
+/// Run `prop(rng, case_index)` for `cases` deterministic cases. The property
+/// should panic (assert!) on failure. On failure we re-raise with the seed.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Rng, usize)) {
+    for case in 0..cases {
+        let seed = 0xF15D_0000u64 ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}): {:?}",
+                e.downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 32, |rng, _| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 4, |_, _| {
+            assert!(false, "boom");
+        });
+    }
+}

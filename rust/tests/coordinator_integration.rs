@@ -1,0 +1,228 @@
+//! Coordinator integration tests: concurrency, backpressure, snapshot
+//! semantics, and equivalence with the single-threaded core under every
+//! ingestion schedule.
+
+use std::sync::Arc;
+use std::thread;
+
+use fishdbc::coordinator::{Coordinator, CoordinatorConfig, Snapshot};
+use fishdbc::datasets;
+use fishdbc::distances::{Item, MetricKind};
+use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
+
+fn blob_items(n: usize, seed: u64) -> Vec<Item> {
+    datasets::blobs::generate(n, 8, 4, seed).items
+}
+
+fn default_coord() -> Coordinator {
+    Coordinator::spawn(MetricKind::Euclidean, CoordinatorConfig::default())
+}
+
+/// Chunk size must not affect the final clustering (only arrival order
+/// matters, and it is identical).
+#[test]
+fn chunking_schedule_is_irrelevant() {
+    let items = blob_items(600, 1);
+    let mut labels = Vec::new();
+    for chunk in [1usize, 7, 64, 600] {
+        let c = default_coord();
+        for batch in items.chunks(chunk) {
+            c.add_batch(batch.to_vec());
+        }
+        let snap = c.cluster(10);
+        assert_eq!(snap.n_items, 600);
+        labels.push(snap.clustering.labels);
+        c.shutdown();
+    }
+    for l in &labels[1..] {
+        assert_eq!(*l, labels[0], "clustering depends on chunking schedule");
+    }
+}
+
+/// Multiple producer threads funneling into one coordinator: total item
+/// count must be exact and the result well-formed (insert order is
+/// nondeterministic across producers, so only structural checks).
+#[test]
+fn concurrent_producers_are_safe() {
+    let coord = Arc::new(Coordinator::spawn(
+        MetricKind::Euclidean,
+        CoordinatorConfig { queue_depth: 4, ..Default::default() },
+    ));
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let c = Arc::clone(&coord);
+        handles.push(thread::spawn(move || {
+            let items = blob_items(300, 100 + t);
+            for chunk in items.chunks(25) {
+                c.add_batch(chunk.to_vec());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.fishdbc.items, 1200);
+    let snap = coord.cluster(10);
+    assert_eq!(snap.n_items, 1200);
+    assert_eq!(snap.clustering.labels.len(), 1200);
+    assert!(snap.clustering.n_clusters >= 1);
+}
+
+/// Backpressure: with a tiny queue and a slow consumer the producer must
+/// block rather than grow memory; after a barrier, the queue must be empty.
+#[test]
+fn backpressure_blocks_and_drains() {
+    let c = Coordinator::spawn(
+        MetricKind::Euclidean,
+        CoordinatorConfig { queue_depth: 2, ..Default::default() },
+    );
+    for i in 0..10 {
+        c.add_batch(blob_items(200, i));
+        assert!(c.queue_depth() <= 3, "queue grew past depth+in-flight");
+    }
+    let stats = c.stats(); // barrier
+    assert_eq!(stats.fishdbc.items, 2000);
+    assert_eq!(c.queue_depth(), 0);
+    c.shutdown();
+}
+
+/// Auto-reclustering cadence: snapshots must appear roughly every
+/// `recluster_every` items and their `n_items` must be non-decreasing.
+#[test]
+fn auto_recluster_cadence_and_monotonicity() {
+    let c = Coordinator::spawn(
+        MetricKind::Euclidean,
+        CoordinatorConfig { recluster_every: 150, ..Default::default() },
+    );
+    let items = blob_items(900, 2);
+    let mut seen: Vec<usize> = Vec::new();
+    for chunk in items.chunks(75) {
+        c.add_batch(chunk.to_vec());
+        let _ = c.stats(); // pace the stream
+        if let Some(Snapshot { n_items, .. }) = c.latest() {
+            seen.push(n_items);
+        }
+    }
+    assert!(seen.windows(2).all(|w| w[0] <= w[1]), "snapshots regressed: {seen:?}");
+    let stats = c.stats();
+    assert!(
+        stats.reclusters >= 4,
+        "expected ≥4 auto reclusters over 900 items every 150, got {}",
+        stats.reclusters
+    );
+    c.shutdown();
+}
+
+/// Explicit cluster() must reflect *all* items ingested before the call
+/// (the command queue is FIFO, so a cluster command acts as a barrier).
+#[test]
+fn cluster_sees_all_prior_ingestion() {
+    let c = default_coord();
+    let items = blob_items(500, 3);
+    for chunk in items.chunks(50) {
+        c.add_batch(chunk.to_vec());
+    }
+    let snap = c.cluster(10);
+    assert_eq!(snap.n_items, 500, "cluster() missed queued batches");
+    c.shutdown();
+}
+
+/// Streamed result equals the single-threaded core (exact same arrival
+/// order ⇒ exact same labels), independent of auto-reclustering noise.
+#[test]
+fn coordinator_equals_core_with_autorecluster() {
+    let items = blob_items(400, 4);
+    let params = FishdbcParams::default();
+
+    let mut core = Fishdbc::new(MetricKind::Euclidean, params);
+    for it in items.clone() {
+        core.add(it);
+    }
+    let want = core.cluster(10);
+
+    let c = Coordinator::spawn(MetricKind::Euclidean, CoordinatorConfig {
+        fishdbc: params,
+        recluster_every: 90, // interleaved extraction must not perturb
+        ..Default::default()
+    });
+    for chunk in items.chunks(30) {
+        c.add_batch(chunk.to_vec());
+    }
+    let got = c.cluster(10);
+    assert_eq!(got.clustering.labels, want.labels);
+    c.shutdown();
+}
+
+/// Build/extract time accounting feeds the paper's Table 8 "build" vs
+/// "cluster" columns; both must be tracked and plausible.
+#[test]
+fn time_accounting_is_plausible() {
+    let c = default_coord();
+    c.add_batch(blob_items(800, 5));
+    let snap = c.cluster(10);
+    let stats = c.stats();
+    assert!(stats.build_secs > 0.0);
+    assert!(snap.extract_secs >= 0.0);
+    // the paper's headline: extraction ≪ build
+    assert!(
+        snap.extract_secs < stats.build_secs,
+        "extract {} !< build {}",
+        snap.extract_secs,
+        stats.build_secs
+    );
+    c.shutdown();
+}
+
+/// Stats must be internally consistent after an arbitrary workload.
+#[test]
+fn stats_consistency() {
+    let c = default_coord();
+    for i in 0..6 {
+        c.add_batch(blob_items(100, 10 + i));
+    }
+    let _ = c.cluster(10);
+    let _ = c.cluster(20);
+    let s = c.stats();
+    assert_eq!(s.fishdbc.items, 600);
+    assert!(s.batches >= 1 && s.batches <= 6, "batches {}", s.batches);
+    assert_eq!(s.reclusters, 2);
+    assert!(s.fishdbc.dist_calls > 0);
+    assert!(s.fishdbc.msf_edges > 0, "MSF should be materialized by cluster()");
+    c.shutdown();
+}
+
+/// Dropping a coordinator mid-stream must not hang or crash even with a
+/// full queue.
+#[test]
+fn drop_with_full_queue_is_clean() {
+    for seed in 0..3 {
+        let c = Coordinator::spawn(
+            MetricKind::Euclidean,
+            CoordinatorConfig { queue_depth: 1, ..Default::default() },
+        );
+        c.add_batch(blob_items(500, seed));
+        c.add_batch(blob_items(500, seed + 50));
+        drop(c); // must join cleanly while work is queued
+    }
+}
+
+/// Mixed on-demand mcs values: each cluster() honours its own mcs without
+/// poisoning the shared state.
+#[test]
+fn per_request_mcs_is_respected() {
+    let c = default_coord();
+    c.add_batch(blob_items(600, 6));
+    let fine = c.cluster(5);
+    let coarse = c.cluster(60);
+    assert!(
+        fine.clustering.n_clusters >= coarse.clustering.n_clusters,
+        "smaller mcs must give at least as many clusters ({} vs {})",
+        fine.clustering.n_clusters,
+        coarse.clustering.n_clusters
+    );
+    // state unchanged: re-request the fine clustering, must be identical
+    let fine2 = c.cluster(5);
+    assert_eq!(fine.clustering.labels, fine2.clustering.labels);
+    c.shutdown();
+}

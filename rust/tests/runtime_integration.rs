@@ -1,0 +1,183 @@
+//! Integration tests: PJRT runtime executing the AOT artifacts must agree
+//! with the native rust distance implementations. Requires `make artifacts`
+//! (tests are skipped with a notice when artifacts are absent).
+
+use fishdbc::distances::vector;
+use fishdbc::runtime::{default_artifacts_dir, Runtime};
+use fishdbc::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        // artifacts not built in this checkout: skip (CI runs `make
+        // artifacts` first, so this only relaxes ad-hoc `cargo test` runs)
+        eprintln!("SKIP runtime tests — run `make artifacts`");
+        return None;
+    }
+    // artifacts exist: failing to load them is a real bug, not a skip
+    Some(Runtime::load(&dir).expect("artifacts exist but failed to load"))
+}
+
+fn random_rows(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+#[test]
+fn manifest_modules_loaded() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert!(rt.module_names().len() >= 5, "modules: {:?}", rt.module_names());
+    assert!(rt.platform().to_lowercase().contains("cpu")
+        || rt.platform().to_lowercase().contains("host"));
+    let m = rt.meta("query_topk_euclidean_b256_d128_k10").expect("module");
+    assert_eq!((m.b, m.d, m.k), (256, 128, Some(10)));
+}
+
+#[test]
+fn query_topk_matches_native_euclidean() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(1);
+    let d = 128;
+    let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let cands = random_rows(&mut rng, 200, d); // padded 200 -> 256
+    let refs: Vec<&[f32]> = cands.iter().map(|c| c.as_slice()).collect();
+    let out = rt
+        .query_topk("query_topk_euclidean_b256_d128_k10", &q, &refs)
+        .unwrap();
+    assert_eq!(out.dists.len(), 200);
+    for (i, c) in cands.iter().enumerate() {
+        let want = vector::euclidean(&q, c);
+        assert!(
+            (out.dists[i] as f64 - want).abs() < 1e-2,
+            "dist[{i}] kernel {} vs native {want}",
+            out.dists[i]
+        );
+    }
+    // top-k correct and sorted
+    assert_eq!(out.topk.len(), 10);
+    let mut all: Vec<(u32, f32)> =
+        out.dists.iter().copied().enumerate().map(|(i, d)| (i as u32, d)).collect();
+    all.sort_by(|a, b| a.1.total_cmp(&b.1));
+    for (got, want) in out.topk.iter().zip(&all[..10]) {
+        assert_eq!(got.0, want.0);
+    }
+    // padding must not leak
+    assert!(out.topk.iter().all(|&(i, _)| (i as usize) < 200));
+}
+
+#[test]
+fn query_topk_dim_padding_is_exact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(2);
+    // dim 100 < module D=128: zero-padding must be exact for euclidean
+    let q: Vec<f32> = (0..100).map(|_| rng.normal() as f32).collect();
+    let cands = random_rows(&mut rng, 64, 100);
+    let refs: Vec<&[f32]> = cands.iter().map(|c| c.as_slice()).collect();
+    let out = rt
+        .query_topk("query_topk_euclidean_b256_d128_k10", &q, &refs)
+        .unwrap();
+    for (i, c) in cands.iter().enumerate() {
+        let want = vector::euclidean(&q, c);
+        assert!((out.dists[i] as f64 - want).abs() < 1e-2);
+    }
+}
+
+#[test]
+fn cosine_and_jaccard_modules_match_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(3);
+    let d = 1024;
+    let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let cands = random_rows(&mut rng, 128, d);
+    let refs: Vec<&[f32]> = cands.iter().map(|c| c.as_slice()).collect();
+    let out = rt.query_topk("query_topk_cosine_b256_d1024_k10", &q, &refs).unwrap();
+    for (i, c) in cands.iter().enumerate() {
+        let want = vector::cosine(&q, c);
+        assert!(
+            (out.dists[i] as f64 - want).abs() < 1e-3,
+            "cosine[{i}] {} vs {want}",
+            out.dists[i]
+        );
+    }
+
+    // jaccard over {0,1} vectors vs sparse-set native implementation
+    let qb: Vec<f32> = (0..d).map(|_| f32::from(rng.bool(0.3))).collect();
+    let cb: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..d).map(|_| f32::from(rng.bool(0.3))).collect())
+        .collect();
+    let refs: Vec<&[f32]> = cb.iter().map(|c| c.as_slice()).collect();
+    let out = rt.query_topk("query_topk_jaccard_b256_d1024_k10", &qb, &refs).unwrap();
+    let to_set = |v: &[f32]| -> Vec<u32> {
+        v.iter().enumerate().filter(|(_, &x)| x > 0.5).map(|(i, _)| i as u32).collect()
+    };
+    let qset = to_set(&qb);
+    for (i, c) in cb.iter().enumerate() {
+        let want = fishdbc::distances::sparse::jaccard(&qset, &to_set(c));
+        assert!(
+            (out.dists[i] as f64 - want).abs() < 1e-4,
+            "jaccard[{i}] {} vs {want}",
+            out.dists[i]
+        );
+    }
+}
+
+#[test]
+fn pairwise_and_mreach_match_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(4);
+    let d = 16;
+    let x = random_rows(&mut rng, 100, d);
+    let y = random_rows(&mut rng, 80, d);
+    let xr: Vec<&[f32]> = x.iter().map(|r| r.as_slice()).collect();
+    let yr: Vec<&[f32]> = y.iter().map(|r| r.as_slice()).collect();
+    let block = rt.pairwise("pairwise_euclidean_b128_d16", &xr, &yr).unwrap();
+    assert_eq!(block.len(), 100);
+    assert_eq!(block[0].len(), 80);
+    for i in (0..100).step_by(17) {
+        for j in (0..80).step_by(13) {
+            let want = vector::euclidean(&x[i], &y[j]);
+            assert!((block[i][j] as f64 - want).abs() < 1e-2);
+        }
+    }
+
+    let core_x: Vec<f32> = (0..100).map(|_| rng.f32() * 3.0).collect();
+    let core_y: Vec<f32> = (0..80).map(|_| rng.f32() * 3.0).collect();
+    let mr = rt
+        .mreach("mreach_euclidean_b128_d16", &xr, &yr, &core_x, &core_y)
+        .unwrap();
+    for i in (0..100).step_by(11) {
+        for j in (0..80).step_by(7) {
+            let want =
+                (vector::euclidean(&x[i], &y[j])).max(core_x[i] as f64).max(core_y[j] as f64);
+            assert!(
+                (mr[i][j] as f64 - want).abs() < 1e-2,
+                "mreach[{i}][{j}] {} vs {want}",
+                mr[i][j]
+            );
+        }
+    }
+}
+
+#[test]
+fn oversize_batches_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let q = vec![0f32; 16];
+    let big_row = vec![0f32; 16];
+    let cands: Vec<&[f32]> = (0..300).map(|_| big_row.as_slice()).collect();
+    assert!(rt.query_topk("query_topk_euclidean_b256_d16_k10", &q, &cands).is_err());
+    let qd = vec![0f32; 4096];
+    assert!(rt
+        .query_topk("query_topk_euclidean_b256_d16_k10", &qd, &cands[..4])
+        .is_err());
+}
+
+#[test]
+fn find_query_module_picks_smallest_fit() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.find_query_module("euclidean", 100).unwrap();
+    assert_eq!(m.d, 128);
+    let m = rt.find_query_module("euclidean", 10).unwrap();
+    assert_eq!(m.d, 16);
+    assert!(rt.find_query_module("euclidean", 100_000).is_none());
+}
