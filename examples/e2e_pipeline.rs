@@ -23,23 +23,18 @@ use std::time::Instant;
 
 use fishdbc::coordinator::{Coordinator, CoordinatorConfig};
 use fishdbc::datasets;
+#[cfg(feature = "xla")]
 use fishdbc::distances::vector;
 use fishdbc::fishdbc::FishdbcParams;
 use fishdbc::hdbscan::exact::{exact_hdbscan, ExactParams};
 use fishdbc::metrics::score_external;
+#[cfg(feature = "xla")]
 use fishdbc::runtime::{default_artifacts_dir, Runtime};
 
-fn main() {
-    let n = 3000;
-    let dim = 128;
-    println!("=== FISHDBC end-to-end pipeline ===");
-    println!("workload: blobs n={n} dim={dim} (10 Gaussian centers, Table 1)\n");
-    let ds = datasets::blobs::generate(n, dim, 10, 20260710);
-    ds.validate().expect("generated dataset must be valid");
-    let truth = ds.primary_labels().expect("blobs is labeled").to_vec();
-
-    // ---- stage 1: PJRT kernels (L1/L2) ------------------------------------
-    println!("[1/4] PJRT runtime: compiled JAX/Pallas distance kernels");
+/// Stage 1: cross-check the compiled PJRT kernels against the native rust
+/// metrics on real data batches (needs the `xla` feature + `make artifacts`).
+#[cfg(feature = "xla")]
+fn stage_pjrt(ds: &datasets::Dataset, n: usize, dim: usize) {
     let arts = default_artifacts_dir();
     match Runtime::load(&arts) {
         Ok(rt) => {
@@ -78,6 +73,25 @@ fn main() {
             println!("  SKIPPED — artifacts not built ({e:#}); run `make artifacts`");
         }
     }
+}
+
+#[cfg(not(feature = "xla"))]
+fn stage_pjrt(_ds: &datasets::Dataset, _n: usize, _dim: usize) {
+    println!("  SKIPPED — rebuild with `--features xla` (and `make artifacts`)");
+}
+
+fn main() {
+    let n = 3000;
+    let dim = 128;
+    println!("=== FISHDBC end-to-end pipeline ===");
+    println!("workload: blobs n={n} dim={dim} (10 Gaussian centers, Table 1)\n");
+    let ds = datasets::blobs::generate(n, dim, 10, 20260710);
+    ds.validate().expect("generated dataset must be valid");
+    let truth = ds.primary_labels().expect("blobs is labeled").to_vec();
+
+    // ---- stage 1: PJRT kernels (L1/L2) ------------------------------------
+    println!("[1/4] PJRT runtime: compiled JAX/Pallas distance kernels");
+    stage_pjrt(&ds, n, dim);
 
     // ---- stage 2: streaming FISHDBC build (L3) -----------------------------
     println!("\n[2/4] streaming FISHDBC build (coordinator, chunked ingestion)");

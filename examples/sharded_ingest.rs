@@ -1,0 +1,98 @@
+//! Sharded parallel ingest: one stream fanned out to S shard-local FISHDBC
+//! instances (content-hash routing), merged back into one global clustering
+//! (per-shard MSFs + bounded cross-shard bridge edges, one Kruskal +
+//! condense pass), and served through online `label()` queries — the
+//! paper's *scalable, incremental* pitch on all available cores.
+//!
+//! Run with:
+//! ```text
+//! cargo run --release --example sharded_ingest
+//! ```
+
+use std::time::Instant;
+
+use fishdbc::datasets;
+use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::metrics::score_external;
+use fishdbc::Item;
+
+fn main() {
+    let n = 12_000;
+    let shards = 4;
+    let ds = datasets::blobs::generate(n, 16, 4, 99);
+    let truth = ds.primary_labels().expect("blobs is labeled").to_vec();
+
+    let engine = Engine::spawn(ds.metric, EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
+        shards,
+        mcs: 10,
+        ..Default::default()
+    });
+
+    // ---- ingest: hash-routed, backpressured, S insertion lanes ----------
+    let t0 = Instant::now();
+    for chunk in ds.items.chunks(256) {
+        engine.add_batch(chunk.to_vec());
+    }
+    engine.flush();
+    let ingest = t0.elapsed().as_secs_f64();
+    let stats = engine.stats();
+    println!(
+        "ingested {n} items through {shards} shards in {ingest:.2}s \
+         ({:.0} items/s; busiest shard {:.2}s)",
+        n as f64 / ingest.max(1e-9),
+        stats.build_secs
+    );
+    for (i, s) in stats.shard_stats.iter().enumerate() {
+        println!(
+            "  shard {i}: {:>6} items {:>9} dist calls {:>6} MSF edges",
+            s.items, s.dist_calls, s.msf_edges
+        );
+    }
+
+    // ---- merge: global forest from per-shard MSFs + bridges -------------
+    let snap = engine.cluster(10);
+    println!(
+        "merge in {:.3}s: {} forest edges ({} bridges offered) -> {} clusters, \
+         {} of {} clustered",
+        snap.extract_secs,
+        snap.n_msf_edges,
+        snap.n_bridge_edges,
+        snap.clustering.n_clusters,
+        snap.clustering.n_clustered(),
+        n
+    );
+
+    // global ids are arrival order, so the merged labels line up with the
+    // generator's classes directly
+    let quality = score_external(&snap.clustering.labels, &truth);
+    println!(
+        "quality vs generator classes: AMI* {:.3}  ARI* {:.3}",
+        quality.ami_star, quality.ari_star
+    );
+
+    // ---- serve: online label queries against the pinned snapshot --------
+    let probes: Vec<Item> = ds.items[..8].to_vec();
+    let t0 = Instant::now();
+    let labels: Vec<i32> =
+        probes.iter().map(|p| engine.label_against(p, &snap, 10)).collect();
+    println!(
+        "labeled {} probes in {:.4}s (read-only, no state mutated): {:?}",
+        probes.len(),
+        t0.elapsed().as_secs_f64(),
+        labels
+    );
+    let agree = labels
+        .iter()
+        .enumerate()
+        .filter(|&(i, &l)| l == snap.clustering.labels[i])
+        .count();
+    println!("{agree}/{} probes landed in their own stored cluster", probes.len());
+
+    assert!(snap.clustering.n_clusters >= 3, "blob structure must survive the merge");
+    assert!(quality.ari_star > 0.8, "merged quality dropped: {:?}", quality);
+    assert!(agree >= 6, "online labels disagree with the snapshot");
+    engine.shutdown();
+    println!("engine shut down cleanly");
+}

@@ -1,0 +1,86 @@
+//! Engine scaling — ingest throughput vs shard count, plus merged-quality
+//! parity with the single-shard path.
+//!
+//! Acceptance targets (ISSUE 1): on 50k blob points, 4 shards must ingest
+//! at ≥ 2× the 1-shard rate, and the merged 4-shard clustering must score
+//! ARI ≥ 0.9 against the single-shard clustering of the same stream.
+//! Two effects compound toward the speedup: S insertion lanes run in
+//! parallel, and each lane's HNSW holds n/S items, so every insert beams
+//! through a smaller graph.
+//!
+//! Run: `cargo bench --bench engine_scaling` (optional first arg overrides
+//! n, e.g. `cargo bench --bench engine_scaling -- 10000` for a quick pass).
+
+use std::time::Instant;
+
+use fishdbc::datasets;
+use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::metrics::adjusted_rand_index;
+
+fn to_pred(labels: &[i32]) -> Vec<usize> {
+    labels.iter().map(|&l| (l + 1) as usize).collect()
+}
+
+fn main() {
+    let n: usize = std::env::args()
+        .skip(1)
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(50_000);
+    let dim = 16;
+    let ds = datasets::blobs::generate(n, dim, 10, 42);
+    let params = FishdbcParams { min_pts: 10, ef: 20, ..Default::default() };
+
+    println!("# engine scaling: blobs n={n} dim={dim} (10 centers), MinPts=10 ef=20");
+    println!(
+        "{:<8} {:>10} {:>12} {:>10} {:>10} {:>10} {:>12}",
+        "shards", "ingest(s)", "items/s", "merge(s)", "clusters", "bridges", "ARI vs S=1"
+    );
+
+    let mut base: Option<(f64, Vec<i32>)> = None;
+    for shards in [1usize, 2, 4, 8] {
+        let engine = Engine::spawn(ds.metric, EngineConfig {
+            fishdbc: params,
+            shards,
+            mcs: 10,
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        for chunk in ds.items.chunks(512) {
+            engine.add_batch(chunk.to_vec());
+        }
+        engine.flush();
+        let ingest = t0.elapsed().as_secs_f64();
+
+        let snap = engine.cluster(10);
+        let ari = match &base {
+            None => 1.0,
+            Some((_, labels)) => adjusted_rand_index(
+                &to_pred(labels),
+                &to_pred(&snap.clustering.labels),
+            ),
+        };
+        println!(
+            "{:<8} {:>10.2} {:>12.0} {:>10.2} {:>10} {:>10} {:>12.3}",
+            shards,
+            ingest,
+            n as f64 / ingest.max(1e-9),
+            snap.extract_secs,
+            snap.clustering.n_clusters,
+            snap.n_bridge_edges,
+            ari
+        );
+
+        if base.is_none() {
+            base = Some((ingest, snap.clustering.labels.clone()));
+        } else if shards == 4 {
+            let t1 = base.as_ref().map(|(t, _)| *t).unwrap_or(ingest);
+            let speedup = t1 / ingest.max(1e-9);
+            println!(
+                "# 4-shard ingest speedup over 1 shard: {speedup:.2}x \
+                 (target >= 2x), merged ARI {ari:.3} (target >= 0.9)"
+            );
+        }
+        engine.shutdown();
+    }
+}

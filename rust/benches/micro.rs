@@ -10,6 +10,7 @@ use fishdbc::distances::{bitmap, sparse, text, vector, MetricKind};
 use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
 use fishdbc::hdbscan::{cluster_from_msf, CondensedTree, Dendrogram};
 use fishdbc::mst::{Edge, Msf};
+#[cfg(feature = "xla")]
 use fishdbc::runtime::{default_artifacts_dir, Runtime};
 use fishdbc::util::bench::time_n;
 use fishdbc::util::rng::Rng;
@@ -86,6 +87,13 @@ fn bench_distances() {
     println!("  simpson   256b   {:>8.1} Mcalls/s", reps as f64 / s.min_s / 1e6);
 }
 
+#[cfg(not(feature = "xla"))]
+fn bench_pjrt() {
+    println!("## PJRT compiled kernels vs native batch");
+    println!("  SKIP — rebuild with `--features xla` and run `make artifacts`");
+}
+
+#[cfg(feature = "xla")]
 fn bench_pjrt() {
     println!("## PJRT compiled kernels vs native batch");
     let dir = default_artifacts_dir();

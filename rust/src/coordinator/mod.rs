@@ -3,6 +3,13 @@
 //! can be added as they arrive, and clustering can be computed
 //! inexpensively").
 //!
+//! This is the **single-shard reference path**: one worker thread owns one
+//! `Fishdbc`, so ingest throughput is capped at one core of HNSW insertion.
+//! For multi-core ingest use [`crate::engine::Engine`], which runs S of
+//! these per-shard states in parallel and merges their spanning forests
+//! into one global clustering; the coordinator remains the simplest
+//! deployment and the equivalence baseline the engine is tested against.
+//!
 //! Architecture (thread-based; the offline image has no async runtime —
 //! see DESIGN.md §Dependency-policy):
 //!

@@ -1,0 +1,222 @@
+//! Global merge: per-shard minimum spanning forests plus a bounded set of
+//! cross-shard bridge edges, folded by one edge-union Kruskal pass and
+//! condensed into the global clustering.
+//!
+//! Correctness rests on the same lemma as Algorithm 1's UPDATE_MST: an MSF
+//! of a union graph only draws edges from the MSFs of its parts plus the
+//! extra edges offered alongside them. The parts here are the shard-local
+//! candidate graphs; the extra edges are the bridges. Bridges use mutual
+//! reachability max(d, core_s(x), core_t(y)) with each endpoint's core
+//! distance taken from its own shard — shard-local cores are computed from a
+//! uniform subsample (hash routing), so they estimate the same densities the
+//! single-shard run sees, at 1/S the sample rate.
+
+use std::time::Instant;
+
+use crate::hdbscan::cluster_from_msf_opts;
+use crate::mst::{Edge, Msf};
+
+use super::shard::ShardState;
+use super::{Engine, EngineSnapshot};
+
+impl Engine {
+    /// CLUSTER across all shards: flush, relabel per-shard MSFs into the
+    /// global id space, add bridge edges, run one Kruskal + condense +
+    /// extract pass. The snapshot is also cached for [`Engine::latest`] and
+    /// the online query path.
+    pub fn cluster(&self, mcs: usize) -> EngineSnapshot {
+        self.flush();
+        let t0 = Instant::now();
+        let guards: Vec<_> = self
+            .shard_handles()
+            .iter()
+            .map(|s| s.state.read().unwrap())
+            .collect();
+        let states: Vec<&ShardState> = guards.iter().map(|g| &**g).collect();
+        let n_items: usize = states.iter().map(|st| st.f.len()).sum();
+        // the label space must cover every *applied* global id — with
+        // concurrent ingestion a shard can have applied ids whose batch
+        // siblings are still queued elsewhere, and interleaved add_batch
+        // callers can even make a shard's globals non-monotone, so scan
+        // for the true maximum
+        let n = states
+            .iter()
+            .filter_map(|st| st.globals.iter().copied().max())
+            .max()
+            .map_or(0, |m| m as usize + 1)
+            .max(n_items);
+
+        // per-shard MSF edges, relabeled local → global
+        let mut lists: Vec<Vec<Edge>> = Vec::with_capacity(states.len() + 1);
+        for st in &states {
+            lists.push(
+                st.f.msf_edges()
+                    .iter()
+                    .map(|e| {
+                        Edge::new(
+                            st.globals[e.a as usize],
+                            st.globals[e.b as usize],
+                            e.w,
+                        )
+                    })
+                    .collect(),
+            );
+        }
+        let bridges = bridge_edges(
+            &states,
+            self.config().bridge_k,
+            self.config().bridge_fanout,
+        );
+        let n_bridge_edges = bridges.len();
+        lists.push(bridges);
+        // edge lists are owned from here on: release the shards before the
+        // (potentially long) global Kruskal + condense pass so ingest never
+        // stalls behind extraction
+        drop(states);
+        drop(guards);
+
+        let refs: Vec<&[Edge]> = lists.iter().map(|l| l.as_slice()).collect();
+        let msf = Msf::from_edge_lists(&refs, n.max(1));
+        let clustering = cluster_from_msf_opts(msf.edges(), n.max(1), mcs, false);
+
+        let snap = EngineSnapshot {
+            n_items,
+            n_shards: self.n_shards(),
+            n_bridge_edges,
+            n_msf_edges: msf.edges().len(),
+            extract_secs: t0.elapsed().as_secs_f64(),
+            clustering,
+        };
+        self.set_latest(snap.clone());
+        snap
+    }
+}
+
+/// Bounded cross-shard candidate edges. Every item queries the HNSWs of up
+/// to `fanout` *other* shards (rotating per item so all shard pairs are
+/// covered even at fanout 1) for its `k` nearest remote neighbors; each hit
+/// becomes an edge weighted by mutual reachability under the two shards'
+/// core distances. Read-only and embarrassingly parallel: one scoped thread
+/// per source shard, no locks taken (the caller holds read guards).
+pub(crate) fn bridge_edges(
+    states: &[&ShardState],
+    k: usize,
+    fanout: usize,
+) -> Vec<Edge> {
+    let s = states.len();
+    if s < 2 || k == 0 || fanout == 0 {
+        return Vec::new();
+    }
+    let fanout = fanout.min(s - 1);
+    // remote core distances, fetched in bulk once per shard
+    let cores: Vec<Vec<f64>> =
+        states.iter().map(|st| st.f.core_distances()).collect();
+    let cores = &cores;
+
+    let mut per_shard: Vec<Vec<Edge>> = Vec::with_capacity(s);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(s);
+        for (si, st) in states.iter().enumerate() {
+            let states = &*states;
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                for (li, item) in st.f.items().iter().enumerate() {
+                    let gi = st.globals[li];
+                    let ci = cores[si][li];
+                    for j in 0..fanout {
+                        // offset in [1, s-1]: never self, distinct per j
+                        let t = (si + 1 + (li + j) % (s - 1)) % s;
+                        let remote = states[t];
+                        for (rj, d) in remote.f.nearest(item, k, None) {
+                            let w = d.max(ci).max(cores[t][rj as usize]);
+                            out.push(Edge::new(
+                                gi,
+                                remote.globals[rj as usize],
+                                w,
+                            ));
+                        }
+                    }
+                }
+                out
+            }));
+        }
+        for h in handles {
+            per_shard.push(h.join().expect("bridge worker panicked"));
+        }
+    });
+    per_shard.concat()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::distances::{Item, MetricKind};
+    use crate::engine::EngineConfig;
+    use crate::fishdbc::FishdbcParams;
+
+    fn blob_items(n: usize, seed: u64) -> Vec<Item> {
+        datasets::blobs::generate(n, 16, 4, seed).items
+    }
+
+    #[test]
+    fn bridges_connect_the_global_forest() {
+        // Without bridges, S shards yield >= S components; with them, the
+        // merged forest must be as connected as the data (blobs: finite
+        // metric => one component per merge of everything discovered).
+        let items = blob_items(600, 21);
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            fishdbc: FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+            shards: 4,
+            mcs: 5,
+            ..Default::default()
+        });
+        for chunk in items.chunks(100) {
+            engine.add_batch(chunk.to_vec());
+        }
+        let snap = engine.cluster(5);
+        assert_eq!(snap.n_items, 600);
+        assert!(snap.n_bridge_edges > 0, "4 shards must produce bridges");
+        // a spanning structure over 600 points from 4 partial forests
+        assert!(
+            snap.n_msf_edges >= 590,
+            "merged forest too fragmented: {} edges",
+            snap.n_msf_edges
+        );
+        // labels cover the whole global id space
+        assert_eq!(snap.clustering.labels.len(), 600);
+        assert!(snap.clustering.n_clusters >= 2);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn bridge_fanout_rotation_covers_pairs() {
+        // with fanout 1 the rotation must still bridge every ordered pair
+        // eventually; verify the target formula stays in range and != self
+        let s = 5usize;
+        for si in 0..s {
+            let mut seen = std::collections::HashSet::new();
+            for li in 0..64 {
+                let t = (si + 1 + (li % (s - 1))) % s;
+                assert_ne!(t, si);
+                assert!(t < s);
+                seen.insert(t);
+            }
+            assert_eq!(seen.len(), s - 1, "rotation misses shards");
+        }
+    }
+
+    #[test]
+    fn snapshot_cached_for_latest() {
+        let items = blob_items(200, 23);
+        let engine =
+            Engine::spawn(MetricKind::Euclidean, EngineConfig::default());
+        engine.add_batch(items);
+        assert!(engine.latest().is_none());
+        let snap = engine.cluster(10);
+        let cached = engine.latest().expect("snapshot cached");
+        assert_eq!(cached.n_items, snap.n_items);
+        assert_eq!(cached.clustering.labels, snap.clustering.labels);
+        engine.shutdown();
+    }
+}

@@ -1,0 +1,436 @@
+//! Sharded parallel ingest engine: FISHDBC at multi-core throughput.
+//!
+//! The [`coordinator`](crate::coordinator) makes FISHDBC *streaming*, but
+//! its single worker caps ingest at one core of HNSW insertion. This engine
+//! removes that cap with **S independent shards** — each a worker thread
+//! owning a [`Fishdbc`](crate::fishdbc::Fishdbc) over a hash-partitioned
+//! slice of the item space — and recovers a **global clustering** with one
+//! cheap merge pass, following the decomposition HDBSCAN* itself suggests
+//! (McInnes & Healy: spanning forest construction dominates; the hierarchy
+//! is a cheap postprocess).
+//!
+//! ## Architecture
+//!
+//! * **Routing** ([`Engine::add_batch`]): every arriving item gets the next
+//!   dense global id (arrival order — labels stay index-aligned with the
+//!   input stream) and is hash-routed by *content* to one shard, so each
+//!   shard holds a uniform random subsample and mirrors the global density
+//!   structure. Bounded queues give backpressure, exactly like the
+//!   coordinator.
+//! * **Merge** ([`Engine::cluster`], `engine/merge.rs`): after a flush
+//!   barrier, the per-shard minimum spanning forests are relabeled into the
+//!   global id space and unioned with a bounded set of **bridge edges** —
+//!   each item queried (read-only) against the HNSWs of up to
+//!   `bridge_fanout` other shards for its `bridge_k` nearest remote
+//!   neighbors, weighted by mutual reachability under the two shards' core
+//!   distances. One Kruskal pass (`Msf::from_edge_lists`) + condense +
+//!   extract produce the global clustering.
+//! * **Merge invariants**: (1) each shard's forest is an MSF of its local
+//!   candidate graph (Algorithm 1, per shard); (2) Kruskal over the union of
+//!   part-MSFs plus extra edges is an MSF of the union graph (the same
+//!   lemma that justifies UPDATE_MST); (3) the bridge set is bounded by
+//!   `n · bridge_k · bridge_fanout` edges, so merge stays O(n log n).
+//! * **Serving** ([`Engine::label`], `engine/query.rs`): answer "which
+//!   cluster would this item join?" against the latest snapshot via HNSW
+//!   search across all shards, without mutating any state.
+//! * **Persistence**: `Engine::save`/`Engine::load` (implemented in
+//!   [`crate::persist`]) write a versioned container of every shard's full
+//!   FISHDBC state plus the global id maps.
+
+pub mod merge;
+pub mod query;
+pub(crate) mod shard;
+
+use std::hash::Hasher;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::distances::{Item, MetricKind};
+use crate::fishdbc::{FishdbcParams, FishdbcStats};
+use crate::hdbscan::Clustering;
+use crate::util::fasthash::FastHasher;
+use shard::{Shard, ShardCmd, ShardState};
+
+/// Engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Per-shard FISHDBC parameters (shared by every shard).
+    pub fishdbc: FishdbcParams,
+    /// Number of shards S (worker threads); 1 reproduces the single-core
+    /// path exactly.
+    pub shards: usize,
+    /// Minimum cluster size for automatic snapshots ([`Engine::label`]
+    /// extracts one lazily when none exists yet).
+    pub mcs: usize,
+    /// Nearest remote neighbors per (item, remote shard) in the bridge
+    /// search.
+    pub bridge_k: usize,
+    /// How many *other* shards each item is bridged against (clamped to
+    /// S-1; rotated per item so all shard pairs are covered).
+    pub bridge_fanout: usize,
+    /// Per-shard command-queue bound (backpressure depth), in batches.
+    pub queue_depth: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            fishdbc: FishdbcParams::default(),
+            shards: 4,
+            mcs: 10,
+            bridge_k: 3,
+            bridge_fanout: 3,
+            queue_depth: 16,
+        }
+    }
+}
+
+/// A merged global clustering with provenance.
+#[derive(Clone, Debug)]
+pub struct EngineSnapshot {
+    /// Global clustering; labels are indexed by global id = arrival order.
+    pub clustering: Clustering,
+    /// Items covered by this snapshot.
+    pub n_items: usize,
+    /// Shards merged.
+    pub n_shards: usize,
+    /// Cross-shard bridge edges offered to the merge.
+    pub n_bridge_edges: usize,
+    /// Edges in the merged global forest.
+    pub n_msf_edges: usize,
+    /// Seconds spent on the whole merge + extraction.
+    pub extract_secs: f64,
+}
+
+/// Counters aggregated across shards.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    /// Items inserted (sum over shards).
+    pub items: usize,
+    /// Distance evaluations (sum over shards).
+    pub dist_calls: u64,
+    /// Batches processed (sum over shards).
+    pub batches: u64,
+    /// Critical-path build time: the busiest shard's insert wall time.
+    pub build_secs: f64,
+    /// Per-shard FISHDBC counters.
+    pub shard_stats: Vec<FishdbcStats>,
+}
+
+/// Handle to a running sharded engine. Dropping it shuts the workers down.
+pub struct Engine {
+    config: EngineConfig,
+    metric: MetricKind,
+    shards: Vec<Shard>,
+    /// Next global id to assign (== items accepted so far).
+    next_global: AtomicU64,
+    latest: Mutex<Option<EngineSnapshot>>,
+}
+
+impl Engine {
+    /// Spawn `config.shards` shard workers clustering [`Item`]s under
+    /// `metric`.
+    pub fn spawn(metric: MetricKind, config: EngineConfig) -> Engine {
+        assert!(config.shards >= 1, "engine needs at least one shard");
+        let shards = (0..config.shards)
+            .map(|id| Shard::spawn(id, metric, config.fishdbc, config.queue_depth))
+            .collect();
+        Engine {
+            config,
+            metric,
+            shards,
+            next_global: AtomicU64::new(0),
+            latest: Mutex::new(None),
+        }
+    }
+
+    /// Reassemble an engine from reloaded shard states (see
+    /// [`Engine::load`](crate::persist)).
+    pub(crate) fn from_resumed(
+        metric: MetricKind,
+        config: EngineConfig,
+        states: Vec<ShardState>,
+        next_global: u64,
+    ) -> Engine {
+        let shards = states
+            .into_iter()
+            .enumerate()
+            .map(|(id, st)| Shard::resume(id, st, config.queue_depth))
+            .collect();
+        Engine {
+            config,
+            metric,
+            shards,
+            next_global: AtomicU64::new(next_global),
+            latest: Mutex::new(None),
+        }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    pub fn metric(&self) -> MetricKind {
+        self.metric
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Items accepted so far (including any still queued behind a shard).
+    pub fn len(&self) -> usize {
+        self.next_global.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub(crate) fn shard_handles(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// Install a snapshot unless a fresher one (more items) is already
+    /// cached — two racing `cluster()` calls must not let the slower,
+    /// older merge win.
+    pub(crate) fn set_latest(&self, snap: EngineSnapshot) {
+        let mut slot = self.latest.lock().unwrap();
+        if slot.as_ref().map_or(true, |old| old.n_items <= snap.n_items) {
+            *slot = Some(snap);
+        }
+    }
+
+    /// Hash-route a batch: assign dense global ids in arrival order, group
+    /// by content hash, enqueue per shard (blocking when a shard's queue is
+    /// full — backpressure). Items incompatible with the engine's metric
+    /// panic here, in the caller, before touching any shard.
+    pub fn add_batch(&self, items: Vec<Item>) {
+        if items.is_empty() {
+            return;
+        }
+        // validate before assigning ids: a rejected batch must not leak
+        // global ids (persistence requires ids to be dense)
+        for item in &items {
+            assert!(
+                self.metric.compatible(item),
+                "item incompatible with metric {}",
+                self.metric.name()
+            );
+        }
+        let s = self.shards.len();
+        // reserve the id range atomically, rejecting before committing: a
+        // panic here must not consume ids (dense-id invariant)
+        let base = self
+            .next_global
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                cur.checked_add(items.len() as u64)
+                    .filter(|&next| next <= u32::MAX as u64)
+            })
+            .expect("engine capacity (u32 item ids) exceeded");
+        let mut routed: Vec<Vec<(u32, Item)>> = (0..s).map(|_| Vec::new()).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            let shard = if s == 1 { 0 } else { (item_hash(&item) % s as u64) as usize };
+            routed[shard].push((base as u32 + i as u32, item));
+        }
+        for (shard, batch) in self.shards.iter().zip(routed) {
+            if !batch.is_empty() {
+                shard.send(ShardCmd::AddBatch(batch));
+            }
+        }
+    }
+
+    /// Ingestion barrier: wait until every shard has drained its queue and
+    /// folded buffered candidate edges into its local MSF.
+    pub fn flush(&self) {
+        let (tx, rx) = std::sync::mpsc::sync_channel(self.shards.len());
+        for shard in &self.shards {
+            shard.send(ShardCmd::Flush(tx.clone()));
+        }
+        drop(tx);
+        for _ in 0..self.shards.len() {
+            let _ = rx.recv();
+        }
+    }
+
+    /// Latest merged snapshot, non-blocking.
+    pub fn latest(&self) -> Option<EngineSnapshot> {
+        self.latest.lock().unwrap().clone()
+    }
+
+    /// Aggregated counters. Flushes first, so this doubles as an ingestion
+    /// barrier (mirrors [`Coordinator::stats`](crate::coordinator)).
+    pub fn stats(&self) -> EngineStats {
+        self.flush();
+        let mut stats = EngineStats::default();
+        for shard in &self.shards {
+            let st = shard.state.read().unwrap();
+            let fs = st.f.stats();
+            stats.items += fs.items;
+            stats.dist_calls += fs.dist_calls;
+            stats.batches += st.batches;
+            stats.build_secs = stats.build_secs.max(st.build_secs);
+            stats.shard_stats.push(fs);
+        }
+        stats
+    }
+
+    /// Shut down, waiting for every shard worker to finish outstanding
+    /// work.
+    pub fn shutdown(mut self) {
+        for shard in &mut self.shards {
+            shard.shutdown();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        for shard in &mut self.shards {
+            shard.shutdown();
+        }
+    }
+}
+
+/// Deterministic content hash used for shard routing: the same stream is
+/// always partitioned the same way, across processes and restarts.
+pub(crate) fn item_hash(item: &Item) -> u64 {
+    let mut h = FastHasher::default();
+    match item {
+        Item::Dense(v) => {
+            h.write_u64(0);
+            for &x in v {
+                h.write_u32(x.to_bits());
+            }
+        }
+        Item::Sparse { idx, val } => {
+            h.write_u64(1);
+            for &i in idx {
+                h.write_u32(i);
+            }
+            for &x in val {
+                h.write_u32(x.to_bits());
+            }
+        }
+        Item::Set(s) => {
+            h.write_u64(2);
+            for &i in s {
+                h.write_u32(i);
+            }
+        }
+        Item::Text(t) => {
+            h.write_u64(3);
+            h.write(t.as_bytes());
+        }
+        Item::Bits(b) => {
+            h.write_u64(4);
+            for &w in b.words() {
+                h.write_u64(w);
+            }
+        }
+        Item::Digest(d) => {
+            h.write_u64(5);
+            for &m in &d.minhashes {
+                h.write_u64(m);
+            }
+            h.write(&d.histogram);
+            for &w in d.features.words() {
+                h.write_u64(w);
+            }
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::fishdbc::Fishdbc;
+
+    fn blob_items(n: usize, seed: u64) -> Vec<Item> {
+        datasets::blobs::generate(n, 16, 4, seed).items
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_spread() {
+        let items = blob_items(400, 3);
+        let s = 4u64;
+        let mut counts = [0usize; 4];
+        for it in &items {
+            let a = item_hash(it) % s;
+            let b = item_hash(it) % s;
+            assert_eq!(a, b, "routing not deterministic");
+            counts[a as usize] += 1;
+        }
+        // each shard gets a non-degenerate share (uniform would be 100)
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 40, "shard {i} starved: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_shard_engine_matches_fishdbc_exactly() {
+        let items = blob_items(300, 5);
+        let p = FishdbcParams { min_pts: 5, ef: 20, ..Default::default() };
+
+        let mut f = Fishdbc::new(MetricKind::Euclidean, p);
+        for it in items.iter().cloned() {
+            f.add(it);
+        }
+        let want = f.cluster(5);
+
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            fishdbc: p,
+            shards: 1,
+            mcs: 5,
+            ..Default::default()
+        });
+        for chunk in items.chunks(37) {
+            engine.add_batch(chunk.to_vec());
+        }
+        let snap = engine.cluster(5);
+        assert_eq!(snap.n_items, 300);
+        assert_eq!(snap.n_bridge_edges, 0, "no bridges with one shard");
+        assert_eq!(snap.clustering.labels, want.labels);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn stats_aggregate_across_shards() {
+        let items = blob_items(240, 7);
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            shards: 3,
+            ..Default::default()
+        });
+        engine.add_batch(items);
+        let s = engine.stats();
+        assert_eq!(s.items, 240);
+        assert_eq!(s.shard_stats.len(), 3);
+        assert!(s.dist_calls > 0);
+        assert!(s.batches >= 3, "every non-empty shard saw its sub-batch");
+        assert_eq!(engine.len(), 240);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn empty_batches_and_empty_cluster() {
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig::default());
+        engine.add_batch(vec![]);
+        assert!(engine.is_empty());
+        let snap = engine.cluster(5);
+        assert_eq!(snap.n_items, 0);
+        assert_eq!(snap.clustering.n_clusters, 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let items = blob_items(80, 9);
+        {
+            let engine =
+                Engine::spawn(MetricKind::Euclidean, EngineConfig::default());
+            engine.add_batch(items);
+        } // drop must join all workers without deadlock
+    }
+}

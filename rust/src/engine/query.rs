@@ -1,0 +1,129 @@
+//! Online label queries: "which cluster would this item join?" answered
+//! against the latest merged snapshot via read-only HNSW search across all
+//! shards — the serving primitive a production deployment puts behind its
+//! API. No state is mutated and no distance-call counters move.
+
+use crate::distances::Item;
+use crate::fishdbc::majority_vote;
+
+use super::{Engine, EngineSnapshot};
+
+impl Engine {
+    /// Label an external item against the latest snapshot (extracting one
+    /// with `config.mcs` only when none exists yet), using MinPts nearest
+    /// neighbors as voters. Returns -1 for noise/unknown.
+    ///
+    /// Serving is **staleness-bounded**, like the coordinator's `latest()`:
+    /// items ingested since the last [`Engine::cluster`] call are searched
+    /// (the HNSWs are live) but vote as noise until the next merge.
+    /// Re-merging per query would stall ingest behind a flush barrier and
+    /// an O(n) bridge search — callers control freshness by calling
+    /// [`Engine::cluster`] on their own threshold or timer.
+    pub fn label(&self, item: &Item) -> i32 {
+        self.label_with(item, self.config().fishdbc.min_pts)
+    }
+
+    /// [`Engine::label`] with an explicit voter count `k`.
+    pub fn label_with(&self, item: &Item, k: usize) -> i32 {
+        let snap = match self.latest() {
+            Some(s) => s,
+            None => self.cluster(self.config().mcs),
+        };
+        self.label_against(item, &snap, k)
+    }
+
+    /// Label against a caller-held snapshot: the serving path pins one
+    /// snapshot and answers many queries against it while ingestion (and
+    /// even re-merging) continues. Majority vote among the `k` globally
+    /// nearest clustered neighbors (noise neighbors abstain; ties break
+    /// toward the smaller label for determinism).
+    pub fn label_against(
+        &self,
+        item: &Item,
+        snap: &EngineSnapshot,
+        k: usize,
+    ) -> i32 {
+        let k = k.max(1);
+        // k nearest per shard, then merge to the global k nearest
+        let mut hits: Vec<(f64, u32)> = Vec::new();
+        for shard in self.shard_handles() {
+            let st = shard.state.read().unwrap();
+            for (id, d) in st.f.nearest(item, k, None) {
+                hits.push((d, st.globals[id as usize]));
+            }
+        }
+        hits.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+        majority_vote(hits.iter().take(k).map(|&(_, gid)| {
+            snap.clustering.labels.get(gid as usize).copied().unwrap_or(-1)
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::datasets;
+    use crate::distances::{Item, MetricKind};
+    use crate::engine::{Engine, EngineConfig};
+    use crate::fishdbc::FishdbcParams;
+
+    fn engine_on_blobs(n: usize, shards: usize, seed: u64) -> (Engine, Vec<Item>) {
+        let items = datasets::blobs::generate(n, 16, 3, seed).items;
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            fishdbc: FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+            shards,
+            mcs: 5,
+            ..Default::default()
+        });
+        for chunk in items.chunks(64) {
+            engine.add_batch(chunk.to_vec());
+        }
+        (engine, items)
+    }
+
+    #[test]
+    fn label_matches_stored_item_and_does_not_mutate() {
+        let (engine, items) = engine_on_blobs(450, 3, 31);
+        let snap = engine.cluster(5);
+        assert!(snap.clustering.n_clusters >= 2);
+
+        // probe copies of stored items: they must land in their own cluster
+        let mut agree = 0;
+        let mut checked = 0;
+        for (i, it) in items.iter().enumerate().take(20) {
+            let want = snap.clustering.labels[i];
+            if want < 0 {
+                continue; // noise points may legitimately vote elsewhere
+            }
+            checked += 1;
+            if engine.label(it) == want {
+                agree += 1;
+            }
+        }
+        assert!(checked > 10, "too many noise probes to test");
+        assert!(agree * 10 >= checked * 9, "label agreed on {agree}/{checked}");
+
+        // queries must not have inserted or recounted anything
+        let stats = engine.stats();
+        assert_eq!(stats.items, 450);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn label_on_empty_engine_is_noise() {
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig::default());
+        assert_eq!(engine.label(&Item::Dense(vec![0.0, 0.0])), -1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn label_with_pinned_snapshot() {
+        let (engine, items) = engine_on_blobs(300, 2, 37);
+        let snap = engine.cluster(5);
+        // serving path: pin the snapshot, keep ingesting, queries still work
+        engine.add_batch(items[..32].to_vec());
+        let l = engine.label_against(&items[0], &snap, 5);
+        assert!(l >= -1);
+        assert!((l as i64) < snap.clustering.n_clusters as i64);
+        engine.shutdown();
+    }
+}

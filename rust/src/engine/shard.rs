@@ -1,0 +1,113 @@
+//! One shard of the parallel ingest engine: a worker thread owning a
+//! [`Fishdbc`] over a hash-partitioned slice of the item space, plus the
+//! local→global id map that lets the merge relabel its MSF edges.
+//!
+//! The state sits behind an `RwLock` so the merge and the online query path
+//! can read it concurrently; only the shard's own worker ever writes, and it
+//! never takes another shard's lock — no lock-ordering cycles exist.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::distances::{Item, MetricKind};
+use crate::fishdbc::{Fishdbc, FishdbcParams};
+
+/// Commands a shard worker processes in FIFO order.
+pub(crate) enum ShardCmd {
+    /// Insert `(global id, item)` pairs (ids were assigned by the router).
+    AddBatch(Vec<(u32, Item)>),
+    /// Drain the queue up to this point, fold buffered candidate edges into
+    /// the local MSF, then ack — the engine's barrier primitive.
+    Flush(SyncSender<()>),
+    Shutdown,
+}
+
+/// Shard-local state: the FISHDBC instance plus bookkeeping.
+pub(crate) struct ShardState {
+    pub f: Fishdbc<Item, MetricKind>,
+    /// `globals[local_id] = global_id` (dense, append-only).
+    pub globals: Vec<u32>,
+    pub batches: u64,
+    /// Wall time this shard spent inserting (its lane of the build).
+    pub build_secs: f64,
+}
+
+impl ShardState {
+    pub fn new(metric: MetricKind, params: FishdbcParams) -> ShardState {
+        ShardState {
+            f: Fishdbc::new(metric, params),
+            globals: Vec::new(),
+            batches: 0,
+            build_secs: 0.0,
+        }
+    }
+}
+
+/// Handle to one running shard worker.
+pub(crate) struct Shard {
+    pub state: Arc<RwLock<ShardState>>,
+    tx: SyncSender<ShardCmd>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Shard {
+    /// Spawn a fresh, empty shard.
+    pub fn spawn(
+        id: usize,
+        metric: MetricKind,
+        params: FishdbcParams,
+        queue_depth: usize,
+    ) -> Shard {
+        Shard::resume(id, ShardState::new(metric, params), queue_depth)
+    }
+
+    /// Spawn a worker around pre-existing state (engine reload).
+    pub fn resume(id: usize, state: ShardState, queue_depth: usize) -> Shard {
+        let (tx, rx) = sync_channel(queue_depth.max(1));
+        let state = Arc::new(RwLock::new(state));
+        let worker_state = Arc::clone(&state);
+        let handle = std::thread::Builder::new()
+            .name(format!("fishdbc-shard-{id}"))
+            .spawn(move || run(worker_state, rx))
+            .expect("spawn shard worker");
+        Shard { state, tx, handle: Some(handle) }
+    }
+
+    /// Enqueue a command (blocks when the queue is full — backpressure).
+    pub fn send(&self, cmd: ShardCmd) {
+        self.tx.send(cmd).expect("shard worker gone");
+    }
+
+    /// Idempotent: safe to call from both `Engine::shutdown` and `Drop`.
+    pub fn shutdown(&mut self) {
+        let _ = self.tx.send(ShardCmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run(state: Arc<RwLock<ShardState>>, rx: Receiver<ShardCmd>) {
+    loop {
+        match rx.recv() {
+            Err(_) => break, // engine dropped without Shutdown
+            Ok(ShardCmd::AddBatch(batch)) => {
+                let t0 = Instant::now();
+                let mut st = state.write().unwrap();
+                for (gid, item) in batch {
+                    st.f.add(item);
+                    st.globals.push(gid);
+                }
+                st.batches += 1;
+                st.build_secs += t0.elapsed().as_secs_f64();
+            }
+            Ok(ShardCmd::Flush(reply)) => {
+                state.write().unwrap().f.update_mst();
+                let _ = reply.send(());
+            }
+            Ok(ShardCmd::Shutdown) => break,
+        }
+    }
+}

@@ -259,6 +259,21 @@ impl<T, M: Metric<T>> Fishdbc<T, M> {
         &self.msf
     }
 
+    /// Current MSF edges (weight ascending). Call [`Fishdbc::update_mst`]
+    /// first if buffered candidates must be included — the engine's flush
+    /// barrier does exactly that before collecting per-shard forests.
+    pub fn msf_edges(&self) -> &[Edge] {
+        self.msf.edges()
+    }
+
+    /// All core distances, indexed by item id (+∞ while fewer than MinPts
+    /// neighbors are known). Bulk accessor for the engine's cross-shard
+    /// merge, which weights bridge edges by mutual reachability under the
+    /// two shards' core distances.
+    pub fn core_distances(&self) -> Vec<f64> {
+        (0..self.items.len() as u32).map(|i| self.neighbors.core(i)).collect()
+    }
+
     /// Build an MSF from the *final k-nearest-neighbor graph only* — the
     /// "simpler design" the paper argues against in §3.1 ("computing the
     /// MST based on the nearest neighbor distances in the bottom graph …
@@ -349,18 +364,11 @@ impl<T, M: Metric<T>> Fishdbc<T, M> {
     /// is empty). This is how a streaming deployment labels fresh events
     /// between (cheap) re-clusterings.
     pub fn classify(&self, query: &T, labels: &[i32], k: usize) -> i32 {
-        let mut votes: HashMap<i32, usize> = HashMap::new();
-        for (id, _) in self.nearest(query, k, None) {
-            let l = labels.get(id as usize).copied().unwrap_or(-1);
-            if l >= 0 {
-                *votes.entry(l).or_default() += 1;
-            }
-        }
-        votes
-            .into_iter()
-            .max_by_key(|&(_, c)| c)
-            .map(|(l, _)| l)
-            .unwrap_or(-1)
+        majority_vote(
+            self.nearest(query, k, None)
+                .into_iter()
+                .map(|(id, _)| labels.get(id as usize).copied().unwrap_or(-1)),
+        )
     }
 
     /// Approximate state size in bytes (Theorem 3.1's O(n log n) claim is
@@ -372,6 +380,24 @@ impl<T, M: Metric<T>> Fishdbc<T, M> {
         let hnsw_links = self.items.len() * (self.params.min_pts * 2 + 8);
         edges * 24 + heap_entries * 12 + hnsw_links * 4
     }
+}
+
+/// Majority vote over neighbor labels: noise (-1) abstains, ties break
+/// toward the smaller label so serving is deterministic. Shared by
+/// [`Fishdbc::classify`] and the engine's online label queries
+/// (`crate::engine::Engine::label`); -1 when every voter abstains.
+pub fn majority_vote(labels: impl IntoIterator<Item = i32>) -> i32 {
+    let mut votes: HashMap<i32, usize> = HashMap::new();
+    for l in labels {
+        if l >= 0 {
+            *votes.entry(l).or_default() += 1;
+        }
+    }
+    votes
+        .into_iter()
+        .max_by_key(|&(l, c)| (c, -l))
+        .map(|(l, _)| l)
+        .unwrap_or(-1)
 }
 
 #[cfg(test)]

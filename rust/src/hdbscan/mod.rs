@@ -8,6 +8,7 @@
 
 pub mod condense;
 pub mod exact;
+#[cfg(feature = "xla")]
 pub mod exact_pjrt;
 pub mod export;
 pub mod extract;

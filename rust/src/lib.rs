@@ -8,13 +8,16 @@
 //!   [`hnsw`] (neighbor discovery with distance-call interception),
 //!   [`mst`] (incremental minimum spanning forests), [`hdbscan`]
 //!   (condensed-tree extraction + the exact O(n²) baseline), [`fishdbc`]
-//!   (Algorithm 1), [`metrics`], [`datasets`], and a streaming
-//!   [`coordinator`].
+//!   (Algorithm 1), [`metrics`], [`datasets`], a streaming
+//!   [`coordinator`] (single-shard reference path), and the sharded
+//!   parallel [`engine`] (multi-core ingest + global merge + online
+//!   label queries).
 //! * **Layer 2/1 (python/, build-time only)** — JAX distance graphs with
 //!   Pallas kernels, AOT-lowered to HLO text artifacts.
-//! * **[`runtime`]** — loads those artifacts via the `xla` crate (PJRT)
-//!   so vector-distance batches can run through the compiled kernels with
-//!   Python never on the request path.
+//! * **[`runtime`]** (feature `xla`, off by default) — loads those
+//!   artifacts via the `xla` crate (PJRT) so vector-distance batches can
+//!   run through the compiled kernels with Python never on the request
+//!   path. The default build is fully offline with zero external crates.
 //!
 //! ## Quickstart
 //!
@@ -30,17 +33,48 @@
 //! let clustering = clusterer.cluster(2);
 //! println!("{:?}", clustering.labels);
 //! ```
+//!
+//! ## Sharded parallel ingest ([`engine`])
+//!
+//! When one core is not enough, the engine hash-routes the stream across
+//! `S` shard-local FISHDBC instances (one thread each), then merges the
+//! per-shard spanning forests plus a bounded set of cross-shard *bridge
+//! edges* with a single Kruskal + condense pass. [`engine::Engine::label`]
+//! answers "which cluster would this item join?" against the latest
+//! snapshot without mutating any state — the serving primitive of a
+//! production deployment.
+//!
+//! ```no_run
+//! use fishdbc::engine::{Engine, EngineConfig};
+//! use fishdbc::{Item, MetricKind};
+//!
+//! let engine = Engine::spawn(
+//!     MetricKind::Euclidean,
+//!     EngineConfig { shards: 4, ..Default::default() },
+//! );
+//! engine.add_batch(vec![
+//!     Item::Dense(vec![0.0, 0.0]),
+//!     Item::Dense(vec![0.1, 0.0]),
+//!     Item::Dense(vec![9.0, 9.0]),
+//! ]);
+//! let snapshot = engine.cluster(2);
+//! println!("{:?}", snapshot.clustering.labels);
+//! let label = engine.label(&Item::Dense(vec![0.05, 0.0]));
+//! println!("online query joins cluster {label}");
+//! ```
 
 pub mod cli;
 pub mod coordinator;
 pub mod datasets;
 pub mod distances;
+pub mod engine;
 pub mod fishdbc;
 pub mod hdbscan;
 pub mod hnsw;
 pub mod metrics;
 pub mod mst;
 pub mod persist;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod util;
 

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run        cluster a generated dataset (FISHDBC and/or exact HDBSCAN*)
 //!   stream     streaming-coordinator demo with periodic re-clustering
+//!   engine     sharded parallel ingest + global merge + online labels
 //!   artifacts  list the AOT modules the PJRT runtime can load
 //!   help       this text
 //!
@@ -10,21 +11,24 @@
 //!   fishdbc run --dataset blobs --n 10000 --dim 1000 --ef 20 --quality
 //!   fishdbc run --dataset usps --n 2196 --exact --quality
 //!   fishdbc stream --dataset reviews --n 5000 --chunk 250 --recluster-every 1000
+//!   fishdbc engine --dataset blobs --n 50000 --shards 4 --quality
 //!   fishdbc artifacts
 
 use fishdbc::cli;
 use fishdbc::coordinator::{Coordinator, CoordinatorConfig};
 use fishdbc::datasets;
+use fishdbc::engine::{Engine, EngineConfig};
 use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
 use fishdbc::hdbscan::exact::{exact_hdbscan, ExactParams};
 use fishdbc::metrics::{internal, score_external};
+#[cfg(feature = "xla")]
 use fishdbc::runtime::{default_artifacts_dir, Runtime};
 use fishdbc::{Item, MetricKind};
 
 const VALUE_KEYS: &[&str] = &[
     "dataset", "n", "dim", "ef", "min-pts", "mcs", "alpha", "seed", "chunk",
     "recluster-every", "metric", "silhouette-max", "input", "format", "save",
-    "load", "out", "labels-out", "efs",
+    "load", "out", "labels-out", "efs", "shards", "bridge-k", "bridge-fanout",
 ];
 
 fn main() {
@@ -40,6 +44,7 @@ fn main() {
     let result = match cmd {
         "run" => cmd_run(&args),
         "stream" => cmd_stream(&args),
+        "engine" => cmd_engine(&args),
         "export" => cmd_export(&args),
         "sweep" => cmd_sweep(&args),
         "artifacts" => cmd_artifacts(),
@@ -59,7 +64,7 @@ fn print_help() {
     println!(
         "fishdbc — flexible incremental scalable hierarchical density-based clustering
 
-USAGE: fishdbc <run|stream|export|sweep|artifacts|help> [options]
+USAGE: fishdbc <run|stream|engine|export|sweep|artifacts|help> [options]
 
 Common options:
   --dataset NAME    one of {names}   (default blobs)
@@ -93,7 +98,16 @@ sweep options:
 
 stream options:
   --chunk C            ingestion batch size (default 200)
-  --recluster-every R  auto re-cluster period in items (default 1000)",
+  --recluster-every R  auto re-cluster period in items (default 1000)
+
+engine options (sharded parallel ingest, global MSF merge, online labels):
+  --shards S        shard worker threads (default 4; 1 = single-core path)
+  --chunk C         ingestion batch size (default 512)
+  --bridge-k K      nearest remote neighbors per (item, shard) (default 3)
+  --bridge-fanout F other shards sampled per item (default S-1)
+  --save PATH       persist the multi-shard engine state after building
+  --load PATH       resume a saved engine state (then add items on top)
+  --quality         external metrics vs the generator labels (fresh runs)",
         names = datasets::DATASET_NAMES.join("|")
     );
 }
@@ -308,6 +322,123 @@ fn cmd_stream(args: &cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `fishdbc engine`: sharded parallel ingest across S worker threads,
+/// global MSF merge (per-shard forests + bridge edges), and an online
+/// label-query demo against the merged snapshot.
+fn cmd_engine(args: &cli::Args) -> Result<(), String> {
+    let ds = load_dataset(args)?;
+    let (params, mcs) = params_from(args)?;
+    let metric = metric_override(args, &ds)?;
+    let shards = args.usize_or("shards", 4)?;
+    if shards == 0 {
+        return Err("--shards must be at least 1".into());
+    }
+    let chunk = args.usize_or("chunk", 512)?;
+    let bridge_k = args.usize_or("bridge-k", 3)?;
+    let bridge_fanout =
+        args.usize_or("bridge-fanout", shards.saturating_sub(1).max(1))?;
+
+    let (engine, resumed) = match args.get("load") {
+        Some(path) => {
+            let e = Engine::load_from_path(path)
+                .map_err(|e| format!("loading engine state {path}: {e}"))?;
+            if e.metric() != metric {
+                return Err(format!(
+                    "engine state {path} was built with metric {}, but the \
+                     dataset/--metric selects {} — refusing to mix",
+                    e.metric().name(),
+                    metric.name()
+                ));
+            }
+            println!(
+                "resumed engine: {} shards, {} items already indexed \
+                 (state fixes --shards/--ef/--min-pts/--bridge-k/\
+                 --bridge-fanout; those flags are ignored)",
+                e.n_shards(),
+                e.len()
+            );
+            (e, true)
+        }
+        None => (
+            Engine::spawn(metric, EngineConfig {
+                fishdbc: params,
+                shards,
+                mcs,
+                bridge_k,
+                bridge_fanout,
+                queue_depth: 16,
+            }),
+            false,
+        ),
+    };
+
+    // report the *effective* parameters (on --load they come from the
+    // state file, not the CLI flags)
+    let eff = engine.config().fishdbc;
+    println!(
+        "engine: {} shards, dataset {} ({} items), metric {}, ef={} MinPts={} \
+         mcs={mcs} bridge_k={} fanout={}",
+        engine.n_shards(),
+        ds.name,
+        ds.n(),
+        metric.name(),
+        eff.ef,
+        eff.min_pts,
+        engine.config().bridge_k,
+        engine.config().bridge_fanout,
+    );
+
+    let t0 = std::time::Instant::now();
+    for batch in ds.items.chunks(chunk) {
+        engine.add_batch(batch.to_vec());
+    }
+    engine.flush();
+    let ingest = t0.elapsed().as_secs_f64();
+    let stats = engine.stats();
+    println!(
+        "ingest: {ingest:.3}s wall ({:.0} items/s) | busiest shard {:.3}s | \
+         {} dist calls across {} shards",
+        ds.n() as f64 / ingest.max(1e-9),
+        stats.build_secs,
+        stats.dist_calls,
+        engine.n_shards(),
+    );
+    for (i, s) in stats.shard_stats.iter().enumerate() {
+        println!(
+            "  shard {i}: {:>7} items {:>10} dist calls {:>7} MSF edges",
+            s.items, s.dist_calls, s.msf_edges
+        );
+    }
+
+    let snap = engine.cluster(mcs);
+    println!(
+        "merge: {:.3}s | {} forest edges ({} bridges offered) | {} flat \
+         clusters, {} clustered",
+        snap.extract_secs,
+        snap.n_msf_edges,
+        snap.n_bridge_edges,
+        snap.clustering.n_clusters,
+        snap.clustering.n_clustered(),
+    );
+
+    // global ids are arrival order, so labels align with the dataset —
+    // unless we resumed on top of pre-existing items
+    if !resumed {
+        report_quality(args, &ds, metric, "Engine", &snap.clustering)?;
+    } else if args.flag("quality") {
+        println!("  (skipping --quality: resumed state offsets the labels)");
+    }
+
+    if let Some(path) = args.get("save") {
+        engine
+            .save_to_path(path)
+            .map_err(|e| format!("saving {path}: {e}"))?;
+        println!("engine state saved to {path} ({} items)", engine.len());
+    }
+    engine.shutdown();
+    Ok(())
+}
+
 /// `fishdbc export`: cluster, then write the hierarchy in the requested
 /// format (json | dot | newick | tree).
 fn cmd_export(args: &cli::Args) -> Result<(), String> {
@@ -395,6 +526,7 @@ fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_artifacts() -> Result<(), String> {
     let dir = default_artifacts_dir();
     let rt = Runtime::load(&dir).map_err(|e| format!("{e:#}"))?;
@@ -408,4 +540,11 @@ fn cmd_artifacts() -> Result<(), String> {
         );
     }
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_artifacts() -> Result<(), String> {
+    Err("the `artifacts` command needs the PJRT runtime — rebuild with \
+         `--features xla` in the accelerator image (see rust/Cargo.toml)"
+        .into())
 }

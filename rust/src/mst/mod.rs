@@ -117,6 +117,20 @@ impl Msf {
         Msf::from_edges(edges, n_nodes)
     }
 
+    /// Edge-union Kruskal: one pass over the concatenation of several edge
+    /// lists — the engine's global merge (per-shard MSFs + bridge edges).
+    /// Correct by the same lemma as [`Msf::update`]: an MSF of a union graph
+    /// only ever uses edges drawn from the MSFs of its parts plus the extra
+    /// (bridge) edges offered alongside them.
+    pub fn from_edge_lists(lists: &[&[Edge]], n_nodes: usize) -> Self {
+        let total = lists.iter().map(|l| l.len()).sum();
+        let mut edges = Vec::with_capacity(total);
+        for l in lists {
+            edges.extend_from_slice(l);
+        }
+        Msf::from_edges(edges, n_nodes)
+    }
+
     /// Number of connected components among `n` nodes given this forest.
     pub fn components(&self) -> usize {
         self.n - self.edges.len()
@@ -260,6 +274,36 @@ mod tests {
                 batch.total_weight()
             );
             assert_eq!(inc.edges().len(), batch.edges().len());
+        });
+    }
+
+    #[test]
+    fn prop_edge_union_equals_oneshot() {
+        // Kruskal over concatenated per-part MSFs + extra edges must match
+        // one-shot Kruskal over everything (the engine-merge invariant).
+        check("edge-union-eq-oneshot", 30, |rng, _| {
+            let n = 4 + rng.below(40);
+            let all = random_graph(rng, n, 2 + rng.below(n * 3));
+            let cut = rng.below(all.len());
+            let (left, right) = all.split_at(cut);
+            let part_a = Msf::from_edges(left.to_vec(), n);
+            let part_b = Msf::from_edges(right.to_vec(), n);
+            let bridges = random_graph(rng, n, 1 + rng.below(n));
+
+            let union = Msf::from_edge_lists(
+                &[part_a.edges(), part_b.edges(), &bridges],
+                n,
+            );
+            let mut oneshot_edges = all.to_vec();
+            oneshot_edges.extend_from_slice(&bridges);
+            let oneshot = Msf::from_edges(oneshot_edges, n);
+            assert!(
+                (union.total_weight() - oneshot.total_weight()).abs() < 1e-9,
+                "union {} vs oneshot {}",
+                union.total_weight(),
+                oneshot.total_weight()
+            );
+            assert_eq!(union.edges().len(), oneshot.edges().len());
         });
     }
 

@@ -12,12 +12,18 @@
 use std::io::{self, Read, Write};
 
 use crate::distances::{bitmap::Bitmap, fuzzy::Digest, Item, MetricKind};
+use crate::engine::shard::ShardState;
+use crate::engine::{Engine, EngineConfig};
 use crate::fishdbc::{neighbors::NeighborStore, Fishdbc, FishdbcParams};
 use crate::hnsw::{Hnsw, HnswExport, HnswParams};
 use crate::mst::{Edge, Msf};
 
 const MAGIC: &[u8; 8] = b"FISHDBC\0";
 const VERSION: u8 = 1;
+/// Multi-shard engine container: its own magic + version so single-instance
+/// and engine state files are never confused.
+const ENGINE_MAGIC: &[u8; 8] = b"FISHENG\0";
+const ENGINE_VERSION: u8 = 1;
 /// Sanity cap on any single length prefix (guards corrupt files from
 /// triggering huge allocations).
 const MAX_LEN: u64 = 1 << 33;
@@ -493,6 +499,146 @@ impl Fishdbc<Item, MetricKind> {
     }
 }
 
+// ---------------------------------------------------------- engine codec --
+
+impl Engine {
+    /// Serialize the complete multi-shard engine state: a versioned
+    /// container holding every shard's full FISHDBC snapshot plus its
+    /// local→global id map, so a sharded deployment survives restarts and
+    /// keeps ingesting **exactly** where it left off (same routing, same
+    /// per-shard RNG streams, same future clusterings). Flushes first so no
+    /// queued batch is lost.
+    pub fn save<W: Write>(&self, w: W) -> io::Result<()> {
+        // Consistent cut under concurrent ingest: barrier, lock every
+        // shard, then verify the locked states form a dense id space
+        // 0..total (a batch routed between the barrier and the locks
+        // leaves a gap in some shard); if one slipped in, re-barrier.
+        // Items accepted after the locks are simply not in the checkpoint.
+        let guards = loop {
+            self.flush();
+            let guards: Vec<_> = self
+                .shard_handles()
+                .iter()
+                .map(|s| s.state.read().unwrap())
+                .collect();
+            let total: usize = guards.iter().map(|g| g.f.len()).sum();
+            // true maximum, not .last(): interleaved add_batch callers can
+            // leave a shard's globals non-monotone
+            let max_gid = guards
+                .iter()
+                .filter_map(|g| g.globals.iter().copied().max())
+                .max()
+                .map_or(0, |m| m as usize + 1);
+            if max_gid == total {
+                break guards;
+            }
+            drop(guards);
+        };
+        let next_global: u64 =
+            guards.iter().map(|g| g.f.len() as u64).sum();
+
+        let mut w = BinWriter::new(w);
+        w.w.write_all(ENGINE_MAGIC)?;
+        w.u8(ENGINE_VERSION)?;
+
+        let cfg = *self.config();
+        w.str(self.metric().name())?;
+        w.u64(self.n_shards() as u64)?;
+        w.u64(next_global)?;
+        w.u64(cfg.mcs as u64)?;
+        w.u64(cfg.bridge_k as u64)?;
+        w.u64(cfg.bridge_fanout as u64)?;
+        w.u64(cfg.queue_depth as u64)?;
+
+        for st in &guards {
+            w.u32s(&st.globals)?;
+            w.u64(st.batches)?;
+            w.f64(st.build_secs)?;
+            // nested single-instance snapshot (own magic + version)
+            st.f.save(&mut w.w)?;
+        }
+        Ok(())
+    }
+
+    /// Reload an engine previously written by [`Engine::save`]. All reads
+    /// are validated: shard counts, id-map lengths, global-id ranges and
+    /// per-shard metrics must be mutually consistent or the load errors
+    /// (never panics).
+    pub fn load<R: Read>(r: R) -> io::Result<Engine> {
+        let mut r = BinReader::new(r);
+        let mut magic = [0u8; 8];
+        r.r.read_exact(&mut magic)?;
+        if &magic != ENGINE_MAGIC {
+            return Err(bad("not a FISHDBC engine state file"));
+        }
+        if r.u8()? != ENGINE_VERSION {
+            return Err(bad("unsupported engine format version"));
+        }
+
+        let metric_name = r.str()?;
+        let metric = MetricKind::parse(&metric_name)
+            .ok_or_else(|| bad(&format!("unknown metric {metric_name:?}")))?;
+        let n_shards = r.u64()? as usize;
+        if n_shards == 0 || n_shards > 4096 {
+            return Err(bad("implausible shard count"));
+        }
+        let next_global = r.u64()?;
+        let mcs = r.u64()? as usize;
+        let bridge_k = r.u64()? as usize;
+        let bridge_fanout = r.u64()? as usize;
+        let queue_depth = r.u64()? as usize;
+
+        let mut states = Vec::with_capacity(n_shards);
+        let mut total = 0u64;
+        let mut params: Option<FishdbcParams> = None;
+        for _ in 0..n_shards {
+            let globals = r.u32s()?;
+            let batches = r.u64()?;
+            let build_secs = r.f64()?;
+            let f = Fishdbc::load(&mut r.r)?;
+            if f.len() != globals.len() {
+                return Err(bad("shard global-id map length mismatch"));
+            }
+            if globals.iter().any(|&g| g as u64 >= next_global) {
+                return Err(bad("shard global id out of range"));
+            }
+            if *f.metric() != metric {
+                return Err(bad("shard metric disagrees with engine header"));
+            }
+            total += globals.len() as u64;
+            if params.is_none() {
+                params = Some(*f.params());
+            }
+            states.push(ShardState { f, globals, batches, build_secs });
+        }
+        if total != next_global {
+            return Err(bad("shard item counts do not sum to the global count"));
+        }
+
+        let config = EngineConfig {
+            fishdbc: params.unwrap_or_default(),
+            shards: n_shards,
+            mcs,
+            bridge_k,
+            bridge_fanout,
+            queue_depth,
+        };
+        Ok(Engine::from_resumed(metric, config, states, next_global))
+    }
+
+    /// Save to a file path (convenience).
+    pub fn save_to_path(&self, path: impl AsRef<std::path::Path>) -> io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        self.save(io::BufWriter::new(f))
+    }
+
+    /// Load from a file path (convenience).
+    pub fn load_from_path(path: impl AsRef<std::path::Path>) -> io::Result<Engine> {
+        let f = std::fs::File::open(path)?;
+        Self::load(io::BufReader::new(f))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -612,5 +758,74 @@ mod tests {
         let g = Fishdbc::<Item, MetricKind>::load_from_path(&path).unwrap();
         assert_eq!(g.len(), 80);
         let _ = std::fs::remove_file(&path);
+    }
+
+    fn build_engine(n: usize, shards: usize, seed: u64) -> Engine {
+        let ds = datasets::blobs::generate(n, 8, 4, seed);
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            fishdbc: FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+            shards,
+            mcs: 5,
+            ..Default::default()
+        });
+        for chunk in ds.items.chunks(50) {
+            engine.add_batch(chunk.to_vec());
+        }
+        engine
+    }
+
+    #[test]
+    fn engine_roundtrip_preserves_clustering() {
+        let engine = build_engine(300, 3, 8);
+        let want = engine.cluster(5);
+
+        let mut buf = Vec::new();
+        engine.save(&mut buf).unwrap();
+        let reloaded = Engine::load(buf.as_slice()).unwrap();
+        assert_eq!(reloaded.n_shards(), 3);
+        assert_eq!(reloaded.len(), 300);
+        let got = reloaded.cluster(5);
+        assert_eq!(got.clustering.labels, want.clustering.labels);
+        assert_eq!(got.n_msf_edges, want.n_msf_edges);
+        engine.shutdown();
+        reloaded.shutdown();
+    }
+
+    #[test]
+    fn engine_and_single_instance_files_are_distinct() {
+        let engine = build_engine(60, 2, 9);
+        let mut ebuf = Vec::new();
+        engine.save(&mut ebuf).unwrap();
+        engine.shutdown();
+        // engine file is not a valid single-instance file and vice versa
+        assert!(Fishdbc::load(ebuf.as_slice()).is_err());
+        let f = build(60, 9);
+        let mut fbuf = Vec::new();
+        f.save(&mut fbuf).unwrap();
+        assert!(Engine::load(fbuf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn corrupt_engine_inputs_error_cleanly() {
+        let engine = build_engine(80, 2, 10);
+        let mut buf = Vec::new();
+        engine.save(&mut buf).unwrap();
+        engine.shutdown();
+
+        // wrong magic / version
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(Engine::load(bad.as_slice()).is_err());
+        let mut bad = buf.clone();
+        bad[8] = 99;
+        assert!(Engine::load(bad.as_slice()).is_err());
+
+        // truncations at many offsets must error, never panic
+        for cut in [9, 25, buf.len() / 3, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                Engine::load(&buf[..cut]).is_err(),
+                "truncation at {cut} did not error"
+            );
+        }
     }
 }

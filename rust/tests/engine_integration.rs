@@ -1,0 +1,190 @@
+//! Engine integration tests: the S-shard merged clustering must agree with
+//! the single-shard reference (ARI ≥ 0.9 on blobs — ISSUE 1 acceptance),
+//! multi-shard state must round-trip through persistence mid-stream, and
+//! online label queries must serve without mutating anything.
+
+use fishdbc::datasets;
+use fishdbc::distances::{Item, MetricKind};
+use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
+use fishdbc::metrics::{adjusted_rand_index, score_external};
+
+fn blobs(n: usize, seed: u64) -> datasets::Dataset {
+    // dim 32 / 5 centers: decisively separated, so both the single-shard
+    // and the merged clustering should recover the generator classes
+    datasets::blobs::generate(n, 32, 5, seed)
+}
+
+fn params() -> FishdbcParams {
+    FishdbcParams { min_pts: 10, ef: 20, ..Default::default() }
+}
+
+/// Noise gets its own "class" so ARI compares full label vectors.
+fn to_pred(labels: &[i32]) -> Vec<usize> {
+    labels.iter().map(|&l| (l + 1) as usize).collect()
+}
+
+fn spawn_engine(shards: usize) -> Engine {
+    Engine::spawn(MetricKind::Euclidean, EngineConfig {
+        fishdbc: params(),
+        shards,
+        mcs: 10,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn sharded_merge_matches_single_shard_ari() {
+    let ds = blobs(2000, 11);
+    let truth = ds.primary_labels().unwrap().to_vec();
+
+    // single-shard reference: plain Fishdbc over the same stream
+    let mut f = Fishdbc::new(MetricKind::Euclidean, params());
+    for it in ds.items.iter().cloned() {
+        f.add(it);
+    }
+    let want = f.cluster(10);
+
+    // 4-shard engine over the same stream (global ids = arrival order, so
+    // the label vectors are directly comparable)
+    let engine = spawn_engine(4);
+    for chunk in ds.items.chunks(256) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let snap = engine.cluster(10);
+    assert_eq!(snap.n_items, 2000);
+    assert_eq!(snap.clustering.labels.len(), want.labels.len());
+
+    let ari = adjusted_rand_index(
+        &to_pred(&want.labels),
+        &to_pred(&snap.clustering.labels),
+    );
+    assert!(ari >= 0.9, "merged vs single-shard ARI {ari}");
+
+    // both must also recover the generator structure
+    let s_single = score_external(&want.labels, &truth);
+    let s_merged = score_external(&snap.clustering.labels, &truth);
+    assert!(s_single.ari >= 0.9, "single-shard vs truth ARI {}", s_single.ari);
+    assert!(s_merged.ari >= 0.9, "merged vs truth ARI {}", s_merged.ari);
+    engine.shutdown();
+}
+
+#[test]
+fn two_shard_merge_is_also_consistent() {
+    let ds = blobs(1000, 13);
+    let mut f = Fishdbc::new(MetricKind::Euclidean, params());
+    for it in ds.items.iter().cloned() {
+        f.add(it);
+    }
+    let want = f.cluster(10);
+
+    let engine = spawn_engine(2);
+    for chunk in ds.items.chunks(128) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let snap = engine.cluster(10);
+    let ari = adjusted_rand_index(
+        &to_pred(&want.labels),
+        &to_pred(&snap.clustering.labels),
+    );
+    assert!(ari >= 0.9, "2-shard vs single-shard ARI {ari}");
+    engine.shutdown();
+}
+
+#[test]
+fn chunking_schedule_is_irrelevant_per_shard() {
+    // routing is content-hashed and ids are arrival-ordered, so batch size
+    // must not change the merged clustering
+    let ds = blobs(600, 17);
+    let mut labels = Vec::new();
+    for chunk in [1usize, 64, 600] {
+        let engine = spawn_engine(3);
+        for batch in ds.items.chunks(chunk) {
+            engine.add_batch(batch.to_vec());
+        }
+        let snap = engine.cluster(10);
+        labels.push(snap.clustering.labels);
+        engine.shutdown();
+    }
+    assert_eq!(labels[0], labels[1], "batch size changed the clustering");
+    assert_eq!(labels[0], labels[2], "batch size changed the clustering");
+}
+
+#[test]
+fn persistence_roundtrip_resumes_mid_stream() {
+    let ds = blobs(1200, 19);
+
+    // uninterrupted engine over the whole stream
+    let whole = spawn_engine(3);
+    for chunk in ds.items.chunks(100) {
+        whole.add_batch(chunk.to_vec());
+    }
+    let want = whole.cluster(10);
+    whole.shutdown();
+
+    // same stream split across a save/load boundary
+    let first = spawn_engine(3);
+    for chunk in ds.items[..700].chunks(100) {
+        first.add_batch(chunk.to_vec());
+    }
+    let mut buf = Vec::new();
+    first.save(&mut buf).unwrap();
+    first.shutdown();
+
+    let resumed = Engine::load(buf.as_slice()).unwrap();
+    assert_eq!(resumed.len(), 700);
+    assert_eq!(resumed.n_shards(), 3);
+    for chunk in ds.items[700..].chunks(100) {
+        resumed.add_batch(chunk.to_vec());
+    }
+    let got = resumed.cluster(10);
+    assert_eq!(got.n_items, 1200);
+    assert_eq!(
+        got.clustering.labels, want.clustering.labels,
+        "resume diverged from the uninterrupted run"
+    );
+    resumed.shutdown();
+}
+
+#[test]
+fn online_labels_serve_and_do_not_mutate() {
+    let ds = blobs(800, 23);
+    let engine = spawn_engine(4);
+    engine.add_batch(ds.items.clone());
+    let snap = engine.cluster(10);
+    assert!(snap.clustering.n_clusters >= 3);
+
+    let calls_before: u64 = engine.stats().dist_calls;
+
+    // copies of clustered items must land in their own cluster
+    let mut agree = 0;
+    let mut checked = 0;
+    for (i, it) in ds.items.iter().enumerate().take(30) {
+        let want = snap.clustering.labels[i];
+        if want < 0 {
+            continue;
+        }
+        checked += 1;
+        if engine.label(it) == want {
+            agree += 1;
+        }
+    }
+    assert!(checked >= 20, "too many noise probes ({checked} clustered)");
+    assert!(agree * 10 >= checked * 9, "labels agreed on {agree}/{checked}");
+
+    // serving is read-only: nothing inserted, no distance-call drift
+    let stats = engine.stats();
+    assert_eq!(stats.items, 800);
+    assert_eq!(stats.dist_calls, calls_before);
+    engine.shutdown();
+}
+
+#[test]
+fn incompatible_items_rejected_in_caller() {
+    let engine = spawn_engine(2);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        engine.add_batch(vec![Item::Text("not a vector".into())]);
+    }));
+    assert!(result.is_err(), "type mismatch must panic in the caller");
+    engine.shutdown();
+}

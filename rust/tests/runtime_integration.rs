@@ -1,6 +1,9 @@
 //! Integration tests: PJRT runtime executing the AOT artifacts must agree
-//! with the native rust distance implementations. Requires `make artifacts`
-//! (tests are skipped with a notice when artifacts are absent).
+//! with the native rust distance implementations. Requires the `xla` feature
+//! and `make artifacts` (tests are skipped with a notice when artifacts are
+//! absent; the whole file is compiled out without the feature).
+
+#![cfg(feature = "xla")]
 
 use fishdbc::distances::vector;
 use fishdbc::runtime::{default_artifacts_dir, Runtime};
