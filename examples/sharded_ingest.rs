@@ -1,8 +1,10 @@
-//! Sharded parallel ingest: one stream fanned out to S shard-local FISHDBC
-//! instances (content-hash routing), merged back into one global clustering
-//! (per-shard MSFs + bounded cross-shard bridge edges, one Kruskal +
-//! condense pass), and served through online `label()` queries — the
-//! paper's *scalable, incremental* pitch on all available cores.
+//! Sharded parallel ingest with the epoch-based serving loop: one stream
+//! fanned out to S shard-local FISHDBC instances (content-hash routing), a
+//! background auto-recluster thread publishing merged snapshots while the
+//! stream is still flowing, and online `label_against()` queries served
+//! from a pinned `latest()` epoch — the paper's *scalable, incremental*
+//! pitch on all available cores, with recluster cost scaling in the delta
+//! since the previous epoch rather than in total n.
 //!
 //! Run with:
 //! ```text
@@ -27,22 +29,44 @@ fn main() {
         fishdbc: FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
         shards,
         mcs: 10,
+        // the serving loop: re-merge every 3000 items in the background;
+        // each merge publishes an epoch and refreshes the frozen snapshots
+        // that insert-time bridge discovery queries
+        recluster_every: 3000,
         ..Default::default()
     });
 
     // ---- ingest: hash-routed, backpressured, S insertion lanes ----------
+    // epochs appear via latest() while we are still streaming
     let t0 = Instant::now();
+    let mut seen_epoch = 0u64;
     for chunk in ds.items.chunks(256) {
         engine.add_batch(chunk.to_vec());
+        if let Some(snap) = engine.latest() {
+            if snap.epoch > seen_epoch {
+                seen_epoch = snap.epoch;
+                println!(
+                    "  epoch {}: n={:>6} clusters={:>3} merge={:.3}s \
+                     (bridge search {:.3}s)",
+                    snap.epoch,
+                    snap.n_items,
+                    snap.clustering.n_clusters,
+                    snap.extract_secs,
+                    snap.bridge_secs
+                );
+            }
+        }
     }
     engine.flush();
     let ingest = t0.elapsed().as_secs_f64();
     let stats = engine.stats();
     println!(
         "ingested {n} items through {shards} shards in {ingest:.2}s \
-         ({:.0} items/s; busiest shard {:.2}s)",
+         ({:.0} items/s; busiest shard {:.2}s; {} bridge edges found at \
+         insert time)",
         n as f64 / ingest.max(1e-9),
-        stats.build_secs
+        stats.build_secs,
+        stats.bridge_insert_edges
     );
     for (i, s) in stats.shard_stats.iter().enumerate() {
         println!(
@@ -51,14 +75,16 @@ fn main() {
         );
     }
 
-    // ---- merge: global forest from per-shard MSFs + bridges -------------
+    // ---- final merge: a *delta* epoch, not a from-scratch rebuild -------
     let snap = engine.cluster(10);
     println!(
-        "merge in {:.3}s: {} forest edges ({} bridges offered) -> {} clusters, \
-         {} of {} clustered",
+        "final merge (epoch {}) in {:.3}s: {} forest edges ({} bridges \
+         offered, {} shards changed) -> {} clusters, {} of {} clustered",
+        snap.epoch,
         snap.extract_secs,
         snap.n_msf_edges,
         snap.n_bridge_edges,
+        snap.n_changed_shards,
         snap.clustering.n_clusters,
         snap.clustering.n_clustered(),
         n
@@ -72,24 +98,29 @@ fn main() {
         quality.ami_star, quality.ari_star
     );
 
-    // ---- serve: online label queries against the pinned snapshot --------
+    // ---- serve: pin the latest epoch, answer online label queries -------
+    // (>=, not ==: the background loop may have squeezed in one more
+    // cheap epoch after our explicit merge)
+    let served = engine.latest().expect("an epoch is published");
+    assert!(served.epoch >= snap.epoch, "latest() went backwards");
     let probes: Vec<Item> = ds.items[..8].to_vec();
-    let t0 = Instant::now();
+    let t1 = Instant::now();
     let labels: Vec<i32> =
-        probes.iter().map(|p| engine.label_against(p, &snap, 10)).collect();
+        probes.iter().map(|p| engine.label_against(p, &served, 10)).collect();
     println!(
         "labeled {} probes in {:.4}s (read-only, no state mutated): {:?}",
         probes.len(),
-        t0.elapsed().as_secs_f64(),
+        t1.elapsed().as_secs_f64(),
         labels
     );
     let agree = labels
         .iter()
         .enumerate()
-        .filter(|&(i, &l)| l == snap.clustering.labels[i])
+        .filter(|&(i, &l)| l == served.clustering.labels[i])
         .count();
     println!("{agree}/{} probes landed in their own stored cluster", probes.len());
 
+    assert!(seen_epoch >= 1 || snap.epoch >= 1, "no epoch was ever published");
     assert!(snap.clustering.n_clusters >= 3, "blob structure must survive the merge");
     assert!(quality.ari_star > 0.8, "merged quality dropped: {:?}", quality);
     assert!(agree >= 6, "online labels disagree with the snapshot");

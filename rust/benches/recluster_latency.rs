@@ -1,0 +1,105 @@
+//! Recluster latency — the epoch-based delta merge vs a from-scratch
+//! merge (ISSUE 2 acceptance).
+//!
+//! Protocol: ingest n blob points, time the first `cluster()` (from
+//! scratch: full bridge search + full Kruskal + condense). Then add 1%
+//! more points and time the second `cluster()` — insert-time bridging and
+//! the delta merge should make it cost **< 25%** of the from-scratch call
+//! (printed as the acceptance line). A third `cluster()` with no new data
+//! shows the short-circuit floor.
+//!
+//! Run: `cargo bench --bench recluster_latency` (optional first arg
+//! overrides n, e.g. `-- 2000` for the CI smoke pass).
+
+use std::time::Instant;
+
+use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::{datasets, metrics::score_external};
+
+fn main() {
+    let n: usize = std::env::args()
+        .skip(1)
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(50_000);
+    let dim = 16;
+    let delta = (n / 100).max(1);
+    let ds = datasets::blobs::generate(n + delta, dim, 10, 42);
+    let truth: Vec<usize> = ds.primary_labels().unwrap().to_vec();
+
+    let engine = Engine::spawn(ds.metric, EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
+        shards: 4,
+        mcs: 10,
+        ..Default::default()
+    });
+    println!(
+        "# recluster latency: blobs n={n} (+{delta} = 1% delta), dim={dim}, \
+         4 shards, MinPts=10 ef=20"
+    );
+
+    for chunk in ds.items[..n].chunks(512) {
+        engine.add_batch(chunk.to_vec());
+    }
+    engine.flush();
+
+    let t0 = Instant::now();
+    let full = engine.cluster(10);
+    let full_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "full  cluster: {full_secs:8.3}s | bridge {:7.3}s kruskal {:7.3}s \
+         dendro {:7.3}s condense {:7.3}s | {} forest edges, {} bridges, \
+         {} changed shards",
+        full.bridge_secs,
+        full.kruskal_secs,
+        full.stages.dendrogram_secs,
+        full.stages.condense_secs + full.stages.extract_secs,
+        full.n_msf_edges,
+        full.n_bridge_edges,
+        full.n_changed_shards,
+    );
+
+    // +1% of the stream, then the incremental recluster
+    for chunk in ds.items[n..].chunks(512) {
+        engine.add_batch(chunk.to_vec());
+    }
+    engine.flush();
+    let t1 = Instant::now();
+    let inc = engine.cluster(10);
+    let inc_secs = t1.elapsed().as_secs_f64();
+    println!(
+        "delta cluster: {inc_secs:8.3}s | bridge {:7.3}s kruskal {:7.3}s \
+         dendro {:7.3}s condense {:7.3}s | {} forest edges, {} bridges, \
+         {} changed shards",
+        inc.bridge_secs,
+        inc.kruskal_secs,
+        inc.stages.dendrogram_secs,
+        inc.stages.condense_secs + inc.stages.extract_secs,
+        inc.n_msf_edges,
+        inc.n_bridge_edges,
+        inc.n_changed_shards,
+    );
+
+    // short-circuit floor: nothing changed
+    let t2 = Instant::now();
+    let idle = engine.cluster(10);
+    let idle_secs = t2.elapsed().as_secs_f64();
+    println!(
+        "idle  cluster: {idle_secs:8.3}s | reused extraction: {}",
+        idle.stages.reused_clustering
+    );
+
+    let quality = score_external(&inc.clustering.labels, &truth);
+    let ratio = inc_secs / full_secs.max(1e-9);
+    println!(
+        "# incremental recluster after +1%: {:.1}% of from-scratch \
+         (target < 25%), ARI* vs truth {:.3}",
+        ratio * 100.0,
+        quality.ari_star
+    );
+    println!(
+        "# acceptance: {}",
+        if ratio < 0.25 { "PASS" } else { "FAIL" }
+    );
+    engine.shutdown();
+}

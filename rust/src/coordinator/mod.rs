@@ -20,7 +20,11 @@
 //!   consecutive queued batches before bookkeeping (micro-batching);
 //! * **re-clustering** runs either on demand (`cluster()`) or
 //!   automatically every `recluster_every` items; the latest clustering
-//!   snapshot is shared via `latest()` without blocking ingestion.
+//!   snapshot is shared via `latest()` without blocking ingestion;
+//! * the MSF → dendrogram → condensed tree → extraction back half runs
+//!   through the same memoizing [`Pipeline`](crate::engine::pipeline) as
+//!   the sharded engine, so a re-cluster whose forest did not change
+//!   short-circuits, and a changed `mcs` reuses the cached dendrogram.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
@@ -28,6 +32,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::distances::{Item, MetricKind};
+use crate::engine::pipeline::{Pipeline, PipelineStats};
 use crate::fishdbc::{Fishdbc, FishdbcParams, FishdbcStats};
 use crate::hdbscan::Clustering;
 
@@ -72,6 +77,8 @@ pub struct CoordinatorStats {
     pub reclusters: u64,
     /// Total wall time spent inserting items (the paper's "build" column).
     pub build_secs: f64,
+    /// Shared extraction-pipeline counters (runs, cache hits, stage time).
+    pub pipeline: PipelineStats,
 }
 
 enum Command {
@@ -181,6 +188,7 @@ struct Worker {
     config: CoordinatorConfig,
     latest: Arc<Mutex<Option<Snapshot>>>,
     queued: Arc<AtomicU64>,
+    pipeline: Pipeline,
     batches: u64,
     reclusters: u64,
     build_secs: f64,
@@ -200,6 +208,7 @@ impl Worker {
             config,
             latest,
             queued,
+            pipeline: Pipeline::new(),
             batches: 0,
             reclusters: 0,
             build_secs: 0.0,
@@ -276,6 +285,7 @@ impl Worker {
                         batches: self.batches,
                         reclusters: self.reclusters,
                         build_secs: self.build_secs,
+                        pipeline: self.pipeline.stats(),
                     });
                 }
                 Command::Shutdown => break,
@@ -299,7 +309,12 @@ impl Worker {
 
     fn extract(&mut self, mcs: usize) -> Snapshot {
         let t0 = std::time::Instant::now();
-        let clustering = self.f.cluster(mcs);
+        // same computation as `Fishdbc::cluster`, but routed through the
+        // shared memoizing pipeline: an unchanged forest short-circuits,
+        // and a changed mcs reuses the cached dendrogram
+        self.f.update_mst();
+        let (clustering, _run) =
+            self.pipeline.run(self.f.msf_edges(), self.f.len(), mcs, false);
         self.reclusters += 1;
         Snapshot {
             n_items: self.f.len(),
@@ -422,6 +437,25 @@ mod tests {
             );
             c.add_batch(items);
         } // drop must join without deadlock
+    }
+
+    #[test]
+    fn repeated_cluster_short_circuits_through_pipeline() {
+        let items = blob_items(200);
+        let c =
+            Coordinator::spawn(MetricKind::Euclidean, CoordinatorConfig::default());
+        c.add_batch(items);
+        let a = c.cluster(10);
+        let b = c.cluster(10);
+        assert_eq!(a.clustering.labels, b.clustering.labels);
+        // a different mcs on the same forest only redoes condense/extract
+        let _ = c.cluster(5);
+        let s = c.stats();
+        assert_eq!(s.reclusters, 3);
+        assert_eq!(s.pipeline.runs, 3);
+        assert!(s.pipeline.short_circuits >= 1, "{:?}", s.pipeline);
+        assert!(s.pipeline.dendrogram_reuses >= 1, "{:?}", s.pipeline);
+        c.shutdown();
     }
 
     #[test]

@@ -1,30 +1,93 @@
-//! Global merge: per-shard minimum spanning forests plus a bounded set of
-//! cross-shard bridge edges, folded by one edge-union Kruskal pass and
-//! condensed into the global clustering.
+//! Global merge, delta-aware: per-shard minimum spanning forests plus the
+//! buffered cross-shard bridge edges, folded into the cached global forest
+//! by one edge-union Kruskal pass, then run through the shared
+//! [`Pipeline`](super::pipeline::Pipeline).
 //!
 //! Correctness rests on the same lemma as Algorithm 1's UPDATE_MST: an MSF
 //! of a union graph only draws edges from the MSFs of its parts plus the
 //! extra edges offered alongside them. The parts here are the shard-local
-//! candidate graphs; the extra edges are the bridges. Bridges use mutual
-//! reachability max(d, core_s(x), core_t(y)) with each endpoint's core
-//! distance taken from its own shard — shard-local cores are computed from a
-//! uniform subsample (hash routing), so they estimate the same densities the
-//! single-shard run sees, at 1/S the sample rate.
+//! candidate graphs and the previous epoch's union graph — summarized
+//! losslessly by the cached global MSF, because the union graph only ever
+//! grows and the cycle property means an edge once evicted can never
+//! re-enter any MSF. So Kruskal re-runs only over (cached global forest ∪
+//! changed shards' forests ∪ changed shards' bridge sets), and a merge
+//! where nothing changed reuses the cached forest outright.
+//!
+//! Bridges use mutual reachability max(d, core_s(x), core_t(y)) with each
+//! endpoint's core distance taken from its own shard — shard-local cores
+//! are computed from a uniform subsample (hash routing), so they estimate
+//! the same densities the single-shard run sees, at 1/S the sample rate.
+//! Most bridge candidates are discovered at insert time (see
+//! `engine/shard.rs`); the merge's *catch-up* pass below searches only the
+//! items above each shard's coverage watermark, so its cost scales with
+//! the delta since the previous epoch, not with total n.
 
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::hdbscan::cluster_from_msf_opts;
 use crate::mst::{Edge, Msf};
+use crate::util::fasthash::FastMap;
 
-use super::shard::ShardState;
-use super::{Engine, EngineSnapshot};
+use super::pipeline::Pipeline;
+use super::shard::{rotation_target, BridgeState, ShardState};
+use super::{Engine, EngineInner, EngineSnapshot};
+
+/// Per-shard change stamp recorded at each merge: a shard whose stamp is
+/// unchanged contributed nothing new since the cached merge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct ShardStamp {
+    pub items: usize,
+    pub mst_updates: u64,
+    pub msf_len: usize,
+    pub bridge_gen: u64,
+}
+
+/// The previous epoch's merge result (the "cached global MSF").
+pub(crate) struct MergeCache {
+    pub global: Msf,
+    pub n: usize,
+    pub stamps: Vec<ShardStamp>,
+}
+
+/// Engine-side pipeline state: the shared back-half pipeline plus the
+/// Kruskal-level merge cache. Guarded by `EngineInner::merge`.
+pub(crate) struct MergeState {
+    pub pipeline: Pipeline,
+    pub cache: Option<MergeCache>,
+    pub merges: u64,
+}
+
+impl Default for MergeState {
+    fn default() -> Self {
+        MergeState::new()
+    }
+}
+
+impl MergeState {
+    pub fn new() -> MergeState {
+        MergeState { pipeline: Pipeline::new(), cache: None, merges: 0 }
+    }
+
+    /// Rebuild from persisted epoch state (FISHENG v2).
+    pub fn resumed(cache: Option<MergeCache>) -> MergeState {
+        MergeState { pipeline: Pipeline::new(), cache, merges: 0 }
+    }
+}
 
 impl Engine {
-    /// CLUSTER across all shards: flush, relabel per-shard MSFs into the
-    /// global id space, add bridge edges, run one Kruskal + condense +
-    /// extract pass. The snapshot is also cached for [`Engine::latest`] and
-    /// the online query path.
+    /// CLUSTER across all shards: flush, catch up bridge coverage, fold
+    /// the deltas into the cached global forest with one Kruskal pass, and
+    /// re-extract (or short-circuit) the clustering through the shared
+    /// pipeline. Publishes the result as the next epoch for
+    /// [`Engine::latest`] and the online query path, and refreshes the
+    /// frozen snapshots that insert-time bridging queries.
     pub fn cluster(&self, mcs: usize) -> EngineSnapshot {
+        (*self.inner().cluster(mcs)).clone()
+    }
+}
+
+impl EngineInner {
+    pub(crate) fn cluster(&self, mcs: usize) -> Arc<EngineSnapshot> {
         self.flush();
         let t0 = Instant::now();
         let guards: Vec<_> = self
@@ -33,6 +96,8 @@ impl Engine {
             .map(|s| s.state.read().unwrap())
             .collect();
         let states: Vec<&ShardState> = guards.iter().map(|g| &**g).collect();
+        let bridges: Vec<&Arc<Mutex<BridgeState>>> =
+            self.shard_handles().iter().map(|s| &s.bridge).collect();
         let n_items: usize = states.iter().map(|st| st.f.len()).sum();
         // the label space must cover every *applied* global id — with
         // concurrent ingestion a shard can have applied ids whose batch
@@ -46,9 +111,181 @@ impl Engine {
             .map_or(0, |m| m as usize + 1)
             .max(n_items);
 
-        // per-shard MSF edges, relabeled local → global
-        let mut lists: Vec<Vec<Edge>> = Vec::with_capacity(states.len() + 1);
-        for st in &states {
+        // 1. bridge catch-up: search only above each coverage watermark
+        let tb = Instant::now();
+        catch_up_bridges(
+            &states,
+            &bridges,
+            self.config().bridge_k,
+            self.config().bridge_fanout,
+            self.config().fishdbc.alpha,
+        );
+        let bridge_secs = tb.elapsed().as_secs_f64();
+
+        // 2. delta Kruskal under the merge lock (serializes merges; the
+        //    serving path never takes this lock)
+        let mut ms = self.merge.lock().unwrap();
+        let stamps: Vec<ShardStamp> = states
+            .iter()
+            .zip(&bridges)
+            .map(|(st, br)| {
+                let b = br.lock().unwrap();
+                ShardStamp {
+                    items: st.f.len(),
+                    mst_updates: st.f.stats().mst_updates,
+                    msf_len: st.f.msf_edges().len(),
+                    bridge_gen: b.generation,
+                }
+            })
+            .collect();
+        let tk = Instant::now();
+        let (msf, n_bridge_edges, n_changed_shards) =
+            merge_forest(ms.cache.as_ref(), &states, &bridges, &stamps, n);
+        let kruskal_secs = tk.elapsed().as_secs_f64();
+
+        // 3. next epoch's frozen snapshots, while the read guards are
+        //    still held (so they capture exactly the merged state)
+        self.refresh_snaps_from(&states);
+        let epoch = self.next_epoch();
+        // edge lists are owned from here on: release the shards before the
+        // (potentially long) condense/extract pass so ingest never stalls
+        // behind extraction
+        drop(states);
+        drop(guards);
+
+        // 4. back half through the shared pipeline (content-hash cached)
+        let (clustering, stages) = ms.pipeline.run(msf.edges(), n, mcs, false);
+        let n_msf_edges = msf.edges().len();
+        ms.cache = Some(MergeCache { global: msf, n, stamps });
+        ms.merges += 1;
+        drop(ms);
+
+        let snap = Arc::new(EngineSnapshot {
+            epoch,
+            n_items,
+            n_shards: self.n_shards(),
+            n_bridge_edges,
+            n_msf_edges,
+            n_changed_shards,
+            bridge_secs,
+            kruskal_secs,
+            stages,
+            extract_secs: t0.elapsed().as_secs_f64(),
+            clustering,
+        });
+        self.set_latest(Arc::clone(&snap));
+        snap
+    }
+}
+
+/// Delta bridge search: for every shard, cover the local items above its
+/// coverage watermark — the ones insert-time bridging could not reach
+/// (no snapshot yet, or snapshot too stale) — by querying the *live*
+/// post-flush remote states. Read-only against the shard states and
+/// embarrassingly parallel: one scoped thread per source shard, each
+/// locking only its own shard's bridge buffer (the caller holds read
+/// guards on every state). Like the insert-time path, the walk stops at
+/// an item whose core distance is still +∞ (fewer than MinPts neighbors
+/// known): covering it now would pin infinite-weight edges that nothing
+/// ever re-searches, so it waits for the next merge instead.
+///
+/// On a first merge every watermark is 0, so this degenerates to the full
+/// O(n·k·fanout) search; afterwards it costs O(Δn·k·fanout).
+pub(crate) fn catch_up_bridges(
+    states: &[&ShardState],
+    bridges: &[&Arc<Mutex<BridgeState>>],
+    k: usize,
+    fanout: usize,
+    alpha: f64,
+) {
+    let s = states.len();
+    if s < 2 || k == 0 || fanout == 0 {
+        return;
+    }
+    // nothing above any watermark: skip the O(n) core-distance fetch too
+    let idle = states
+        .iter()
+        .zip(bridges)
+        .all(|(st, br)| br.lock().unwrap().covered >= st.f.len());
+    if idle {
+        return;
+    }
+    let fanout = fanout.min(s - 1);
+    // remote core distances, fetched in bulk once per shard
+    let cores: Vec<Vec<f64>> =
+        states.iter().map(|st| st.f.core_distances()).collect();
+    let cores = &cores;
+
+    std::thread::scope(|scope| {
+        for (si, st) in states.iter().enumerate() {
+            let states = &*states;
+            let bridge = bridges[si];
+            scope.spawn(move || {
+                let mut br = bridge.lock().unwrap();
+                let len = st.f.len();
+                let mut changed = false;
+                while br.covered < len {
+                    let li = br.covered;
+                    let gi = st.globals[li];
+                    let ci = cores[si][li];
+                    if !ci.is_finite() {
+                        break; // retried at the next merge, once known
+                    }
+                    let item = &st.f.items()[li];
+                    for j in 0..fanout {
+                        let t = rotation_target(si, li, j, s);
+                        let remote = states[t];
+                        for (rj, d) in remote.f.nearest(item, k, None) {
+                            let w = d.max(ci).max(cores[t][rj as usize]);
+                            if br.offer(gi, remote.globals[rj as usize], w) {
+                                changed = true;
+                            }
+                        }
+                    }
+                    br.covered = li + 1;
+                }
+                br.maybe_compact(alpha, len);
+                if changed {
+                    br.generation += 1;
+                }
+            });
+        }
+    });
+}
+
+/// Fold the deltas into a new global forest. Returns the forest, the
+/// number of (deduplicated) bridge edges offered to this merge, and the
+/// number of changed shards.
+fn merge_forest(
+    cache: Option<&MergeCache>,
+    states: &[&ShardState],
+    bridges: &[&Arc<Mutex<BridgeState>>],
+    stamps: &[ShardStamp],
+    n: usize,
+) -> (Msf, usize, usize) {
+    let valid = cache
+        .map_or(false, |c| c.stamps.len() == stamps.len() && c.n <= n);
+    let changed: Vec<bool> = if valid {
+        let c = cache.expect("valid implies cache");
+        stamps.iter().zip(&c.stamps).map(|(now, then)| now != then).collect()
+    } else {
+        vec![true; states.len()]
+    };
+    let n_changed = changed.iter().filter(|&&c| c).count();
+
+    if valid && n_changed == 0 {
+        // nothing moved since the previous epoch: reuse the cached forest
+        // verbatim — skipping even the Kruskal pass keeps its edge order
+        // (and therefore the pipeline's content hash) byte-stable, so the
+        // back half short-circuits too
+        let c = cache.expect("valid implies cache");
+        return (c.global.clone(), 0, 0);
+    }
+
+    // changed shards' forests, relabeled local → global
+    let mut lists: Vec<Vec<Edge>> = Vec::with_capacity(n_changed + 1);
+    for (si, st) in states.iter().enumerate() {
+        if changed[si] {
             lists.push(
                 st.f.msf_edges()
                     .iter()
@@ -62,89 +299,39 @@ impl Engine {
                     .collect(),
             );
         }
-        let bridges = bridge_edges(
-            &states,
-            self.config().bridge_k,
-            self.config().bridge_fanout,
-        );
-        let n_bridge_edges = bridges.len();
-        lists.push(bridges);
-        // edge lists are owned from here on: release the shards before the
-        // (potentially long) global Kruskal + condense pass so ingest never
-        // stalls behind extraction
-        drop(states);
-        drop(guards);
-
-        let refs: Vec<&[Edge]> = lists.iter().map(|l| l.as_slice()).collect();
-        let msf = Msf::from_edge_lists(&refs, n.max(1));
-        let clustering = cluster_from_msf_opts(msf.edges(), n.max(1), mcs, false);
-
-        let snap = EngineSnapshot {
-            n_items,
-            n_shards: self.n_shards(),
-            n_bridge_edges,
-            n_msf_edges: msf.edges().len(),
-            extract_secs: t0.elapsed().as_secs_f64(),
-            clustering,
-        };
-        self.set_latest(snap.clone());
-        snap
     }
-}
-
-/// Bounded cross-shard candidate edges. Every item queries the HNSWs of up
-/// to `fanout` *other* shards (rotating per item so all shard pairs are
-/// covered even at fanout 1) for its `k` nearest remote neighbors; each hit
-/// becomes an edge weighted by mutual reachability under the two shards'
-/// core distances. Read-only and embarrassingly parallel: one scoped thread
-/// per source shard, no locks taken (the caller holds read guards).
-pub(crate) fn bridge_edges(
-    states: &[&ShardState],
-    k: usize,
-    fanout: usize,
-) -> Vec<Edge> {
-    let s = states.len();
-    if s < 2 || k == 0 || fanout == 0 {
-        return Vec::new();
-    }
-    let fanout = fanout.min(s - 1);
-    // remote core distances, fetched in bulk once per shard
-    let cores: Vec<Vec<f64>> =
-        states.iter().map(|st| st.f.core_distances()).collect();
-    let cores = &cores;
-
-    let mut per_shard: Vec<Vec<Edge>> = Vec::with_capacity(s);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(s);
-        for (si, st) in states.iter().enumerate() {
-            let states = &*states;
-            handles.push(scope.spawn(move || {
-                let mut out = Vec::new();
-                for (li, item) in st.f.items().iter().enumerate() {
-                    let gi = st.globals[li];
-                    let ci = cores[si][li];
-                    for j in 0..fanout {
-                        // offset in [1, s-1]: never self, distinct per j
-                        let t = (si + 1 + (li + j) % (s - 1)) % s;
-                        let remote = states[t];
-                        for (rj, d) in remote.f.nearest(item, k, None) {
-                            let w = d.max(ci).max(cores[t][rj as usize]);
-                            out.push(Edge::new(
-                                gi,
-                                remote.globals[rj as usize],
-                                w,
-                            ));
+    // changed shards' bridge sets, deduplicated across shards: when item
+    // a in S1 discovered b in S2 and b later discovered a, both buffers
+    // hold the pair — offer one edge on the canonical (min, max) key with
+    // the smaller weight
+    let mut dedup: FastMap<(u32, u32), f64> = FastMap::default();
+    for (si, br) in bridges.iter().enumerate() {
+        if changed[si] {
+            let b = br.lock().unwrap();
+            for e in b.edges() {
+                dedup
+                    .entry(Edge::key(e.a, e.b))
+                    .and_modify(|w| {
+                        if e.w < *w {
+                            *w = e.w;
                         }
-                    }
-                }
-                out
-            }));
+                    })
+                    .or_insert(e.w);
+            }
         }
-        for h in handles {
-            per_shard.push(h.join().expect("bridge worker panicked"));
-        }
-    });
-    per_shard.concat()
+    }
+    let bridge_list: Vec<Edge> =
+        dedup.into_iter().map(|((a, b), w)| Edge::new(a, b, w)).collect();
+    let n_bridge_edges = bridge_list.len();
+    lists.push(bridge_list);
+
+    let mut refs: Vec<&[Edge]> = Vec::with_capacity(lists.len() + 1);
+    if valid {
+        refs.push(cache.expect("valid implies cache").global.edges());
+    }
+    refs.extend(lists.iter().map(|l| l.as_slice()));
+    let msf = Msf::from_edge_lists(&refs, n.max(1));
+    (msf, n_bridge_edges, n_changed)
 }
 
 #[cfg(test)]
@@ -177,6 +364,7 @@ mod tests {
         let snap = engine.cluster(5);
         assert_eq!(snap.n_items, 600);
         assert!(snap.n_bridge_edges > 0, "4 shards must produce bridges");
+        assert_eq!(snap.n_changed_shards, 4, "first merge sees all shards");
         // a spanning structure over 600 points from 4 partial forests
         assert!(
             snap.n_msf_edges >= 590,
@@ -192,12 +380,12 @@ mod tests {
     #[test]
     fn bridge_fanout_rotation_covers_pairs() {
         // with fanout 1 the rotation must still bridge every ordered pair
-        // eventually; verify the target formula stays in range and != self
+        // eventually; verify the target stays in range and != self
         let s = 5usize;
         for si in 0..s {
             let mut seen = std::collections::HashSet::new();
             for li in 0..64 {
-                let t = (si + 1 + (li % (s - 1))) % s;
+                let t = rotation_target(si, li, 0, s);
                 assert_ne!(t, si);
                 assert!(t < s);
                 seen.insert(t);
@@ -216,7 +404,62 @@ mod tests {
         let snap = engine.cluster(10);
         let cached = engine.latest().expect("snapshot cached");
         assert_eq!(cached.n_items, snap.n_items);
+        assert_eq!(cached.epoch, snap.epoch);
         assert_eq!(cached.clustering.labels, snap.clustering.labels);
         engine.shutdown();
+    }
+
+    #[test]
+    fn duplicate_bridge_orientations_collapse() {
+        // both orientations of a cross-shard pair must fold into one offer
+        // on the canonical key, keeping the smaller weight
+        let mut br = BridgeState::new();
+        assert!(br.offer(7, 3, 2.5));
+        assert!(!br.offer(3, 7, 2.5), "same pair, same weight: no change");
+        assert!(br.offer(3, 7, 1.5), "smaller weight must win");
+        assert!(!br.offer(7, 3, 9.0), "larger weight must not regress");
+        assert_eq!(br.n_edges(), 1);
+        let edges: Vec<Edge> = br.edges().collect();
+        assert_eq!(edges.len(), 1);
+        assert_eq!(Edge::key(edges[0].a, edges[0].b), (3, 7));
+        assert_eq!(edges[0].w, 1.5);
+        // self-loops are rejected outright
+        assert!(!br.offer(4, 4, 0.1));
+        assert_eq!(br.n_edges(), 1);
+    }
+
+    #[test]
+    fn bridge_compaction_preserves_merge_result() {
+        // α·n compaction folds the buffer through Kruskal; by the
+        // UPDATE_MST lemma the merged forest must be unaffected
+        let mut a = BridgeState::new();
+        let mut b = BridgeState::new();
+        let mut rng = crate::util::rng::Rng::new(99);
+        let mut offers = Vec::new();
+        for _ in 0..200 {
+            let x = rng.below(30) as u32;
+            let mut y = rng.below(30) as u32;
+            if x == y {
+                y = (y + 1) % 30;
+            }
+            offers.push((x, y, (rng.f64() * 50.0).round() / 4.0));
+        }
+        for &(x, y, w) in &offers {
+            a.offer(x, y, w);
+            b.offer(x, y, w);
+            b.maybe_compact(0.1, 10); // aggressively compact b
+        }
+        assert!(b.compactions > 0, "compaction never triggered");
+        let ea: Vec<Edge> = a.edges().collect();
+        let eb: Vec<Edge> = b.edges().collect();
+        let ma = Msf::from_edges(ea, 30);
+        let mb = Msf::from_edges(eb, 30);
+        assert!(
+            (ma.total_weight() - mb.total_weight()).abs() < 1e-9,
+            "compacted {} vs buffered {}",
+            mb.total_weight(),
+            ma.total_weight()
+        );
+        assert_eq!(ma.edges().len(), mb.edges().len());
     }
 }

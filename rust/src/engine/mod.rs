@@ -4,10 +4,8 @@
 //! its single worker caps ingest at one core of HNSW insertion. This engine
 //! removes that cap with **S independent shards** — each a worker thread
 //! owning a [`Fishdbc`](crate::fishdbc::Fishdbc) over a hash-partitioned
-//! slice of the item space — and recovers a **global clustering** with one
-//! cheap merge pass, following the decomposition HDBSCAN* itself suggests
-//! (McInnes & Healy: spanning forest construction dominates; the hierarchy
-//! is a cheap postprocess).
+//! slice of the item space — and recovers a **global clustering** through an
+//! incremental, epoch-based recluster pipeline (see [`pipeline`]).
 //!
 //! ## Architecture
 //!
@@ -17,39 +15,65 @@
 //!   shard holds a uniform random subsample and mirrors the global density
 //!   structure. Bounded queues give backpressure, exactly like the
 //!   coordinator.
-//! * **Merge** ([`Engine::cluster`], `engine/merge.rs`): after a flush
-//!   barrier, the per-shard minimum spanning forests are relabeled into the
-//!   global id space and unioned with a bounded set of **bridge edges** —
-//!   each item queried (read-only) against the HNSWs of up to
-//!   `bridge_fanout` other shards for its `bridge_k` nearest remote
-//!   neighbors, weighted by mutual reachability under the two shards' core
-//!   distances. One Kruskal pass (`Msf::from_edge_lists`) + condense +
-//!   extract produce the global clustering.
+//! * **Insert-time bridges** (`engine/shard.rs`): each shard discovers
+//!   cross-shard candidate edges *as items arrive*, querying frozen
+//!   read-only snapshots of the other shards' HNSWs (refreshed at every
+//!   merge epoch, and optionally every `bridge_refresh` items). Candidates
+//!   are buffered per shard under the same α·n flush discipline as
+//!   FISHDBC's local candidate buffer.
+//! * **Delta merge** ([`Engine::cluster`], `engine/merge.rs`): after a
+//!   flush barrier, a *catch-up* pass bridges only the items no shard
+//!   could cover at insert time, then Kruskal re-runs over the cached
+//!   global forest ∪ the forests of changed shards ∪ changed bridge sets.
+//!   The shared [`pipeline::Pipeline`] turns the forest into the global
+//!   clustering, short-circuiting condense/extract when the forest is
+//!   unchanged. Recluster cost therefore scales with the *delta* since
+//!   the previous epoch, not with total n — the paper's "lightweight
+//!   computation to update the clustering when few items are added".
 //! * **Merge invariants**: (1) each shard's forest is an MSF of its local
-//!   candidate graph (Algorithm 1, per shard); (2) Kruskal over the union of
-//!   part-MSFs plus extra edges is an MSF of the union graph (the same
-//!   lemma that justifies UPDATE_MST); (3) the bridge set is bounded by
-//!   `n · bridge_k · bridge_fanout` edges, so merge stays O(n log n).
+//!   candidate graph (Algorithm 1, per shard); (2) Kruskal over the union
+//!   of part-MSFs plus extra edges is an MSF of the union graph (the same
+//!   lemma that justifies UPDATE_MST), and the cached global MSF is a
+//!   lossless summary of every part that did not change (cycle property on
+//!   a monotonically growing union graph); (3) the bridge set is bounded by
+//!   `n · bridge_k · bridge_fanout` offers, deduplicated on canonical
+//!   `(min, max)` endpoint keys and compacted to O(n) by Kruskal.
 //! * **Serving** ([`Engine::label`], `engine/query.rs`): answer "which
-//!   cluster would this item join?" against the latest snapshot via HNSW
-//!   search across all shards, without mutating any state.
+//!   cluster would this item join?" against the latest published epoch via
+//!   HNSW search across all shards, without mutating any state.
+//!   [`Engine::latest`] hands out the current epoch as an immutable
+//!   `Arc<EngineSnapshot>` — the slot's mutex is held only for the Arc
+//!   clone, never while merging, so serving never blocks behind a merge.
+//! * **Auto-recluster**: with `EngineConfig::recluster_every > 0` a
+//!   background thread re-merges after that many new items — the engine
+//!   analog of the coordinator's `recluster_every` — so `latest()` is a
+//!   complete serving loop: ingest keeps streaming, epochs keep
+//!   publishing, queries never wait.
 //! * **Persistence**: `Engine::save`/`Engine::load` (implemented in
 //!   [`crate::persist`]) write a versioned container of every shard's full
-//!   FISHDBC state plus the global id maps.
+//!   FISHDBC state plus the global id maps, and — since v2 — the pipeline
+//!   epoch state (bridge buffers, coverage watermarks, cached global MSF),
+//!   so a restarted engine reclusters incrementally instead of from
+//!   scratch.
 
 pub mod merge;
+pub mod pipeline;
 pub mod query;
 pub(crate) mod shard;
 
 use std::hash::Hasher;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::distances::{Item, MetricKind};
 use crate::fishdbc::{FishdbcParams, FishdbcStats};
 use crate::hdbscan::Clustering;
 use crate::util::fasthash::FastHasher;
-use shard::{Shard, ShardCmd, ShardState};
+use merge::MergeState;
+use pipeline::{PipelineRun, PipelineStats};
+use shard::{BridgeCtxSeed, BridgeState, Shard, ShardCmd, ShardSnap, ShardState, Snaps};
 
 /// Engine configuration.
 #[derive(Clone, Copy, Debug)]
@@ -59,8 +83,8 @@ pub struct EngineConfig {
     /// Number of shards S (worker threads); 1 reproduces the single-core
     /// path exactly.
     pub shards: usize,
-    /// Minimum cluster size for automatic snapshots ([`Engine::label`]
-    /// extracts one lazily when none exists yet).
+    /// Minimum cluster size for automatic snapshots (auto-recluster and
+    /// the lazy extraction [`Engine::label`] runs when none exists yet).
     pub mcs: usize,
     /// Nearest remote neighbors per (item, remote shard) in the bridge
     /// search.
@@ -70,6 +94,14 @@ pub struct EngineConfig {
     pub bridge_fanout: usize,
     /// Per-shard command-queue bound (backpressure depth), in batches.
     pub queue_depth: usize,
+    /// Re-merge automatically after this many new items (0 = never): the
+    /// engine's serving loop. Each auto merge publishes a new epoch for
+    /// [`Engine::latest`] and refreshes the frozen bridge snapshots.
+    pub recluster_every: usize,
+    /// Additionally refresh the frozen remote snapshots every this many
+    /// accepted items (0 = only at merges). Smaller values tighten the
+    /// insert-time bridge freshness window at O(n) snapshot-clone cost.
+    pub bridge_refresh: usize,
 }
 
 impl Default for EngineConfig {
@@ -81,23 +113,39 @@ impl Default for EngineConfig {
             bridge_k: 3,
             bridge_fanout: 3,
             queue_depth: 16,
+            recluster_every: 0,
+            bridge_refresh: 0,
         }
     }
 }
 
-/// A merged global clustering with provenance.
+/// A merged global clustering with provenance: one published *epoch* of
+/// the recluster pipeline. Immutable; shared as `Arc` by the serving loop.
 #[derive(Clone, Debug)]
 pub struct EngineSnapshot {
+    /// Merge epoch (monotone; 1 = first merge).
+    pub epoch: u64,
     /// Global clustering; labels are indexed by global id = arrival order.
     pub clustering: Clustering,
     /// Items covered by this snapshot.
     pub n_items: usize,
     /// Shards merged.
     pub n_shards: usize,
-    /// Cross-shard bridge edges offered to the merge.
+    /// Cross-shard bridge edges offered to *this* merge (deduplicated;
+    /// delta merges only offer changed shards' bridge sets).
     pub n_bridge_edges: usize,
     /// Edges in the merged global forest.
     pub n_msf_edges: usize,
+    /// Shards whose forest or bridge set changed since the previous epoch
+    /// (== `n_shards` on a from-scratch merge).
+    pub n_changed_shards: usize,
+    /// Seconds of catch-up bridge search in this merge.
+    pub bridge_secs: f64,
+    /// Seconds of the global Kruskal pass.
+    pub kruskal_secs: f64,
+    /// Back-half stage breakdown (dendrogram/condense/extract + cache
+    /// hits) from the shared pipeline.
+    pub stages: PipelineRun,
     /// Seconds spent on the whole merge + extraction.
     pub extract_secs: f64,
 }
@@ -115,16 +163,46 @@ pub struct EngineStats {
     pub build_secs: f64,
     /// Per-shard FISHDBC counters.
     pub shard_stats: Vec<FishdbcStats>,
+    /// Bridge edges currently buffered (compacted forests + live buffers).
+    pub bridge_edges: usize,
+    /// Bridge edges discovered at insert time (vs merge catch-up).
+    pub bridge_insert_edges: u64,
+    /// Items whose bridge queries already ran (sum of coverage watermarks).
+    pub bridge_covered: usize,
+    /// α·n bridge-buffer compactions run.
+    pub bridge_compactions: u64,
+    /// Wall seconds shards spent on insert-time bridge queries.
+    pub bridge_insert_secs: f64,
+    /// Global merges run (published epochs).
+    pub merges: u64,
+    /// Shared pipeline counters (runs, short-circuits, stage seconds).
+    pub pipeline: PipelineStats,
+}
+
+/// Shared engine internals: everything the public handle, the shard
+/// workers, and the background recluster thread need to see.
+pub(crate) struct EngineInner {
+    config: EngineConfig,
+    metric: MetricKind,
+    shards: Vec<Shard>,
+    snaps: Arc<Snaps>,
+    /// Next global id to assign (== items accepted so far).
+    next_global: AtomicU64,
+    /// Items covered by the most recent merge (auto-recluster trigger).
+    merged_items: AtomicU64,
+    /// Published merge epochs.
+    epoch: AtomicU64,
+    latest: Mutex<Option<Arc<EngineSnapshot>>>,
+    pub(crate) merge: Mutex<MergeState>,
+    /// Shutdown flag + wakeup for the recluster thread.
+    stop: Mutex<bool>,
+    wake: Condvar,
 }
 
 /// Handle to a running sharded engine. Dropping it shuts the workers down.
 pub struct Engine {
-    config: EngineConfig,
-    metric: MetricKind,
-    shards: Vec<Shard>,
-    /// Next global id to assign (== items accepted so far).
-    next_global: AtomicU64,
-    latest: Mutex<Option<EngineSnapshot>>,
+    inner: Arc<EngineInner>,
+    recluster: Option<JoinHandle<()>>,
 }
 
 impl Engine {
@@ -132,73 +210,112 @@ impl Engine {
     /// `metric`.
     pub fn spawn(metric: MetricKind, config: EngineConfig) -> Engine {
         assert!(config.shards >= 1, "engine needs at least one shard");
+        let snaps = Arc::new(Snaps::new(config.shards));
         let shards = (0..config.shards)
-            .map(|id| Shard::spawn(id, metric, config.fishdbc, config.queue_depth))
+            .map(|id| {
+                Shard::spawn(
+                    id,
+                    metric,
+                    config.fishdbc,
+                    config.queue_depth,
+                    seed_ctx(&config, &snaps),
+                )
+            })
             .collect();
-        Engine {
+        Engine::assemble(EngineInner {
             config,
             metric,
             shards,
+            snaps,
             next_global: AtomicU64::new(0),
+            merged_items: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
             latest: Mutex::new(None),
-        }
+            merge: Mutex::new(MergeState::new()),
+            stop: Mutex::new(false),
+            wake: Condvar::new(),
+        })
     }
 
-    /// Reassemble an engine from reloaded shard states (see
-    /// [`Engine::load`](crate::persist)).
+    /// Reassemble an engine from reloaded shard states and pipeline epoch
+    /// state (see [`Engine::load`](crate::persist)).
     pub(crate) fn from_resumed(
         metric: MetricKind,
         config: EngineConfig,
-        states: Vec<ShardState>,
+        parts: Vec<(ShardState, BridgeState)>,
         next_global: u64,
+        merge_state: MergeState,
+        epoch: u64,
     ) -> Engine {
-        let shards = states
+        let snaps = Arc::new(Snaps::new(config.shards));
+        let shards = parts
             .into_iter()
             .enumerate()
-            .map(|(id, st)| Shard::resume(id, st, config.queue_depth))
+            .map(|(id, (st, br))| {
+                Shard::resume(id, st, br, config.queue_depth, seed_ctx(&config, &snaps))
+            })
             .collect();
-        Engine {
+        Engine::assemble(EngineInner {
             config,
             metric,
             shards,
+            snaps,
             next_global: AtomicU64::new(next_global),
+            merged_items: AtomicU64::new(0),
+            epoch: AtomicU64::new(epoch),
             latest: Mutex::new(None),
-        }
+            merge: Mutex::new(merge_state),
+            stop: Mutex::new(false),
+            wake: Condvar::new(),
+        })
+    }
+
+    /// Wrap the inner state and start the background recluster thread when
+    /// the serving loop is enabled.
+    fn assemble(inner: EngineInner) -> Engine {
+        let inner = Arc::new(inner);
+        let recluster = if inner.config.recluster_every > 0 {
+            let worker = Arc::clone(&inner);
+            Some(
+                std::thread::Builder::new()
+                    .name("fishdbc-recluster".into())
+                    .spawn(move || recluster_loop(&worker))
+                    .expect("spawn recluster thread"),
+            )
+        } else {
+            None
+        };
+        Engine { inner, recluster }
     }
 
     pub fn config(&self) -> &EngineConfig {
-        &self.config
+        &self.inner.config
     }
 
     pub fn metric(&self) -> MetricKind {
-        self.metric
+        self.inner.metric
     }
 
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.inner.shards.len()
     }
 
     /// Items accepted so far (including any still queued behind a shard).
     pub fn len(&self) -> usize {
-        self.next_global.load(Ordering::Relaxed) as usize
+        self.inner.next_global.load(Ordering::Relaxed) as usize
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    pub(crate) fn shard_handles(&self) -> &[Shard] {
-        &self.shards
+    /// Published merge epochs so far (0 = nothing merged yet).
+    pub fn epoch(&self) -> u64 {
+        self.inner.epoch.load(Ordering::Relaxed)
     }
 
-    /// Install a snapshot unless a fresher one (more items) is already
-    /// cached — two racing `cluster()` calls must not let the slower,
-    /// older merge win.
-    pub(crate) fn set_latest(&self, snap: EngineSnapshot) {
-        let mut slot = self.latest.lock().unwrap();
-        if slot.as_ref().map_or(true, |old| old.n_items <= snap.n_items) {
-            *slot = Some(snap);
-        }
+    pub(crate) fn inner(&self) -> &EngineInner {
+        &self.inner
     }
 
     /// Hash-route a batch: assign dense global ids in arrival order, group
@@ -206,6 +323,145 @@ impl Engine {
     /// full — backpressure). Items incompatible with the engine's metric
     /// panic here, in the caller, before touching any shard.
     pub fn add_batch(&self, items: Vec<Item>) {
+        self.inner.add_batch(items)
+    }
+
+    /// Ingestion barrier: wait until every shard has drained its queue and
+    /// folded buffered candidate edges into its local MSF.
+    pub fn flush(&self) {
+        self.inner.flush()
+    }
+
+    /// Latest published epoch, non-blocking: the slot mutex is held only
+    /// for an `Arc` clone, so serving threads never wait behind a merge.
+    pub fn latest(&self) -> Option<Arc<EngineSnapshot>> {
+        self.inner.latest()
+    }
+
+    /// Refresh the frozen remote snapshots the shards bridge against at
+    /// insert time (also happens automatically at every merge and, when
+    /// `bridge_refresh > 0`, on that item cadence).
+    pub fn refresh_bridges(&self) {
+        self.inner.refresh_snaps();
+    }
+
+    /// Aggregated counters. Flushes first, so this doubles as an ingestion
+    /// barrier (mirrors [`Coordinator::stats`](crate::coordinator)).
+    pub fn stats(&self) -> EngineStats {
+        self.inner.stats()
+    }
+
+    /// Shut down, waiting for the recluster thread and every shard worker
+    /// to finish outstanding work.
+    pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
+        {
+            let mut stop = self.inner.stop.lock().unwrap();
+            *stop = true;
+        }
+        self.inner.wake.notify_all();
+        if let Some(h) = self.recluster.take() {
+            let _ = h.join();
+        }
+        for shard in &self.inner.shards {
+            shard.shutdown();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+fn seed_ctx(config: &EngineConfig, snaps: &Arc<Snaps>) -> BridgeCtxSeed {
+    // Staleness bound for insert-time coverage: with a refresh cadence
+    // configured, tolerate up to two refresh windows of remote growth;
+    // otherwise (manual reclustering at unknown cadence) keep it tight so
+    // long gaps between merges fall back to the catch-up search instead of
+    // silently losing cross-shard candidate pairs.
+    let cadence = config.recluster_every.max(config.bridge_refresh);
+    let lag_limit = if cadence > 0 {
+        cadence.saturating_mul(2)
+    } else {
+        config.fishdbc.min_pts.max(1) * 8
+    };
+    BridgeCtxSeed {
+        n_shards: config.shards,
+        bridge_k: config.bridge_k,
+        bridge_fanout: config.bridge_fanout,
+        alpha: config.fishdbc.alpha,
+        lag_limit,
+        snaps: Arc::clone(snaps),
+    }
+}
+
+/// The background serving loop: re-merge whenever `recluster_every` new
+/// items have arrived since the last published epoch. Woken eagerly by
+/// `add_batch` and on shutdown; polls as a fallback so a missed wakeup
+/// only delays an epoch, never loses one.
+fn recluster_loop(inner: &EngineInner) {
+    let every = inner.config.recluster_every as u64;
+    loop {
+        {
+            let guard = inner.stop.lock().unwrap();
+            if *guard {
+                break;
+            }
+            let (guard, _) = inner
+                .wake
+                .wait_timeout(guard, Duration::from_millis(25))
+                .unwrap();
+            if *guard {
+                break;
+            }
+        }
+        let n = inner.next_global.load(Ordering::Relaxed);
+        let merged = inner.merged_items.load(Ordering::Relaxed);
+        if n >= merged + every {
+            inner.cluster(inner.config.mcs);
+        }
+    }
+}
+
+impl EngineInner {
+    pub(crate) fn shard_handles(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub(crate) fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    pub(crate) fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub(crate) fn latest(&self) -> Option<Arc<EngineSnapshot>> {
+        self.latest.lock().unwrap().clone()
+    }
+
+    /// Install a snapshot unless a fresher epoch is already published —
+    /// two racing `cluster()` calls must not let the slower, older merge
+    /// win.
+    pub(crate) fn set_latest(&self, snap: Arc<EngineSnapshot>) {
+        self.merged_items.fetch_max(snap.n_items as u64, Ordering::Relaxed);
+        let mut slot = self.latest.lock().unwrap();
+        if slot.as_ref().map_or(true, |old| old.epoch <= snap.epoch) {
+            *slot = Some(snap);
+        }
+    }
+
+    /// Claim the next merge epoch number.
+    pub(crate) fn next_epoch(&self) -> u64 {
+        self.epoch.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub(crate) fn add_batch(&self, items: Vec<Item>) {
         if items.is_empty() {
             return;
         }
@@ -228,6 +484,7 @@ impl Engine {
                     .filter(|&next| next <= u32::MAX as u64)
             })
             .expect("engine capacity (u32 item ids) exceeded");
+        let n_items = items.len() as u64;
         let mut routed: Vec<Vec<(u32, Item)>> = (0..s).map(|_| Vec::new()).collect();
         for (i, item) in items.into_iter().enumerate() {
             let shard = if s == 1 { 0 } else { (item_hash(&item) % s as u64) as usize };
@@ -238,11 +495,22 @@ impl Engine {
                 shard.send(ShardCmd::AddBatch(batch));
             }
         }
+        // wake the serving loop when an epoch is due
+        let next = base + n_items;
+        if self.config.recluster_every > 0
+            && next >= self.merged_items.load(Ordering::Relaxed)
+                + self.config.recluster_every as u64
+        {
+            self.wake.notify_all();
+        }
+        // optional mid-epoch snapshot refresh for insert-time bridging
+        let refresh = self.config.bridge_refresh as u64;
+        if refresh > 0 && base / refresh != next / refresh {
+            self.refresh_snaps();
+        }
     }
 
-    /// Ingestion barrier: wait until every shard has drained its queue and
-    /// folded buffered candidate edges into its local MSF.
-    pub fn flush(&self) {
+    pub(crate) fn flush(&self) {
         let (tx, rx) = std::sync::mpsc::sync_channel(self.shards.len());
         for shard in &self.shards {
             shard.send(ShardCmd::Flush(tx.clone()));
@@ -253,42 +521,63 @@ impl Engine {
         }
     }
 
-    /// Latest merged snapshot, non-blocking.
-    pub fn latest(&self) -> Option<EngineSnapshot> {
-        self.latest.lock().unwrap().clone()
+    /// Refresh every shard's frozen snapshot from its live state (taking
+    /// each read lock briefly, one shard at a time).
+    pub(crate) fn refresh_snaps(&self) {
+        for (t, shard) in self.shards.iter().enumerate() {
+            let snap = {
+                let st = shard.state.read().unwrap();
+                if self.snap_is_current(t, &st) {
+                    continue;
+                }
+                ShardSnap::capture(&st)
+            };
+            self.snaps.set(t, Arc::new(snap));
+        }
     }
 
-    /// Aggregated counters. Flushes first, so this doubles as an ingestion
-    /// barrier (mirrors [`Coordinator::stats`](crate::coordinator)).
-    pub fn stats(&self) -> EngineStats {
+    /// Refresh snapshots from already-held state views (the merge path,
+    /// which holds every read guard anyway).
+    pub(crate) fn refresh_snaps_from(&self, states: &[&ShardState]) {
+        for (t, st) in states.iter().enumerate() {
+            if self.snap_is_current(t, st) {
+                continue;
+            }
+            self.snaps.set(t, Arc::new(ShardSnap::capture(st)));
+        }
+    }
+
+    /// A shard snapshot with the same item count is content-identical
+    /// (items, HNSW, cores and globals are all pure functions of the
+    /// insert sequence), so re-capturing it would only burn an O(n) clone.
+    fn snap_is_current(&self, t: usize, st: &ShardState) -> bool {
+        self.snaps.get(t).is_some_and(|sn| sn.items.len() == st.f.len())
+    }
+
+    pub(crate) fn stats(&self) -> EngineStats {
         self.flush();
         let mut stats = EngineStats::default();
         for shard in &self.shards {
-            let st = shard.state.read().unwrap();
-            let fs = st.f.stats();
-            stats.items += fs.items;
-            stats.dist_calls += fs.dist_calls;
-            stats.batches += st.batches;
-            stats.build_secs = stats.build_secs.max(st.build_secs);
-            stats.shard_stats.push(fs);
+            {
+                let st = shard.state.read().unwrap();
+                let fs = st.f.stats();
+                stats.items += fs.items;
+                stats.dist_calls += fs.dist_calls;
+                stats.batches += st.batches;
+                stats.build_secs = stats.build_secs.max(st.build_secs);
+                stats.shard_stats.push(fs);
+            }
+            let br = shard.bridge.lock().unwrap();
+            stats.bridge_edges += br.n_edges();
+            stats.bridge_insert_edges += br.insert_edges;
+            stats.bridge_covered += br.covered;
+            stats.bridge_compactions += br.compactions;
+            stats.bridge_insert_secs += br.insert_secs;
         }
+        let ms = self.merge.lock().unwrap();
+        stats.merges = ms.merges;
+        stats.pipeline = ms.pipeline.stats();
         stats
-    }
-
-    /// Shut down, waiting for every shard worker to finish outstanding
-    /// work.
-    pub fn shutdown(mut self) {
-        for shard in &mut self.shards {
-            shard.shutdown();
-        }
-    }
-}
-
-impl Drop for Engine {
-    fn drop(&mut self) {
-        for shard in &mut self.shards {
-            shard.shutdown();
-        }
     }
 }
 
@@ -418,9 +707,12 @@ mod tests {
         let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig::default());
         engine.add_batch(vec![]);
         assert!(engine.is_empty());
+        assert_eq!(engine.epoch(), 0);
         let snap = engine.cluster(5);
         assert_eq!(snap.n_items, 0);
         assert_eq!(snap.clustering.n_clusters, 0);
+        assert_eq!(snap.epoch, 1, "even an empty merge publishes an epoch");
+        assert!(engine.latest().is_some());
         engine.shutdown();
     }
 
@@ -432,5 +724,116 @@ mod tests {
                 Engine::spawn(MetricKind::Euclidean, EngineConfig::default());
             engine.add_batch(items);
         } // drop must join all workers without deadlock
+    }
+
+    #[test]
+    fn auto_recluster_publishes_epochs() {
+        let items = blob_items(600, 31);
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            shards: 2,
+            recluster_every: 150,
+            ..Default::default()
+        });
+        for chunk in items.chunks(75) {
+            engine.add_batch(chunk.to_vec());
+        }
+        // the serving loop runs in the background: wait (bounded) for it
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        let snap = loop {
+            if let Some(s) = engine.latest() {
+                if s.n_items >= 150 {
+                    break s;
+                }
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "auto-recluster never published a snapshot"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        };
+        assert!(snap.epoch >= 1);
+        assert!(snap.n_items >= 150);
+        // explicit cluster still works alongside the loop and is fresher
+        let fin = engine.cluster(10);
+        assert_eq!(fin.n_items, 600);
+        assert!(fin.epoch > 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn drop_with_recluster_thread_does_not_hang() {
+        let items = blob_items(200, 33);
+        {
+            let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+                shards: 2,
+                recluster_every: 50,
+                ..Default::default()
+            });
+            engine.add_batch(items);
+        } // drop must stop the serving loop and join all workers
+    }
+
+    #[test]
+    fn insert_time_bridging_covers_items_after_first_epoch() {
+        let items = blob_items(800, 37);
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            shards: 3,
+            ..Default::default()
+        });
+        engine.add_batch(items[..600].to_vec());
+        let first = engine.cluster(10); // publishes epoch 1 + snapshots
+        assert_eq!(first.n_changed_shards, 3, "first merge is from-scratch");
+        let base = engine.stats();
+        assert_eq!(
+            base.bridge_covered, 600,
+            "merge catch-up must cover every item"
+        );
+        // new items now bridge at insert time against the frozen snapshots
+        engine.add_batch(items[600..].to_vec());
+        let stats = engine.stats(); // flush barrier included
+        // the watermark may stall on an item whose core distance is not
+        // finite yet (covered by the next catch-up), but it must not move
+        // backwards and should have advanced for most items
+        assert!(
+            stats.bridge_covered >= 600 && stats.bridge_covered <= 800,
+            "coverage watermark out of range: {}",
+            stats.bridge_covered
+        );
+        assert!(
+            stats.bridge_insert_edges > 0,
+            "insert-time bridging found no edges"
+        );
+        let second = engine.cluster(10);
+        assert_eq!(second.epoch, first.epoch + 1);
+        assert_eq!(second.n_items, 800);
+        assert_eq!(
+            engine.stats().bridge_covered,
+            800,
+            "second catch-up completes coverage"
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn recluster_without_new_items_short_circuits() {
+        let items = blob_items(400, 41);
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            shards: 2,
+            ..Default::default()
+        });
+        engine.add_batch(items);
+        let a = engine.cluster(10);
+        let b = engine.cluster(10);
+        assert_eq!(b.epoch, a.epoch + 1);
+        assert_eq!(a.clustering.labels, b.clustering.labels);
+        assert_eq!(b.n_changed_shards, 0, "nothing changed between merges");
+        assert!(
+            b.stages.reused_clustering,
+            "unchanged forest must skip condense/extract"
+        );
+        let stats = engine.stats();
+        assert_eq!(stats.merges, 2);
+        assert_eq!(stats.pipeline.short_circuits, 1);
+        engine.shutdown();
     }
 }

@@ -1,0 +1,269 @@
+//! Shared clustering pipeline: MSF edges → single-linkage dendrogram →
+//! condensed tree → flat extraction, with per-stage caching and timings.
+//!
+//! Both serving layers run the exact same back half of the algorithm —
+//! the [`coordinator`](crate::coordinator) over its single FISHDBC forest
+//! and the sharded [`Engine`](crate::engine::Engine) over the merged
+//! global forest — so that back half lives here once, instead of as two
+//! parallel code paths. The pipeline is *memoizing*: every stage is keyed
+//! by a content hash of its input, so a re-cluster whose inputs did not
+//! change is (nearly) free.
+//!
+//! ## Epoch / freshness model
+//!
+//! The engine's recluster path is **epoch-based**. An *epoch* is one
+//! published [`EngineSnapshot`](crate::engine::EngineSnapshot): a merge
+//! folds everything that happened since the previous epoch (new per-shard
+//! MSF edges, new bridge candidates) into the cached global forest, then
+//! re-extracts only the stages whose inputs actually changed:
+//!
+//! 1. **Bridge delta** — each shard maintains a coverage watermark: items
+//!    below it already queried their remote shards (at insert time,
+//!    against the frozen snapshots taken at the previous epoch); the merge
+//!    only searches the items above it. Cross-shard candidate discovery is
+//!    therefore *incremental*: its cost is O(Δn · k · fanout) HNSW
+//!    searches, not O(n · k · fanout).
+//! 2. **Kruskal delta** — every shard reports a stamp (item count, MSF
+//!    generation, bridge generation). Kruskal re-runs over the cached
+//!    global MSF ∪ the forests of *changed* shards ∪ the bridge sets of
+//!    *bridge-changed* shards. Correct by the cycle property: the union
+//!    graph only ever grows, so an edge once evicted from the global MSF
+//!    (maximal on some cycle) can never re-enter it — the cached forest
+//!    is a lossless summary of all unchanged parts.
+//! 3. **Extraction short-circuit** — if the resulting global forest hashes
+//!    identically to the previous epoch's (same `n`, same `mcs`), the
+//!    dendrogram → condense → extract stages are skipped entirely and the
+//!    cached clustering is republished.
+//!
+//! Freshness caveat (documented, deliberate): an item pair (a, b) living
+//! in two different shards and *both* inserted within the same epoch
+//! window is searched from whichever side is still above its shard's
+//! watermark at the next merge; if both sides were already covered at
+//! insert time (against snapshots that predate the other item), that pair
+//! is not re-searched. Bridge candidates are heuristic — exactly like the
+//! HNSW-piggybacked candidates of Algorithm 1 — so this costs a little
+//! approximation quality inside one epoch window, never correctness of
+//! the MSF over the offered edges. Shrink the window with
+//! `EngineConfig::recluster_every` / `bridge_refresh` when it matters.
+
+use std::hash::Hasher;
+use std::time::Instant;
+
+use crate::hdbscan::{extract, Clustering, CondensedTree, Dendrogram};
+use crate::mst::Edge;
+use crate::util::fasthash::FastHasher;
+
+/// Content hash of an MSF edge list (plus the node count): the cache key
+/// for every downstream stage. Edges are hashed in order, which is stable
+/// because forests are kept weight-sorted by construction.
+pub fn edges_hash(edges: &[Edge], n_points: usize) -> u64 {
+    let mut h = FastHasher::default();
+    h.write_u64(n_points as u64);
+    h.write_u64(edges.len() as u64);
+    for e in edges {
+        h.write_u32(e.a);
+        h.write_u32(e.b);
+        h.write_u64(e.w.to_bits());
+    }
+    h.finish()
+}
+
+/// Cumulative pipeline counters (exposed through engine and coordinator
+/// stats; the CLI prints them under `--stats`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineStats {
+    /// Total `run` calls.
+    pub runs: u64,
+    /// Runs answered entirely from the clustering cache (identical forest,
+    /// `n`, `mcs`): condense/extract skipped.
+    pub short_circuits: u64,
+    /// Runs that reused the cached dendrogram (identical forest, new
+    /// `mcs`): only condense/extract re-ran.
+    pub dendrogram_reuses: u64,
+    /// Cumulative seconds spent building dendrograms.
+    pub dendrogram_secs: f64,
+    /// Cumulative seconds spent condensing.
+    pub condense_secs: f64,
+    /// Cumulative seconds spent extracting flat clusterings.
+    pub extract_secs: f64,
+}
+
+/// Per-run stage breakdown returned alongside the clustering.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineRun {
+    pub dendrogram_secs: f64,
+    pub condense_secs: f64,
+    pub extract_secs: f64,
+    /// The dendrogram stage was served from cache.
+    pub reused_dendrogram: bool,
+    /// The whole run was served from cache (nothing recomputed).
+    pub reused_clustering: bool,
+}
+
+/// Memoizing MSF → clustering pipeline (one instance per serving loop;
+/// the caches hold exactly one entry — the previous epoch).
+#[derive(Default)]
+pub struct Pipeline {
+    /// `(input hash, dendrogram)` of the last non-cached run.
+    dendro: Option<(u64, Dendrogram)>,
+    /// `(input hash, mcs, allow_single_cluster, clustering)` of the last
+    /// non-cached run.
+    out: Option<(u64, usize, bool, Clustering)>,
+    stats: PipelineStats,
+}
+
+impl Pipeline {
+    pub fn new() -> Pipeline {
+        Pipeline::default()
+    }
+
+    pub fn stats(&self) -> PipelineStats {
+        self.stats
+    }
+
+    /// Run (or short-circuit) the back half of the algorithm over a
+    /// minimum spanning forest. `edges` must be the complete forest,
+    /// weight-ascending (both `Msf::edges` producers guarantee this).
+    pub fn run(
+        &mut self,
+        edges: &[Edge],
+        n_points: usize,
+        mcs: usize,
+        allow_single_cluster: bool,
+    ) -> (Clustering, PipelineRun) {
+        let n = n_points.max(1);
+        let key = edges_hash(edges, n);
+        self.stats.runs += 1;
+
+        if let Some((k, m, a, c)) = &self.out {
+            if *k == key && *m == mcs && *a == allow_single_cluster {
+                self.stats.short_circuits += 1;
+                return (
+                    c.clone(),
+                    PipelineRun {
+                        reused_clustering: true,
+                        reused_dendrogram: true,
+                        ..Default::default()
+                    },
+                );
+            }
+        }
+
+        let mut run = PipelineRun::default();
+
+        // dendrogram: reusable across mcs changes on the same forest
+        let reuse_dendro = matches!(&self.dendro, Some((k, _)) if *k == key);
+        if reuse_dendro {
+            self.stats.dendrogram_reuses += 1;
+            run.reused_dendrogram = true;
+        } else {
+            let t = Instant::now();
+            let d = Dendrogram::from_msf(edges, n);
+            run.dendrogram_secs = t.elapsed().as_secs_f64();
+            self.stats.dendrogram_secs += run.dendrogram_secs;
+            self.dendro = Some((key, d));
+        }
+        let dendro = &self.dendro.as_ref().expect("dendrogram cached").1;
+
+        let t = Instant::now();
+        let condensed = CondensedTree::from_dendrogram(dendro, mcs);
+        run.condense_secs = t.elapsed().as_secs_f64();
+        self.stats.condense_secs += run.condense_secs;
+
+        let t = Instant::now();
+        let clustering = extract::extract_flat_opts(&condensed, allow_single_cluster);
+        run.extract_secs = t.elapsed().as_secs_f64();
+        self.stats.extract_secs += run.extract_secs;
+
+        self.out = Some((key, mcs, allow_single_cluster, clustering.clone()));
+        (clustering, run)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdbscan::cluster_from_msf_opts;
+
+    /// Two 5-point chains joined by one weak bridge (same fixture as the
+    /// hdbscan module tests).
+    fn forest() -> (Vec<Edge>, usize) {
+        let mut edges = Vec::new();
+        for i in 0..4u32 {
+            edges.push(Edge::new(i, i + 1, 1.0));
+            edges.push(Edge::new(5 + i, 5 + i + 1, 1.0));
+        }
+        edges.push(Edge::new(4, 5, 50.0));
+        edges.sort_unstable_by(|x, y| x.w.total_cmp(&y.w));
+        (edges, 10)
+    }
+
+    #[test]
+    fn matches_reference_extraction() {
+        let (edges, n) = forest();
+        let mut p = Pipeline::new();
+        let (got, run) = p.run(&edges, n, 3, false);
+        let want = cluster_from_msf_opts(&edges, n, 3, false);
+        assert_eq!(got.labels, want.labels);
+        assert_eq!(got.n_clusters, want.n_clusters);
+        assert!(!run.reused_clustering);
+        assert!(!run.reused_dendrogram);
+    }
+
+    #[test]
+    fn identical_input_short_circuits() {
+        let (edges, n) = forest();
+        let mut p = Pipeline::new();
+        let (a, _) = p.run(&edges, n, 3, false);
+        let (b, run) = p.run(&edges, n, 3, false);
+        assert!(run.reused_clustering, "second run must be cached");
+        assert_eq!(a.labels, b.labels);
+        let s = p.stats();
+        assert_eq!(s.runs, 2);
+        assert_eq!(s.short_circuits, 1);
+    }
+
+    #[test]
+    fn mcs_change_reuses_dendrogram_only() {
+        let (edges, n) = forest();
+        let mut p = Pipeline::new();
+        let _ = p.run(&edges, n, 3, false);
+        let (c, run) = p.run(&edges, n, 6, false);
+        assert!(run.reused_dendrogram);
+        assert!(!run.reused_clustering);
+        let want = cluster_from_msf_opts(&edges, n, 6, false);
+        assert_eq!(c.labels, want.labels);
+        assert_eq!(p.stats().dendrogram_reuses, 1);
+    }
+
+    #[test]
+    fn changed_forest_recomputes() {
+        let (mut edges, n) = forest();
+        let mut p = Pipeline::new();
+        let (a, _) = p.run(&edges, n, 3, false);
+        edges.pop(); // drop the weak bridge: different forest
+        let (b, run) = p.run(&edges, n, 3, false);
+        assert!(!run.reused_clustering);
+        assert!(!run.reused_dendrogram);
+        // both forests split the chains into the same two flat clusters,
+        // but the second run must have recomputed them
+        assert_eq!(a.n_clusters, b.n_clusters);
+        assert_eq!(p.stats().short_circuits, 0);
+    }
+
+    #[test]
+    fn empty_forest_on_empty_input() {
+        let mut p = Pipeline::new();
+        let (c, _) = p.run(&[], 0, 5, false);
+        assert_eq!(c.n_clusters, 0);
+    }
+
+    #[test]
+    fn hash_is_sensitive_to_weights_and_order() {
+        let e1 = [Edge::new(0, 1, 1.0), Edge::new(1, 2, 2.0)];
+        let e2 = [Edge::new(0, 1, 1.0), Edge::new(1, 2, 2.5)];
+        assert_ne!(edges_hash(&e1, 3), edges_hash(&e2, 3));
+        assert_ne!(edges_hash(&e1, 3), edges_hash(&e1, 4));
+        assert_eq!(edges_hash(&e1, 3), edges_hash(&e1, 3));
+    }
+}

@@ -1,5 +1,5 @@
 //! Online label queries: "which cluster would this item join?" answered
-//! against the latest merged snapshot via read-only HNSW search across all
+//! against the latest published epoch via read-only HNSW search across all
 //! shards — the serving primitive a production deployment puts behind its
 //! API. No state is mutated and no distance-call counters move.
 
@@ -14,11 +14,12 @@ impl Engine {
     /// neighbors as voters. Returns -1 for noise/unknown.
     ///
     /// Serving is **staleness-bounded**, like the coordinator's `latest()`:
-    /// items ingested since the last [`Engine::cluster`] call are searched
-    /// (the HNSWs are live) but vote as noise until the next merge.
-    /// Re-merging per query would stall ingest behind a flush barrier and
-    /// an O(n) bridge search — callers control freshness by calling
-    /// [`Engine::cluster`] on their own threshold or timer.
+    /// items ingested since the last published epoch are searched (the
+    /// HNSWs are live) but vote as noise until the next merge. With
+    /// `EngineConfig::recluster_every > 0` the background serving loop
+    /// bounds that staleness automatically; otherwise callers control
+    /// freshness by calling [`Engine::cluster`] on their own threshold or
+    /// timer.
     pub fn label(&self, item: &Item) -> i32 {
         self.label_with(item, self.config().fishdbc.min_pts)
     }
@@ -27,13 +28,13 @@ impl Engine {
     pub fn label_with(&self, item: &Item, k: usize) -> i32 {
         let snap = match self.latest() {
             Some(s) => s,
-            None => self.cluster(self.config().mcs),
+            None => self.inner().cluster(self.config().mcs),
         };
         self.label_against(item, &snap, k)
     }
 
     /// Label against a caller-held snapshot: the serving path pins one
-    /// snapshot and answers many queries against it while ingestion (and
+    /// epoch and answers many queries against it while ingestion (and
     /// even re-merging) continues. Majority vote among the `k` globally
     /// nearest clustered neighbors (noise neighbors abstain; ties break
     /// toward the smaller label for determinism).
@@ -46,7 +47,7 @@ impl Engine {
         let k = k.max(1);
         // k nearest per shard, then merge to the global k nearest
         let mut hits: Vec<(f64, u32)> = Vec::new();
-        for shard in self.shard_handles() {
+        for shard in self.inner().shard_handles() {
             let st = shard.state.read().unwrap();
             for (id, d) in st.f.nearest(item, k, None) {
                 hits.push((d, st.globals[id as usize]));
@@ -116,6 +117,21 @@ mod tests {
     }
 
     #[test]
+    fn label_before_first_snapshot_extracts_lazily() {
+        // a label query on a populated engine with no published epoch must
+        // trigger one lazy merge, then serve from it
+        let (engine, items) = engine_on_blobs(300, 2, 35);
+        assert!(engine.latest().is_none(), "no epoch published yet");
+        let l = engine.label(&items[0]);
+        assert!(l >= -1);
+        let snap = engine.latest().expect("lazy merge published an epoch");
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.n_items, 300);
+        assert!((l as i64) < snap.clustering.n_clusters as i64);
+        engine.shutdown();
+    }
+
+    #[test]
     fn label_with_pinned_snapshot() {
         let (engine, items) = engine_on_blobs(300, 2, 37);
         let snap = engine.cluster(5);
@@ -124,6 +140,22 @@ mod tests {
         let l = engine.label_against(&items[0], &snap, 5);
         assert!(l >= -1);
         assert!((l as i64) < snap.clustering.n_clusters as i64);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn latest_is_cheap_and_pinnable_across_epochs() {
+        let (engine, items) = engine_on_blobs(300, 2, 39);
+        let first = engine.cluster(5);
+        let pinned = engine.latest().expect("epoch 1 published");
+        assert_eq!(pinned.epoch, first.epoch);
+        // a later epoch must not invalidate the pinned Arc
+        engine.add_batch(items[..48].to_vec());
+        let second = engine.cluster(5);
+        assert!(second.epoch > first.epoch);
+        assert_eq!(pinned.n_items, 300, "pinned epoch is immutable");
+        let l = engine.label_against(&items[0], &pinned, 5);
+        assert!(l >= -1);
         engine.shutdown();
     }
 }

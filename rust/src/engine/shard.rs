@@ -1,18 +1,32 @@
 //! One shard of the parallel ingest engine: a worker thread owning a
 //! [`Fishdbc`] over a hash-partitioned slice of the item space, plus the
-//! local→global id map that lets the merge relabel its MSF edges.
+//! local→global id map that lets the merge relabel its MSF edges, plus the
+//! shard's half of the incremental bridge pipeline — a buffer of
+//! cross-shard candidate edges discovered **at insert time** against
+//! frozen snapshots of the other shards' HNSWs.
 //!
-//! The state sits behind an `RwLock` so the merge and the online query path
-//! can read it concurrently; only the shard's own worker ever writes, and it
-//! never takes another shard's lock — no lock-ordering cycles exist.
+//! The FISHDBC state sits behind an `RwLock` so the merge and the online
+//! query path can read it concurrently; only the shard's own worker ever
+//! writes it. The bridge buffer sits behind its own `Mutex`, written by
+//! the worker (insert-time discovery) and by the merge (catch-up for
+//! items the worker could not cover yet). Lock order is always
+//! `state → bridge` and `state → snaps`, never the reverse, and no thread
+//! ever takes another shard's *write* lock — no lock-ordering cycles
+//! exist. Crucially, insert-time bridging queries only frozen
+//! [`ShardSnap`]s (plain `Arc`s), never another shard's live `RwLock`:
+//! two workers bridging against each other's live state would deadlock.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::distances::{Item, MetricKind};
 use crate::fishdbc::{Fishdbc, FishdbcParams};
+use crate::hnsw::Hnsw;
+use crate::mst::{Edge, Msf};
+use crate::util::fasthash::FastMap;
 
 /// Commands a shard worker processes in FIFO order.
 pub(crate) enum ShardCmd {
@@ -45,11 +59,339 @@ impl ShardState {
     }
 }
 
+// ------------------------------------------------------------- snapshots --
+
+/// Frozen, read-only view of one shard's index at some epoch: everything a
+/// *remote* shard needs to run bridge queries against it without touching
+/// its `RwLock`. Immutable once built; shared as `Arc<ShardSnap>`.
+pub(crate) struct ShardSnap {
+    pub metric: MetricKind,
+    /// HNSW beam width used for bridge queries.
+    pub ef: usize,
+    pub items: Vec<Item>,
+    pub hnsw: Hnsw,
+    /// Core distances at snapshot time (+∞ while < MinPts neighbors).
+    pub cores: Vec<f64>,
+    /// local → global id map at snapshot time.
+    pub globals: Vec<u32>,
+}
+
+impl ShardSnap {
+    pub fn capture(st: &ShardState) -> ShardSnap {
+        ShardSnap {
+            metric: *st.f.metric(),
+            ef: st.f.params().ef,
+            items: st.f.items().to_vec(),
+            hnsw: st.f.hnsw().clone(),
+            cores: st.f.core_distances(),
+            globals: st.globals.clone(),
+        }
+    }
+
+    /// Approximate k nearest stored items to `query`, ascending distance.
+    pub fn nearest(&self, query: &Item, k: usize) -> Vec<(u32, f64)> {
+        self.hnsw.search(&self.items, &self.metric, query, k, self.ef)
+    }
+}
+
+/// One published snapshot slot per shard, plus each shard's *live* item
+/// count (so peers can judge snapshot staleness without touching its
+/// `RwLock`). Each slot's mutex is held only long enough to clone or
+/// replace an `Arc`.
+pub(crate) struct Snaps {
+    slots: Vec<Mutex<Option<Arc<ShardSnap>>>>,
+    lens: Vec<AtomicU64>,
+}
+
+impl Snaps {
+    pub fn new(n_shards: usize) -> Snaps {
+        Snaps {
+            slots: (0..n_shards).map(|_| Mutex::new(None)).collect(),
+            lens: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn get(&self, shard: usize) -> Option<Arc<ShardSnap>> {
+        self.slots[shard].lock().unwrap().clone()
+    }
+
+    pub fn set(&self, shard: usize, snap: Arc<ShardSnap>) {
+        self.lens[shard].fetch_max(snap.items.len() as u64, Ordering::Relaxed);
+        *self.slots[shard].lock().unwrap() = Some(snap);
+    }
+
+    /// Publish a shard's live item count (its worker, after each batch).
+    pub fn set_len(&self, shard: usize, len: usize) {
+        self.lens[shard].fetch_max(len as u64, Ordering::Relaxed);
+    }
+
+    pub fn live_len(&self, shard: usize) -> usize {
+        self.lens[shard].load(Ordering::Relaxed) as usize
+    }
+}
+
+// ---------------------------------------------------------- bridge state --
+
+/// The shard's buffer of cross-shard candidate edges, in global ids,
+/// weighted by mutual reachability under the two shards' core distances.
+///
+/// Edges are keyed canonically ([`Edge::key`]) keeping the smaller weight,
+/// so the two orientations of the same pair — item *a* in shard S1
+/// discovering *b* in S2 at insert time, and *b* later discovering *a* —
+/// collapse into one offer. The buffer obeys the same α·n flush discipline
+/// as FISHDBC's local candidate buffer: when it outgrows `α · len(shard)`,
+/// it is folded through Kruskal into `msf`, the shard's *bridge forest*.
+/// That compaction is lossless for the global merge by the same lemma that
+/// justifies UPDATE_MST: an MSF of a union graph only draws edges from the
+/// MSFs of its parts.
+pub(crate) struct BridgeState {
+    /// Canonical-keyed candidate buffer (global id pair → min weight).
+    pub buf: FastMap<(u32, u32), f64>,
+    /// Compacted bridge forest over all flushed candidates.
+    pub msf: Msf,
+    /// Coverage watermark: local items `[0, covered)` have already queried
+    /// all their rotation targets (at insert time or in a merge catch-up).
+    pub covered: usize,
+    /// Bumped whenever the edge set changes (the merge's change detector).
+    pub generation: u64,
+    /// α·n compactions run.
+    pub compactions: u64,
+    /// Edges discovered at insert time (vs merge catch-up), for stats.
+    pub insert_edges: u64,
+    /// Wall seconds spent on insert-time bridge queries.
+    pub insert_secs: f64,
+}
+
+impl Default for BridgeState {
+    fn default() -> Self {
+        BridgeState::new()
+    }
+}
+
+impl BridgeState {
+    pub fn new() -> BridgeState {
+        BridgeState {
+            buf: FastMap::default(),
+            msf: Msf::new(),
+            covered: 0,
+            generation: 0,
+            compactions: 0,
+            insert_edges: 0,
+            insert_secs: 0.0,
+        }
+    }
+
+    /// Reassemble from persisted parts (FISHENG v2).
+    pub fn from_parts(
+        covered: usize,
+        generation: u64,
+        msf_edges: Vec<Edge>,
+        buf: Vec<(u32, u32, f64)>,
+    ) -> BridgeState {
+        let n = msf_edges
+            .iter()
+            .map(|e| e.a.max(e.b) as usize + 1)
+            .max()
+            .unwrap_or(0);
+        BridgeState {
+            buf: buf.into_iter().map(|(a, b, w)| ((a, b), w)).collect(),
+            msf: Msf::from_parts(msf_edges, n),
+            covered,
+            generation,
+            compactions: 0,
+            insert_edges: 0,
+            insert_secs: 0.0,
+        }
+    }
+
+    /// Offer a candidate bridge edge (canonical key, keep the min weight).
+    /// Returns true when the edge set changed. Non-finite weights (a core
+    /// distance still unknown on either side) are legal, mirroring the
+    /// local candidate path: the min-weight discipline replaces them as
+    /// soon as a finite offer for the pair arrives.
+    pub fn offer(&mut self, a: u32, b: u32, w: f64) -> bool {
+        if a == b {
+            return false;
+        }
+        let key = Edge::key(a, b);
+        match self.buf.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                if w < *e.get() {
+                    *e.get_mut() = w;
+                    true
+                } else {
+                    false
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(w);
+                true
+            }
+        }
+    }
+
+    /// α·n flush discipline: fold the buffer into the bridge forest when it
+    /// outgrows `alpha * local_len`.
+    pub fn maybe_compact(&mut self, alpha: f64, local_len: usize) {
+        if (self.buf.len() as f64) <= alpha * local_len.max(1) as f64 {
+            return;
+        }
+        let edges: Vec<Edge> = self
+            .buf
+            .drain()
+            .map(|((a, b), w)| Edge::new(a, b, w))
+            .collect();
+        let n = edges
+            .iter()
+            .map(|e| e.a.max(e.b) as usize + 1)
+            .max()
+            .unwrap_or(0);
+        self.msf.update(edges, n);
+        self.compactions += 1;
+        self.generation += 1;
+    }
+
+    /// All current bridge edges (compacted forest + live buffer).
+    pub fn edges(&self) -> impl Iterator<Item = Edge> + '_ {
+        self.msf
+            .edges()
+            .iter()
+            .copied()
+            .chain(self.buf.iter().map(|(&(a, b), &w)| Edge::new(a, b, w)))
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.msf.edges().len() + self.buf.len()
+    }
+
+    /// Sorted buffer export (persistence; deterministic byte stream).
+    pub fn buf_export(&self) -> Vec<(u32, u32, f64)> {
+        let mut v: Vec<(u32, u32, f64)> =
+            self.buf.iter().map(|(&(a, b), &w)| (a, b, w)).collect();
+        v.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        v
+    }
+}
+
+/// Which remote shard the j-th fanout query of local item `li` in shard
+/// `si` targets. Offset in `[1, s-1]`: never self, distinct per j, rotated
+/// per item so all shard pairs are covered even at fanout 1. Shared by
+/// insert-time bridging and the merge catch-up so coverage watermarks mean
+/// the same thing on both paths.
+#[inline]
+pub(crate) fn rotation_target(si: usize, li: usize, j: usize, s: usize) -> usize {
+    (si + 1 + (li + j) % (s - 1)) % s
+}
+
+/// Everything a worker needs for insert-time bridge discovery.
+pub(crate) struct BridgeCtx {
+    pub si: usize,
+    pub n_shards: usize,
+    pub bridge_k: usize,
+    pub bridge_fanout: usize,
+    pub alpha: f64,
+    /// Maximum items a remote shard may have grown past its frozen
+    /// snapshot before insert-time coverage stalls (falling back to the
+    /// merge catch-up, which searches live state). Bounds the epoch-window
+    /// blindness documented in [`crate::engine::pipeline`]: without it, a
+    /// long gap between merges would let items mark themselves covered
+    /// against arbitrarily stale views.
+    pub lag_limit: usize,
+    pub snaps: Arc<Snaps>,
+    pub bridge: Arc<Mutex<BridgeState>>,
+}
+
+/// Insert-time bridge maintenance: advance this shard's coverage watermark
+/// by querying the frozen remote snapshots for every new local item. Runs
+/// inside the worker, after a batch of inserts, while it still holds its
+/// own write guard (so core distances are current). Items are covered in
+/// order; the walk stops early when the local core distance is still +∞
+/// (fewer than MinPts neighbors known — retried next batch, or picked up
+/// by the merge catch-up) or when any remote snapshot is missing.
+fn bridge_new_items(st: &ShardState, ctx: &BridgeCtx) {
+    let s = ctx.n_shards;
+    if s < 2 || ctx.bridge_k == 0 || ctx.bridge_fanout == 0 {
+        return;
+    }
+    let len = st.f.len();
+    {
+        // cheap pre-check without cloning any snapshot Arcs
+        let br = ctx.bridge.lock().unwrap();
+        if br.covered >= len {
+            return;
+        }
+    }
+    // frozen remote views; bail if any shard has not published one yet
+    // (first refresh happens at the first merge) or has grown too far past
+    // its snapshot — the merge catch-up covers those items against live
+    // state instead
+    let mut snaps: Vec<Option<Arc<ShardSnap>>> = Vec::with_capacity(s);
+    for t in 0..s {
+        if t == ctx.si {
+            snaps.push(None);
+        } else {
+            match ctx.snaps.get(t) {
+                Some(sn) => {
+                    // stale in absolute terms (grew past the lag budget) or
+                    // in relative terms (more than doubled — catches the
+                    // empty/tiny snapshot a premature merge publishes):
+                    // covering against such a view would silently lose
+                    // cross-shard pairs, so leave them to the catch-up
+                    let snap_len = sn.items.len();
+                    let live = ctx.snaps.live_len(t);
+                    if live.saturating_sub(snap_len) > ctx.lag_limit
+                        || snap_len * 2 < live
+                    {
+                        return;
+                    }
+                    snaps.push(Some(sn));
+                }
+                None => return,
+            }
+        }
+    }
+
+    let t0 = Instant::now();
+    let fanout = ctx.bridge_fanout.min(s - 1);
+    let mut br = ctx.bridge.lock().unwrap();
+    let mut changed = false;
+    while br.covered < len {
+        let li = br.covered;
+        let ci = st.f.core_distance(li as u32);
+        if !ci.is_finite() {
+            break; // too few neighbors yet; retry once the shard has grown
+        }
+        let gi = st.globals[li];
+        let item = &st.f.items()[li];
+        for j in 0..fanout {
+            let t = rotation_target(ctx.si, li, j, s);
+            let snap = snaps[t].as_ref().expect("remote snapshot present");
+            for (rj, d) in snap.nearest(item, ctx.bridge_k) {
+                let w = d.max(ci).max(snap.cores[rj as usize]);
+                if br.offer(gi, snap.globals[rj as usize], w) {
+                    br.insert_edges += 1;
+                    changed = true;
+                }
+            }
+        }
+        br.covered = li + 1;
+    }
+    br.maybe_compact(ctx.alpha, len);
+    if changed {
+        br.generation += 1;
+    }
+    br.insert_secs += t0.elapsed().as_secs_f64();
+}
+
+// ------------------------------------------------------------- the shard --
+
 /// Handle to one running shard worker.
 pub(crate) struct Shard {
     pub state: Arc<RwLock<ShardState>>,
+    /// The shard's bridge buffer (shared with its worker).
+    pub bridge: Arc<Mutex<BridgeState>>,
     tx: SyncSender<ShardCmd>,
-    handle: Option<JoinHandle<()>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl Shard {
@@ -59,20 +401,45 @@ impl Shard {
         metric: MetricKind,
         params: FishdbcParams,
         queue_depth: usize,
+        ctx: BridgeCtxSeed,
     ) -> Shard {
-        Shard::resume(id, ShardState::new(metric, params), queue_depth)
+        Shard::resume(
+            id,
+            ShardState::new(metric, params),
+            BridgeState::new(),
+            queue_depth,
+            ctx,
+        )
     }
 
     /// Spawn a worker around pre-existing state (engine reload).
-    pub fn resume(id: usize, state: ShardState, queue_depth: usize) -> Shard {
+    pub fn resume(
+        id: usize,
+        state: ShardState,
+        bridge: BridgeState,
+        queue_depth: usize,
+        ctx: BridgeCtxSeed,
+    ) -> Shard {
         let (tx, rx) = sync_channel(queue_depth.max(1));
         let state = Arc::new(RwLock::new(state));
+        let bridge = Arc::new(Mutex::new(bridge));
         let worker_state = Arc::clone(&state);
+        ctx.snaps.set_len(id, state.read().unwrap().f.len());
+        let worker_ctx = BridgeCtx {
+            si: id,
+            n_shards: ctx.n_shards,
+            bridge_k: ctx.bridge_k,
+            bridge_fanout: ctx.bridge_fanout,
+            alpha: ctx.alpha,
+            lag_limit: ctx.lag_limit,
+            snaps: ctx.snaps,
+            bridge: Arc::clone(&bridge),
+        };
         let handle = std::thread::Builder::new()
             .name(format!("fishdbc-shard-{id}"))
-            .spawn(move || run(worker_state, rx))
+            .spawn(move || run(worker_state, rx, worker_ctx))
             .expect("spawn shard worker");
-        Shard { state, tx, handle: Some(handle) }
+        Shard { state, bridge, tx, handle: Mutex::new(Some(handle)) }
     }
 
     /// Enqueue a command (blocks when the queue is full — backpressure).
@@ -81,15 +448,26 @@ impl Shard {
     }
 
     /// Idempotent: safe to call from both `Engine::shutdown` and `Drop`.
-    pub fn shutdown(&mut self) {
+    pub fn shutdown(&self) {
         let _ = self.tx.send(ShardCmd::Shutdown);
-        if let Some(h) = self.handle.take() {
+        if let Some(h) = self.handle.lock().unwrap().take() {
             let _ = h.join();
         }
     }
 }
 
-fn run(state: Arc<RwLock<ShardState>>, rx: Receiver<ShardCmd>) {
+/// The engine-owned parts of a worker's bridge context (the per-shard
+/// pieces — id and buffer — are filled in by [`Shard::resume`]).
+pub(crate) struct BridgeCtxSeed {
+    pub n_shards: usize,
+    pub bridge_k: usize,
+    pub bridge_fanout: usize,
+    pub alpha: f64,
+    pub lag_limit: usize,
+    pub snaps: Arc<Snaps>,
+}
+
+fn run(state: Arc<RwLock<ShardState>>, rx: Receiver<ShardCmd>, ctx: BridgeCtx) {
     loop {
         match rx.recv() {
             Err(_) => break, // engine dropped without Shutdown
@@ -102,9 +480,17 @@ fn run(state: Arc<RwLock<ShardState>>, rx: Receiver<ShardCmd>) {
                 }
                 st.batches += 1;
                 st.build_secs += t0.elapsed().as_secs_f64();
+                ctx.snaps.set_len(ctx.si, st.f.len());
+                // insert-time bridge discovery against frozen snapshots
+                // (lock order: own state write guard → own bridge mutex)
+                bridge_new_items(&st, &ctx);
             }
             Ok(ShardCmd::Flush(reply)) => {
-                state.write().unwrap().f.update_mst();
+                {
+                    let mut st = state.write().unwrap();
+                    st.f.update_mst();
+                    bridge_new_items(&st, &ctx);
+                }
                 let _ = reply.send(());
             }
             Ok(ShardCmd::Shutdown) => break,

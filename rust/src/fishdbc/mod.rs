@@ -296,6 +296,12 @@ impl<T, M: Metric<T>> Fishdbc<T, M> {
         )
     }
 
+    /// Read-only view of the underlying HNSW (the engine clones it into
+    /// the frozen snapshots that insert-time bridge queries run against).
+    pub fn hnsw(&self) -> &Hnsw {
+        &self.hnsw
+    }
+
     /// HNSW state export (persistence; see the `persist` module).
     pub fn hnsw_export(&self) -> crate::hnsw::HnswExport {
         self.hnsw.export()

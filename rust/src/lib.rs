@@ -37,12 +37,17 @@
 //! ## Sharded parallel ingest ([`engine`])
 //!
 //! When one core is not enough, the engine hash-routes the stream across
-//! `S` shard-local FISHDBC instances (one thread each), then merges the
-//! per-shard spanning forests plus a bounded set of cross-shard *bridge
-//! edges* with a single Kruskal + condense pass. [`engine::Engine::label`]
-//! answers "which cluster would this item join?" against the latest
-//! snapshot without mutating any state — the serving primitive of a
-//! production deployment.
+//! `S` shard-local FISHDBC instances (one thread each) and recovers the
+//! global clustering through an incremental, epoch-based recluster
+//! pipeline ([`engine::pipeline`]): cross-shard *bridge edges* are
+//! discovered at insert time against frozen remote snapshots, each
+//! `cluster()` folds only the delta since the previous epoch into a
+//! cached global forest, and an unchanged forest short-circuits
+//! extraction entirely — so re-clustering costs O(Δn), not O(n). With
+//! `EngineConfig::recluster_every` a background thread publishes fresh
+//! epochs automatically, and [`engine::Engine::label`] answers "which
+//! cluster would this item join?" against the latest epoch without
+//! mutating any state — the serving loop of a production deployment.
 //!
 //! ```no_run
 //! use fishdbc::engine::{Engine, EngineConfig};

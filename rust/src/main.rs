@@ -29,6 +29,7 @@ const VALUE_KEYS: &[&str] = &[
     "dataset", "n", "dim", "ef", "min-pts", "mcs", "alpha", "seed", "chunk",
     "recluster-every", "metric", "silhouette-max", "input", "format", "save",
     "load", "out", "labels-out", "efs", "shards", "bridge-k", "bridge-fanout",
+    "bridge-refresh",
 ];
 
 fn main() {
@@ -100,12 +101,19 @@ stream options:
   --chunk C            ingestion batch size (default 200)
   --recluster-every R  auto re-cluster period in items (default 1000)
 
-engine options (sharded parallel ingest, global MSF merge, online labels):
+engine options (sharded parallel ingest, incremental epoch merges, online
+labels):
   --shards S        shard worker threads (default 4; 1 = single-core path)
   --chunk C         ingestion batch size (default 512)
   --bridge-k K      nearest remote neighbors per (item, shard) (default 3)
   --bridge-fanout F other shards sampled per item (default S-1)
+  --recluster-every R  background auto-recluster period in items (default
+                    0 = off); each merge publishes an epoch for latest()
+  --bridge-refresh B   also refresh the frozen bridge snapshots every B
+                    items (default 0 = only at merges)
+  --stats           print per-stage pipeline timings and cache counters
   --save PATH       persist the multi-shard engine state after building
+                    (v2 container: includes bridge buffers + cached MSF)
   --load PATH       resume a saved engine state (then add items on top)
   --quality         external metrics vs the generator labels (fresh runs)",
         names = datasets::DATASET_NAMES.join("|")
@@ -337,6 +345,8 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
     let bridge_k = args.usize_or("bridge-k", 3)?;
     let bridge_fanout =
         args.usize_or("bridge-fanout", shards.saturating_sub(1).max(1))?;
+    let recluster_every = args.usize_or("recluster-every", 0)?;
+    let bridge_refresh = args.usize_or("bridge-refresh", 0)?;
 
     let (engine, resumed) = match args.get("load") {
         Some(path) => {
@@ -367,6 +377,8 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
                 bridge_k,
                 bridge_fanout,
                 queue_depth: 16,
+                recluster_every,
+                bridge_refresh,
             }),
             false,
         ),
@@ -389,8 +401,28 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
     );
 
     let t0 = std::time::Instant::now();
+    let mut seen_epoch = 0u64;
     for batch in ds.items.chunks(chunk) {
         engine.add_batch(batch.to_vec());
+        // the background serving loop publishes epochs while we ingest
+        if engine.config().recluster_every > 0 {
+            if let Some(snap) = engine.latest() {
+                if snap.epoch > seen_epoch {
+                    seen_epoch = snap.epoch;
+                    println!(
+                        "  epoch {:>3}: t={:6.2}s n={:>7} clusters={:>4} \
+                         merge={:.3}s (bridge {:.3}s, reused extract: {})",
+                        snap.epoch,
+                        t0.elapsed().as_secs_f64(),
+                        snap.n_items,
+                        snap.clustering.n_clusters,
+                        snap.extract_secs,
+                        snap.bridge_secs,
+                        snap.stages.reused_clustering,
+                    );
+                }
+            }
+        }
     }
     engine.flush();
     let ingest = t0.elapsed().as_secs_f64();
@@ -412,14 +444,52 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
 
     let snap = engine.cluster(mcs);
     println!(
-        "merge: {:.3}s | {} forest edges ({} bridges offered) | {} flat \
-         clusters, {} clustered",
+        "merge (epoch {}): {:.3}s | {} forest edges ({} bridges offered, \
+         {} shards changed) | {} flat clusters, {} clustered",
+        snap.epoch,
         snap.extract_secs,
         snap.n_msf_edges,
         snap.n_bridge_edges,
+        snap.n_changed_shards,
         snap.clustering.n_clusters,
         snap.clustering.n_clustered(),
     );
+    if args.flag("stats") {
+        let es = engine.stats();
+        println!(
+            "pipeline: {} merges, {} runs ({} short-circuits, {} dendrogram \
+             reuses)",
+            es.merges,
+            es.pipeline.runs,
+            es.pipeline.short_circuits,
+            es.pipeline.dendrogram_reuses,
+        );
+        println!(
+            "  last merge stages: bridge {:.3}s kruskal {:.3}s dendrogram \
+             {:.3}s condense {:.3}s extract {:.3}s",
+            snap.bridge_secs,
+            snap.kruskal_secs,
+            snap.stages.dendrogram_secs,
+            snap.stages.condense_secs,
+            snap.stages.extract_secs,
+        );
+        println!(
+            "  cumulative stages: dendrogram {:.3}s condense {:.3}s extract \
+             {:.3}s",
+            es.pipeline.dendrogram_secs,
+            es.pipeline.condense_secs,
+            es.pipeline.extract_secs,
+        );
+        println!(
+            "  bridges: {} buffered edges ({} found at insert time, \
+             {:.3}s), {} items covered, {} compactions",
+            es.bridge_edges,
+            es.bridge_insert_edges,
+            es.bridge_insert_secs,
+            es.bridge_covered,
+            es.bridge_compactions,
+        );
+    }
 
     // global ids are arrival order, so labels align with the dataset —
     // unless we resumed on top of pre-existing items

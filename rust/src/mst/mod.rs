@@ -308,6 +308,73 @@ mod tests {
     }
 
     #[test]
+    fn prop_sharded_union_with_compacted_bridges_equals_oneshot() {
+        // The engine-merge invariant at full generality (ISSUE 2): split a
+        // random graph into S parts (the shards), take each part's MSF, add
+        // bridge edges pre-compacted through their own Msf (the α·n flush
+        // discipline), and Kruskal over the union must equal the MST of the
+        // whole union graph — the UPDATE_MST merge lemma.
+        check("sharded-union-eq-oneshot", 30, |rng, _| {
+            let n = 4 + rng.below(40);
+            let s = 2 + rng.below(4);
+            let all = random_graph(rng, n, 2 + rng.below(n * 3));
+            let mut parts: Vec<Vec<Edge>> = vec![Vec::new(); s];
+            for (i, e) in all.iter().enumerate() {
+                parts[i % s].push(*e);
+            }
+            let part_msfs: Vec<Msf> = parts
+                .iter()
+                .map(|p| Msf::from_edges(p.clone(), n))
+                .collect();
+            let bridges = random_graph(rng, n, 1 + rng.below(n));
+            let bridge_msf = Msf::from_edges(bridges.clone(), n);
+
+            let mut refs: Vec<&[Edge]> =
+                part_msfs.iter().map(|m| m.edges()).collect();
+            refs.push(bridge_msf.edges());
+            let union = Msf::from_edge_lists(&refs, n);
+
+            let mut oneshot_edges = all.clone();
+            oneshot_edges.extend_from_slice(&bridges);
+            let oneshot = Msf::from_edges(oneshot_edges, n);
+            assert!(
+                (union.total_weight() - oneshot.total_weight()).abs() < 1e-9,
+                "union {} vs oneshot {} (s={s})",
+                union.total_weight(),
+                oneshot.total_weight()
+            );
+            assert_eq!(union.edges().len(), oneshot.edges().len());
+        });
+    }
+
+    #[test]
+    fn prop_cached_global_forest_absorbs_deltas() {
+        // The delta-merge invariant: the previous epoch's global MSF is a
+        // lossless summary of everything already offered — Kruskal over
+        // (cached MSF ∪ delta edges) equals the MST of (everything ∪
+        // delta). Cycle property: the union graph only grows, so an edge
+        // once evicted can never re-enter an MSF.
+        check("cached-forest-delta", 30, |rng, _| {
+            let n = 4 + rng.below(40);
+            let g1 = random_graph(rng, n, 2 + rng.below(n * 3));
+            let g2 = random_graph(rng, n, 1 + rng.below(n * 2));
+            let cached = Msf::from_edges(g1.clone(), n);
+            let delta = Msf::from_edge_lists(&[cached.edges(), &g2], n);
+
+            let mut all = g1;
+            all.extend_from_slice(&g2);
+            let oneshot = Msf::from_edges(all, n);
+            assert!(
+                (delta.total_weight() - oneshot.total_weight()).abs() < 1e-9,
+                "delta {} vs oneshot {}",
+                delta.total_weight(),
+                oneshot.total_weight()
+            );
+            assert_eq!(delta.edges().len(), oneshot.edges().len());
+        });
+    }
+
+    #[test]
     fn prop_edges_sorted_after_update() {
         check("msf-sorted", 20, |rng, _| {
             let n = 2 + rng.below(30);

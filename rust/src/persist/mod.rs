@@ -12,7 +12,8 @@
 use std::io::{self, Read, Write};
 
 use crate::distances::{bitmap::Bitmap, fuzzy::Digest, Item, MetricKind};
-use crate::engine::shard::ShardState;
+use crate::engine::merge::{MergeCache, MergeState, ShardStamp};
+use crate::engine::shard::{BridgeState, ShardState};
 use crate::engine::{Engine, EngineConfig};
 use crate::fishdbc::{neighbors::NeighborStore, Fishdbc, FishdbcParams};
 use crate::hnsw::{Hnsw, HnswExport, HnswParams};
@@ -23,7 +24,14 @@ const VERSION: u8 = 1;
 /// Multi-shard engine container: its own magic + version so single-instance
 /// and engine state files are never confused.
 const ENGINE_MAGIC: &[u8; 8] = b"FISHENG\0";
-const ENGINE_VERSION: u8 = 1;
+/// v1: per-shard FISHDBC blobs + id maps. v2 adds the recluster-pipeline
+/// epoch state: per-shard bridge buffers/forests with coverage watermarks,
+/// the serving-loop config knobs, and the cached global MSF with its
+/// change stamps — so a restarted engine reclusters incrementally instead
+/// of re-paying the full bridge search. v1 files still load (with empty
+/// pipeline state).
+const ENGINE_VERSION: u8 = 2;
+const ENGINE_VERSION_V1: u8 = 1;
 /// Sanity cap on any single length prefix (guards corrupt files from
 /// triggering huge allocations).
 const MAX_LEN: u64 = 1 << 33;
@@ -501,12 +509,36 @@ impl Fishdbc<Item, MetricKind> {
 
 // ---------------------------------------------------------- engine codec --
 
+fn write_edges<W: Write>(w: &mut BinWriter<W>, edges: &[Edge]) -> io::Result<()> {
+    w.len(edges.len())?;
+    for e in edges {
+        w.u32(e.a)?;
+        w.u32(e.b)?;
+        w.f64(e.w)?;
+    }
+    Ok(())
+}
+
+fn read_edge_triples<R: Read>(
+    r: &mut BinReader<R>,
+) -> io::Result<Vec<(u32, u32, f64)>> {
+    let n = r.len()?;
+    let mut v = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        v.push((r.u32()?, r.u32()?, r.f64()?));
+    }
+    Ok(v)
+}
+
 impl Engine {
     /// Serialize the complete multi-shard engine state: a versioned
     /// container holding every shard's full FISHDBC snapshot plus its
-    /// local→global id map, so a sharded deployment survives restarts and
-    /// keeps ingesting **exactly** where it left off (same routing, same
-    /// per-shard RNG streams, same future clusterings). Flushes first so no
+    /// local→global id map and — since v2 — the recluster-pipeline epoch
+    /// state (bridge buffers, coverage watermarks, cached global MSF), so
+    /// a sharded deployment survives restarts and keeps ingesting
+    /// **exactly** where it left off (same routing, same per-shard RNG
+    /// streams, same future clusterings), reclustering incrementally
+    /// instead of re-paying the full bridge search. Flushes first so no
     /// queued batch is lost.
     pub fn save<W: Write>(&self, w: W) -> io::Result<()> {
         // Consistent cut under concurrent ingest: barrier, lock every
@@ -514,9 +546,10 @@ impl Engine {
         // 0..total (a batch routed between the barrier and the locks
         // leaves a gap in some shard); if one slipped in, re-barrier.
         // Items accepted after the locks are simply not in the checkpoint.
+        let inner = self.inner();
         let guards = loop {
             self.flush();
-            let guards: Vec<_> = self
+            let guards: Vec<_> = inner
                 .shard_handles()
                 .iter()
                 .map(|s| s.state.read().unwrap())
@@ -549,18 +582,56 @@ impl Engine {
         w.u64(cfg.bridge_k as u64)?;
         w.u64(cfg.bridge_fanout as u64)?;
         w.u64(cfg.queue_depth as u64)?;
+        w.u64(cfg.recluster_every as u64)?;
+        w.u64(cfg.bridge_refresh as u64)?;
+        w.u64(self.epoch())?;
 
-        for st in &guards {
+        // shards are quiescent behind the read guards, so their bridge
+        // buffers are stable too (workers only touch them while holding
+        // their state write lock)
+        for (shard, st) in inner.shard_handles().iter().zip(&guards) {
             w.u32s(&st.globals)?;
             w.u64(st.batches)?;
             w.f64(st.build_secs)?;
             // nested single-instance snapshot (own magic + version)
             st.f.save(&mut w.w)?;
+            let br = shard.bridge.lock().unwrap();
+            w.u64(br.covered as u64)?;
+            w.u64(br.generation)?;
+            write_edges(&mut w, br.msf.edges())?;
+            let buf = br.buf_export();
+            w.len(buf.len())?;
+            for &(a, b, wt) in &buf {
+                w.u32(a)?;
+                w.u32(b)?;
+                w.f64(wt)?;
+            }
+        }
+
+        // cached global MSF + change stamps (lock order matches the merge
+        // path: states → merge → bridge, and the bridge guards above were
+        // dropped per-shard)
+        let ms = inner.merge.lock().unwrap();
+        match &ms.cache {
+            None => w.u8(0)?,
+            Some(c) => {
+                w.u8(1)?;
+                w.u64(c.n as u64)?;
+                for s in &c.stamps {
+                    w.u64(s.items as u64)?;
+                    w.u64(s.mst_updates)?;
+                    w.u64(s.msf_len as u64)?;
+                    w.u64(s.bridge_gen)?;
+                }
+                write_edges(&mut w, c.global.edges())?;
+            }
         }
         Ok(())
     }
 
-    /// Reload an engine previously written by [`Engine::save`]. All reads
+    /// Reload an engine previously written by [`Engine::save`] (v2, or a
+    /// pre-pipeline v1 file — the latter resumes with empty pipeline
+    /// state, so its first recluster is a from-scratch merge). All reads
     /// are validated: shard counts, id-map lengths, global-id ranges and
     /// per-shard metrics must be mutually consistent or the load errors
     /// (never panics).
@@ -571,9 +642,11 @@ impl Engine {
         if &magic != ENGINE_MAGIC {
             return Err(bad("not a FISHDBC engine state file"));
         }
-        if r.u8()? != ENGINE_VERSION {
+        let version = r.u8()?;
+        if version != ENGINE_VERSION && version != ENGINE_VERSION_V1 {
             return Err(bad("unsupported engine format version"));
         }
+        let v2 = version >= 2;
 
         let metric_name = r.str()?;
         let metric = MetricKind::parse(&metric_name)
@@ -587,8 +660,13 @@ impl Engine {
         let bridge_k = r.u64()? as usize;
         let bridge_fanout = r.u64()? as usize;
         let queue_depth = r.u64()? as usize;
+        let (recluster_every, bridge_refresh, epoch) = if v2 {
+            (r.u64()? as usize, r.u64()? as usize, r.u64()?)
+        } else {
+            (0, 0, 0)
+        };
 
-        let mut states = Vec::with_capacity(n_shards);
+        let mut parts = Vec::with_capacity(n_shards);
         let mut total = 0u64;
         let mut params: Option<FishdbcParams> = None;
         for _ in 0..n_shards {
@@ -605,15 +683,85 @@ impl Engine {
             if *f.metric() != metric {
                 return Err(bad("shard metric disagrees with engine header"));
             }
+            let bridge = if v2 {
+                let covered = r.u64()? as usize;
+                if covered > f.len() {
+                    return Err(bad("bridge coverage exceeds shard size"));
+                }
+                let generation = r.u64()?;
+                let msf_edges = read_edge_triples(&mut r)?;
+                let buf = read_edge_triples(&mut r)?;
+                if msf_edges
+                    .iter()
+                    .chain(buf.iter())
+                    .any(|&(a, b, _)| a as u64 >= next_global || b as u64 >= next_global)
+                {
+                    return Err(bad("bridge edge id out of range"));
+                }
+                BridgeState::from_parts(
+                    covered,
+                    generation,
+                    msf_edges
+                        .into_iter()
+                        .map(|(a, b, wt)| Edge::new(a, b, wt))
+                        .collect(),
+                    buf,
+                )
+            } else {
+                BridgeState::new()
+            };
             total += globals.len() as u64;
             if params.is_none() {
                 params = Some(*f.params());
             }
-            states.push(ShardState { f, globals, batches, build_secs });
+            parts.push((ShardState { f, globals, batches, build_secs }, bridge));
         }
         if total != next_global {
             return Err(bad("shard item counts do not sum to the global count"));
         }
+
+        let merge_state = if v2 && r.u8()? == 1 {
+            let n = r.u64()? as usize;
+            if n as u64 > next_global {
+                return Err(bad("cached forest covers more items than exist"));
+            }
+            let mut stamps = Vec::with_capacity(n_shards);
+            for (st, _bridge) in &parts {
+                let items = r.u64()? as usize;
+                if items > st.f.len() {
+                    return Err(bad("stamp item count exceeds shard size"));
+                }
+                stamps.push(ShardStamp {
+                    items,
+                    mst_updates: r.u64()?,
+                    msf_len: r.u64()? as usize,
+                    bridge_gen: r.u64()?,
+                });
+            }
+            let global = read_edge_triples(&mut r)?;
+            if global.len() >= n.max(1) {
+                return Err(bad("cached forest has too many edges"));
+            }
+            if global
+                .iter()
+                .any(|&(a, b, _)| a as usize >= n || b as usize >= n)
+            {
+                return Err(bad("cached forest edge id out of range"));
+            }
+            MergeState::resumed(Some(MergeCache {
+                global: Msf::from_parts(
+                    global
+                        .into_iter()
+                        .map(|(a, b, wt)| Edge::new(a, b, wt))
+                        .collect(),
+                    n,
+                ),
+                n,
+                stamps,
+            }))
+        } else {
+            MergeState::new()
+        };
 
         let config = EngineConfig {
             fishdbc: params.unwrap_or_default(),
@@ -622,8 +770,17 @@ impl Engine {
             bridge_k,
             bridge_fanout,
             queue_depth,
+            recluster_every,
+            bridge_refresh,
         };
-        Ok(Engine::from_resumed(metric, config, states, next_global))
+        Ok(Engine::from_resumed(
+            metric,
+            config,
+            parts,
+            next_global,
+            merge_state,
+            epoch,
+        ))
     }
 
     /// Save to a file path (convenience).
@@ -789,6 +946,72 @@ mod tests {
         assert_eq!(got.n_msf_edges, want.n_msf_edges);
         engine.shutdown();
         reloaded.shutdown();
+    }
+
+    #[test]
+    fn engine_v2_roundtrip_preserves_pipeline_state() {
+        let engine = build_engine(300, 3, 12);
+        let want = engine.cluster(5); // populates bridge buffers + cache
+        let mut buf = Vec::new();
+        engine.save(&mut buf).unwrap();
+        engine.shutdown();
+
+        let reloaded = Engine::load(buf.as_slice()).unwrap();
+        let got = reloaded.cluster(5);
+        assert_eq!(got.clustering.labels, want.clustering.labels);
+        assert_eq!(got.epoch, want.epoch + 1, "epoch counter resumes");
+        // the resumed merge must take the delta path: stamps match, so no
+        // shard re-offers and no bridge search re-runs
+        assert_eq!(got.n_changed_shards, 0);
+        assert_eq!(got.n_bridge_edges, 0, "no bridge re-search after resume");
+        let stats = reloaded.stats();
+        assert_eq!(stats.bridge_covered, 300, "coverage watermarks resumed");
+        assert!(stats.bridge_edges > 0, "bridge buffers resumed");
+        reloaded.shutdown();
+    }
+
+    #[test]
+    fn engine_v1_files_still_load() {
+        // emit the pre-pipeline v1 layout by hand; it must load with empty
+        // pipeline state and recluster from scratch
+        let ds = datasets::blobs::generate(120, 8, 4, 13);
+        let p = FishdbcParams { min_pts: 5, ef: 20, ..Default::default() };
+        let mut shards: Vec<(Fishdbc<Item, MetricKind>, Vec<u32>)> = (0..2)
+            .map(|_| (Fishdbc::new(MetricKind::Euclidean, p), Vec::new()))
+            .collect();
+        for (gid, it) in ds.items.iter().enumerate() {
+            let s = (crate::engine::item_hash(it) % 2) as usize;
+            shards[s].0.add(it.clone());
+            shards[s].1.push(gid as u32);
+        }
+        let mut buf = Vec::new();
+        {
+            let mut w = BinWriter::new(&mut buf);
+            w.w.write_all(b"FISHENG\0").unwrap();
+            w.u8(1).unwrap(); // ENGINE_VERSION_V1
+            w.str(MetricKind::Euclidean.name()).unwrap();
+            w.u64(2).unwrap(); // shards
+            w.u64(120).unwrap(); // next_global
+            w.u64(5).unwrap(); // mcs
+            w.u64(3).unwrap(); // bridge_k
+            w.u64(1).unwrap(); // bridge_fanout
+            w.u64(16).unwrap(); // queue_depth
+            for (f, globals) in &shards {
+                w.u32s(globals).unwrap();
+                w.u64(1).unwrap(); // batches
+                w.f64(0.0).unwrap(); // build_secs
+                f.save(&mut w.w).unwrap();
+            }
+        }
+        let engine = Engine::load(buf.as_slice()).unwrap();
+        assert_eq!(engine.len(), 120);
+        assert_eq!(engine.n_shards(), 2);
+        assert_eq!(engine.config().recluster_every, 0);
+        assert_eq!(engine.epoch(), 0);
+        let snap = engine.cluster(5);
+        assert_eq!(snap.n_items, 120);
+        assert_eq!(snap.n_changed_shards, 2, "v1 resume merges from scratch");
+        engine.shutdown();
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! multi-shard state must round-trip through persistence mid-stream, and
 //! online label queries must serve without mutating anything.
 
+use fishdbc::coordinator::{Coordinator, CoordinatorConfig};
 use fishdbc::datasets;
 use fishdbc::distances::{Item, MetricKind};
 use fishdbc::engine::{Engine, EngineConfig};
@@ -88,6 +89,77 @@ fn two_shard_merge_is_also_consistent() {
         &to_pred(&snap.clustering.labels),
     );
     assert!(ari >= 0.9, "2-shard vs single-shard ARI {ari}");
+    engine.shutdown();
+}
+
+#[test]
+fn single_shard_engine_is_exactly_the_coordinator_path() {
+    // S=1 must reproduce the coordinator (the single-shard reference
+    // deployment) label-for-label: ARI exactly 1.0 (ISSUE 2)
+    let ds = blobs(800, 29);
+
+    let c = Coordinator::spawn(MetricKind::Euclidean, CoordinatorConfig {
+        fishdbc: params(),
+        mcs: 10,
+        ..Default::default()
+    });
+    for chunk in ds.items.chunks(100) {
+        c.add_batch(chunk.to_vec());
+    }
+    let want = c.cluster(10);
+    c.shutdown();
+
+    let engine = spawn_engine(1);
+    for chunk in ds.items.chunks(100) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let snap = engine.cluster(10);
+    assert_eq!(
+        snap.clustering.labels, want.clustering.labels,
+        "S=1 engine diverged from the coordinator"
+    );
+    let ari = adjusted_rand_index(
+        &to_pred(&want.clustering.labels),
+        &to_pred(&snap.clustering.labels),
+    );
+    assert!((ari - 1.0).abs() < 1e-12, "S=1 vs coordinator ARI {ari}");
+    engine.shutdown();
+}
+
+#[test]
+fn incremental_recluster_stays_consistent() {
+    // the epoch-based delta merge (cluster, ingest more, recluster) must
+    // agree with a from-scratch engine over the same stream (ISSUE 2:
+    // merged ARI >= 0.9)
+    let ds = blobs(2000, 43);
+    let truth = ds.primary_labels().unwrap().to_vec();
+
+    let fresh = spawn_engine(4);
+    for chunk in ds.items.chunks(256) {
+        fresh.add_batch(chunk.to_vec());
+    }
+    let want = fresh.cluster(10);
+    fresh.shutdown();
+
+    let engine = spawn_engine(4);
+    for chunk in ds.items[..1600].chunks(256) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let first = engine.cluster(10);
+    for chunk in ds.items[1600..].chunks(100) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let second = engine.cluster(10);
+    assert_eq!(second.n_items, 2000);
+    assert!(second.epoch > first.epoch);
+
+    let ari = adjusted_rand_index(
+        &to_pred(&want.clustering.labels),
+        &to_pred(&second.clustering.labels),
+    );
+    assert!(ari >= 0.9, "incremental vs from-scratch ARI {ari}");
+    let s = score_external(&second.clustering.labels, &truth);
+    assert!(s.ari >= 0.9, "incremental vs truth ARI {}", s.ari);
     engine.shutdown();
 }
 
