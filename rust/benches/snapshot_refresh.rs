@@ -1,0 +1,108 @@
+//! Snapshot refresh cost — chunked copy-on-write capture vs the O(n) deep
+//! clone it replaced (ISSUE 3 tentpole).
+//!
+//! Protocol: ingest n blob points into a 2-shard engine, publish a first
+//! set of frozen shard snapshots (a full capture: every chunk counts as
+//! copied), then repeatedly grow the stream by a dirty ratio — 10%, 1%,
+//! 0.1% — and time `Engine::refresh_bridges()`, the partial refresh path
+//! that `EngineConfig::bridge_refresh` drives mid-epoch. For each capture
+//! the engine's chunk counters report how many chunks were physically
+//! copied vs republished by reference, plus approximate bytes copied.
+//!
+//! Note the workload is adversarial for sharing: blob data hash-routes
+//! arbitrarily, so a new item's HNSW rewires touch chunks all over the id
+//! space. Copied bytes still scale with the delta (≈ Δ · M · CHUNK worst
+//! case), not with n — append-only stores (items, id maps) stay almost
+//! fully shared regardless. The `engine_integration` acceptance test pins
+//! the ≤ 10%-of-chunks bound on an id-local stream.
+//!
+//! Run: `cargo bench --bench snapshot_refresh` (optional first arg
+//! overrides n, e.g. `-- 2000` for the CI smoke pass).
+
+use std::time::Instant;
+
+use fishdbc::datasets;
+use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::fishdbc::FishdbcParams;
+
+fn main() {
+    let n: usize = std::env::args()
+        .skip(1)
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(50_000);
+    let dim = 16;
+    let ratios = [0.10f64, 0.01, 0.001];
+    let extra: usize = ratios
+        .iter()
+        .map(|r| ((n as f64 * r) as usize).max(1))
+        .sum();
+    let ds = datasets::blobs::generate(n + extra, dim, 10, 42);
+
+    let engine = Engine::spawn(ds.metric, EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
+        shards: 2,
+        mcs: 10,
+        ..Default::default()
+    });
+    println!(
+        "# snapshot refresh: blobs n={n}, dim={dim}, 2 shards, MinPts=10 \
+         ef=20, chunk={}",
+        fishdbc::util::chunked::CHUNK
+    );
+
+    for chunk in ds.items[..n].chunks(512) {
+        engine.add_batch(chunk.to_vec());
+    }
+    engine.flush();
+
+    let t0 = Instant::now();
+    engine.refresh_bridges();
+    let full_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let s = engine.stats().pipeline;
+    let full_bytes = s.snapshot_bytes_copied;
+    println!(
+        "full  capture: {full_ms:8.3}ms | {:>6} chunks copied, {:>6} shared \
+         | {:8.2} MB copied",
+        s.snapshot_chunks_copied,
+        s.snapshot_chunks_shared,
+        full_bytes as f64 / (1024.0 * 1024.0),
+    );
+
+    let mut cursor = n;
+    let mut prev = s;
+    let mut one_percent_bytes = full_bytes;
+    for &ratio in &ratios {
+        let delta = ((n as f64 * ratio) as usize).max(1);
+        for chunk in ds.items[cursor..cursor + delta].chunks(512) {
+            engine.add_batch(chunk.to_vec());
+        }
+        cursor += delta;
+        engine.flush();
+
+        let t = Instant::now();
+        engine.refresh_bridges();
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        let now = engine.stats().pipeline;
+        let copied = now.snapshot_chunks_copied - prev.snapshot_chunks_copied;
+        let shared = now.snapshot_chunks_shared - prev.snapshot_chunks_shared;
+        let bytes = now.snapshot_bytes_copied - prev.snapshot_bytes_copied;
+        let pct = 100.0 * copied as f64 / (copied + shared).max(1) as f64;
+        println!(
+            "dirty {:>5.1}%: capture {ms:8.3}ms | {copied:>6} chunks copied \
+             ({pct:5.1}%), {shared:>6} shared | {:8.2} MB copied",
+            ratio * 100.0,
+            bytes as f64 / (1024.0 * 1024.0),
+        );
+        if (ratio - 0.01).abs() < 1e-9 {
+            one_percent_bytes = bytes;
+        }
+        prev = now;
+    }
+
+    println!(
+        "# capture after +1% copies {:.1}% of the bytes a full capture \
+         publishes (chunked COW vs the deep clone it replaced)",
+        100.0 * one_percent_bytes as f64 / full_bytes.max(1) as f64
+    );
+    engine.shutdown();
+}

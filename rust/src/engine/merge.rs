@@ -202,7 +202,7 @@ pub(crate) fn catch_up_bridges(
     if s < 2 || k == 0 || fanout == 0 {
         return;
     }
-    // nothing above any watermark: skip the O(n) core-distance fetch too
+    // nothing above any watermark: skip spawning the scoped threads
     let idle = states
         .iter()
         .zip(bridges)
@@ -211,10 +211,6 @@ pub(crate) fn catch_up_bridges(
         return;
     }
     let fanout = fanout.min(s - 1);
-    // remote core distances, fetched in bulk once per shard
-    let cores: Vec<Vec<f64>> =
-        states.iter().map(|st| st.f.core_distances()).collect();
-    let cores = &cores;
 
     std::thread::scope(|scope| {
         for (si, st) in states.iter().enumerate() {
@@ -227,7 +223,8 @@ pub(crate) fn catch_up_bridges(
                 while br.covered < len {
                     let li = br.covered;
                     let gi = st.globals[li];
-                    let ci = cores[si][li];
+                    // O(1) chunked reads (no O(n) bulk core fetch per merge)
+                    let ci = st.f.cores()[li];
                     if !ci.is_finite() {
                         break; // retried at the next merge, once known
                     }
@@ -236,13 +233,14 @@ pub(crate) fn catch_up_bridges(
                         let t = rotation_target(si, li, j, s);
                         let remote = states[t];
                         for (rj, d) in remote.f.nearest(item, k, None) {
-                            let w = d.max(ci).max(cores[t][rj as usize]);
+                            let w = d.max(ci).max(remote.f.cores()[rj as usize]);
                             if br.offer(gi, remote.globals[rj as usize], w) {
                                 changed = true;
                             }
                         }
                     }
                     br.covered = li + 1;
+                    br.catch_up_items += 1;
                 }
                 br.maybe_compact(alpha, len);
                 if changed {
@@ -286,27 +284,46 @@ fn merge_forest(
     let mut lists: Vec<Vec<Edge>> = Vec::with_capacity(n_changed + 1);
     for (si, st) in states.iter().enumerate() {
         if changed[si] {
-            lists.push(
-                st.f.msf_edges()
-                    .iter()
-                    .map(|e| {
-                        Edge::new(
-                            st.globals[e.a as usize],
-                            st.globals[e.b as usize],
-                            e.w,
-                        )
-                    })
-                    .collect(),
-            );
+            lists.push(relabel_forest(st));
         }
     }
     // changed shards' bridge sets, deduplicated across shards: when item
     // a in S1 discovered b in S2 and b later discovered a, both buffers
     // hold the pair — offer one edge on the canonical (min, max) key with
     // the smaller weight
+    let bridge_list = dedup_bridges(bridges, &changed);
+    let n_bridge_edges = bridge_list.len();
+    lists.push(bridge_list);
+
+    let mut refs: Vec<&[Edge]> = Vec::with_capacity(lists.len() + 1);
+    if valid {
+        refs.push(cache.expect("valid implies cache").global.edges());
+    }
+    refs.extend(lists.iter().map(|l| l.as_slice()));
+    let msf = Msf::from_edge_lists(&refs, n.max(1));
+    (msf, n_bridge_edges, n_changed)
+}
+
+/// One shard's local forest relabeled into global ids (shared by the
+/// delta merge and the reference merge so the two paths can never drift).
+fn relabel_forest(st: &ShardState) -> Vec<Edge> {
+    st.f.msf_edges()
+        .iter()
+        .map(|e| {
+            Edge::new(st.globals[e.a as usize], st.globals[e.b as usize], e.w)
+        })
+        .collect()
+}
+
+/// Canonical-key min-weight deduplication of the selected shards' bridge
+/// sets (shared by the delta merge and the reference merge).
+fn dedup_bridges(
+    bridges: &[&Arc<Mutex<BridgeState>>],
+    selected: &[bool],
+) -> Vec<Edge> {
     let mut dedup: FastMap<(u32, u32), f64> = FastMap::default();
     for (si, br) in bridges.iter().enumerate() {
-        if changed[si] {
+        if selected[si] {
             let b = br.lock().unwrap();
             for e in b.edges() {
                 dedup
@@ -320,18 +337,79 @@ fn merge_forest(
             }
         }
     }
-    let bridge_list: Vec<Edge> =
-        dedup.into_iter().map(|((a, b), w)| Edge::new(a, b, w)).collect();
-    let n_bridge_edges = bridge_list.len();
-    lists.push(bridge_list);
+    dedup.into_iter().map(|((a, b), w)| Edge::new(a, b, w)).collect()
+}
 
-    let mut refs: Vec<&[Edge]> = Vec::with_capacity(lists.len() + 1);
-    if valid {
-        refs.push(cache.expect("valid implies cache").global.edges());
+/// Result of [`Engine::reference_cluster`]: the conformance oracle the
+/// deterministic stress harness compares every published epoch against.
+#[derive(Clone, Debug)]
+pub struct ReferenceMerge {
+    /// Flat clustering extracted from the reference forest (no pipeline
+    /// caches involved).
+    pub clustering: crate::hdbscan::Clustering,
+    /// Items covered.
+    pub n_items: usize,
+    /// Edges in the reference forest.
+    pub n_msf_edges: usize,
+    /// Total weight of the reference forest.
+    pub msf_weight: f64,
+}
+
+impl Engine {
+    /// From-scratch **reference merge** for conformance testing: fold every
+    /// shard's current forest plus every shard's current bridge set with
+    /// one Kruskal pass — ignoring the cached global MSF, the per-shard
+    /// change stamps, and the memoizing pipeline — and extract the
+    /// clustering through the stage functions directly.
+    ///
+    /// By the merge invariants (module docs above) this must produce the
+    /// same forest, and therefore the same labels, as the delta path; the
+    /// deterministic stress harness (`tests/engine_stress.rs`) asserts
+    /// exactly that after every published epoch. Read-only: no catch-up
+    /// search runs, no epoch is published, no cache is touched — call it
+    /// right after [`Engine::cluster`] (with no interleaved ingest) so
+    /// both paths see identical shard state.
+    #[doc(hidden)]
+    pub fn reference_cluster(&self, mcs: usize) -> ReferenceMerge {
+        let inner = self.inner();
+        inner.flush();
+        let guards: Vec<_> = inner
+            .shard_handles()
+            .iter()
+            .map(|s| s.state.read().unwrap())
+            .collect();
+        let states: Vec<&ShardState> = guards.iter().map(|g| &**g).collect();
+        let bridges: Vec<&Arc<Mutex<BridgeState>>> =
+            inner.shard_handles().iter().map(|s| &s.bridge).collect();
+        let n_items: usize = states.iter().map(|st| st.f.len()).sum();
+        let n = states
+            .iter()
+            .filter_map(|st| st.globals.iter().copied().max())
+            .max()
+            .map_or(0, |m| m as usize + 1)
+            .max(n_items);
+
+        let lists: Vec<Vec<Edge>> =
+            states.iter().map(|st| relabel_forest(st)).collect();
+        let all = vec![true; states.len()];
+        let bridge_list = dedup_bridges(&bridges, &all);
+        let mut refs: Vec<&[Edge]> =
+            lists.iter().map(|l| l.as_slice()).collect();
+        refs.push(&bridge_list);
+        let msf = Msf::from_edge_lists(&refs, n.max(1));
+        let clustering = crate::hdbscan::cluster_from_msf_opts(
+            msf.edges(),
+            n.max(1),
+            mcs,
+            false,
+        );
+        ReferenceMerge {
+            clustering,
+            n_items,
+            n_msf_edges: msf.edges().len(),
+            msf_weight: msf.total_weight(),
+        }
     }
-    refs.extend(lists.iter().map(|l| l.as_slice()));
-    let msf = Msf::from_edge_lists(&refs, n.max(1));
-    (msf, n_bridge_edges, n_changed)
 }
 
 #[cfg(test)]

@@ -99,8 +99,12 @@ pub struct EngineConfig {
     /// [`Engine::latest`] and refreshes the frozen bridge snapshots.
     pub recluster_every: usize,
     /// Additionally refresh the frozen remote snapshots every this many
-    /// accepted items (0 = only at merges). Smaller values tighten the
-    /// insert-time bridge freshness window at O(n) snapshot-clone cost.
+    /// accepted items (0 = only at merges). This is a true *partial*
+    /// refresh: captures are chunked copy-on-write (see `engine::shard`'s
+    /// snapshot-lifecycle notes), republishing every chunk untouched since
+    /// the previous capture and copying only the dirty ones — O(Δ), not
+    /// O(n) — so small values are affordable mid-epoch. Smaller values
+    /// tighten the insert-time bridge freshness window.
     pub bridge_refresh: usize,
 }
 
@@ -169,6 +173,15 @@ pub struct EngineStats {
     pub bridge_insert_edges: u64,
     /// Items whose bridge queries already ran (sum of coverage watermarks).
     pub bridge_covered: usize,
+    /// Items covered by the insert-time walk (this process).
+    pub bridge_insert_items: u64,
+    /// Items the merge catch-up had to search (this process). The two
+    /// walks share each shard's ordered watermark, so for an engine that
+    /// was not reloaded mid-run, `bridge_covered == bridge_insert_items +
+    /// bridge_catch_up_items` at any flushed quiescent point — the
+    /// no-duplicate-work invariant (a snapshot refresh that rewound a
+    /// watermark would break it).
+    pub bridge_catch_up_items: u64,
     /// α·n bridge-buffer compactions run.
     pub bridge_compactions: u64,
     /// Wall seconds shards spent on insert-time bridge queries.
@@ -571,12 +584,21 @@ impl EngineInner {
             stats.bridge_edges += br.n_edges();
             stats.bridge_insert_edges += br.insert_edges;
             stats.bridge_covered += br.covered;
+            stats.bridge_insert_items += br.insert_items;
+            stats.bridge_catch_up_items += br.catch_up_items;
             stats.bridge_compactions += br.compactions;
             stats.bridge_insert_secs += br.insert_secs;
         }
         let ms = self.merge.lock().unwrap();
         stats.merges = ms.merges;
         stats.pipeline = ms.pipeline.stats();
+        drop(ms);
+        // fold the chunked-capture counters into the pipeline stats view
+        let (captures, copied, shared, bytes) = self.snaps.capture_stats();
+        stats.pipeline.snapshot_captures = captures;
+        stats.pipeline.snapshot_chunks_copied = copied;
+        stats.pipeline.snapshot_chunks_shared = shared;
+        stats.pipeline.snapshot_bytes_copied = bytes;
         stats
     }
 }

@@ -34,6 +34,24 @@
 //!    identically to the previous epoch's (same `n`, same `mcs`), the
 //!    dendrogram → condense → extract stages are skipped entirely and the
 //!    cached clustering is republished.
+//! 4. **Chunked snapshot capture** — the frozen `ShardSnap`s that
+//!    insert-time bridging queries are captured copy-on-write from the
+//!    shards' chunked stores (items, HNSW nodes, cores, id maps — see the
+//!    snapshot-lifecycle notes in `engine::shard`): a capture republishes
+//!    every chunk untouched since the previous epoch by reference and the
+//!    writer copies a chunk at most once per epoch window, so refreshes —
+//!    including mid-epoch `bridge_refresh` captures — cost O(Δ), not O(n).
+//!    Captures never touch bridge state, so coverage watermarks survive
+//!    every refresh and no covered pair is ever re-searched. Per-capture
+//!    copied-vs-shared chunk counts land in [`PipelineStats`]
+//!    (`snapshot_*`; printed by `fishdbc engine --stats`, measured by the
+//!    `snapshot_refresh` bench).
+//!
+//! The *epoch labels themselves* are conformance-tested: the seeded stress
+//! harness (`tests/engine_stress.rs`) replays deterministic schedules of
+//! ingest / merge / query / save-load and asserts every published epoch
+//! equals `Engine::reference_cluster` — a from-scratch merge of the same
+//! state that bypasses every cache above.
 //!
 //! Freshness caveat (documented, deliberate): an item pair (a, b) living
 //! in two different shards and *both* inserted within the same epoch
@@ -86,6 +104,17 @@ pub struct PipelineStats {
     pub condense_secs: f64,
     /// Cumulative seconds spent extracting flat clusterings.
     pub extract_secs: f64,
+    /// Chunked copy-on-write snapshot captures (engine only; the
+    /// coordinator path never captures, so these stay 0 there).
+    pub snapshot_captures: u64,
+    /// Chunks physically copied across all captures (i.e. dirty since the
+    /// previous capture of the same shard, or first-time captures).
+    pub snapshot_chunks_copied: u64,
+    /// Chunks republished by reference across all captures — the O(n)
+    /// clone work the chunked refactor avoids.
+    pub snapshot_chunks_shared: u64,
+    /// Approximate heap bytes in the copied chunks.
+    pub snapshot_bytes_copied: u64,
 }
 
 /// Per-run stage breakdown returned alongside the clustering.

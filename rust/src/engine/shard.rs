@@ -3,7 +3,10 @@
 //! local→global id map that lets the merge relabel its MSF edges, plus the
 //! shard's half of the incremental bridge pipeline — a buffer of
 //! cross-shard candidate edges discovered **at insert time** against
-//! frozen snapshots of the other shards' HNSWs.
+//! frozen snapshots of the other shards' HNSWs. Snapshots are captured
+//! copy-on-write from the shard's chunked stores in O(Δ), not deep-cloned
+//! in O(n) — see the snapshot-lifecycle notes at the `snapshots` section
+//! below.
 //!
 //! The FISHDBC state sits behind an `RwLock` so the merge and the online
 //! query path can read it concurrently; only the shard's own worker ever
@@ -26,6 +29,7 @@ use crate::distances::{Item, MetricKind};
 use crate::fishdbc::{Fishdbc, FishdbcParams};
 use crate::hnsw::Hnsw;
 use crate::mst::{Edge, Msf};
+use crate::util::chunked::{ChunkDelta, ChunkedVec};
 use crate::util::fasthash::FastMap;
 
 /// Commands a shard worker processes in FIFO order.
@@ -41,8 +45,9 @@ pub(crate) enum ShardCmd {
 /// Shard-local state: the FISHDBC instance plus bookkeeping.
 pub(crate) struct ShardState {
     pub f: Fishdbc<Item, MetricKind>,
-    /// `globals[local_id] = global_id` (dense, append-only).
-    pub globals: Vec<u32>,
+    /// `globals[local_id] = global_id` (dense, append-only, chunked so
+    /// snapshots capture it copy-on-write).
+    pub globals: ChunkedVec<u32>,
     pub batches: u64,
     /// Wall time this shard spent inserting (its lane of the build).
     pub build_secs: f64,
@@ -52,7 +57,7 @@ impl ShardState {
     pub fn new(metric: MetricKind, params: FishdbcParams) -> ShardState {
         ShardState {
             f: Fishdbc::new(metric, params),
-            globals: Vec::new(),
+            globals: ChunkedVec::new(),
             batches: 0,
             build_secs: 0.0,
         }
@@ -60,30 +65,67 @@ impl ShardState {
 }
 
 // ------------------------------------------------------------- snapshots --
+//
+// ## Snapshot lifecycle (chunked copy-on-write capture)
+//
+// Every store a snapshot needs — the item store, the HNSW node chunks, the
+// core-distance mirror, and the local→global id map — lives in chunked
+// `Arc`-shared storage ([`ChunkedVec`]). [`ShardSnap::capture`] is
+// therefore just four O(n / CHUNK) pointer clones taken under the shard's
+// *read* lock; no element is copied at capture time. The cost moved to the
+// writer side, where it belongs: the first time the shard worker rewires a
+// node (or shifts a core, or appends into the tail) of a chunk that some
+// frozen snapshot still references, `Arc::make_mut` copies that one chunk.
+// Chunks untouched since the previous capture stay physically shared by
+// the live shard and every snapshot that saw them, so a capture after a
+// small delta republishes almost everything and copies only the dirty
+// tail — the "partial snapshot refresh" that makes
+// `EngineConfig::bridge_refresh` cheap enough to run mid-epoch.
+//
+// Captures never touch `BridgeState`: in particular the coverage watermark
+// (`BridgeState::covered`) survives every mid-epoch refresh, so items
+// already bridged at insert time are never re-searched — and never
+// re-offered — by the next merge's catch-up (regression-tested in
+// `engine_integration::bridge_refresh_capture_preserves_coverage_watermark`).
+//
+// [`Snaps::set`] compares each new snapshot's chunk pointers against the
+// snapshot it replaces and accumulates copied-vs-shared chunk counts (plus
+// approximate bytes copied), surfaced through `PipelineStats` /
+// `fishdbc engine --stats` and asserted on by the tentpole acceptance test.
 
 /// Frozen, read-only view of one shard's index at some epoch: everything a
 /// *remote* shard needs to run bridge queries against it without touching
-/// its `RwLock`. Immutable once built; shared as `Arc<ShardSnap>`.
+/// its `RwLock`. Immutable once built; shared as `Arc<ShardSnap>`. All
+/// four stores are chunked and physically share every chunk that did not
+/// change since the previous capture (see the lifecycle notes above).
 pub(crate) struct ShardSnap {
     pub metric: MetricKind,
     /// HNSW beam width used for bridge queries.
     pub ef: usize,
-    pub items: Vec<Item>,
+    pub items: ChunkedVec<Item>,
     pub hnsw: Hnsw,
     /// Core distances at snapshot time (+∞ while < MinPts neighbors).
-    pub cores: Vec<f64>,
+    pub cores: ChunkedVec<f64>,
     /// local → global id map at snapshot time.
-    pub globals: Vec<u32>,
+    pub globals: ChunkedVec<u32>,
+}
+
+/// Approximate bytes of one stored item (bytes-copied accounting), built
+/// on the crate-wide [`Item::approx_bytes`] heap estimate.
+fn item_bytes(item: &Item) -> usize {
+    std::mem::size_of::<Item>() + item.approx_bytes()
 }
 
 impl ShardSnap {
+    /// O(Δ) capture: four chunk-pointer clones under the shard's read
+    /// lock. See the snapshot-lifecycle notes at the top of this section.
     pub fn capture(st: &ShardState) -> ShardSnap {
         ShardSnap {
             metric: *st.f.metric(),
             ef: st.f.params().ef,
-            items: st.f.items().to_vec(),
+            items: st.f.items().clone(),
             hnsw: st.f.hnsw().clone(),
-            cores: st.f.core_distances(),
+            cores: st.f.cores().clone(),
             globals: st.globals.clone(),
         }
     }
@@ -92,15 +134,32 @@ impl ShardSnap {
     pub fn nearest(&self, query: &Item, k: usize) -> Vec<(u32, f64)> {
         self.hnsw.search(&self.items, &self.metric, query, k, self.ef)
     }
+
+    /// Copied-vs-shared chunk accounting against the snapshot this one
+    /// replaces (everything counts as copied when there is none).
+    pub fn chunk_delta_vs(&self, prev: Option<&ShardSnap>) -> ChunkDelta {
+        let mut d = self.items.chunk_delta(prev.map(|p| &p.items), |c| {
+            c.iter().map(item_bytes).sum()
+        });
+        d.add(self.cores.chunk_delta(prev.map(|p| &p.cores), |c| c.len() * 8));
+        d.add(self.globals.chunk_delta(prev.map(|p| &p.globals), |c| c.len() * 4));
+        d.add(self.hnsw.node_chunk_delta(prev.map(|p| &p.hnsw)));
+        d
+    }
 }
 
 /// One published snapshot slot per shard, plus each shard's *live* item
 /// count (so peers can judge snapshot staleness without touching its
 /// `RwLock`). Each slot's mutex is held only long enough to clone or
-/// replace an `Arc`.
+/// replace an `Arc`. Also the home of the engine-wide capture counters
+/// (captures, chunks copied/shared, approx bytes copied).
 pub(crate) struct Snaps {
     slots: Vec<Mutex<Option<Arc<ShardSnap>>>>,
     lens: Vec<AtomicU64>,
+    captures: AtomicU64,
+    chunks_copied: AtomicU64,
+    chunks_shared: AtomicU64,
+    bytes_copied: AtomicU64,
 }
 
 impl Snaps {
@@ -108,6 +167,10 @@ impl Snaps {
         Snaps {
             slots: (0..n_shards).map(|_| Mutex::new(None)).collect(),
             lens: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+            captures: AtomicU64::new(0),
+            chunks_copied: AtomicU64::new(0),
+            chunks_shared: AtomicU64::new(0),
+            bytes_copied: AtomicU64::new(0),
         }
     }
 
@@ -116,8 +179,53 @@ impl Snaps {
     }
 
     pub fn set(&self, shard: usize, snap: Arc<ShardSnap>) {
-        self.lens[shard].fetch_max(snap.items.len() as u64, Ordering::Relaxed);
-        *self.slots[shard].lock().unwrap() = Some(snap);
+        let len = snap.items.len();
+        self.lens[shard].fetch_max(len as u64, Ordering::Relaxed);
+        // The delta walk is stats-only work, and bridge workers read this
+        // slot on their hot path, so it runs with the slot lock released.
+        // Captures of the same shard can race (cadence refresh vs merge
+        // refresh): a newer-or-equal incumbent always wins — equal-length
+        // snapshots are content-identical (the stores are pure functions
+        // of the insert sequence) — and the counter delta is only applied
+        // when the publish replaces exactly the snapshot it was computed
+        // against, so no copied chunk is ever counted twice.
+        let mut prev = self.slots[shard].lock().unwrap().clone();
+        loop {
+            if prev.as_ref().is_some_and(|p| p.items.len() >= len) {
+                return;
+            }
+            let delta = snap.chunk_delta_vs(prev.as_deref());
+            let mut slot = self.slots[shard].lock().unwrap();
+            let unchanged = match (slot.as_ref(), prev.as_ref()) {
+                (None, None) => true,
+                (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+                _ => false,
+            };
+            if unchanged {
+                self.captures.fetch_add(1, Ordering::Relaxed);
+                self.chunks_copied.fetch_add(delta.copied, Ordering::Relaxed);
+                self.chunks_shared.fetch_add(delta.shared, Ordering::Relaxed);
+                self.bytes_copied
+                    .fetch_add(delta.bytes_copied, Ordering::Relaxed);
+                *slot = Some(snap);
+                return;
+            }
+            // someone published while we were counting: retry against the
+            // fresher incumbent (races are between at most a handful of
+            // refresh paths, so this converges immediately in practice)
+            prev = slot.clone();
+        }
+    }
+
+    /// Cumulative capture counters: (captures, chunks copied, chunks
+    /// shared, approx bytes copied).
+    pub fn capture_stats(&self) -> (u64, u64, u64, u64) {
+        (
+            self.captures.load(Ordering::Relaxed),
+            self.chunks_copied.load(Ordering::Relaxed),
+            self.chunks_shared.load(Ordering::Relaxed),
+            self.bytes_copied.load(Ordering::Relaxed),
+        )
     }
 
     /// Publish a shard's live item count (its worker, after each batch).
@@ -158,6 +266,17 @@ pub(crate) struct BridgeState {
     pub compactions: u64,
     /// Edges discovered at insert time (vs merge catch-up), for stats.
     pub insert_edges: u64,
+    /// Items covered by the insert-time walk (this process).
+    pub insert_items: u64,
+    /// Items the merge catch-up had to search (this process). Together
+    /// with `insert_items` this makes duplicate work exactly observable:
+    /// the two walks share the ordered watermark, so at any quiescent
+    /// point `covered == insert_items + catch_up_items` — a snapshot
+    /// refresh that rewound `covered` would make items be searched (and
+    /// their pairs re-offered) twice, breaking the equality. Regression-
+    /// tested in `engine_integration`. (Counters restart at 0 on engine
+    /// reload; the watermark itself is persisted.)
+    pub catch_up_items: u64,
     /// Wall seconds spent on insert-time bridge queries.
     pub insert_secs: f64,
 }
@@ -177,6 +296,8 @@ impl BridgeState {
             generation: 0,
             compactions: 0,
             insert_edges: 0,
+            insert_items: 0,
+            catch_up_items: 0,
             insert_secs: 0.0,
         }
     }
@@ -200,6 +321,8 @@ impl BridgeState {
             generation,
             compactions: 0,
             insert_edges: 0,
+            insert_items: 0,
+            catch_up_items: 0,
             insert_secs: 0.0,
         }
     }
@@ -375,6 +498,7 @@ fn bridge_new_items(st: &ShardState, ctx: &BridgeCtx) {
             }
         }
         br.covered = li + 1;
+        br.insert_items += 1;
     }
     br.maybe_compact(ctx.alpha, len);
     if changed {

@@ -16,6 +16,7 @@ pub mod neighbors;
 
 use std::collections::HashMap;
 
+use crate::util::chunked::ChunkedVec;
 use crate::util::fasthash::FastMap;
 
 use crate::distances::Metric;
@@ -57,10 +58,16 @@ pub struct FishdbcStats {
 }
 
 /// Incremental FISHDBC clusterer over items of type `T` under metric `M`.
+///
+/// Item storage is a chunked copy-on-write [`ChunkedVec`] (as are the HNSW
+/// node store and the core-distance mirror underneath), so cloning any of
+/// the three — the engine's frozen shard snapshot — is O(n / CHUNK) `Arc`
+/// copies that physically share every chunk untouched since the previous
+/// clone. `T: Clone` is required for exactly that copy-on-write machinery.
 pub struct Fishdbc<T, M> {
     params: FishdbcParams,
     metric: M,
-    items: Vec<T>,
+    items: ChunkedVec<T>,
     hnsw: Hnsw,
     neighbors: NeighborStore,
     msf: Msf,
@@ -69,7 +76,7 @@ pub struct Fishdbc<T, M> {
     log_buf: DistLog,
 }
 
-impl<T, M: Metric<T>> Fishdbc<T, M> {
+impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
     /// SETUP (Algorithm 1): create empty state.
     pub fn new(metric: M, params: FishdbcParams) -> Self {
         Fishdbc {
@@ -85,7 +92,7 @@ impl<T, M: Metric<T>> Fishdbc<T, M> {
             mst_updates: 0,
             log_buf: DistLog::new(),
             params,
-            items: Vec::new(),
+            items: ChunkedVec::new(),
         }
     }
 
@@ -101,7 +108,10 @@ impl<T, M: Metric<T>> Fishdbc<T, M> {
         self.items.is_empty()
     }
 
-    pub fn items(&self) -> &[T] {
+    /// The chunked copy-on-write item store. Indexable (`items()[i]`) and
+    /// iterable; cloning it is the O(n / CHUNK) snapshot operation the
+    /// engine's frozen [`ShardSnap`](crate::engine)s are built on.
+    pub fn items(&self) -> &ChunkedVec<T> {
         &self.items
     }
 
@@ -267,11 +277,12 @@ impl<T, M: Metric<T>> Fishdbc<T, M> {
     }
 
     /// All core distances, indexed by item id (+∞ while fewer than MinPts
-    /// neighbors are known). Bulk accessor for the engine's cross-shard
-    /// merge, which weights bridge edges by mutual reachability under the
-    /// two shards' core distances.
-    pub fn core_distances(&self) -> Vec<f64> {
-        (0..self.items.len() as u32).map(|i| self.neighbors.core(i)).collect()
+    /// neighbors are known), as the chunked copy-on-write mirror. The
+    /// engine's cross-shard merge indexes it directly and its snapshots
+    /// clone it in O(n / CHUNK); chunks whose cores did not change since
+    /// the previous clone stay physically shared.
+    pub fn cores(&self) -> &ChunkedVec<f64> {
+        self.neighbors.cores()
     }
 
     /// Build an MSF from the *final k-nearest-neighbor graph only* — the
@@ -338,7 +349,7 @@ impl<T, M: Metric<T>> Fishdbc<T, M> {
         Fishdbc {
             params,
             metric,
-            items,
+            items: ChunkedVec::from_vec(items),
             hnsw,
             neighbors,
             msf,

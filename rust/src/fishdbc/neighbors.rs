@@ -5,6 +5,14 @@
 //! read. The paper uses max-heaps; since MinPts is small (≈10) we use
 //! sorted fixed-capacity vectors, which are faster and give ordered
 //! iteration for the reachability-decrease loop (Algorithm 1 lines 19-23).
+//!
+//! Core distances are additionally mirrored into a chunked copy-on-write
+//! [`ChunkedVec`] (written through only when a node's core actually
+//! changes), so the engine's frozen shard snapshots can capture all cores
+//! as an O(n / CHUNK) clone that physically shares every chunk whose
+//! cores did not move since the previous capture.
+
+use crate::util::chunked::ChunkedVec;
 
 /// Nearest-neighbor set of one node: entries sorted by distance ascending,
 /// at most `k` of them, no duplicate neighbor ids.
@@ -69,12 +77,16 @@ impl KBest {
 pub struct NeighborStore {
     k: usize,
     sets: Vec<KBest>,
+    /// Copy-on-write mirror of every node's core distance, kept exactly in
+    /// sync with `sets` (written only when a core actually changes, so old
+    /// chunks stay physically shared with frozen snapshots).
+    cores: ChunkedVec<f64>,
 }
 
 impl NeighborStore {
     pub fn new(k: usize) -> Self {
         assert!(k >= 1);
-        NeighborStore { k, sets: Vec::new() }
+        NeighborStore { k, sets: Vec::new(), cores: ChunkedVec::new() }
     }
 
     pub fn k(&self) -> usize {
@@ -85,17 +97,37 @@ impl NeighborStore {
         if self.sets.len() < n {
             self.sets.resize_with(n, KBest::default);
         }
+        while self.cores.len() < n {
+            self.cores.push(f64::INFINITY);
+        }
     }
 
     #[inline]
     pub fn offer(&mut self, x: u32, y: u32, d: f64) -> bool {
-        self.sets[x as usize].offer(self.k, y, d)
+        let changed = self.sets[x as usize].offer(self.k, y, d);
+        if changed {
+            let c = self.sets[x as usize].core(self.k);
+            // write-through only on a real change (bitwise, so ∞ == ∞ and
+            // even NaN cores from broken metrics cannot re-dirty forever):
+            // untouched chunks stay shared with frozen snapshots
+            if self.cores[x as usize].to_bits() != c.to_bits() {
+                *self.cores.get_mut(x as usize) = c;
+            }
+        }
+        changed
     }
 
     /// O(1) core-distance lookup (top of the paper's max-heap).
     #[inline]
     pub fn core(&self, x: u32) -> f64 {
-        self.sets[x as usize].core(self.k)
+        self.cores[x as usize]
+    }
+
+    /// All core distances as the chunked copy-on-write store — cloning the
+    /// return value is the snapshot operation (O(n / CHUNK), shares every
+    /// chunk whose cores did not change since the previous clone).
+    pub fn cores(&self) -> &ChunkedVec<f64> {
+        &self.cores
     }
 
     pub fn get(&self, x: u32) -> &KBest {
@@ -211,5 +243,45 @@ mod tests {
         ns.offer(0, 2, 2.0);
         assert_eq!(ns.core(0), 2.0);
         assert_eq!(ns.len(), 3);
+    }
+
+    #[test]
+    fn prop_chunked_core_mirror_stays_in_sync() {
+        // the copy-on-write core mirror must always agree with the KBest
+        // sets it shadows, and frozen clones of it must never move
+        check("cores-mirror", 20, |rng, _| {
+            let k = 1 + rng.below(6);
+            let n = 2 + rng.below(120);
+            let mut ns = NeighborStore::new(k);
+            ns.ensure_len(n);
+            let mut frozen: Vec<(ChunkedVec<f64>, Vec<f64>)> = Vec::new();
+            for step in 0..600 {
+                let x = rng.below(n) as u32;
+                let mut y = rng.below(n) as u32;
+                if x == y {
+                    y = (y + 1) % n as u32;
+                }
+                ns.offer(x, y, (rng.f64() * 50.0).round());
+                if step % 97 == 0 {
+                    let snap = ns.cores().clone();
+                    frozen.push((snap, ns.cores().to_vec()));
+                }
+            }
+            for x in 0..n as u32 {
+                assert_eq!(
+                    ns.core(x).to_bits(),
+                    ns.get(x).core(k).to_bits(),
+                    "core mirror out of sync at {x}"
+                );
+            }
+            assert_eq!(ns.cores().len(), n);
+            for (snap, want) in &frozen {
+                let got: Vec<f64> = snap.to_vec();
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "frozen cores moved");
+                }
+            }
+        });
     }
 }

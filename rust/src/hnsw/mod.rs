@@ -10,6 +10,7 @@
 //! connection keeping).
 
 use crate::distances::Metric;
+use crate::util::chunked::{ChunkDelta, ChunkedVec, ItemStore};
 use crate::util::rng::Rng;
 
 /// A logged distance evaluation: (node a, node b, d(a, b)).
@@ -47,7 +48,7 @@ impl Node {
 }
 
 /// HNSW construction parameters.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct HnswParams {
     /// Neighbors per node on levels > 0 (the paper sets M = MinPts).
     pub m: usize,
@@ -64,7 +65,10 @@ impl Default for HnswParams {
 }
 
 /// Exported HNSW state (persistence interchange; see [`Hnsw::export`]).
-#[derive(Clone, Debug)]
+/// Always dense (`Vec` of per-node link lists): the chunked in-memory
+/// layout never reaches the on-disk format, so files written before and
+/// after the copy-on-write refactor are byte-identical.
+#[derive(Clone, Debug, PartialEq)]
 pub struct HnswExport {
     pub params: HnswParams,
     /// `links[id][level]` = neighbor ids.
@@ -75,12 +79,19 @@ pub struct HnswExport {
 }
 
 /// The index. Generic over item type `T`; the item store lives in the
-/// caller (FISHDBC keeps one `Vec<T>` shared by HNSW and output) and is
-/// passed to [`Hnsw::add`] each time, keeping borrows simple.
-#[derive(Clone, Debug)]
+/// caller (FISHDBC keeps one [`ChunkedVec<T>`] shared by HNSW and output)
+/// and is passed to [`Hnsw::add`] each time as any [`ItemStore`], keeping
+/// borrows simple.
+///
+/// Node/link storage is chunked copy-on-write ([`ChunkedVec`]): cloning
+/// the index is O(n / CHUNK) `Arc` copies, and only chunks whose nodes
+/// were rewired after the clone are ever physically copied — the engine's
+/// frozen [`ShardSnap`](crate::engine)s lean on exactly this to make
+/// snapshot refreshes O(Δ) instead of O(n).
+#[derive(Debug)]
 pub struct Hnsw {
     params: HnswParams,
-    nodes: Vec<Node>,
+    nodes: ChunkedVec<Node>,
     entry: Option<u32>,
     rng: Rng,
     mult: f64,
@@ -95,13 +106,34 @@ pub struct Hnsw {
     scratch: Vec<u32>,
 }
 
+impl Clone for Hnsw {
+    /// Cheap structural clone: the chunked node storage is shared
+    /// copy-on-write with the original (see [`ChunkedVec`]), so this costs
+    /// O(n / CHUNK) `Arc` copies, not a deep copy of every link list.
+    /// Transient search scratch (visited marks, frontier buffer) is not
+    /// carried over — it is rebuilt lazily and never observable.
+    fn clone(&self) -> Hnsw {
+        Hnsw {
+            params: self.params,
+            nodes: self.nodes.clone(),
+            entry: self.entry,
+            rng: self.rng.clone(),
+            mult: self.mult,
+            dist_calls: self.dist_calls,
+            visited_mark: Vec::new(),
+            epoch: 0,
+            scratch: Vec::new(),
+        }
+    }
+}
+
 impl Hnsw {
     pub fn new(params: HnswParams) -> Self {
         let mult = 1.0 / (params.m.max(2) as f64).ln();
         Hnsw {
             rng: Rng::new(params.seed),
             params,
-            nodes: Vec::new(),
+            nodes: ChunkedVec::new(),
             entry: None,
             mult,
             dist_calls: 0,
@@ -173,13 +205,17 @@ impl Hnsw {
 
     /// Rebuild an index from [`Hnsw::export`]ed state. The reloaded index
     /// continues *exactly* where the original left off (same RNG stream,
-    /// same adjacency, same counters).
+    /// same adjacency, same counters) and chunks its node storage exactly
+    /// like the original run did (the layout is a pure function of the
+    /// node sequence).
     pub fn import(e: HnswExport) -> Self {
         let mult = 1.0 / (e.params.m.max(2) as f64).ln();
         Hnsw {
             rng: Rng::from_state(e.rng_state),
             params: e.params,
-            nodes: e.links.into_iter().map(|links| Node { links }).collect(),
+            nodes: ChunkedVec::from_vec(
+                e.links.into_iter().map(|links| Node { links }).collect(),
+            ),
             entry: e.entry,
             mult,
             dist_calls: e.dist_calls,
@@ -189,21 +225,42 @@ impl Hnsw {
         }
     }
 
+    /// Copied-vs-shared chunk accounting for the node store against an
+    /// earlier clone of this index (snapshot capture bookkeeping; bytes
+    /// approximate the link-list heap of the copied chunks).
+    pub fn node_chunk_delta(&self, prev: Option<&Hnsw>) -> ChunkDelta {
+        self.nodes.chunk_delta(prev.map(|p| &p.nodes), |chunk| {
+            chunk
+                .iter()
+                .map(|n| {
+                    std::mem::size_of::<Node>()
+                        + n.links
+                            .iter()
+                            .map(|l| {
+                                std::mem::size_of::<Vec<u32>>()
+                                    + l.len() * std::mem::size_of::<u32>()
+                            })
+                            .sum::<usize>()
+                })
+                .sum()
+        })
+    }
+
     fn random_level(&mut self) -> usize {
         let u = self.rng.f64().max(1e-300);
         ((-u.ln()) * self.mult).floor() as usize
     }
 
     #[inline]
-    fn eval<T, M: Metric<T>>(
+    fn eval<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
         &mut self,
-        items: &[T],
+        items: &S,
         metric: &M,
         a: u32,
         b: u32,
         log: &mut DistLog,
     ) -> f64 {
-        let d = metric.dist(&items[a as usize], &items[b as usize]);
+        let d = metric.dist(items.get(a as usize), items.get(b as usize));
         self.dist_calls += 1;
         log.push((a, b, d));
         d
@@ -215,9 +272,9 @@ impl Hnsw {
     /// FISHDBC consumes these as candidate MST edges.
     ///
     /// Returns the closest discovered neighbors (up to `ef`), best-first.
-    pub fn add<T, M: Metric<T>>(
+    pub fn add<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
         &mut self,
-        items: &[T],
+        items: &S,
         metric: &M,
         new_id: u32,
         log: &mut DistLog,
@@ -277,16 +334,16 @@ impl Hnsw {
     /// new items against the latest clustering without mutating state.
     ///
     /// Returns up to `k` `(id, distance)` pairs, ascending distance.
-    pub fn search<T, M: Metric<T>>(
+    pub fn search<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
         &self,
-        items: &[T],
+        items: &S,
         metric: &M,
         query: &T,
         k: usize,
         ef: usize,
     ) -> Vec<(u32, f64)> {
         let Some(entry) = self.entry else { return Vec::new() };
-        let qd = |id: u32| metric.dist(query, &items[id as usize]);
+        let qd = |id: u32| metric.dist(query, items.get(id as usize));
 
         // greedy descent to level 1
         let mut best = (entry, qd(entry));
@@ -345,9 +402,9 @@ impl Hnsw {
 
     /// Beam search on one layer. `ep`: entry points with known distances to
     /// the query node `q_id`. Returns up to `ef` closest, unsorted.
-    fn search_layer<T, M: Metric<T>>(
+    fn search_layer<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
         &mut self,
-        items: &[T],
+        items: &S,
         metric: &M,
         q_id: u32,
         ep: Vec<(u32, f64)>,
@@ -408,9 +465,9 @@ impl Hnsw {
     /// sorted by distance ascending. Distance calls between existing nodes
     /// are logged too — exactly the "farther away item" information FISHDBC
     /// needs to keep local clusters connected (paper §3.1).
-    fn select_heuristic<T, M: Metric<T>>(
+    fn select_heuristic<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
         &mut self,
-        items: &[T],
+        items: &S,
         metric: &M,
         w: &[(u32, f64)],
         m: usize,
@@ -449,10 +506,13 @@ impl Hnsw {
     }
 
     /// Bidirectional link new_id <-> nb at `level`, shrinking nb's list
-    /// back to `m_max` with the heuristic when it overflows.
-    fn link<T, M: Metric<T>>(
+    /// back to `m_max` with the heuristic when it overflows. These are the
+    /// only rewiring writes; they go through [`ChunkedVec::get_mut`], so a
+    /// chunk that a frozen snapshot still references is copied exactly
+    /// once, the first time one of its nodes is rewired.
+    fn link<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
         &mut self,
-        items: &[T],
+        items: &S,
         metric: &M,
         new_id: u32,
         nb: u32,
@@ -460,27 +520,33 @@ impl Hnsw {
         m_max: usize,
         log: &mut DistLog,
     ) {
-        self.nodes[new_id as usize].links[level].push(nb);
-        let nb_links = &mut self.nodes[nb as usize].links;
-        if nb_links.len() > level {
-            nb_links[level].push(new_id);
-            if nb_links[level].len() > m_max {
-                self.shrink(items, metric, nb, level, m_max, log);
-            }
+        self.nodes.get_mut(new_id as usize).links[level].push(nb);
+        // read-only probe first: get_mut would copy-on-write nb's chunk
+        // even on the branch that writes nothing
+        if self.nodes[nb as usize].links.len() <= level {
+            return;
+        }
+        let overflow = {
+            let nb_list = &mut self.nodes.get_mut(nb as usize).links[level];
+            nb_list.push(new_id);
+            nb_list.len() > m_max
+        };
+        if overflow {
+            self.shrink(items, metric, nb, level, m_max, log);
         }
     }
 
     /// Shrink `id`'s neighbor list at `level` to `m_max` via the heuristic.
-    fn shrink<T, M: Metric<T>>(
+    fn shrink<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
         &mut self,
-        items: &[T],
+        items: &S,
         metric: &M,
         id: u32,
         level: usize,
         m_max: usize,
         log: &mut DistLog,
     ) {
-        let list = std::mem::take(&mut self.nodes[id as usize].links[level]);
+        let list = std::mem::take(&mut self.nodes.get_mut(id as usize).links[level]);
         let mut with_d: Vec<(u32, f64)> = list
             .into_iter()
             .map(|nb| {
@@ -490,7 +556,7 @@ impl Hnsw {
             .collect();
         with_d.sort_unstable_by(|x, y| x.1.total_cmp(&y.1));
         let selected = self.select_heuristic(items, metric, &with_d, m_max, log);
-        self.nodes[id as usize].links[level] =
+        self.nodes.get_mut(id as usize).links[level] =
             selected.into_iter().map(|(nb, _)| nb).collect();
     }
 }
@@ -688,5 +754,87 @@ mod tests {
         let items = vec![vec![0.0f32], vec![1.0f32]];
         let mut log = DistLog::new();
         h.add(&items, &m, 1, &mut log); // skips id 0
+    }
+
+    #[test]
+    fn prop_snapshot_equivalence_chunked_vs_dense() {
+        // The copy-on-write refactor must be invisible: build two indexes
+        // with identical parameters over the same stream, but on one of
+        // them take `clone()` snapshots at random points and KEEP them
+        // alive — forcing every later rewire of a shared chunk through the
+        // copy-on-write path. The final exports must be bit-identical,
+        // every frozen snapshot must still export exactly what it captured,
+        // and snapshot searches must match a dense rebuild (import of the
+        // capture-time export) query for query.
+        check("hnsw-snapshot-equivalence", 4, |rng, case| {
+            let n = 150 + case * 70;
+            let items = random_points(rng, n, 3);
+            let params = HnswParams { m: 6, ef: 12, seed: 31 + case as u64 };
+            let m = metric();
+            let mut plain = Hnsw::new(params);
+            let mut cow = Hnsw::new(params);
+            let mut log = DistLog::new();
+            let mut snaps: Vec<(usize, Hnsw, HnswExport)> = Vec::new();
+            for i in 0..n {
+                plain.add(&items, &m, i as u32, &mut log);
+                cow.add(&items, &m, i as u32, &mut log);
+                if rng.below(10) == 0 {
+                    let snap = cow.clone();
+                    let export_now = snap.export();
+                    snaps.push((i + 1, snap, export_now));
+                }
+            }
+            assert!(!snaps.is_empty(), "degenerate case: no snapshots taken");
+            assert_eq!(
+                plain.export(),
+                cow.export(),
+                "held snapshots perturbed construction"
+            );
+            for (n_at, snap, export_at) in &snaps {
+                assert_eq!(&snap.export(), export_at, "frozen snapshot drifted");
+                let dense = Hnsw::import(export_at.clone());
+                for _ in 0..3 {
+                    let q = &items[rng.below(n)];
+                    let got = snap.search(&items[..*n_at], &m, q, 5, 20);
+                    let want = dense.search(&items[..*n_at], &m, q, 5, 20);
+                    assert_eq!(got, want, "snapshot search diverged at {n_at}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_export_roundtrip_identity_and_identical_continuation() {
+        // export → import → export is the identity (neighbors() and search
+        // read the same adjacency), and a resumed index keeps adding items
+        // exactly like the uninterrupted one even while old clones pin the
+        // pre-split chunks.
+        check("hnsw-export-roundtrip", 3, |rng, case| {
+            let n = 120 + case * 60;
+            let items = random_points(rng, n + 80, 3);
+            let m = metric();
+            let params = HnswParams { m: 5, ef: 15, seed: 7 + case as u64 };
+            let mut h = Hnsw::new(params);
+            let mut log = DistLog::new();
+            for i in 0..n {
+                h.add(&items, &m, i as u32, &mut log);
+            }
+            let e1 = h.export();
+            let resumed = Hnsw::import(e1.clone());
+            assert_eq!(resumed.export(), e1, "roundtrip not the identity");
+            for id in 0..n as u32 {
+                for l in 0..=h.node_level(id) {
+                    assert_eq!(h.neighbors(id, l), resumed.neighbors(id, l));
+                }
+            }
+            // pin the old chunks, then continue on both sides
+            let _pin = (h.clone(), resumed.clone());
+            let mut resumed = resumed;
+            for i in n..n + 80 {
+                h.add(&items, &m, i as u32, &mut log);
+                resumed.add(&items, &m, i as u32, &mut log);
+            }
+            assert_eq!(h.export(), resumed.export(), "continuation diverged");
+        });
     }
 }

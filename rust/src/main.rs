@@ -110,8 +110,10 @@ labels):
   --recluster-every R  background auto-recluster period in items (default
                     0 = off); each merge publishes an epoch for latest()
   --bridge-refresh B   also refresh the frozen bridge snapshots every B
-                    items (default 0 = only at merges)
-  --stats           print per-stage pipeline timings and cache counters
+                    items (default 0 = only at merges; captures are
+                    chunked copy-on-write, so refreshes cost O(delta))
+  --stats           print per-stage pipeline timings, cache counters and
+                    snapshot copied-vs-shared chunk counts
   --save PATH       persist the multi-shard engine state after building
                     (v2 container: includes bridge buffers + cached MSF)
   --load PATH       resume a saved engine state (then add items on top)
@@ -482,12 +484,24 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
         );
         println!(
             "  bridges: {} buffered edges ({} found at insert time, \
-             {:.3}s), {} items covered, {} compactions",
+             {:.3}s), {} items covered ({} by merge catch-up), {} compactions",
             es.bridge_edges,
             es.bridge_insert_edges,
             es.bridge_insert_secs,
             es.bridge_covered,
+            es.bridge_catch_up_items,
             es.bridge_compactions,
+        );
+        let chunks = es.pipeline.snapshot_chunks_copied
+            + es.pipeline.snapshot_chunks_shared;
+        println!(
+            "  snapshots: {} captures, {} of {} chunks copied ({} shared \
+             by reference), {:.2} MB copied",
+            es.pipeline.snapshot_captures,
+            es.pipeline.snapshot_chunks_copied,
+            chunks,
+            es.pipeline.snapshot_chunks_shared,
+            es.pipeline.snapshot_bytes_copied as f64 / (1024.0 * 1024.0),
         );
     }
 

@@ -60,6 +60,17 @@ impl Msf {
         self.edges.iter().map(|e| e.w).sum()
     }
 
+    /// Total order used by Kruskal: weight ascending, ties broken on the
+    /// canonical (min, max) endpoint key. The tie-break makes the kept
+    /// forest a *canonical* MSF of the offered edge set — the engine's
+    /// conformance harness relies on a delta merge and a from-scratch
+    /// merge of the same state ordering tied edges identically.
+    #[inline]
+    fn cmp_edges(x: &Edge, y: &Edge) -> std::cmp::Ordering {
+        x.w.total_cmp(&y.w)
+            .then_with(|| Edge::key(x.a, x.b).cmp(&Edge::key(y.a, y.b)))
+    }
+
     /// Fold a batch of candidate edges into the forest (Kruskal over the
     /// union of current forest + candidates). `n_nodes` is the current
     /// number of items. Candidates need not be sorted or deduplicated.
@@ -72,13 +83,13 @@ impl Msf {
         }
         // The forest is already sorted; sort only the new candidates, then
         // merge the two sorted runs (perf: avoids re-sorting O(n) edges).
-        candidates.sort_unstable_by(|x, y| x.w.total_cmp(&y.w));
+        candidates.sort_unstable_by(Self::cmp_edges);
         let mut merged = Vec::with_capacity(self.edges.len() + candidates.len());
         {
             let (mut i, mut j) = (0usize, 0usize);
             let old = &self.edges;
             while i < old.len() && j < candidates.len() {
-                if old[i].w <= candidates[j].w {
+                if Self::cmp_edges(&old[i], &candidates[j]).is_le() {
                     merged.push(old[i]);
                     i += 1;
                 } else {

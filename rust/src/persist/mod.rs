@@ -590,7 +590,8 @@ impl Engine {
         // buffers are stable too (workers only touch them while holding
         // their state write lock)
         for (shard, st) in inner.shard_handles().iter().zip(&guards) {
-            w.u32s(&st.globals)?;
+            // dense export: the chunked in-memory layout never reaches disk
+            w.u32s(&st.globals.to_vec())?;
             w.u64(st.batches)?;
             w.f64(st.build_secs)?;
             // nested single-instance snapshot (own magic + version)
@@ -714,7 +715,15 @@ impl Engine {
             if params.is_none() {
                 params = Some(*f.params());
             }
-            parts.push((ShardState { f, globals, batches, build_secs }, bridge));
+            parts.push((
+                ShardState {
+                    f,
+                    globals: crate::util::chunked::ChunkedVec::from_vec(globals),
+                    batches,
+                    build_secs,
+                },
+                bridge,
+            ));
         }
         if total != next_global {
             return Err(bad("shard item counts do not sum to the global count"));

@@ -1,0 +1,401 @@
+//! Chunked copy-on-write storage for the engine's O(Δ) snapshots.
+//!
+//! [`ChunkedVec`] is an append-mostly vector whose elements live in
+//! fixed-size chunks held behind `Arc`s. Cloning one is O(n / CHUNK)
+//! pointer copies — that clone *is* the snapshot operation — and the clone
+//! keeps every chunk alive by reference. Afterwards, mutating the live
+//! side goes through [`Arc::make_mut`]: the first write into a chunk that
+//! a snapshot still references copies just that chunk (≤ [`CHUNK`]
+//! elements); chunks nobody rewrote since the last snapshot stay
+//! physically shared between all snapshots and the live store. There is
+//! no explicit dirty-set to maintain — the `Arc` strong counts *are* the
+//! dirty tracking, which makes the scheme safe to capture from any thread
+//! that can see the store behind a read lock.
+//!
+//! The chunk layout is a pure function of the element sequence (fill each
+//! chunk to [`CHUNK`], then start the next), so two stores built from the
+//! same stream — or one rebuilt via [`ChunkedVec::from_vec`] after a
+//! persistence round-trip — chunk identically. Persistence never sees the
+//! chunking at all: exports go through [`ChunkedVec::to_vec`] /
+//! [`ChunkedVec::iter`], so on-disk formats are byte-identical to the
+//! dense layout they replaced.
+//!
+//! [`ItemStore`] abstracts "indexable item storage" so the HNSW can read
+//! items out of either a plain slice (tests, the exact baseline) or a
+//! `ChunkedVec` (FISHDBC and the engine's frozen shard snapshots) without
+//! caring which.
+
+use std::sync::Arc;
+
+/// log2 of the chunk size. 32 elements balances copy-on-write granularity
+/// (a post-snapshot write copies at most 32 elements) against per-chunk
+/// `Arc` overhead; see the `snapshot_refresh` bench for measured ratios.
+pub const CHUNK_BITS: usize = 5;
+/// Elements per chunk.
+pub const CHUNK: usize = 1 << CHUNK_BITS;
+const MASK: usize = CHUNK - 1;
+
+/// Append-mostly vector in `Arc`-shared fixed-size chunks (see the module
+/// docs for the copy-on-write sharing model).
+#[derive(Debug, Default)]
+pub struct ChunkedVec<T> {
+    chunks: Vec<Arc<Vec<T>>>,
+    len: usize,
+}
+
+impl<T> Clone for ChunkedVec<T> {
+    /// O(n / CHUNK): clones the chunk *pointers*, not the elements. This
+    /// is the snapshot operation.
+    fn clone(&self) -> Self {
+        ChunkedVec { chunks: self.chunks.clone(), len: self.len }
+    }
+}
+
+impl<T> ChunkedVec<T> {
+    pub fn new() -> Self {
+        ChunkedVec { chunks: Vec::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of chunks currently backing the store.
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// The elements of chunk `ci` (all chunks except the last hold exactly
+    /// [`CHUNK`] elements).
+    pub fn chunk(&self, ci: usize) -> &[T] {
+        &self.chunks[ci]
+    }
+
+    /// Whether chunk `ci` is physically shared with the same-index chunk
+    /// of `other` (i.e. untouched since the clone that separated them).
+    pub fn chunk_shared_with(&self, other: &Self, ci: usize) -> bool {
+        ci < self.chunks.len()
+            && ci < other.chunks.len()
+            && Arc::ptr_eq(&self.chunks[ci], &other.chunks[ci])
+    }
+
+    /// How many of `self`'s chunks are physically shared with `prev`.
+    pub fn shared_chunks_with(&self, prev: &Self) -> usize {
+        (0..self.chunks.len())
+            .filter(|&ci| self.chunk_shared_with(prev, ci))
+            .count()
+    }
+
+    /// Copied-vs-shared accounting against an earlier clone: every chunk
+    /// not pointer-shared with `prev` counts as copied (everything, when
+    /// there is no `prev`), with `bytes_of` estimating a copied chunk's
+    /// heap footprint. This is the single source of truth for the
+    /// engine's snapshot capture counters.
+    pub fn chunk_delta(
+        &self,
+        prev: Option<&Self>,
+        bytes_of: impl Fn(&[T]) -> usize,
+    ) -> ChunkDelta {
+        let mut d = ChunkDelta::default();
+        for ci in 0..self.chunks.len() {
+            if prev.is_some_and(|p| self.chunk_shared_with(p, ci)) {
+                d.shared += 1;
+            } else {
+                d.copied += 1;
+                d.bytes_copied += bytes_of(self.chunk(ci)) as u64;
+            }
+        }
+        d
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> &T {
+        debug_assert!(i < self.len, "index {i} out of bounds (len {})", self.len);
+        &self.chunks[i >> CHUNK_BITS][i & MASK]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> + '_ {
+        self.chunks.iter().flat_map(|c| c.iter())
+    }
+}
+
+impl<T: Clone> ChunkedVec<T> {
+    /// Build from a dense vector. The layout is identical to pushing the
+    /// elements one by one (determinism: reloads chunk exactly like the
+    /// original run).
+    pub fn from_vec(v: Vec<T>) -> Self {
+        let len = v.len();
+        let mut chunks = Vec::with_capacity(len.div_ceil(CHUNK));
+        let mut it = v.into_iter();
+        loop {
+            let chunk: Vec<T> = it.by_ref().take(CHUNK).collect();
+            if chunk.is_empty() {
+                break;
+            }
+            chunks.push(Arc::new(chunk));
+        }
+        ChunkedVec { chunks, len }
+    }
+
+    /// Dense copy (persistence export; the on-disk format never sees the
+    /// chunking).
+    pub fn to_vec(&self) -> Vec<T> {
+        self.iter().cloned().collect()
+    }
+
+    /// Append. Copy-on-write: if a snapshot still references the tail
+    /// chunk, that chunk (≤ [`CHUNK`] elements) is copied first.
+    pub fn push(&mut self, v: T) {
+        if self.len & MASK == 0 {
+            self.chunks.push(Arc::new(Vec::with_capacity(CHUNK)));
+        }
+        let tail = self.chunks.last_mut().expect("tail chunk present");
+        Arc::make_mut(tail).push(v);
+        self.len += 1;
+    }
+
+    /// Mutable access. Copy-on-write: if a snapshot still references the
+    /// containing chunk, it is copied first; otherwise this is a plain
+    /// in-place write.
+    #[inline]
+    pub fn get_mut(&mut self, i: usize) -> &mut T {
+        debug_assert!(i < self.len, "index {i} out of bounds (len {})", self.len);
+        &mut Arc::make_mut(&mut self.chunks[i >> CHUNK_BITS])[i & MASK]
+    }
+}
+
+impl<T> std::ops::Index<usize> for ChunkedVec<T> {
+    type Output = T;
+
+    #[inline]
+    fn index(&self, i: usize) -> &T {
+        self.get(i)
+    }
+}
+
+impl<T: PartialEq> PartialEq for ChunkedVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.len == other.len && self.iter().eq(other.iter())
+    }
+}
+
+/// Copied-vs-shared accounting for one snapshot capture (see
+/// [`ChunkedVec::chunk_delta`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChunkDelta {
+    /// Chunks physically copied since the previous capture.
+    pub copied: u64,
+    /// Chunks republished by reference.
+    pub shared: u64,
+    /// Approximate heap bytes in the copied chunks.
+    pub bytes_copied: u64,
+}
+
+impl ChunkDelta {
+    /// Fold another store's tally into this one.
+    pub fn add(&mut self, other: ChunkDelta) {
+        self.copied += other.copied;
+        self.shared += other.shared;
+        self.bytes_copied += other.bytes_copied;
+    }
+}
+
+// ------------------------------------------------------------ item store --
+
+/// Read-only indexable item storage: what the HNSW needs from the caller-
+/// owned item store. Implemented for plain slices (tests, baselines) and
+/// [`ChunkedVec`] (FISHDBC's copy-on-write store).
+pub trait ItemStore<T> {
+    fn len(&self) -> usize;
+    fn get(&self, i: usize) -> &T;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> ItemStore<T> for [T] {
+    #[inline]
+    fn len(&self) -> usize {
+        <[T]>::len(self)
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> &T {
+        &self[i]
+    }
+}
+
+impl<T> ItemStore<T> for Vec<T> {
+    #[inline]
+    fn len(&self) -> usize {
+        <[T]>::len(self)
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> &T {
+        &self[i]
+    }
+}
+
+impl<T> ItemStore<T> for ChunkedVec<T> {
+    #[inline]
+    fn len(&self) -> usize {
+        ChunkedVec::len(self)
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> &T {
+        ChunkedVec::get(self, i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn push_index_iter_match_dense() {
+        let mut cv = ChunkedVec::new();
+        let mut dense = Vec::new();
+        for i in 0..(CHUNK * 3 + 7) {
+            cv.push(i);
+            dense.push(i);
+        }
+        assert_eq!(cv.len(), dense.len());
+        assert!(!cv.is_empty());
+        for (i, want) in dense.iter().enumerate() {
+            assert_eq!(cv[i], *want);
+        }
+        let got: Vec<usize> = cv.iter().copied().collect();
+        assert_eq!(got, dense);
+        assert_eq!(cv.to_vec(), dense);
+        assert_eq!(cv.n_chunks(), 4);
+    }
+
+    #[test]
+    fn from_vec_layout_matches_pushes() {
+        for n in [0, 1, CHUNK - 1, CHUNK, CHUNK + 1, CHUNK * 5 + 3] {
+            let dense: Vec<u32> = (0..n as u32).collect();
+            let a = ChunkedVec::from_vec(dense.clone());
+            let mut b = ChunkedVec::new();
+            for x in &dense {
+                b.push(*x);
+            }
+            assert_eq!(a.n_chunks(), b.n_chunks(), "n={n}");
+            assert_eq!(a, b, "n={n}");
+            assert_eq!(a.to_vec(), dense);
+        }
+    }
+
+    #[test]
+    fn clone_is_immutable_snapshot() {
+        let mut live = ChunkedVec::new();
+        for i in 0..(CHUNK * 2 + 5) {
+            live.push(i as u32);
+        }
+        let snap = live.clone();
+        let frozen = snap.to_vec();
+        // mutate old elements and append: the snapshot must not move
+        *live.get_mut(0) = 999;
+        *live.get_mut(CHUNK) = 888;
+        for i in 0..CHUNK {
+            live.push(1000 + i as u32);
+        }
+        assert_eq!(snap.to_vec(), frozen, "snapshot mutated");
+        assert_eq!(live[0], 999);
+        assert_eq!(live[CHUNK], 888);
+        assert_eq!(live.len(), frozen.len() + CHUNK);
+    }
+
+    #[test]
+    fn sharing_accounting_tracks_dirty_chunks() {
+        let mut live = ChunkedVec::new();
+        for i in 0..(CHUNK * 4) {
+            live.push(i as u32);
+        }
+        let snap = live.clone();
+        assert_eq!(live.shared_chunks_with(&snap), 4, "clone shares all");
+        // dirty exactly one interior chunk
+        *live.get_mut(CHUNK + 1) = 7;
+        assert_eq!(live.shared_chunks_with(&snap), 3);
+        assert!(live.chunk_shared_with(&snap, 0));
+        assert!(!live.chunk_shared_with(&snap, 1));
+        // appending opens a new tail chunk: snap has no counterpart for it
+        live.push(42);
+        assert_eq!(live.n_chunks(), 5);
+        assert_eq!(live.shared_chunks_with(&snap), 3);
+        // a second snapshot shares everything again
+        let snap2 = live.clone();
+        assert_eq!(live.shared_chunks_with(&snap2), 5);
+    }
+
+    #[test]
+    fn partial_tail_chunk_copy_on_append() {
+        // appending into a shared, partially-filled tail chunk must copy it
+        let mut live = ChunkedVec::new();
+        for i in 0..(CHUNK + 3) {
+            live.push(i as u32);
+        }
+        let snap = live.clone();
+        live.push(77);
+        assert_eq!(snap.len(), CHUNK + 3);
+        assert_eq!(live.len(), CHUNK + 4);
+        assert_eq!(live[CHUNK + 3], 77);
+        assert!(live.chunk_shared_with(&snap, 0), "full chunk still shared");
+        assert!(!live.chunk_shared_with(&snap, 1), "tail was copied");
+    }
+
+    #[test]
+    fn prop_chunked_equals_dense_under_random_ops() {
+        // random interleavings of push / overwrite / snapshot: the live
+        // store must always read like the dense mirror, and every snapshot
+        // must stay frozen at its capture state
+        check("chunked-vs-dense", 20, |rng, _| {
+            let mut cv: ChunkedVec<u64> = ChunkedVec::new();
+            let mut dense: Vec<u64> = Vec::new();
+            let mut snaps: Vec<(ChunkedVec<u64>, Vec<u64>)> = Vec::new();
+            for step in 0..400 {
+                match rng.below(10) {
+                    0..=5 => {
+                        let v = rng.next_u64();
+                        cv.push(v);
+                        dense.push(v);
+                    }
+                    6 | 7 if !dense.is_empty() => {
+                        let i = rng.below(dense.len());
+                        let v = rng.next_u64();
+                        *cv.get_mut(i) = v;
+                        dense[i] = v;
+                    }
+                    8 => snaps.push((cv.clone(), dense.clone())),
+                    _ => {}
+                }
+                if step % 37 == 0 {
+                    assert_eq!(cv.to_vec(), dense);
+                }
+            }
+            assert_eq!(cv.to_vec(), dense);
+            for (snap, want) in &snaps {
+                assert_eq!(&snap.to_vec(), want, "snapshot drifted");
+            }
+        });
+    }
+
+    #[test]
+    fn item_store_works_for_slices_and_chunked() {
+        fn second<T, S: ItemStore<T> + ?Sized>(s: &S) -> &T {
+            assert!(!s.is_empty());
+            s.get(1)
+        }
+        let v = vec![10u32, 20, 30];
+        assert_eq!(*second(&v[..]), 20);
+        let cv = ChunkedVec::from_vec(v);
+        assert_eq!(*second(&cv), 20);
+        assert_eq!(ItemStore::len(&cv), 3);
+    }
+}

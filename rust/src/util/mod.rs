@@ -4,6 +4,7 @@
 
 pub mod fasthash;
 pub mod bench;
+pub mod chunked;
 pub mod rng;
 
 #[cfg(test)]

@@ -1,12 +1,30 @@
 //! Tiny property-testing driver (the `proptest` crate is unavailable
 //! offline). Runs a property over many seeded random cases and reports the
 //! first failing seed so failures are reproducible.
+//!
+//! Case counts scale with the `FISHDBC_PROPTEST_CASES` environment
+//! variable (an integer multiplier, default 1): the nightly CI job can
+//! run the same properties much harder without a second copy of the
+//! suite, and a reported failing seed stays valid at any multiplier
+//! because case seeds depend only on the case index.
 
 use super::rng::Rng;
 
-/// Run `prop(rng, case_index)` for `cases` deterministic cases. The property
-/// should panic (assert!) on failure. On failure we re-raise with the seed.
+/// Multiplier applied to every `check` call's case count
+/// (`FISHDBC_PROPTEST_CASES`, default 1, clamped to [1, 1000]).
+pub fn case_multiplier() -> usize {
+    std::env::var("FISHDBC_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(1)
+        .clamp(1, 1000)
+}
+
+/// Run `prop(rng, case_index)` for `cases` deterministic cases (scaled by
+/// [`case_multiplier`]). The property should panic (assert!) on failure.
+/// On failure we re-raise with the seed.
 pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Rng, usize)) {
+    let cases = cases.saturating_mul(case_multiplier());
     for case in 0..cases {
         let seed = 0xF15D_0000u64 ^ (case as u64).wrapping_mul(0x9E37_79B9);
         let mut rng = Rng::new(seed);

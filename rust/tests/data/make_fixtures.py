@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Regenerate the checked-in FISHENG persistence fixtures.
+
+Writes fisheng_v1.bin (the pre-pipeline engine container) and
+fisheng_v2.bin (the current container with bridge buffers, coverage
+watermarks and the cached global MSF) byte-for-byte in the hand-rolled
+little-endian format of rust/src/persist/mod.rs. The fixtures pin the
+on-disk layout: `failure_injection.rs` loads both, re-clusters them, and
+asserts that saving the reloaded v2 engine reproduces the fixture bytes
+exactly — so any accidental format change (for example, the chunked
+copy-on-write stores leaking their in-memory layout to disk) fails CI.
+
+The v2 content is deliberately canonical where the format round-trips
+through a re-sort on load: MSF edge lists are written in Kruskal's total
+order (weight ascending, ties on the canonical (min, max) endpoint key)
+and bridge buffers in (a, b) order, because that is what a save after a
+load emits.
+
+Run from rust/tests/data/:  python3 make_fixtures.py
+"""
+
+import struct
+
+u8 = lambda x: struct.pack("<B", x)
+u32 = lambda x: struct.pack("<I", x)
+u64 = lambda x: struct.pack("<Q", x)
+f32 = lambda x: struct.pack("<f", x)
+f64 = lambda x: struct.pack("<d", x)
+
+
+def s(text):
+    b = text.encode()
+    return u64(len(b)) + b
+
+
+def u32s(xs):
+    return u64(len(xs)) + b"".join(u32(x) for x in xs)
+
+
+def f32s(xs):
+    return u64(len(xs)) + b"".join(f32(x) for x in xs)
+
+
+def edges(es):
+    return u64(len(es)) + b"".join(u32(a) + u32(b) + f64(w) for a, b, w in es)
+
+
+MIN_PTS, EF, ALPHA, SEED = 2, 4, 5.0, 99
+
+
+def fishdbc_blob(xs, neighbor_sets, links, msf):
+    """One shard's nested FISHDBC v1 snapshot (items on a line, y = const)."""
+    out = b"FISHDBC\x00" + u8(1)
+    out += s("euclidean")
+    out += u64(MIN_PTS) + u64(EF) + f64(ALPHA) + u64(SEED)
+    # items: Dense 2-D points
+    out += u64(len(xs))
+    for x, y in xs:
+        out += u8(0) + f32s([x, y])
+    # hnsw: params mirror the FISHDBC params (m = MinPts)
+    out += u64(MIN_PTS) + u64(EF) + u64(SEED)
+    out += u64(len(links))
+    for node in links:
+        out += u64(len(node))
+        for level in node:
+            out += u32s(level)
+    out += u8(1) + u32(0)  # entry = Some(0)
+    out += u64(1) + u64(2) + u64(3) + u64(4)  # rng state (any nonzero)
+    out += u64(6)  # dist_calls
+    # neighbor sets (sorted ascending, <= MinPts entries each)
+    out += u64(len(neighbor_sets))
+    for entries in neighbor_sets:
+        out += u64(len(entries))
+        for nid, d in entries:
+            out += u32(nid) + f64(d)
+    # local MSF (canonical order) + empty candidate buffer
+    out += edges(msf)
+    out += u64(0)
+    out += u64(1)  # mst_updates
+    return out
+
+
+def shard(y, globals_):
+    """A 4-item shard: a chain of unit-spaced points at height y."""
+    xs = [(0.0, y), (1.0, y), (2.0, y), (3.0, y)]
+    links = [[[1]], [[0, 2]], [[1, 3]], [[2]]]  # level-0 chain
+    neighbor_sets = [
+        [(1, 1.0), (2, 2.0)],
+        [(0, 1.0), (2, 1.0)],
+        [(1, 1.0), (3, 1.0)],
+        [(2, 1.0), (1, 2.0)],
+    ]
+    msf = [(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)]
+    return globals_, fishdbc_blob(xs, neighbor_sets, links, msf)
+
+
+SHARDS = [shard(0.0, [0, 2, 4, 6]), shard(1.0, [1, 3, 5, 7])]
+HEADER = (
+    s("euclidean")
+    + u64(2)  # shards
+    + u64(8)  # next_global
+    + u64(2)  # mcs
+    + u64(2)  # bridge_k
+    + u64(1)  # bridge_fanout
+    + u64(4)  # queue_depth
+)
+
+# ------------------------------------------------------------------- v1 --
+v1 = b"FISHENG\x00" + u8(1) + HEADER
+for globals_, blob in SHARDS:
+    v1 += u32s(globals_) + u64(1) + f64(0.0) + blob
+open("fisheng_v1.bin", "wb").write(v1)
+
+# ------------------------------------------------------------------- v2 --
+v2 = b"FISHENG\x00" + u8(2) + HEADER
+v2 += u64(0) + u64(0) + u64(3)  # recluster_every, bridge_refresh, epoch
+BRIDGES = [  # (compacted bridge forest, live buffer) per shard, global ids
+    ([(0, 1, 1.5)], [(2, 3, 1.8)]),
+    ([(4, 5, 1.5)], [(6, 7, 1.9)]),
+]
+for (globals_, blob), (bmsf, bbuf) in zip(SHARDS, BRIDGES):
+    v2 += u32s(globals_) + u64(1) + f64(0.0) + blob
+    v2 += u64(4) + u64(1)  # covered, generation
+    v2 += edges(bmsf) + edges(bbuf)
+# cached global MSF + per-shard change stamps matching the shard states
+v2 += u8(1) + u64(8)
+for _ in SHARDS:
+    v2 += u64(4) + u64(1) + u64(3) + u64(1)  # items, mst_updates, msf_len, gen
+v2 += edges([
+    (0, 2, 1.0),
+    (1, 3, 1.0),
+    (2, 4, 1.0),
+    (3, 5, 1.0),
+    (4, 6, 1.0),
+    (5, 7, 1.0),
+    (0, 1, 1.5),
+])
+open("fisheng_v2.bin", "wb").write(v2)
+
+print(f"fisheng_v1.bin: {len(v1)} bytes, fisheng_v2.bin: {len(v2)} bytes")

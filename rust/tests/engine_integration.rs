@@ -252,6 +252,127 @@ fn online_labels_serve_and_do_not_mutate() {
 }
 
 #[test]
+fn snapshot_capture_after_one_percent_delta_copies_few_chunks() {
+    // Tentpole acceptance (ISSUE 3): a `ShardSnap::capture` after +1% new
+    // items must copy ≤ 10% of the chunks, sharing the rest by reference
+    // with the previous capture. Ascending 1-D line data makes spatial
+    // locality equal id locality, so the delta only rewires nodes (and
+    // shifts cores) near the tail of each chunked store — the regime the
+    // copy-on-write refactor optimizes. Asserted through the new
+    // copied-vs-shared capture counters.
+    let n = 4000usize;
+    let delta = n / 100;
+    let items: Vec<Item> = (0..n + delta)
+        .map(|i| Item::Dense(vec![i as f32 * 0.25, 0.0]))
+        .collect();
+    let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 5, ef: 15, ..Default::default() },
+        shards: 2,
+        mcs: 5,
+        ..Default::default()
+    });
+    for chunk in items[..n].chunks(256) {
+        engine.add_batch(chunk.to_vec());
+    }
+    engine.flush();
+    engine.refresh_bridges(); // first capture: everything counts as copied
+    let s1 = engine.stats().pipeline;
+    assert!(s1.snapshot_captures >= 2, "one capture per shard");
+    assert!(s1.snapshot_chunks_copied > 0);
+
+    engine.add_batch(items[n..].to_vec()); // +1%
+    engine.flush();
+    engine.refresh_bridges(); // partial refresh: COW capture
+    let s2 = engine.stats().pipeline;
+    let copied = s2.snapshot_chunks_copied - s1.snapshot_chunks_copied;
+    let shared = s2.snapshot_chunks_shared - s1.snapshot_chunks_shared;
+    let total = copied + shared;
+    assert!(total > 40, "chunk population too small to be meaningful");
+    assert!(
+        copied * 10 <= total,
+        "capture after +1% copied {copied}/{total} chunks (> 10%)"
+    );
+    assert!(
+        s2.snapshot_bytes_copied > s1.snapshot_bytes_copied,
+        "dirty tail chunks must report copied bytes"
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn bridge_refresh_capture_preserves_coverage_watermark() {
+    // Regression (ISSUE 3 satellite): a mid-epoch `bridge_refresh` capture
+    // must never rewind a shard's bridge-coverage watermark — items
+    // already searched at insert time (against an older snapshot) must not
+    // be re-searched, and their pairs not re-offered, by the next merge's
+    // catch-up. The invariant is exact: the insert-time walk and the
+    // catch-up walk share each shard's ordered watermark, so covered ==
+    // insert_items + catch_up_items at every flushed quiescent point.
+    let ds = blobs(1200, 47);
+    let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+        fishdbc: params(),
+        shards: 3,
+        mcs: 10,
+        bridge_refresh: 100,
+        ..Default::default()
+    });
+    engine.add_batch(ds.items[..800].to_vec());
+    let first = engine.cluster(10); // epoch 1: full catch-up coverage
+    assert_eq!(first.n_items, 800);
+    let s0 = engine.stats();
+    assert_eq!(s0.bridge_covered, 800, "first merge covers everything");
+    // exactly-once from the start (how coverage split between the walks
+    // depends on cadence-capture timing; the sum never does)
+    assert_eq!(s0.bridge_insert_items + s0.bridge_catch_up_items, 800);
+
+    // keep ingesting with plenty of mid-epoch captures: the cadence-driven
+    // ones (bridge_refresh=100) plus explicit refreshes after every chunk
+    let mut covered_floor = 800usize;
+    for chunk in ds.items[800..].chunks(50) {
+        engine.add_batch(chunk.to_vec());
+        engine.flush();
+        engine.refresh_bridges();
+        let s = engine.stats();
+        assert!(
+            s.bridge_covered >= covered_floor,
+            "coverage watermark rewound: {} < {covered_floor}",
+            s.bridge_covered
+        );
+        covered_floor = s.bridge_covered;
+        assert_eq!(
+            s.bridge_covered as u64,
+            s.bridge_insert_items + s.bridge_catch_up_items,
+            "an item was bridge-searched twice"
+        );
+    }
+    let before = engine.stats();
+    assert!(
+        before.bridge_insert_items > 0,
+        "insert-time walk never ran despite fresh snapshots"
+    );
+
+    // the next merge's catch-up may only search what is still above the
+    // watermarks — nothing that insert-time coverage already handled
+    let second = engine.cluster(10);
+    assert_eq!(second.n_items, 1200);
+    let after = engine.stats();
+    assert_eq!(after.bridge_covered, 1200, "catch-up completes coverage");
+    let caught_up = after.bridge_catch_up_items - before.bridge_catch_up_items;
+    assert!(
+        caught_up as usize <= 1200 - before.bridge_covered,
+        "merge re-searched covered items: caught up {caught_up}, only {} were \
+         above the watermarks",
+        1200 - before.bridge_covered
+    );
+    assert_eq!(
+        after.bridge_covered as u64,
+        after.bridge_insert_items + after.bridge_catch_up_items,
+        "an item was bridge-searched twice"
+    );
+    engine.shutdown();
+}
+
+#[test]
 fn incompatible_items_rejected_in_caller() {
     let engine = spawn_engine(2);
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {

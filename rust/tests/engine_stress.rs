@@ -1,0 +1,255 @@
+//! Deterministic engine stress harness: a seeded *virtual scheduler*
+//! replays a reproducible interleaving of `add_batch`, recluster epochs,
+//! online `label()` queries, mid-epoch snapshot refreshes, and mid-stream
+//! save/load over S ∈ {1, 2, 4} shards. The conformance invariant, checked
+//! at **every** published epoch:
+//!
+//! * labels are index-aligned with the input stream (`labels.len()` ==
+//!   items ingested so far, global ids = arrival order), and
+//! * the epoch's clustering is identical to a **from-scratch merge of the
+//!   same prefix state** (`Engine::reference_cluster`): one Kruskal over
+//!   all current shard forests plus all current bridge sets, bypassing the
+//!   cached global MSF, the per-shard change stamps, and the memoizing
+//!   extraction pipeline.
+//!
+//! The scheduler drives recluster epochs synchronously (the background
+//! thread's merges are identical code, but their timing is not
+//! reproducible, and an epoch can only be compared against a reference of
+//! the *same* prefix when no ingest interleaves), and always flushes
+//! before a snapshot refresh so captures see a deterministic state. Shard
+//! *workers* still interleave freely — which bridge pairs insert-time
+//! coverage finds can vary run to run — but every invariant below is
+//! interleaving-independent, because the reference merge reads the same
+//! quiesced engine state the epoch was published from. Label
+//! equality is asserted up to cluster renumbering (`canon`): the delta and
+//! reference paths must produce the same partition of the same prefix;
+//! extraction numbers clusters by traversal order, which is not part of
+//! the conformance contract when equal-weight edges tie.
+//!
+//! Short seeds run under plain `cargo test -q`; the `#[ignore]`d variants
+//! are the longer nightly loops (`cargo test -q -- --ignored`).
+
+use fishdbc::datasets;
+use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::util::rng::Rng;
+
+/// Canonical relabeling: clusters numbered by first occurrence, noise
+/// stays -1. Two label vectors describe the same partition iff their
+/// canonical forms are equal.
+fn canon(labels: &[i32]) -> Vec<i32> {
+    let mut map = std::collections::HashMap::new();
+    labels
+        .iter()
+        .map(|&l| {
+            if l < 0 {
+                -1
+            } else {
+                let next = map.len() as i32;
+                *map.entry(l).or_insert(next)
+            }
+        })
+        .collect()
+}
+
+/// One epoch's conformance check (call only with no ingest since the
+/// epoch was published).
+fn check_epoch(engine: &Engine, cursor: usize, mcs: usize, ctx: &str) {
+    let snap = engine.latest().expect("epoch published");
+    assert_eq!(snap.n_items, cursor, "{ctx}: epoch item count");
+    if cursor > 0 {
+        assert_eq!(
+            snap.clustering.labels.len(),
+            cursor,
+            "{ctx}: labels not index-aligned with the stream"
+        );
+    }
+    let reference = engine.reference_cluster(mcs);
+    assert_eq!(reference.n_items, cursor, "{ctx}: reference item count");
+    assert_eq!(
+        snap.n_msf_edges, reference.n_msf_edges,
+        "{ctx}: delta forest size != from-scratch forest size"
+    );
+    assert_eq!(
+        canon(&snap.clustering.labels),
+        canon(&reference.clustering.labels),
+        "{ctx}: delta merge clustering != from-scratch merge clustering"
+    );
+}
+
+fn stress(shards: usize, rounds: usize, max_items: usize, seed: u64) {
+    let ds = datasets::blobs::generate(max_items, 16, 4, seed);
+    let mcs = 5;
+    let config = EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 5, ef: 15, ..Default::default() },
+        shards,
+        mcs,
+        ..Default::default()
+    };
+    let mut engine = Engine::spawn(ds.metric, config);
+    let mut rng = Rng::new(seed ^ 0x57E55);
+    let mut cursor = 0usize;
+    let mut last_epoch = 0u64;
+    let mut clean = false; // no ingest since the latest epoch
+    let mut saves = 0usize;
+
+    for round in 0..rounds {
+        match rng.below(12) {
+            // ingest a batch (the common action)
+            0..=6 => {
+                if cursor < max_items {
+                    let take = (1 + rng.below(64)).min(max_items - cursor);
+                    engine.add_batch(ds.items[cursor..cursor + take].to_vec());
+                    cursor += take;
+                    clean = false;
+                }
+            }
+            // recluster epoch (the scheduler's stand-in for the background
+            // serving loop) + conformance check
+            7 | 8 => {
+                let snap = engine.cluster(mcs);
+                assert!(snap.epoch > last_epoch, "epochs must be monotone");
+                last_epoch = snap.epoch;
+                clean = true;
+                check_epoch(&engine, cursor, mcs, &format!("round {round}"));
+            }
+            // online label query: read-only, contract-shaped. When no
+            // epoch exists yet this lazily publishes one — deterministic,
+            // since the scheduler is the only thread driving merges.
+            9 => {
+                if cursor > 0 {
+                    let had_epoch = engine.latest().is_some();
+                    let probe = &ds.items[rng.below(cursor)];
+                    let l = engine.label(probe);
+                    let snap = engine.latest().expect("label published an epoch");
+                    assert!(
+                        l >= -1 && (l as i64) < snap.clustering.n_clusters as i64,
+                        "label {l} out of contract"
+                    );
+                    if !had_epoch {
+                        last_epoch = snap.epoch;
+                        clean = true;
+                        check_epoch(
+                            &engine,
+                            cursor,
+                            config.mcs,
+                            &format!("round {round} (lazy label merge)"),
+                        );
+                    }
+                }
+            }
+            // mid-epoch partial snapshot refresh (flush first so the
+            // capture sees a deterministic state)
+            10 => {
+                engine.flush();
+                engine.refresh_bridges();
+            }
+            // mid-stream save / load (bounded: checkpoints are the
+            // expensive action)
+            _ => {
+                if saves < 3 {
+                    saves += 1;
+                    let mut buf = Vec::new();
+                    engine.save(&mut buf).unwrap();
+                    let reloaded = Engine::load(buf.as_slice()).unwrap();
+                    let old = std::mem::replace(&mut engine, reloaded);
+                    old.shutdown();
+                    assert_eq!(engine.len(), cursor, "reload lost items");
+                    assert_eq!(engine.n_shards(), shards);
+                    assert!(engine.epoch() >= last_epoch, "epoch counter rewound");
+                    clean = false; // latest() is not persisted
+                }
+            }
+        }
+        // published epochs stay comparable only while no ingest happened
+        if clean {
+            let snap = engine.latest().expect("clean implies epoch");
+            assert_eq!(snap.epoch, last_epoch);
+        }
+    }
+
+    // final barrier: one more epoch over everything, fully checked
+    let snap = engine.cluster(mcs);
+    assert_eq!(snap.n_items, cursor);
+    last_epoch = snap.epoch;
+    check_epoch(&engine, cursor, mcs, "final");
+    // and an idle re-merge must short-circuit to the identical clustering
+    let again = engine.cluster(mcs);
+    assert_eq!(again.epoch, last_epoch + 1);
+    assert_eq!(again.clustering.labels, snap.clustering.labels);
+    engine.shutdown();
+}
+
+#[test]
+fn stress_single_shard() {
+    stress(1, 40, 900, 0xA11CE);
+}
+
+#[test]
+fn stress_two_shards() {
+    stress(2, 40, 900, 0xB0B);
+}
+
+#[test]
+fn stress_four_shards() {
+    stress(4, 40, 900, 0xCAFE);
+}
+
+/// S=1 admits a *stronger* oracle than the same-state reference merge:
+/// with no bridges and no cross-shard anything, an engine that clustered
+/// many times along the way must match, label for label, a fresh engine
+/// fed the same stream and clustered once at the end.
+#[test]
+fn single_shard_incremental_equals_fresh_replay() {
+    let ds = datasets::blobs::generate(700, 16, 4, 77);
+    let config = EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 5, ef: 15, ..Default::default() },
+        shards: 1,
+        mcs: 5,
+        ..Default::default()
+    };
+
+    let incremental = Engine::spawn(ds.metric, config);
+    for (i, chunk) in ds.items.chunks(90).enumerate() {
+        incremental.add_batch(chunk.to_vec());
+        if i % 2 == 0 {
+            let _ = incremental.cluster(5); // epochs along the way
+        }
+    }
+    let got = incremental.cluster(5);
+
+    let fresh = Engine::spawn(ds.metric, config);
+    fresh.add_batch(ds.items.clone());
+    let want = fresh.cluster(5);
+
+    assert_eq!(got.n_items, want.n_items);
+    assert_eq!(got.n_msf_edges, want.n_msf_edges);
+    assert_eq!(
+        canon(&got.clustering.labels),
+        canon(&want.clustering.labels),
+        "S=1 incremental epochs diverged from a fresh replay"
+    );
+    incremental.shutdown();
+    fresh.shutdown();
+}
+
+// ------------------------------------------------- nightly-length loops --
+// `cargo test -q -- --ignored` (CI runs these in the scheduled job).
+
+#[test]
+#[ignore]
+fn stress_long_single_shard() {
+    stress(1, 160, 4000, 0x1_0001);
+}
+
+#[test]
+#[ignore]
+fn stress_long_two_shards() {
+    stress(2, 160, 4000, 0x1_0002);
+}
+
+#[test]
+#[ignore]
+fn stress_long_four_shards() {
+    stress(4, 160, 4000, 0x1_0003);
+}

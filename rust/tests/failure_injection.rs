@@ -2,7 +2,9 @@
 //! inputs must never hang, corrupt state, or produce out-of-contract
 //! output (labels outside [-1, k), missing points, broken forests).
 
+use fishdbc::datasets;
 use fishdbc::distances::{Item, Metric, MetricKind};
+use fishdbc::engine::Engine;
 use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
 use fishdbc::hdbscan::exact::{exact_hdbscan, ExactParams};
 use fishdbc::util::rng::Rng;
@@ -187,6 +189,113 @@ fn tiny_alpha_flushes_constantly() {
     assert!(f.stats().mst_updates >= 100, "α≈0 must flush constantly");
     let c = f.cluster(4);
     assert_contract(&c.labels, c.n_clusters, 150);
+}
+
+// ------------------------------------------------------ persisted state --
+// Checked-in FISHENG fixtures (rust/tests/data/, regenerated by
+// make_fixtures.py) pin the on-disk container formats: a v1 file from
+// before the recluster pipeline existed, and a v2 file with bridge
+// buffers, coverage watermarks and a cached global MSF. Hostile *and*
+// merely old inputs must keep loading forever.
+
+fn fixture(name: &str) -> Vec<u8> {
+    let path =
+        format!("{}/tests/data/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+/// v1 engine files (no pipeline state) must load with empty bridge
+/// buffers and recluster from scratch, then keep ingesting normally.
+#[test]
+fn fisheng_v1_fixture_loads_and_reclusters() {
+    let engine = Engine::load(fixture("fisheng_v1.bin").as_slice()).unwrap();
+    assert_eq!(engine.len(), 8);
+    assert_eq!(engine.n_shards(), 2);
+    assert_eq!(engine.epoch(), 0, "v1 has no epoch counter");
+    assert_eq!(engine.config().recluster_every, 0);
+
+    let snap = engine.cluster(2);
+    assert_eq!(snap.n_items, 8);
+    assert_eq!(snap.epoch, 1);
+    assert_eq!(snap.n_changed_shards, 2, "v1 resume merges from scratch");
+    assert_contract(&snap.clustering.labels, snap.clustering.n_clusters, 8);
+
+    // the resumed engine is fully live: ingest more, recluster, serve
+    engine.add_batch(vec![
+        Item::Dense(vec![0.5, 0.5]),
+        Item::Dense(vec![2.5, 0.5]),
+    ]);
+    let snap = engine.cluster(2);
+    assert_eq!(snap.n_items, 10);
+    assert_contract(&snap.clustering.labels, snap.clustering.n_clusters, 10);
+    let l = engine.label(&Item::Dense(vec![0.1, 0.1]));
+    assert!(l >= -1 && (l as i64) < snap.clustering.n_clusters as i64);
+    engine.shutdown();
+}
+
+/// v2 engine files carry the pipeline epoch state; a reloaded engine must
+/// recluster *incrementally* (matching change stamps, no bridge re-search)
+/// — and saving it right back must reproduce the fixture byte for byte,
+/// proving the chunked copy-on-write stores never leak their in-memory
+/// layout into the container format.
+#[test]
+fn fisheng_v2_fixture_reclusters_incrementally_and_roundtrips_bytes() {
+    let bytes = fixture("fisheng_v2.bin");
+    let engine = Engine::load(bytes.as_slice()).unwrap();
+    assert_eq!(engine.len(), 8);
+    assert_eq!(engine.epoch(), 3, "epoch counter resumes");
+
+    let mut resaved = Vec::new();
+    engine.save(&mut resaved).unwrap();
+    assert_eq!(resaved, bytes, "save(load(v2 fixture)) changed the bytes");
+
+    let snap = engine.cluster(2);
+    assert_eq!(snap.epoch, 4);
+    assert_eq!(snap.n_items, 8);
+    assert_eq!(snap.n_changed_shards, 0, "stamps match: delta path");
+    assert_eq!(snap.n_bridge_edges, 0, "no bridge re-search after resume");
+    assert_contract(&snap.clustering.labels, snap.clustering.n_clusters, 8);
+    let stats = engine.stats();
+    assert_eq!(stats.bridge_covered, 8, "coverage watermarks resumed");
+    assert!(stats.bridge_edges > 0, "bridge buffers resumed");
+    engine.shutdown();
+}
+
+/// The chunked copy-on-write stores must serialize identically to the
+/// dense layout: a FISHDBC whose chunks are pinned by live snapshots
+/// (forcing the COW paths throughout construction) saves byte-for-byte
+/// the same state as an undisturbed twin over the same stream.
+#[test]
+fn chunked_snapshot_state_serializes_identically_to_dense() {
+    let ds = datasets::blobs::generate(300, 8, 3, 21);
+    let p = FishdbcParams { min_pts: 5, ef: 15, ..Default::default() };
+    let mut plain = Fishdbc::new(MetricKind::Euclidean, p);
+    let mut cow = Fishdbc::new(MetricKind::Euclidean, p);
+    let mut pinned = Vec::new();
+    for (i, it) in ds.items.iter().enumerate() {
+        plain.add(it.clone());
+        cow.add(it.clone());
+        if i % 40 == 0 {
+            // pin the current chunks, exactly like a ShardSnap capture
+            pinned.push((
+                cow.items().clone(),
+                cow.hnsw().clone(),
+                cow.cores().clone(),
+            ));
+        }
+    }
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    plain.save(&mut a).unwrap();
+    cow.save(&mut b).unwrap();
+    assert_eq!(a, b, "held snapshots changed the serialized state");
+    drop(pinned);
+
+    // and a full save → load → save cycle is byte-stable
+    let reloaded = Fishdbc::<Item, MetricKind>::load(b.as_slice()).unwrap();
+    let mut c = Vec::new();
+    reloaded.save(&mut c).unwrap();
+    assert_eq!(b, c, "save/load/save drifted");
 }
 
 /// A metric that is extremely spiky (almost-zero distances mixed with huge
