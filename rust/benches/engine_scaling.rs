@@ -8,8 +8,15 @@
 //! parallel, and each lane's HNSW holds n/S items, so every insert beams
 //! through a smaller graph.
 //!
-//! Run: `cargo bench --bench engine_scaling` (optional first arg overrides
-//! n, e.g. `cargo bench --bench engine_scaling -- 10000` for a quick pass).
+//! The workload is selectable, so the same harness measures the paper's
+//! non-Euclidean metrics at engine scale (ISSUE 4): any generator from
+//! `datasets::DATASET_NAMES` — e.g. `reviews` (Jaro-Winkler text) or
+//! `docword` (sparse cosine). Distance calls (the paper's cost model) are
+//! reported per row from the engine's shared metric counter.
+//!
+//! Run: `cargo bench --bench engine_scaling` (optional args override n and
+//! the dataset, e.g. `cargo bench --bench engine_scaling -- 10000` for a
+//! quick blobs pass or `-- 600 reviews` for the text workload).
 
 use std::time::Instant;
 
@@ -23,18 +30,32 @@ fn to_pred(labels: &[i32]) -> Vec<usize> {
 }
 
 fn main() {
-    let n: usize = std::env::args()
-        .skip(1)
-        .find_map(|a| a.parse().ok())
-        .unwrap_or(50_000);
+    let mut n: usize = 50_000;
+    let mut dataset = "blobs".to_string();
+    for a in std::env::args().skip(1) {
+        match a.parse::<usize>() {
+            Ok(v) => n = v,
+            Err(_) => {
+                if datasets::DATASET_NAMES.contains(&a.as_str()) {
+                    dataset = a;
+                }
+            }
+        }
+    }
     let dim = 16;
-    let ds = datasets::blobs::generate(n, dim, 10, 42);
+    let ds = datasets::generate(&dataset, n, dim, 42).expect("known dataset");
+    let n = ds.n();
     let params = FishdbcParams { min_pts: 10, ef: 20, ..Default::default() };
 
-    println!("# engine scaling: blobs n={n} dim={dim} (10 centers), MinPts=10 ef=20");
     println!(
-        "{:<8} {:>10} {:>12} {:>10} {:>10} {:>10} {:>12}",
-        "shards", "ingest(s)", "items/s", "merge(s)", "clusters", "bridges", "ARI vs S=1"
+        "# engine scaling: {} n={n} metric={}, MinPts=10 ef=20",
+        ds.name,
+        ds.metric.name()
+    );
+    println!(
+        "{:<8} {:>10} {:>12} {:>10} {:>14} {:>10} {:>10} {:>12}",
+        "shards", "ingest(s)", "items/s", "merge(s)", "dist calls", "clusters",
+        "bridges", "ARI vs S=1"
     );
 
     let mut base: Option<(f64, Vec<i32>)> = None;
@@ -53,6 +74,7 @@ fn main() {
         let ingest = t0.elapsed().as_secs_f64();
 
         let snap = engine.cluster(10);
+        let calls = engine.stats().metric_calls;
         let ari = match &base {
             None => 1.0,
             Some((_, labels)) => adjusted_rand_index(
@@ -61,11 +83,12 @@ fn main() {
             ),
         };
         println!(
-            "{:<8} {:>10.2} {:>12.0} {:>10.2} {:>10} {:>10} {:>12.3}",
+            "{:<8} {:>10.2} {:>12.0} {:>10.2} {:>14} {:>10} {:>10} {:>12.3}",
             shards,
             ingest,
             n as f64 / ingest.max(1e-9),
             snap.extract_secs,
+            calls,
             snap.clustering.n_clusters,
             snap.n_bridge_edges,
             ari

@@ -17,11 +17,43 @@ pub mod sparse;
 pub mod text;
 pub mod vector;
 
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// A symmetric (possibly non-metric) distance over items of type `T`.
 pub trait Metric<T: ?Sized>: Send + Sync {
     fn dist(&self, a: &T, b: &T) -> f64;
+
+    /// Validate an item *before* it enters any index (the sharded engine
+    /// calls this in `add_batch`, in the caller's thread). The default
+    /// accepts everything — a typed metric cannot receive the wrong shape
+    /// by construction; [`MetricKind`] overrides it to reject items its
+    /// dynamic dispatch cannot handle, so a bad batch panics before it
+    /// consumes global ids.
+    fn check_item(&self, _item: &T) {}
+}
+
+/// Map a user-supplied distance into the half-open order the algorithm
+/// assumes: `NaN` and `-inf` become `+inf` ("unknown / unreachable").
+///
+/// Arbitrary `Metric<T>` closures are untrusted (paper: "arbitrary
+/// distance functions"). A `NaN` flowing into the HNSW neighbor heaps, the
+/// core-distance mirror, or Kruskal's `total_cmp` order would silently
+/// corrupt results — `total_cmp` sorts `NaN` *greatest*, demoting real
+/// edges instead of failing loudly — and a `-inf` would win every
+/// min-weight dedup. Mapping both to `+inf` at the single choke point the
+/// algorithm reads distances through (see [`crate::hnsw`]) keeps hostile
+/// metrics merely useless rather than corrupting: `+inf` is already a
+/// legal "not dense enough yet" value that the existing `is_finite`
+/// guards in `engine/merge.rs` and `engine/shard.rs` understand.
+#[inline]
+pub fn sanitize_distance(d: f64) -> f64 {
+    if d.is_nan() || d == f64::NEG_INFINITY {
+        f64::INFINITY
+    } else {
+        d
+    }
 }
 
 /// Any `Fn(&T, &T) -> f64` is a metric — arbitrary user distance functions,
@@ -38,14 +70,25 @@ where
 
 /// Wrapper counting distance evaluations (the paper's key cost model: Fig 1,
 /// Fig 2 report runtime dominated by / measured in distance calls).
+///
+/// The counter lives behind an `Arc`, so **clones share it**: the sharded
+/// engine hands each shard (and each frozen snapshot) a clone of one
+/// `Counting<M>` and reads a single engine-wide total — every metric
+/// evaluation on every thread, insert or search, lands in the same cell.
 pub struct Counting<M> {
     inner: M,
-    calls: AtomicU64,
+    calls: Arc<AtomicU64>,
+}
+
+impl<M: Clone> Clone for Counting<M> {
+    fn clone(&self) -> Self {
+        Counting { inner: self.inner.clone(), calls: Arc::clone(&self.calls) }
+    }
 }
 
 impl<M> Counting<M> {
     pub fn new(inner: M) -> Self {
-        Counting { inner, calls: AtomicU64::new(0) }
+        Counting { inner, calls: Arc::new(AtomicU64::new(0)) }
     }
 
     pub fn calls(&self) -> u64 {
@@ -55,6 +98,19 @@ impl<M> Counting<M> {
     pub fn reset(&self) {
         self.calls.store(0, Ordering::Relaxed);
     }
+
+    /// The wrapped metric.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    /// Fold `n` prior evaluations into the counter. The engine loader uses
+    /// this to resume the counter from a checkpoint's persisted insert-path
+    /// totals, keeping `metric_calls >= dist_calls` across restarts
+    /// (search-path calls of previous processes are not persisted).
+    pub(crate) fn add_calls(&self, n: u64) {
+        self.calls.fetch_add(n, Ordering::Relaxed);
+    }
 }
 
 impl<T: ?Sized, M: Metric<T>> Metric<T> for Counting<M> {
@@ -62,6 +118,11 @@ impl<T: ?Sized, M: Metric<T>> Metric<T> for Counting<M> {
     fn dist(&self, a: &T, b: &T) -> f64 {
         self.calls.fetch_add(1, Ordering::Relaxed);
         self.inner.dist(a, b)
+    }
+
+    #[inline]
+    fn check_item(&self, item: &T) {
+        self.inner.check_item(item)
     }
 }
 
@@ -82,6 +143,67 @@ pub enum Item {
     Bits(bitmap::Bitmap),
     /// Fuzzy-hash digest (lzjd/tlsh/sdhash simulants).
     Digest(fuzzy::Digest),
+}
+
+/// Content hash (manual: `f32` payloads hash by bit pattern, which the
+/// derive cannot do). The write sequence — a `u64` variant tag, then the
+/// raw fields, with **no** length prefixes or string terminators — is
+/// frozen: it is exactly what the engine's shard router hashed before the
+/// [`ShardKey`](crate::engine::ShardKey) refactor, so persisted engines
+/// keep partitioning identical streams identically across releases.
+/// Pinned by `engine::tests::shard_key_write_sequence_is_frozen`.
+///
+/// Bit-pattern hashing distinguishes values float `==` conflates
+/// (`0.0`/`-0.0`, NaN payloads), so this hash is *not* consistent with the
+/// derived `PartialEq`. That is deliberate and safe: `Item` is not `Eq`
+/// (floats), so it cannot be a std map key anyway — this impl exists for
+/// content routing, where only determinism matters.
+impl Hash for Item {
+    fn hash<H: Hasher>(&self, h: &mut H) {
+        match self {
+            Item::Dense(v) => {
+                h.write_u64(0);
+                for &x in v {
+                    h.write_u32(x.to_bits());
+                }
+            }
+            Item::Sparse { idx, val } => {
+                h.write_u64(1);
+                for &i in idx {
+                    h.write_u32(i);
+                }
+                for &x in val {
+                    h.write_u32(x.to_bits());
+                }
+            }
+            Item::Set(s) => {
+                h.write_u64(2);
+                for &i in s {
+                    h.write_u32(i);
+                }
+            }
+            Item::Text(t) => {
+                h.write_u64(3);
+                h.write(t.as_bytes());
+            }
+            Item::Bits(b) => {
+                h.write_u64(4);
+                for &w in b.words() {
+                    h.write_u64(w);
+                }
+            }
+            Item::Digest(d) => {
+                h.write_u64(5);
+                for &m in &d.minhashes {
+                    h.write_u64(m);
+                }
+                h.write(&d.histogram);
+                for &w in d.features.words() {
+                    h.write_u64(w);
+                }
+            }
+        }
+    }
 }
 
 impl Item {
@@ -225,6 +347,17 @@ impl Metric<Item> for MetricKind {
     fn dist(&self, a: &Item, b: &Item) -> f64 {
         MetricKind::dist(self, a, b)
     }
+
+    /// The dynamic pair can mismatch at runtime; reject incompatible items
+    /// before they enter any index (the engine calls this in the caller's
+    /// thread, before assigning global ids).
+    fn check_item(&self, item: &Item) {
+        assert!(
+            self.compatible(item),
+            "item incompatible with metric {}",
+            self.name()
+        );
+    }
 }
 
 #[cfg(test)]
@@ -246,6 +379,29 @@ mod tests {
         assert_eq!(m.calls(), 2);
         m.reset();
         assert_eq!(m.calls(), 0);
+    }
+
+    #[test]
+    fn counting_clones_share_one_counter() {
+        // the engine hands each shard a clone; the total must aggregate
+        let m = Counting::new(|a: &f64, b: &f64| (a - b).abs());
+        let c = m.clone();
+        m.dist(&1.0, &2.0);
+        c.dist(&3.0, &4.0);
+        assert_eq!(m.calls(), 2);
+        assert_eq!(c.calls(), 2);
+        c.reset();
+        assert_eq!(m.calls(), 0);
+    }
+
+    #[test]
+    fn sanitize_maps_only_nan_and_neg_inf() {
+        assert_eq!(sanitize_distance(f64::NAN), f64::INFINITY);
+        assert_eq!(sanitize_distance(f64::NEG_INFINITY), f64::INFINITY);
+        assert_eq!(sanitize_distance(f64::INFINITY), f64::INFINITY);
+        assert_eq!(sanitize_distance(1.5), 1.5);
+        assert_eq!(sanitize_distance(0.0), 0.0);
+        assert_eq!(sanitize_distance(-2.0), -2.0, "finite values pass through");
     }
 
     #[test]

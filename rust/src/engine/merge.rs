@@ -18,19 +18,28 @@
 //! are computed from a uniform subsample (hash routing), so they estimate
 //! the same densities the single-shard run sees, at 1/S the sample rate.
 //! Most bridge candidates are discovered at insert time (see
-//! `engine/shard.rs`); the merge's *catch-up* pass below searches only the
-//! items above each shard's coverage watermark, so its cost scales with
-//! the delta since the previous epoch, not with total n.
+//! `engine/shard.rs`); the merge's *catch-up* pass below does two bounded
+//! jobs: it first-covers the items above each shard's coverage watermark,
+//! and it **re-searches the same-epoch window** — items insert-covered
+//! since the previous merge queried frozen snapshots that can predate
+//! remote items of the same window, so the catch-up searches them once
+//! more against the live post-flush states (skipping remote shards that
+//! did not grow past what the window already saw). A cross-shard pair
+//! whose two endpoints arrived inside one epoch window is therefore found
+//! at the window-closing merge, from whichever side re-searches first;
+//! no pair is ever silently dropped. Both jobs scale with the delta since
+//! the previous epoch, never with total n.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::distances::Metric;
 use crate::mst::{Edge, Msf};
 use crate::util::fasthash::FastMap;
 
 use super::pipeline::Pipeline;
 use super::shard::{rotation_target, BridgeState, ShardState};
-use super::{Engine, EngineInner, EngineSnapshot};
+use super::{Engine, EngineInner, EngineItem, EngineSnapshot};
 
 /// Per-shard change stamp recorded at each merge: a shard whose stamp is
 /// unchanged contributed nothing new since the cached merge.
@@ -74,7 +83,7 @@ impl MergeState {
     }
 }
 
-impl Engine {
+impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     /// CLUSTER across all shards: flush, catch up bridge coverage, fold
     /// the deltas into the cached global forest with one Kruskal pass, and
     /// re-extract (or short-circuit) the clustering through the shared
@@ -86,7 +95,7 @@ impl Engine {
     }
 }
 
-impl EngineInner {
+impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
     pub(crate) fn cluster(&self, mcs: usize) -> Arc<EngineSnapshot> {
         self.flush();
         let t0 = Instant::now();
@@ -95,7 +104,7 @@ impl EngineInner {
             .iter()
             .map(|s| s.state.read().unwrap())
             .collect();
-        let states: Vec<&ShardState> = guards.iter().map(|g| &**g).collect();
+        let states: Vec<&ShardState<T, M>> = guards.iter().map(|g| &**g).collect();
         let bridges: Vec<&Arc<Mutex<BridgeState>>> =
             self.shard_handles().iter().map(|s| &s.bridge).collect();
         let n_items: usize = states.iter().map(|st| st.f.len()).sum();
@@ -111,7 +120,8 @@ impl EngineInner {
             .map_or(0, |m| m as usize + 1)
             .max(n_items);
 
-        // 1. bridge catch-up: search only above each coverage watermark
+        // 1. bridge catch-up: first-cover above each coverage watermark,
+        //    re-search the closing same-epoch window below it
         let tb = Instant::now();
         catch_up_bridges(
             &states,
@@ -178,21 +188,34 @@ impl EngineInner {
     }
 }
 
-/// Delta bridge search: for every shard, cover the local items above its
-/// coverage watermark — the ones insert-time bridging could not reach
-/// (no snapshot yet, or snapshot too stale) — by querying the *live*
-/// post-flush remote states. Read-only against the shard states and
-/// embarrassingly parallel: one scoped thread per source shard, each
-/// locking only its own shard's bridge buffer (the caller holds read
-/// guards on every state). Like the insert-time path, the walk stops at
-/// an item whose core distance is still +∞ (fewer than MinPts neighbors
-/// known): covering it now would pin infinite-weight edges that nothing
-/// ever re-searches, so it waits for the next merge instead.
+/// Delta bridge search, two bounded jobs per source shard (one scoped
+/// thread each, read-only against every shard state, locking only its own
+/// bridge buffer — the caller holds read guards on every state):
+///
+/// 1. **Window re-search** (`[merge_covered, covered)`): items that were
+///    insert-covered since the previous merge queried *frozen* snapshots,
+///    which can predate remote items of the same epoch window — so a pair
+///    whose two endpoints both arrived inside the window could have been
+///    missed from both sides. Re-searching the window suffix against the
+///    live post-flush states closes that gap exactly; remote shards that
+///    did not grow past the smallest snapshot the window saw are skipped
+///    (nothing new to find there).
+/// 2. **First-pass coverage** (`[covered, len)`): the items insert-time
+///    bridging could not reach (no snapshot yet, or snapshot too stale),
+///    searched against the live states. Like the insert-time path, this
+///    walk stops at an item whose core distance is still +∞ (fewer than
+///    MinPts neighbors known): covering it now would pin infinite-weight
+///    edges that nothing ever re-searches, so it waits for the next merge.
+///
+/// Both jobs then advance the merge-final watermark (`finish_window`), so
+/// every item below `covered` has, at this barrier, searched remotes
+/// containing every item that existed — which is what makes the
+/// approximation gap *closed* rather than merely narrowed.
 ///
 /// On a first merge every watermark is 0, so this degenerates to the full
 /// O(n·k·fanout) search; afterwards it costs O(Δn·k·fanout).
-pub(crate) fn catch_up_bridges(
-    states: &[&ShardState],
+pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
+    states: &[&ShardState<T, M>],
     bridges: &[&Arc<Mutex<BridgeState>>],
     k: usize,
     fanout: usize,
@@ -202,11 +225,11 @@ pub(crate) fn catch_up_bridges(
     if s < 2 || k == 0 || fanout == 0 {
         return;
     }
-    // nothing above any watermark: skip spawning the scoped threads
-    let idle = states
-        .iter()
-        .zip(bridges)
-        .all(|(st, br)| br.lock().unwrap().covered >= st.f.len());
+    // nothing above any watermark and no window pending: skip spawning
+    let idle = states.iter().zip(bridges).all(|(st, br)| {
+        let b = br.lock().unwrap();
+        b.covered >= st.f.len() && b.merge_covered >= b.covered
+    });
     if idle {
         return;
     }
@@ -220,24 +243,57 @@ pub(crate) fn catch_up_bridges(
                 let mut br = bridge.lock().unwrap();
                 let len = st.f.len();
                 let mut changed = false;
+                // One shared live-search body for both walks below, so the
+                // bridge-weight formula (and therefore the conformance
+                // contract) cannot silently diverge between them.
+                let search_remote = |br: &mut BridgeState,
+                                     changed: &mut bool,
+                                     li: usize,
+                                     ci: f64,
+                                     t: usize| {
+                    let gi = st.globals[li];
+                    let item = &st.f.items()[li];
+                    let remote = states[t];
+                    for (rj, d) in remote.f.nearest(item, k, None) {
+                        let w = d.max(ci).max(remote.f.cores()[rj as usize]);
+                        if br.offer(gi, remote.globals[rj as usize], w) {
+                            *changed = true;
+                        }
+                    }
+                };
+                // 1. same-epoch window re-search against live states
+                let recheck_end = br.covered.min(len);
+                for li in br.merge_covered..recheck_end {
+                    // covered implies the core was finite when first
+                    // searched, and cores only shrink — defensive guard
+                    let ci = st.f.cores()[li];
+                    if !ci.is_finite() {
+                        continue;
+                    }
+                    let mut searched = false;
+                    for j in 0..fanout {
+                        let t = rotation_target(si, li, j, s);
+                        if states[t].f.len() <= br.window_seen(t) {
+                            continue; // remote has nothing the window missed
+                        }
+                        searched = true;
+                        search_remote(&mut br, &mut changed, li, ci, t);
+                    }
+                    if searched {
+                        br.recheck_items += 1;
+                    }
+                }
+                // 2. first-pass coverage above the watermark
                 while br.covered < len {
                     let li = br.covered;
-                    let gi = st.globals[li];
                     // O(1) chunked reads (no O(n) bulk core fetch per merge)
                     let ci = st.f.cores()[li];
                     if !ci.is_finite() {
                         break; // retried at the next merge, once known
                     }
-                    let item = &st.f.items()[li];
                     for j in 0..fanout {
                         let t = rotation_target(si, li, j, s);
-                        let remote = states[t];
-                        for (rj, d) in remote.f.nearest(item, k, None) {
-                            let w = d.max(ci).max(remote.f.cores()[rj as usize]);
-                            if br.offer(gi, remote.globals[rj as usize], w) {
-                                changed = true;
-                            }
-                        }
+                        search_remote(&mut br, &mut changed, li, ci, t);
                     }
                     br.covered = li + 1;
                     br.catch_up_items += 1;
@@ -246,6 +302,7 @@ pub(crate) fn catch_up_bridges(
                 if changed {
                     br.generation += 1;
                 }
+                br.finish_window();
             });
         }
     });
@@ -254,9 +311,9 @@ pub(crate) fn catch_up_bridges(
 /// Fold the deltas into a new global forest. Returns the forest, the
 /// number of (deduplicated) bridge edges offered to this merge, and the
 /// number of changed shards.
-fn merge_forest(
+fn merge_forest<T: EngineItem, M: Metric<T> + Clone>(
     cache: Option<&MergeCache>,
-    states: &[&ShardState],
+    states: &[&ShardState<T, M>],
     bridges: &[&Arc<Mutex<BridgeState>>],
     stamps: &[ShardStamp],
     n: usize,
@@ -306,7 +363,9 @@ fn merge_forest(
 
 /// One shard's local forest relabeled into global ids (shared by the
 /// delta merge and the reference merge so the two paths can never drift).
-fn relabel_forest(st: &ShardState) -> Vec<Edge> {
+fn relabel_forest<T: EngineItem, M: Metric<T> + Clone>(
+    st: &ShardState<T, M>,
+) -> Vec<Edge> {
     st.f.msf_edges()
         .iter()
         .map(|e| {
@@ -355,7 +414,7 @@ pub struct ReferenceMerge {
     pub msf_weight: f64,
 }
 
-impl Engine {
+impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     /// From-scratch **reference merge** for conformance testing: fold every
     /// shard's current forest plus every shard's current bridge set with
     /// one Kruskal pass — ignoring the cached global MSF, the per-shard
@@ -365,10 +424,11 @@ impl Engine {
     /// By the merge invariants (module docs above) this must produce the
     /// same forest, and therefore the same labels, as the delta path; the
     /// deterministic stress harness (`tests/engine_stress.rs`) asserts
-    /// exactly that after every published epoch. Read-only: no catch-up
-    /// search runs, no epoch is published, no cache is touched — call it
-    /// right after [`Engine::cluster`] (with no interleaved ingest) so
-    /// both paths see identical shard state.
+    /// exactly that after every published epoch — for the framework
+    /// instantiation *and* for non-Euclidean typed engines. Read-only: no
+    /// catch-up search runs, no epoch is published, no cache is touched —
+    /// call it right after [`Engine::cluster`] (with no interleaved
+    /// ingest) so both paths see identical shard state.
     #[doc(hidden)]
     pub fn reference_cluster(&self, mcs: usize) -> ReferenceMerge {
         let inner = self.inner();
@@ -378,7 +438,7 @@ impl Engine {
             .iter()
             .map(|s| s.state.read().unwrap())
             .collect();
-        let states: Vec<&ShardState> = guards.iter().map(|g| &**g).collect();
+        let states: Vec<&ShardState<T, M>> = guards.iter().map(|g| &**g).collect();
         let bridges: Vec<&Arc<Mutex<BridgeState>>> =
             inner.shard_handles().iter().map(|s| &s.bridge).collect();
         let n_items: usize = states.iter().map(|st| st.f.len()).sum();
@@ -504,6 +564,23 @@ mod tests {
         // self-loops are rejected outright
         assert!(!br.offer(4, 4, 0.1));
         assert_eq!(br.n_edges(), 1);
+    }
+
+    #[test]
+    fn bridge_window_bookkeeping() {
+        // the same-epoch window state: note/min semantics, query fallback,
+        // and the close operation the merge catch-up runs
+        let mut br = BridgeState::new();
+        assert_eq!(br.window_seen(2), usize::MAX, "unqueried remote");
+        br.note_window_snap(2, 50);
+        br.note_window_snap(2, 40);
+        br.note_window_snap(2, 60);
+        assert_eq!(br.window_seen(2), 40, "min snapshot length wins");
+        assert_eq!(br.window_seen(0), usize::MAX);
+        br.covered = 7;
+        br.finish_window();
+        assert_eq!(br.merge_covered, 7);
+        assert_eq!(br.window_seen(2), usize::MAX, "window cleared");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Sharded parallel ingest engine: FISHDBC at multi-core throughput.
+//! Sharded parallel ingest engine: FISHDBC at multi-core throughput, for
+//! **arbitrary data and distance functions**.
 //!
 //! The [`coordinator`](crate::coordinator) makes FISHDBC *streaming*, but
 //! its single worker caps ingest at one core of HNSW insertion. This engine
@@ -7,14 +8,26 @@
 //! slice of the item space — and recovers a **global clustering** through an
 //! incremental, epoch-based recluster pipeline (see [`pipeline`]).
 //!
+//! Like the core [`Fishdbc<T, M>`](crate::fishdbc::Fishdbc), the engine is
+//! generic: [`Engine<T, M>`] shards any [`EngineItem`] type under any
+//! cloneable [`Metric<T>`] — a closure is enough — so the paper's
+//! flexibility axis (Table 1's text, sparse, set and fuzzy-hash workloads,
+//! or your own types) holds at production scale, not just in the library
+//! core. The dynamic [`Item`]/[`MetricKind`] pair used by the CLI and the
+//! framework datasets is simply the default instantiation (`Engine` with no
+//! type arguments). Every distance evaluation, on every path — insertion,
+//! bridge search, catch-up, online labels — flows through one shared
+//! [`Counting`] wrapper, surfacing the paper's cost model (Figs 1–2 measure
+//! work in distance calls) as `EngineStats::metric_calls`.
+//!
 //! ## Architecture
 //!
 //! * **Routing** ([`Engine::add_batch`]): every arriving item gets the next
 //!   dense global id (arrival order — labels stay index-aligned with the
-//!   input stream) and is hash-routed by *content* to one shard, so each
-//!   shard holds a uniform random subsample and mirrors the global density
-//!   structure. Bounded queues give backpressure, exactly like the
-//!   coordinator.
+//!   input stream) and is hash-routed by *content* ([`ShardKey`]) to one
+//!   shard, so each shard holds a uniform random subsample and mirrors the
+//!   global density structure. Bounded queues give backpressure, exactly
+//!   like the coordinator.
 //! * **Insert-time bridges** (`engine/shard.rs`): each shard discovers
 //!   cross-shard candidate edges *as items arrive*, querying frozen
 //!   read-only snapshots of the other shards' HNSWs (refreshed at every
@@ -22,12 +35,14 @@
 //!   are buffered per shard under the same α·n flush discipline as
 //!   FISHDBC's local candidate buffer.
 //! * **Delta merge** ([`Engine::cluster`], `engine/merge.rs`): after a
-//!   flush barrier, a *catch-up* pass bridges only the items no shard
-//!   could cover at insert time, then Kruskal re-runs over the cached
-//!   global forest ∪ the forests of changed shards ∪ changed bridge sets.
-//!   The shared [`pipeline::Pipeline`] turns the forest into the global
-//!   clustering, short-circuiting condense/extract when the forest is
-//!   unchanged. Recluster cost therefore scales with the *delta* since
+//!   flush barrier, a *catch-up* pass bridges the items no shard could
+//!   cover at insert time and re-searches the bounded same-epoch window
+//!   (so a pair whose two endpoints arrived inside one epoch window is
+//!   still found — see `engine/merge.rs`), then Kruskal re-runs over the
+//!   cached global forest ∪ the forests of changed shards ∪ changed bridge
+//!   sets. The shared [`pipeline::Pipeline`] turns the forest into the
+//!   global clustering, short-circuiting condense/extract when the forest
+//!   is unchanged. Recluster cost therefore scales with the *delta* since
 //!   the previous epoch, not with total n — the paper's "lightweight
 //!   computation to update the clustering when few items are added".
 //! * **Merge invariants**: (1) each shard's forest is an MSF of its local
@@ -54,26 +69,96 @@
 //!   FISHDBC state plus the global id maps, and — since v2 — the pipeline
 //!   epoch state (bridge buffers, coverage watermarks, cached global MSF),
 //!   so a restarted engine reclusters incrementally instead of from
-//!   scratch.
+//!   scratch. Generic engines persist through the same container via
+//!   [`Engine::save_with`]/[`Engine::load_with`] and a caller-supplied
+//!   item codec.
 
 pub mod merge;
 pub mod pipeline;
 pub mod query;
 pub(crate) mod shard;
 
-use std::hash::Hasher;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::distances::{Item, MetricKind};
+use crate::distances::{Counting, Item, Metric, MetricKind};
 use crate::fishdbc::{FishdbcParams, FishdbcStats};
 use crate::hdbscan::Clustering;
 use crate::util::fasthash::FastHasher;
 use merge::MergeState;
 use pipeline::{PipelineRun, PipelineStats};
 use shard::{BridgeCtxSeed, BridgeState, Shard, ShardCmd, ShardSnap, ShardState, Snaps};
+
+/// Deterministic content hash for shard routing: the same item always
+/// hashes to the same value, across threads, processes and restarts (the
+/// hasher is seed-free), so the same stream is always partitioned the same
+/// way — including when it resumes on top of a persisted engine.
+///
+/// Implemented for every `T: Hash` via a blanket impl (user types get it
+/// with `#[derive(Hash)]`; element vectors like `Vec<u32>` and `String`
+/// already qualify). [`Item`] routes through its manual `Hash`
+/// impl, whose write sequence is frozen for persisted-engine
+/// compatibility.
+///
+/// Routing is a partitioning heuristic: *which* shard an item lands in
+/// never affects correctness, only that identical streams partition
+/// identically (determinism, tests) and that the partition is uniform
+/// (per-shard density estimates mirror the global ones).
+pub trait ShardKey {
+    /// The routing hash (shard = `shard_key() % S`).
+    fn shard_key(&self) -> u64;
+}
+
+impl<T: Hash + ?Sized> ShardKey for T {
+    fn shard_key(&self) -> u64 {
+        let mut h = FastHasher::default();
+        self.hash(&mut h);
+        h.finish()
+    }
+}
+
+/// Items the sharded engine can ingest: cloneable (the copy-on-write
+/// snapshot machinery), sendable across shard threads, and content-hash
+/// routable. `approx_heap_bytes` only feeds the snapshot bytes-copied
+/// accounting (`--stats`, the `snapshot_refresh` bench) — the default 0 is
+/// always safe.
+///
+/// Implement it with an empty body for any `Hash + Clone + Send + Sync`
+/// type:
+///
+/// ```
+/// # use fishdbc::engine::EngineItem;
+/// #[derive(Clone, Hash)]
+/// struct Fingerprint(Vec<u64>);
+/// impl EngineItem for Fingerprint {}
+/// ```
+pub trait EngineItem: Clone + Send + Sync + ShardKey + 'static {
+    /// Approximate heap bytes of one item (snapshot accounting only).
+    fn approx_heap_bytes(&self) -> usize {
+        0
+    }
+}
+
+impl EngineItem for Item {
+    fn approx_heap_bytes(&self) -> usize {
+        self.approx_bytes()
+    }
+}
+
+impl EngineItem for String {
+    fn approx_heap_bytes(&self) -> usize {
+        self.len()
+    }
+}
+
+impl<X: Hash + Clone + Send + Sync + 'static> EngineItem for Vec<X> {
+    fn approx_heap_bytes(&self) -> usize {
+        self.len() * std::mem::size_of::<X>()
+    }
+}
 
 /// Engine configuration.
 #[derive(Clone, Copy, Debug)]
@@ -125,6 +210,7 @@ impl Default for EngineConfig {
 
 /// A merged global clustering with provenance: one published *epoch* of
 /// the recluster pipeline. Immutable; shared as `Arc` by the serving loop.
+/// Item-type agnostic — the same struct serves every `Engine<T, M>`.
 #[derive(Clone, Debug)]
 pub struct EngineSnapshot {
     /// Merge epoch (monotone; 1 = first merge).
@@ -159,8 +245,18 @@ pub struct EngineSnapshot {
 pub struct EngineStats {
     /// Items inserted (sum over shards).
     pub items: usize,
-    /// Distance evaluations (sum over shards).
+    /// Distance evaluations on the *insert* path (sum of the shards' HNSW
+    /// construction counters — the subset of [`EngineStats::metric_calls`]
+    /// the paper's build columns report).
     pub dist_calls: u64,
+    /// Every evaluation of the user metric, on every path — insertion,
+    /// insert-time bridge search, merge catch-up, online labels — from the
+    /// engine-wide shared [`Counting`] wrapper. The paper's cost model
+    /// (Figs 1–2): runtimes are dominated by, and measured in, distance
+    /// calls. Always ≥ `dist_calls`: a reloaded engine resumes this
+    /// counter from the persisted insert-path totals (prior search-path
+    /// calls are not persisted).
+    pub metric_calls: u64,
     /// Batches processed (sum over shards).
     pub batches: u64,
     /// Critical-path build time: the busiest shard's insert wall time.
@@ -175,13 +271,19 @@ pub struct EngineStats {
     pub bridge_covered: usize,
     /// Items covered by the insert-time walk (this process).
     pub bridge_insert_items: u64,
-    /// Items the merge catch-up had to search (this process). The two
+    /// Items the merge catch-up first-covered (this process). The two
     /// walks share each shard's ordered watermark, so for an engine that
     /// was not reloaded mid-run, `bridge_covered == bridge_insert_items +
-    /// bridge_catch_up_items` at any flushed quiescent point — the
-    /// no-duplicate-work invariant (a snapshot refresh that rewound a
+    /// bridge_catch_up_items` at any flushed quiescent point — first-pass
+    /// coverage happens exactly once (a snapshot refresh that rewound a
     /// watermark would break it).
     pub bridge_catch_up_items: u64,
+    /// Items the merge catch-up re-searched to close the same-epoch
+    /// window: an item insert-covered against frozen snapshots is searched
+    /// once more, against live states, at the next merge — so cross-shard
+    /// pairs that both arrived inside one epoch window are never missed.
+    /// Bounded per merge by the items inserted since the previous one.
+    pub bridge_recheck_items: u64,
     /// α·n bridge-buffer compactions run.
     pub bridge_compactions: u64,
     /// Wall seconds shards spent on insert-time bridge queries.
@@ -194,11 +296,14 @@ pub struct EngineStats {
 
 /// Shared engine internals: everything the public handle, the shard
 /// workers, and the background recluster thread need to see.
-pub(crate) struct EngineInner {
+pub(crate) struct EngineInner<T, M> {
     config: EngineConfig,
-    metric: MetricKind,
-    shards: Vec<Shard>,
-    snaps: Arc<Snaps>,
+    /// The user metric behind the engine-wide distance-call counter;
+    /// every shard and every frozen snapshot holds a clone sharing the
+    /// same counter cell.
+    metric: Counting<M>,
+    shards: Vec<Shard<T, M>>,
+    snaps: Arc<Snaps<T, M>>,
     /// Next global id to assign (== items accepted so far).
     next_global: AtomicU64,
     /// Items covered by the most recent merge (auto-recluster trigger).
@@ -212,23 +317,43 @@ pub(crate) struct EngineInner {
     wake: Condvar,
 }
 
-/// Handle to a running sharded engine. Dropping it shuts the workers down.
-pub struct Engine {
-    inner: Arc<EngineInner>,
+/// Handle to a running sharded engine over items of type `T` under metric
+/// `M`. Dropping it shuts the workers down.
+///
+/// The defaults are the framework instantiation — `Engine` with no type
+/// arguments is `Engine<Item, MetricKind>`, the dynamic path the CLI,
+/// datasets and persistence fixtures use. Typed users pass their own `T`
+/// and any cloneable [`Metric<T>`] (a plain closure works):
+///
+/// ```no_run
+/// use fishdbc::engine::{Engine, EngineConfig};
+///
+/// let metric = |a: &Vec<i64>, b: &Vec<i64>| {
+///     a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum()
+/// };
+/// let engine = Engine::spawn(metric, EngineConfig::default());
+/// engine.add_batch(vec![vec![0i64, 0], vec![1, 0], vec![90, 90]]);
+/// let snap = engine.cluster(2);
+/// println!("{:?}", snap.clustering.labels);
+/// ```
+pub struct Engine<T = Item, M = MetricKind> {
+    inner: Arc<EngineInner<T, M>>,
     recluster: Option<JoinHandle<()>>,
 }
 
-impl Engine {
-    /// Spawn `config.shards` shard workers clustering [`Item`]s under
-    /// `metric`.
-    pub fn spawn(metric: MetricKind, config: EngineConfig) -> Engine {
+impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
+    /// Spawn `config.shards` shard workers clustering items of type `T`
+    /// under `metric`. The metric is cloned into every shard; wrap shared
+    /// state in `Arc` if cloning it is expensive.
+    pub fn spawn(metric: M, config: EngineConfig) -> Engine<T, M> {
         assert!(config.shards >= 1, "engine needs at least one shard");
+        let metric = Counting::new(metric);
         let snaps = Arc::new(Snaps::new(config.shards));
         let shards = (0..config.shards)
             .map(|id| {
                 Shard::spawn(
                     id,
-                    metric,
+                    metric.clone(),
                     config.fishdbc,
                     config.queue_depth,
                     seed_ctx(&config, &snaps),
@@ -253,13 +378,13 @@ impl Engine {
     /// Reassemble an engine from reloaded shard states and pipeline epoch
     /// state (see [`Engine::load`](crate::persist)).
     pub(crate) fn from_resumed(
-        metric: MetricKind,
+        metric: Counting<M>,
         config: EngineConfig,
-        parts: Vec<(ShardState, BridgeState)>,
+        parts: Vec<(ShardState<T, M>, BridgeState)>,
         next_global: u64,
         merge_state: MergeState,
         epoch: u64,
-    ) -> Engine {
+    ) -> Engine<T, M> {
         let snaps = Arc::new(Snaps::new(config.shards));
         let shards = parts
             .into_iter()
@@ -285,7 +410,7 @@ impl Engine {
 
     /// Wrap the inner state and start the background recluster thread when
     /// the serving loop is enabled.
-    fn assemble(inner: EngineInner) -> Engine {
+    fn assemble(inner: EngineInner<T, M>) -> Engine<T, M> {
         let inner = Arc::new(inner);
         let recluster = if inner.config.recluster_every > 0 {
             let worker = Arc::clone(&inner);
@@ -301,12 +426,39 @@ impl Engine {
         Engine { inner, recluster }
     }
 
+    /// Hash-route a batch: assign dense global ids in arrival order, group
+    /// by content hash ([`ShardKey`]), enqueue per shard (blocking when a
+    /// shard's queue is full — backpressure). Items the metric rejects
+    /// ([`Metric::check_item`], e.g. a dynamic [`MetricKind`] mismatch)
+    /// panic here, in the caller, before touching any shard.
+    pub fn add_batch(&self, items: Vec<T>) {
+        self.inner.add_batch(items)
+    }
+
+    /// Refresh the frozen remote snapshots the shards bridge against at
+    /// insert time (also happens automatically at every merge and, when
+    /// `bridge_refresh > 0`, on that item cadence).
+    pub fn refresh_bridges(&self) {
+        self.inner.refresh_snaps();
+    }
+
+    /// Aggregated counters. Flushes first, so this doubles as an ingestion
+    /// barrier (mirrors [`Coordinator::stats`](crate::coordinator)).
+    pub fn stats(&self) -> EngineStats {
+        self.inner.stats()
+    }
+}
+
+// No bounds on this impl (or on `Drop`): shutdown and the cheap accessors
+// work for every instantiation, which is what lets `Drop` be unbounded.
+impl<T, M> Engine<T, M> {
     pub fn config(&self) -> &EngineConfig {
         &self.inner.config
     }
 
-    pub fn metric(&self) -> MetricKind {
-        self.inner.metric
+    /// The user metric (unwrapped from the engine's counting layer).
+    pub fn metric(&self) -> &M {
+        self.inner.metric.inner()
     }
 
     pub fn n_shards(&self) -> usize {
@@ -327,16 +479,8 @@ impl Engine {
         self.inner.epoch.load(Ordering::Relaxed)
     }
 
-    pub(crate) fn inner(&self) -> &EngineInner {
+    pub(crate) fn inner(&self) -> &EngineInner<T, M> {
         &self.inner
-    }
-
-    /// Hash-route a batch: assign dense global ids in arrival order, group
-    /// by content hash, enqueue per shard (blocking when a shard's queue is
-    /// full — backpressure). Items incompatible with the engine's metric
-    /// panic here, in the caller, before touching any shard.
-    pub fn add_batch(&self, items: Vec<Item>) {
-        self.inner.add_batch(items)
     }
 
     /// Ingestion barrier: wait until every shard has drained its queue and
@@ -349,19 +493,6 @@ impl Engine {
     /// for an `Arc` clone, so serving threads never wait behind a merge.
     pub fn latest(&self) -> Option<Arc<EngineSnapshot>> {
         self.inner.latest()
-    }
-
-    /// Refresh the frozen remote snapshots the shards bridge against at
-    /// insert time (also happens automatically at every merge and, when
-    /// `bridge_refresh > 0`, on that item cadence).
-    pub fn refresh_bridges(&self) {
-        self.inner.refresh_snaps();
-    }
-
-    /// Aggregated counters. Flushes first, so this doubles as an ingestion
-    /// barrier (mirrors [`Coordinator::stats`](crate::coordinator)).
-    pub fn stats(&self) -> EngineStats {
-        self.inner.stats()
     }
 
     /// Shut down, waiting for the recluster thread and every shard worker
@@ -385,18 +516,21 @@ impl Engine {
     }
 }
 
-impl Drop for Engine {
+impl<T, M> Drop for Engine<T, M> {
     fn drop(&mut self) {
         self.stop_threads();
     }
 }
 
-fn seed_ctx(config: &EngineConfig, snaps: &Arc<Snaps>) -> BridgeCtxSeed {
+fn seed_ctx<T, M>(
+    config: &EngineConfig,
+    snaps: &Arc<Snaps<T, M>>,
+) -> BridgeCtxSeed<T, M> {
     // Staleness bound for insert-time coverage: with a refresh cadence
     // configured, tolerate up to two refresh windows of remote growth;
     // otherwise (manual reclustering at unknown cadence) keep it tight so
     // long gaps between merges fall back to the catch-up search instead of
-    // silently losing cross-shard candidate pairs.
+    // piling re-search debt onto the next merge.
     let cadence = config.recluster_every.max(config.bridge_refresh);
     let lag_limit = if cadence > 0 {
         cadence.saturating_mul(2)
@@ -417,7 +551,9 @@ fn seed_ctx(config: &EngineConfig, snaps: &Arc<Snaps>) -> BridgeCtxSeed {
 /// items have arrived since the last published epoch. Woken eagerly by
 /// `add_batch` and on shutdown; polls as a fallback so a missed wakeup
 /// only delays an epoch, never loses one.
-fn recluster_loop(inner: &EngineInner) {
+fn recluster_loop<T: EngineItem, M: Metric<T> + Clone + 'static>(
+    inner: &EngineInner<T, M>,
+) {
     let every = inner.config.recluster_every as u64;
     loop {
         {
@@ -441,8 +577,8 @@ fn recluster_loop(inner: &EngineInner) {
     }
 }
 
-impl EngineInner {
-    pub(crate) fn shard_handles(&self) -> &[Shard] {
+impl<T, M> EngineInner<T, M> {
+    pub(crate) fn shard_handles(&self) -> &[Shard<T, M>] {
         &self.shards
     }
 
@@ -474,18 +610,27 @@ impl EngineInner {
         self.epoch.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    pub(crate) fn add_batch(&self, items: Vec<Item>) {
+    pub(crate) fn flush(&self) {
+        let (tx, rx) = std::sync::mpsc::sync_channel(self.shards.len());
+        for shard in &self.shards {
+            shard.send(ShardCmd::Flush(tx.clone()));
+        }
+        drop(tx);
+        for _ in 0..self.shards.len() {
+            let _ = rx.recv();
+        }
+    }
+}
+
+impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
+    pub(crate) fn add_batch(&self, items: Vec<T>) {
         if items.is_empty() {
             return;
         }
         // validate before assigning ids: a rejected batch must not leak
         // global ids (persistence requires ids to be dense)
         for item in &items {
-            assert!(
-                self.metric.compatible(item),
-                "item incompatible with metric {}",
-                self.metric.name()
-            );
+            self.metric.check_item(item);
         }
         let s = self.shards.len();
         // reserve the id range atomically, rejecting before committing: a
@@ -498,9 +643,10 @@ impl EngineInner {
             })
             .expect("engine capacity (u32 item ids) exceeded");
         let n_items = items.len() as u64;
-        let mut routed: Vec<Vec<(u32, Item)>> = (0..s).map(|_| Vec::new()).collect();
+        let mut routed: Vec<Vec<(u32, T)>> = (0..s).map(|_| Vec::new()).collect();
         for (i, item) in items.into_iter().enumerate() {
-            let shard = if s == 1 { 0 } else { (item_hash(&item) % s as u64) as usize };
+            let shard =
+                if s == 1 { 0 } else { (item.shard_key() % s as u64) as usize };
             routed[shard].push((base as u32 + i as u32, item));
         }
         for (shard, batch) in self.shards.iter().zip(routed) {
@@ -523,17 +669,6 @@ impl EngineInner {
         }
     }
 
-    pub(crate) fn flush(&self) {
-        let (tx, rx) = std::sync::mpsc::sync_channel(self.shards.len());
-        for shard in &self.shards {
-            shard.send(ShardCmd::Flush(tx.clone()));
-        }
-        drop(tx);
-        for _ in 0..self.shards.len() {
-            let _ = rx.recv();
-        }
-    }
-
     /// Refresh every shard's frozen snapshot from its live state (taking
     /// each read lock briefly, one shard at a time).
     pub(crate) fn refresh_snaps(&self) {
@@ -551,7 +686,7 @@ impl EngineInner {
 
     /// Refresh snapshots from already-held state views (the merge path,
     /// which holds every read guard anyway).
-    pub(crate) fn refresh_snaps_from(&self, states: &[&ShardState]) {
+    pub(crate) fn refresh_snaps_from(&self, states: &[&ShardState<T, M>]) {
         for (t, st) in states.iter().enumerate() {
             if self.snap_is_current(t, st) {
                 continue;
@@ -563,7 +698,7 @@ impl EngineInner {
     /// A shard snapshot with the same item count is content-identical
     /// (items, HNSW, cores and globals are all pure functions of the
     /// insert sequence), so re-capturing it would only burn an O(n) clone.
-    fn snap_is_current(&self, t: usize, st: &ShardState) -> bool {
+    fn snap_is_current(&self, t: usize, st: &ShardState<T, M>) -> bool {
         self.snaps.get(t).is_some_and(|sn| sn.items.len() == st.f.len())
     }
 
@@ -586,6 +721,7 @@ impl EngineInner {
             stats.bridge_covered += br.covered;
             stats.bridge_insert_items += br.insert_items;
             stats.bridge_catch_up_items += br.catch_up_items;
+            stats.bridge_recheck_items += br.recheck_items;
             stats.bridge_compactions += br.compactions;
             stats.bridge_insert_secs += br.insert_secs;
         }
@@ -593,64 +729,17 @@ impl EngineInner {
         stats.merges = ms.merges;
         stats.pipeline = ms.pipeline.stats();
         drop(ms);
-        // fold the chunked-capture counters into the pipeline stats view
+        // fold the engine-wide counters into the stats views: the chunked
+        // capture counters and the shared distance-call total
         let (captures, copied, shared, bytes) = self.snaps.capture_stats();
         stats.pipeline.snapshot_captures = captures;
         stats.pipeline.snapshot_chunks_copied = copied;
         stats.pipeline.snapshot_chunks_shared = shared;
         stats.pipeline.snapshot_bytes_copied = bytes;
+        stats.metric_calls = self.metric.calls();
+        stats.pipeline.metric_calls = stats.metric_calls;
         stats
     }
-}
-
-/// Deterministic content hash used for shard routing: the same stream is
-/// always partitioned the same way, across processes and restarts.
-pub(crate) fn item_hash(item: &Item) -> u64 {
-    let mut h = FastHasher::default();
-    match item {
-        Item::Dense(v) => {
-            h.write_u64(0);
-            for &x in v {
-                h.write_u32(x.to_bits());
-            }
-        }
-        Item::Sparse { idx, val } => {
-            h.write_u64(1);
-            for &i in idx {
-                h.write_u32(i);
-            }
-            for &x in val {
-                h.write_u32(x.to_bits());
-            }
-        }
-        Item::Set(s) => {
-            h.write_u64(2);
-            for &i in s {
-                h.write_u32(i);
-            }
-        }
-        Item::Text(t) => {
-            h.write_u64(3);
-            h.write(t.as_bytes());
-        }
-        Item::Bits(b) => {
-            h.write_u64(4);
-            for &w in b.words() {
-                h.write_u64(w);
-            }
-        }
-        Item::Digest(d) => {
-            h.write_u64(5);
-            for &m in &d.minhashes {
-                h.write_u64(m);
-            }
-            h.write(&d.histogram);
-            for &w in d.features.words() {
-                h.write_u64(w);
-            }
-        }
-    }
-    h.finish()
 }
 
 #[cfg(test)]
@@ -669,8 +758,8 @@ mod tests {
         let s = 4u64;
         let mut counts = [0usize; 4];
         for it in &items {
-            let a = item_hash(it) % s;
-            let b = item_hash(it) % s;
+            let a = it.shard_key() % s;
+            let b = it.shard_key() % s;
             assert_eq!(a, b, "routing not deterministic");
             counts[a as usize] += 1;
         }
@@ -678,6 +767,150 @@ mod tests {
         for (i, &c) in counts.iter().enumerate() {
             assert!(c > 40, "shard {i} starved: {counts:?}");
         }
+    }
+
+    /// Pins `Item`'s routing hash to its documented write sequence — a
+    /// `u64` variant tag then the raw fields, no length prefixes, no
+    /// string terminators. This is exactly what the pre-`ShardKey`
+    /// `item_hash` function hashed, so a change here (e.g. switching to a
+    /// derived `Hash`, which writes length prefixes) would silently
+    /// re-partition every persisted engine's stream. The golden values are
+    /// recomputed structurally, not hard-coded, so the test is
+    /// platform-independent but still locks the byte sequence.
+    #[test]
+    fn shard_key_write_sequence_is_frozen() {
+        use crate::distances::{bitmap::Bitmap, fuzzy::Digest};
+        use std::hash::Hasher;
+
+        let bits = Bitmap::from_bools(&[true, false, true, true]);
+        let digest = Digest::from_bytes(b"fixture digest content");
+        let cases: Vec<(Item, Box<dyn Fn(&mut FastHasher)>)> = vec![
+            (Item::Dense(vec![1.5, -2.0]), {
+                Box::new(|h: &mut FastHasher| {
+                    h.write_u64(0);
+                    h.write_u32(1.5f32.to_bits());
+                    h.write_u32((-2.0f32).to_bits());
+                })
+            }),
+            (Item::Sparse { idx: vec![3, 9], val: vec![0.5, 2.0] }, {
+                Box::new(|h: &mut FastHasher| {
+                    h.write_u64(1);
+                    h.write_u32(3);
+                    h.write_u32(9);
+                    h.write_u32(0.5f32.to_bits());
+                    h.write_u32(2.0f32.to_bits());
+                })
+            }),
+            (Item::Set(vec![1, 5, 9]), {
+                Box::new(|h: &mut FastHasher| {
+                    h.write_u64(2);
+                    h.write_u32(1);
+                    h.write_u32(5);
+                    h.write_u32(9);
+                })
+            }),
+            (Item::Text("héllo".into()), {
+                Box::new(|h: &mut FastHasher| {
+                    h.write_u64(3);
+                    h.write("héllo".as_bytes());
+                })
+            }),
+            (Item::Bits(bits.clone()), {
+                let b = bits.clone();
+                Box::new(move |h: &mut FastHasher| {
+                    h.write_u64(4);
+                    for &w in b.words() {
+                        h.write_u64(w);
+                    }
+                })
+            }),
+            (Item::Digest(digest.clone()), {
+                let d = digest.clone();
+                Box::new(move |h: &mut FastHasher| {
+                    h.write_u64(5);
+                    for &m in &d.minhashes {
+                        h.write_u64(m);
+                    }
+                    h.write(&d.histogram);
+                    for &w in d.features.words() {
+                        h.write_u64(w);
+                    }
+                })
+            }),
+        ];
+        for (item, write) in &cases {
+            let mut h = FastHasher::default();
+            write(&mut h);
+            assert_eq!(
+                item.shard_key(),
+                h.finish(),
+                "routing write sequence drifted for {item:?}"
+            );
+        }
+    }
+
+    /// Routing stability across engine instances, restarts-in-spirit
+    /// (fresh hasher state per call) and save/load: the same stream always
+    /// lands in the same shard partition, and the router provably uses the
+    /// public [`ShardKey`] contract — the guard that keeps the `ShardKey`
+    /// refactor (and any future one) from silently re-partitioning
+    /// persisted engines.
+    #[test]
+    fn routing_stable_across_instances_and_save_load() {
+        let items = blob_items(240, 13);
+        let s = 3usize;
+
+        let placement = |engine: &Engine| -> Vec<(u32, usize)> {
+            engine.flush();
+            let mut v = Vec::new();
+            for (si, shard) in engine.inner().shard_handles().iter().enumerate() {
+                let st = shard.state.read().unwrap();
+                for gid in st.globals.iter() {
+                    v.push((*gid, si));
+                }
+            }
+            v.sort_unstable();
+            v
+        };
+
+        let spawn = || -> Engine {
+            Engine::spawn(MetricKind::Euclidean, EngineConfig {
+                shards: s,
+                ..Default::default()
+            })
+        };
+        let a = spawn();
+        a.add_batch(items.clone());
+        let pa = placement(&a);
+
+        // the router must implement exactly the public ShardKey contract
+        for &(gid, si) in &pa {
+            let expect = (items[gid as usize].shard_key() % s as u64) as usize;
+            assert_eq!(si, expect, "router diverged from ShardKey for id {gid}");
+        }
+
+        // a second engine over the same stream partitions identically
+        let b = spawn();
+        for chunk in items.chunks(17) {
+            b.add_batch(chunk.to_vec());
+        }
+        assert_eq!(placement(&b), pa, "batch schedule changed the partition");
+
+        // and a persisted engine resumes on the same partition: new copies
+        // of the same items join the shards that hold their originals
+        let mut buf = Vec::new();
+        a.save(&mut buf).unwrap();
+        a.shutdown();
+        let resumed = Engine::load(buf.as_slice()).unwrap();
+        resumed.add_batch(items.clone());
+        let pr = placement(&resumed);
+        for &(gid, si) in &pr[items.len()..] {
+            let expect =
+                (items[gid as usize - items.len()].shard_key() % s as u64) as usize;
+            assert_eq!(si, expect, "resumed routing diverged for id {gid}");
+        }
+        b.shutdown();
+        resumed.shutdown();
     }
 
     #[test]
@@ -719,14 +952,57 @@ mod tests {
         assert_eq!(s.items, 240);
         assert_eq!(s.shard_stats.len(), 3);
         assert!(s.dist_calls > 0);
+        assert!(
+            s.metric_calls >= s.dist_calls,
+            "the shared Counting wrapper sees at least every insert-path \
+             call: {} < {}",
+            s.metric_calls,
+            s.dist_calls
+        );
+        assert_eq!(
+            s.pipeline.metric_calls, s.metric_calls,
+            "pipeline stats mirror the engine-wide counter"
+        );
         assert!(s.batches >= 3, "every non-empty shard saw its sub-batch");
         assert_eq!(engine.len(), 240);
         engine.shutdown();
     }
 
     #[test]
+    fn generic_engine_with_closure_metric() {
+        // the tentpole in one test: a typed engine over a user type with a
+        // pure-closure distance — no Item, no MetricKind — sharded, merged,
+        // served, counted
+        let metric = |a: &Vec<i64>, b: &Vec<i64>| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>()
+        };
+        let mut items: Vec<Vec<i64>> = Vec::new();
+        for i in 0..60i64 {
+            items.push(vec![i % 8, i / 8]); // lattice blob at the origin
+            items.push(vec![1000 + i % 8, i / 8]); // far-away twin
+        }
+        let engine = Engine::spawn(metric, EngineConfig {
+            fishdbc: FishdbcParams { min_pts: 4, ef: 15, ..Default::default() },
+            shards: 2,
+            mcs: 4,
+            ..Default::default()
+        });
+        engine.add_batch(items.clone());
+        let snap = engine.cluster(4);
+        assert_eq!(snap.clustering.labels.len(), 120);
+        assert!(snap.clustering.n_clusters >= 2, "two lattices, two clusters");
+        let l = engine.label(&vec![2i64, 2]);
+        assert!(l >= -1 && (l as i64) < snap.clustering.n_clusters as i64);
+        let stats = engine.stats();
+        assert!(stats.metric_calls > 0, "closure calls must be counted");
+        assert_eq!(stats.items, 120);
+        engine.shutdown();
+    }
+
+    #[test]
     fn empty_batches_and_empty_cluster() {
-        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig::default());
+        let engine: Engine =
+            Engine::spawn(MetricKind::Euclidean, EngineConfig::default());
         engine.add_batch(vec![]);
         assert!(engine.is_empty());
         assert_eq!(engine.epoch(), 0);
@@ -828,10 +1104,15 @@ mod tests {
         let second = engine.cluster(10);
         assert_eq!(second.epoch, first.epoch + 1);
         assert_eq!(second.n_items, 800);
+        let after = engine.stats();
         assert_eq!(
-            engine.stats().bridge_covered,
-            800,
+            after.bridge_covered, 800,
             "second catch-up completes coverage"
+        );
+        assert_eq!(
+            after.bridge_covered as u64,
+            after.bridge_insert_items + after.bridge_catch_up_items,
+            "first-pass coverage must happen exactly once per item"
         );
         engine.shutdown();
     }

@@ -20,9 +20,15 @@
 //! 1. **Bridge delta** — each shard maintains a coverage watermark: items
 //!    below it already queried their remote shards (at insert time,
 //!    against the frozen snapshots taken at the previous epoch); the merge
-//!    only searches the items above it. Cross-shard candidate discovery is
-//!    therefore *incremental*: its cost is O(Δn · k · fanout) HNSW
-//!    searches, not O(n · k · fanout).
+//!    first-covers only the items above it, plus one bounded re-search of
+//!    the items insert-covered *inside* the closing window (whose frozen
+//!    snapshots could predate same-window remote items — see
+//!    `engine::merge`). Cross-shard candidate discovery is therefore
+//!    *incremental* — O(Δn · k · fanout) HNSW searches, not
+//!    O(n · k · fanout) — and **complete**: by the time an epoch closes,
+//!    every item has searched remote states containing every item that
+//!    existed at the barrier, so no cross-shard pair is ever silently
+//!    dropped, regardless of how the window interleaved.
 //! 2. **Kruskal delta** — every shard reports a stamp (item count, MSF
 //!    generation, bridge generation). Kruskal re-runs over the cached
 //!    global MSF ∪ the forests of *changed* shards ∪ the bridge sets of
@@ -42,27 +48,17 @@
 //!    writer copies a chunk at most once per epoch window, so refreshes —
 //!    including mid-epoch `bridge_refresh` captures — cost O(Δ), not O(n).
 //!    Captures never touch bridge state, so coverage watermarks survive
-//!    every refresh and no covered pair is ever re-searched. Per-capture
-//!    copied-vs-shared chunk counts land in [`PipelineStats`]
-//!    (`snapshot_*`; printed by `fishdbc engine --stats`, measured by the
-//!    `snapshot_refresh` bench).
+//!    every refresh; an item's only second search is the bounded window
+//!    re-search above. Per-capture copied-vs-shared chunk counts land in
+//!    [`PipelineStats`] (`snapshot_*`; printed by `fishdbc engine
+//!    --stats`, measured by the `snapshot_refresh` bench).
 //!
 //! The *epoch labels themselves* are conformance-tested: the seeded stress
 //! harness (`tests/engine_stress.rs`) replays deterministic schedules of
-//! ingest / merge / query / save-load and asserts every published epoch
-//! equals `Engine::reference_cluster` — a from-scratch merge of the same
-//! state that bypasses every cache above.
-//!
-//! Freshness caveat (documented, deliberate): an item pair (a, b) living
-//! in two different shards and *both* inserted within the same epoch
-//! window is searched from whichever side is still above its shard's
-//! watermark at the next merge; if both sides were already covered at
-//! insert time (against snapshots that predate the other item), that pair
-//! is not re-searched. Bridge candidates are heuristic — exactly like the
-//! HNSW-piggybacked candidates of Algorithm 1 — so this costs a little
-//! approximation quality inside one epoch window, never correctness of
-//! the MSF over the offered edges. Shrink the window with
-//! `EngineConfig::recluster_every` / `bridge_refresh` when it matters.
+//! ingest / merge / query / save-load — over Euclidean blobs and over
+//! non-Euclidean workloads (Jaro-Winkler text, sparse cosine) — and
+//! asserts every published epoch equals `Engine::reference_cluster`: a
+//! from-scratch merge of the same state that bypasses every cache above.
 
 use std::hash::Hasher;
 use std::time::Instant;
@@ -115,6 +111,12 @@ pub struct PipelineStats {
     pub snapshot_chunks_shared: u64,
     /// Approximate heap bytes in the copied chunks.
     pub snapshot_bytes_copied: u64,
+    /// Every evaluation of the user metric across the whole engine —
+    /// insertion, bridge searches, catch-up, online labels — from the
+    /// shared [`Counting`](crate::distances::Counting) wrapper (engine
+    /// only; the coordinator path leaves it 0). The paper's cost model:
+    /// Figs 1–2 measure runtime in distance calls.
+    pub metric_calls: u64,
 }
 
 /// Per-run stage breakdown returned alongside the clustering.

@@ -1,14 +1,17 @@
 //! Online label queries: "which cluster would this item join?" answered
 //! against the latest published epoch via read-only HNSW search across all
 //! shards — the serving primitive a production deployment puts behind its
-//! API. No state is mutated and no distance-call counters move.
+//! API. Works for any `Engine<T, M>` — the probe is a plain `&T`. No state
+//! is mutated; the searches do evaluate the user metric, so they show up
+//! in the engine-wide `metric_calls` counter (but never in the shards'
+//! insert-path `dist_calls`).
 
-use crate::distances::Item;
+use crate::distances::Metric;
 use crate::fishdbc::majority_vote;
 
-use super::{Engine, EngineSnapshot};
+use super::{Engine, EngineItem, EngineSnapshot};
 
-impl Engine {
+impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     /// Label an external item against the latest snapshot (extracting one
     /// with `config.mcs` only when none exists yet), using MinPts nearest
     /// neighbors as voters. Returns -1 for noise/unknown.
@@ -20,12 +23,12 @@ impl Engine {
     /// bounds that staleness automatically; otherwise callers control
     /// freshness by calling [`Engine::cluster`] on their own threshold or
     /// timer.
-    pub fn label(&self, item: &Item) -> i32 {
+    pub fn label(&self, item: &T) -> i32 {
         self.label_with(item, self.config().fishdbc.min_pts)
     }
 
     /// [`Engine::label`] with an explicit voter count `k`.
-    pub fn label_with(&self, item: &Item, k: usize) -> i32 {
+    pub fn label_with(&self, item: &T, k: usize) -> i32 {
         let snap = match self.latest() {
             Some(s) => s,
             None => self.inner().cluster(self.config().mcs),
@@ -37,10 +40,11 @@ impl Engine {
     /// epoch and answers many queries against it while ingestion (and
     /// even re-merging) continues. Majority vote among the `k` globally
     /// nearest clustered neighbors (noise neighbors abstain; ties break
-    /// toward the smaller label for determinism).
+    /// toward the smaller label for determinism — pinned by the
+    /// `majority_vote` unit tests in [`crate::fishdbc`]).
     pub fn label_against(
         &self,
-        item: &Item,
+        item: &T,
         snap: &EngineSnapshot,
         k: usize,
     ) -> i32 {
@@ -103,15 +107,35 @@ mod tests {
         assert!(checked > 10, "too many noise probes to test");
         assert!(agree * 10 >= checked * 9, "label agreed on {agree}/{checked}");
 
-        // queries must not have inserted or recounted anything
+        // queries must not have inserted or recounted anything on the
+        // insert-path counters (the shared metric counter does move)
         let stats = engine.stats();
         assert_eq!(stats.items, 450);
         engine.shutdown();
     }
 
     #[test]
+    fn label_queries_count_metric_calls_but_not_insert_calls() {
+        let (engine, items) = engine_on_blobs(300, 2, 33);
+        let _ = engine.cluster(5);
+        let before = engine.stats();
+        let _ = engine.label(&items[0]);
+        let after = engine.stats();
+        assert_eq!(
+            after.dist_calls, before.dist_calls,
+            "labels must not move the insert-path counters"
+        );
+        assert!(
+            after.metric_calls > before.metric_calls,
+            "labels evaluate the metric and must show up in the cost model"
+        );
+        engine.shutdown();
+    }
+
+    #[test]
     fn label_on_empty_engine_is_noise() {
-        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig::default());
+        let engine: Engine =
+            Engine::spawn(MetricKind::Euclidean, EngineConfig::default());
         assert_eq!(engine.label(&Item::Dense(vec![0.0, 0.0])), -1);
         engine.shutdown();
     }

@@ -8,6 +8,11 @@
 //! in O(n) — see the snapshot-lifecycle notes at the `snapshots` section
 //! below.
 //!
+//! Everything here is generic over the item type `T` and the user metric
+//! `M` (see [`EngineItem`](super::EngineItem)); the shard's `Fishdbc` and
+//! its frozen snapshots hold [`Counting<M>`] clones sharing one engine-wide
+//! distance-call counter, the paper's cost model.
+//!
 //! The FISHDBC state sits behind an `RwLock` so the merge and the online
 //! query path can read it concurrently; only the shard's own worker ever
 //! writes it. The bridge buffer sits behind its own `Mutex`, written by
@@ -25,17 +30,19 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::distances::{Item, MetricKind};
+use crate::distances::{Counting, Metric};
 use crate::fishdbc::{Fishdbc, FishdbcParams};
 use crate::hnsw::Hnsw;
 use crate::mst::{Edge, Msf};
 use crate::util::chunked::{ChunkDelta, ChunkedVec};
 use crate::util::fasthash::FastMap;
 
+use super::EngineItem;
+
 /// Commands a shard worker processes in FIFO order.
-pub(crate) enum ShardCmd {
+pub(crate) enum ShardCmd<T> {
     /// Insert `(global id, item)` pairs (ids were assigned by the router).
-    AddBatch(Vec<(u32, Item)>),
+    AddBatch(Vec<(u32, T)>),
     /// Drain the queue up to this point, fold buffered candidate edges into
     /// the local MSF, then ack — the engine's barrier primitive.
     Flush(SyncSender<()>),
@@ -43,8 +50,8 @@ pub(crate) enum ShardCmd {
 }
 
 /// Shard-local state: the FISHDBC instance plus bookkeeping.
-pub(crate) struct ShardState {
-    pub f: Fishdbc<Item, MetricKind>,
+pub(crate) struct ShardState<T, M> {
+    pub f: Fishdbc<T, Counting<M>>,
     /// `globals[local_id] = global_id` (dense, append-only, chunked so
     /// snapshots capture it copy-on-write).
     pub globals: ChunkedVec<u32>,
@@ -53,8 +60,8 @@ pub(crate) struct ShardState {
     pub build_secs: f64,
 }
 
-impl ShardState {
-    pub fn new(metric: MetricKind, params: FishdbcParams) -> ShardState {
+impl<T: EngineItem, M: Metric<T> + Clone> ShardState<T, M> {
+    pub fn new(metric: Counting<M>, params: FishdbcParams) -> ShardState<T, M> {
         ShardState {
             f: Fishdbc::new(metric, params),
             globals: ChunkedVec::new(),
@@ -84,9 +91,11 @@ impl ShardState {
 //
 // Captures never touch `BridgeState`: in particular the coverage watermark
 // (`BridgeState::covered`) survives every mid-epoch refresh, so items
-// already bridged at insert time are never re-searched — and never
-// re-offered — by the next merge's catch-up (regression-tested in
-// `engine_integration::bridge_refresh_capture_preserves_coverage_watermark`).
+// already bridged at insert time keep their first-pass coverage across
+// refreshes (regression-tested in
+// `engine_integration::bridge_refresh_capture_preserves_coverage_watermark`);
+// the only second look any item ever gets is the bounded same-epoch
+// re-search of the next merge's catch-up (see `BridgeState::merge_covered`).
 //
 // [`Snaps::set`] compares each new snapshot's chunk pointers against the
 // snapshot it replaces and accumulates copied-vs-shared chunk counts (plus
@@ -95,14 +104,14 @@ impl ShardState {
 
 /// Frozen, read-only view of one shard's index at some epoch: everything a
 /// *remote* shard needs to run bridge queries against it without touching
-/// its `RwLock`. Immutable once built; shared as `Arc<ShardSnap>`. All
-/// four stores are chunked and physically share every chunk that did not
-/// change since the previous capture (see the lifecycle notes above).
-pub(crate) struct ShardSnap {
-    pub metric: MetricKind,
+/// its `RwLock`. Immutable once built; shared as `Arc<ShardSnap<T, M>>`.
+/// All four stores are chunked and physically share every chunk that did
+/// not change since the previous capture (see the lifecycle notes above).
+pub(crate) struct ShardSnap<T, M> {
+    pub metric: Counting<M>,
     /// HNSW beam width used for bridge queries.
     pub ef: usize,
-    pub items: ChunkedVec<Item>,
+    pub items: ChunkedVec<T>,
     pub hnsw: Hnsw,
     /// Core distances at snapshot time (+∞ while < MinPts neighbors).
     pub cores: ChunkedVec<f64>,
@@ -111,17 +120,17 @@ pub(crate) struct ShardSnap {
 }
 
 /// Approximate bytes of one stored item (bytes-copied accounting), built
-/// on the crate-wide [`Item::approx_bytes`] heap estimate.
-fn item_bytes(item: &Item) -> usize {
-    std::mem::size_of::<Item>() + item.approx_bytes()
+/// on [`EngineItem::approx_heap_bytes`].
+fn item_bytes<T: EngineItem>(item: &T) -> usize {
+    std::mem::size_of::<T>() + item.approx_heap_bytes()
 }
 
-impl ShardSnap {
+impl<T: EngineItem, M: Metric<T> + Clone> ShardSnap<T, M> {
     /// O(Δ) capture: four chunk-pointer clones under the shard's read
     /// lock. See the snapshot-lifecycle notes at the top of this section.
-    pub fn capture(st: &ShardState) -> ShardSnap {
+    pub fn capture(st: &ShardState<T, M>) -> ShardSnap<T, M> {
         ShardSnap {
-            metric: *st.f.metric(),
+            metric: st.f.metric().clone(),
             ef: st.f.params().ef,
             items: st.f.items().clone(),
             hnsw: st.f.hnsw().clone(),
@@ -131,13 +140,13 @@ impl ShardSnap {
     }
 
     /// Approximate k nearest stored items to `query`, ascending distance.
-    pub fn nearest(&self, query: &Item, k: usize) -> Vec<(u32, f64)> {
+    pub fn nearest(&self, query: &T, k: usize) -> Vec<(u32, f64)> {
         self.hnsw.search(&self.items, &self.metric, query, k, self.ef)
     }
 
     /// Copied-vs-shared chunk accounting against the snapshot this one
     /// replaces (everything counts as copied when there is none).
-    pub fn chunk_delta_vs(&self, prev: Option<&ShardSnap>) -> ChunkDelta {
+    pub fn chunk_delta_vs(&self, prev: Option<&ShardSnap<T, M>>) -> ChunkDelta {
         let mut d = self.items.chunk_delta(prev.map(|p| &p.items), |c| {
             c.iter().map(item_bytes).sum()
         });
@@ -153,8 +162,8 @@ impl ShardSnap {
 /// `RwLock`). Each slot's mutex is held only long enough to clone or
 /// replace an `Arc`. Also the home of the engine-wide capture counters
 /// (captures, chunks copied/shared, approx bytes copied).
-pub(crate) struct Snaps {
-    slots: Vec<Mutex<Option<Arc<ShardSnap>>>>,
+pub(crate) struct Snaps<T, M> {
+    slots: Vec<Mutex<Option<Arc<ShardSnap<T, M>>>>>,
     lens: Vec<AtomicU64>,
     captures: AtomicU64,
     chunks_copied: AtomicU64,
@@ -162,8 +171,8 @@ pub(crate) struct Snaps {
     bytes_copied: AtomicU64,
 }
 
-impl Snaps {
-    pub fn new(n_shards: usize) -> Snaps {
+impl<T: EngineItem, M: Metric<T> + Clone> Snaps<T, M> {
+    pub fn new(n_shards: usize) -> Snaps<T, M> {
         Snaps {
             slots: (0..n_shards).map(|_| Mutex::new(None)).collect(),
             lens: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
@@ -174,11 +183,11 @@ impl Snaps {
         }
     }
 
-    pub fn get(&self, shard: usize) -> Option<Arc<ShardSnap>> {
+    pub fn get(&self, shard: usize) -> Option<Arc<ShardSnap<T, M>>> {
         self.slots[shard].lock().unwrap().clone()
     }
 
-    pub fn set(&self, shard: usize, snap: Arc<ShardSnap>) {
+    pub fn set(&self, shard: usize, snap: Arc<ShardSnap<T, M>>) {
         let len = snap.items.len();
         self.lens[shard].fetch_max(len as u64, Ordering::Relaxed);
         // The delta walk is stats-only work, and bridge workers read this
@@ -260,6 +269,22 @@ pub(crate) struct BridgeState {
     /// Coverage watermark: local items `[0, covered)` have already queried
     /// all their rotation targets (at insert time or in a merge catch-up).
     pub covered: usize,
+    /// Merge-final watermark: local items `[0, merge_covered)` had their
+    /// last bridge search at a merge barrier, against states containing
+    /// every remote item that existed then. Items in
+    /// `[merge_covered, covered)` were insert-covered *inside* the current
+    /// epoch window, against frozen snapshots that may predate remote
+    /// items of the same window — the next merge's catch-up re-searches
+    /// exactly that suffix (against live states) before advancing both
+    /// watermarks, closing the same-epoch cross-shard pair gap.
+    /// Persisted as the v2 `covered` field, so a reloaded engine re-runs
+    /// the (bounded) window re-search instead of silently dropping it.
+    pub merge_covered: usize,
+    /// Per remote shard: the smallest frozen-snapshot length any
+    /// insert-time walk of the current window queried (`usize::MAX` =
+    /// none). Lets the catch-up skip the window re-search for remotes
+    /// that did not grow past what every window item already saw.
+    pub window_seen: Vec<usize>,
     /// Bumped whenever the edge set changes (the merge's change detector).
     pub generation: u64,
     /// α·n compactions run.
@@ -268,15 +293,19 @@ pub(crate) struct BridgeState {
     pub insert_edges: u64,
     /// Items covered by the insert-time walk (this process).
     pub insert_items: u64,
-    /// Items the merge catch-up had to search (this process). Together
-    /// with `insert_items` this makes duplicate work exactly observable:
-    /// the two walks share the ordered watermark, so at any quiescent
-    /// point `covered == insert_items + catch_up_items` — a snapshot
-    /// refresh that rewound `covered` would make items be searched (and
-    /// their pairs re-offered) twice, breaking the equality. Regression-
-    /// tested in `engine_integration`. (Counters restart at 0 on engine
-    /// reload; the watermark itself is persisted.)
+    /// Items the merge catch-up first-covered (this process). The two
+    /// walks share each shard's ordered watermark, so for an engine that
+    /// was not reloaded mid-run, `covered == insert_items +
+    /// catch_up_items` at any flushed quiescent point — first-pass
+    /// coverage happens exactly once (a snapshot refresh that rewound a
+    /// watermark would break the equality). Regression-tested in
+    /// `engine_integration`. (Counters restart at 0 on engine reload; the
+    /// watermark itself is persisted.)
     pub catch_up_items: u64,
+    /// Items the merge catch-up *re-searched* to close the same-epoch
+    /// window (bounded by the items inserted since the previous merge;
+    /// not part of the first-pass equality above).
+    pub recheck_items: u64,
     /// Wall seconds spent on insert-time bridge queries.
     pub insert_secs: f64,
 }
@@ -293,16 +322,22 @@ impl BridgeState {
             buf: FastMap::default(),
             msf: Msf::new(),
             covered: 0,
+            merge_covered: 0,
+            window_seen: Vec::new(),
             generation: 0,
             compactions: 0,
             insert_edges: 0,
             insert_items: 0,
             catch_up_items: 0,
+            recheck_items: 0,
             insert_secs: 0.0,
         }
     }
 
-    /// Reassemble from persisted parts (FISHENG v2).
+    /// Reassemble from persisted parts (FISHENG v2). The persisted
+    /// watermark is the merge-final one, so both watermarks resume equal:
+    /// anything that was inside an unfinished epoch window at save time is
+    /// simply re-covered (first-pass) by the next merge's catch-up.
     pub fn from_parts(
         covered: usize,
         generation: u64,
@@ -318,11 +353,14 @@ impl BridgeState {
             buf: buf.into_iter().map(|(a, b, w)| ((a, b), w)).collect(),
             msf: Msf::from_parts(msf_edges, n),
             covered,
+            merge_covered: covered,
+            window_seen: Vec::new(),
             generation,
             compactions: 0,
             insert_edges: 0,
             insert_items: 0,
             catch_up_items: 0,
+            recheck_items: 0,
             insert_secs: 0.0,
         }
     }
@@ -351,6 +389,28 @@ impl BridgeState {
                 true
             }
         }
+    }
+
+    /// Record that an insert-time walk of the current epoch window queried
+    /// remote shard `t` through a frozen snapshot of `snap_len` items.
+    pub fn note_window_snap(&mut self, t: usize, snap_len: usize) {
+        if self.window_seen.len() <= t {
+            self.window_seen.resize(t + 1, usize::MAX);
+        }
+        self.window_seen[t] = self.window_seen[t].min(snap_len);
+    }
+
+    /// Smallest remote length of shard `t` any window item's insert-time
+    /// search saw (`usize::MAX` when no window item queried `t`).
+    pub fn window_seen(&self, t: usize) -> usize {
+        self.window_seen.get(t).copied().unwrap_or(usize::MAX)
+    }
+
+    /// Close the epoch window after a merge catch-up: everything covered
+    /// so far is now merge-final.
+    pub fn finish_window(&mut self) {
+        self.merge_covered = self.covered;
+        self.window_seen.clear();
     }
 
     /// α·n flush discipline: fold the buffer into the bridge forest when it
@@ -407,7 +467,7 @@ pub(crate) fn rotation_target(si: usize, li: usize, j: usize, s: usize) -> usize
 }
 
 /// Everything a worker needs for insert-time bridge discovery.
-pub(crate) struct BridgeCtx {
+pub(crate) struct BridgeCtx<T, M> {
     pub si: usize,
     pub n_shards: usize,
     pub bridge_k: usize,
@@ -415,12 +475,12 @@ pub(crate) struct BridgeCtx {
     pub alpha: f64,
     /// Maximum items a remote shard may have grown past its frozen
     /// snapshot before insert-time coverage stalls (falling back to the
-    /// merge catch-up, which searches live state). Bounds the epoch-window
-    /// blindness documented in [`crate::engine::pipeline`]: without it, a
+    /// merge catch-up, which searches live state). Bounds how much same-
+    /// epoch window the catch-up's re-search has to make up: without it, a
     /// long gap between merges would let items mark themselves covered
     /// against arbitrarily stale views.
     pub lag_limit: usize,
-    pub snaps: Arc<Snaps>,
+    pub snaps: Arc<Snaps<T, M>>,
     pub bridge: Arc<Mutex<BridgeState>>,
 }
 
@@ -430,8 +490,13 @@ pub(crate) struct BridgeCtx {
 /// own write guard (so core distances are current). Items are covered in
 /// order; the walk stops early when the local core distance is still +∞
 /// (fewer than MinPts neighbors known — retried next batch, or picked up
-/// by the merge catch-up) or when any remote snapshot is missing.
-fn bridge_new_items(st: &ShardState, ctx: &BridgeCtx) {
+/// by the merge catch-up) or when any remote snapshot is missing. Each
+/// covered item records the snapshot lengths it saw, so the next merge's
+/// catch-up can re-search exactly the pairs this window could not see.
+fn bridge_new_items<T: EngineItem, M: Metric<T> + Clone>(
+    st: &ShardState<T, M>,
+    ctx: &BridgeCtx<T, M>,
+) {
     let s = ctx.n_shards;
     if s < 2 || ctx.bridge_k == 0 || ctx.bridge_fanout == 0 {
         return;
@@ -448,7 +513,7 @@ fn bridge_new_items(st: &ShardState, ctx: &BridgeCtx) {
     // (first refresh happens at the first merge) or has grown too far past
     // its snapshot — the merge catch-up covers those items against live
     // state instead
-    let mut snaps: Vec<Option<Arc<ShardSnap>>> = Vec::with_capacity(s);
+    let mut snaps: Vec<Option<Arc<ShardSnap<T, M>>>> = Vec::with_capacity(s);
     for t in 0..s {
         if t == ctx.si {
             snaps.push(None);
@@ -458,8 +523,9 @@ fn bridge_new_items(st: &ShardState, ctx: &BridgeCtx) {
                     // stale in absolute terms (grew past the lag budget) or
                     // in relative terms (more than doubled — catches the
                     // empty/tiny snapshot a premature merge publishes):
-                    // covering against such a view would silently lose
-                    // cross-shard pairs, so leave them to the catch-up
+                    // covering against such a view would push too much work
+                    // into the catch-up's re-search, so leave those items
+                    // uncovered instead
                     let snap_len = sn.items.len();
                     let live = ctx.snaps.live_len(t);
                     if live.saturating_sub(snap_len) > ctx.lag_limit
@@ -496,6 +562,7 @@ fn bridge_new_items(st: &ShardState, ctx: &BridgeCtx) {
                     changed = true;
                 }
             }
+            br.note_window_snap(t, snap.items.len());
         }
         br.covered = li + 1;
         br.insert_items += 1;
@@ -510,23 +577,23 @@ fn bridge_new_items(st: &ShardState, ctx: &BridgeCtx) {
 // ------------------------------------------------------------- the shard --
 
 /// Handle to one running shard worker.
-pub(crate) struct Shard {
-    pub state: Arc<RwLock<ShardState>>,
+pub(crate) struct Shard<T, M> {
+    pub state: Arc<RwLock<ShardState<T, M>>>,
     /// The shard's bridge buffer (shared with its worker).
     pub bridge: Arc<Mutex<BridgeState>>,
-    tx: SyncSender<ShardCmd>,
+    tx: SyncSender<ShardCmd<T>>,
     handle: Mutex<Option<JoinHandle<()>>>,
 }
 
-impl Shard {
+impl<T: EngineItem, M: Metric<T> + Clone + 'static> Shard<T, M> {
     /// Spawn a fresh, empty shard.
     pub fn spawn(
         id: usize,
-        metric: MetricKind,
+        metric: Counting<M>,
         params: FishdbcParams,
         queue_depth: usize,
-        ctx: BridgeCtxSeed,
-    ) -> Shard {
+        ctx: BridgeCtxSeed<T, M>,
+    ) -> Shard<T, M> {
         Shard::resume(
             id,
             ShardState::new(metric, params),
@@ -539,11 +606,11 @@ impl Shard {
     /// Spawn a worker around pre-existing state (engine reload).
     pub fn resume(
         id: usize,
-        state: ShardState,
+        state: ShardState<T, M>,
         bridge: BridgeState,
         queue_depth: usize,
-        ctx: BridgeCtxSeed,
-    ) -> Shard {
+        ctx: BridgeCtxSeed<T, M>,
+    ) -> Shard<T, M> {
         let (tx, rx) = sync_channel(queue_depth.max(1));
         let state = Arc::new(RwLock::new(state));
         let bridge = Arc::new(Mutex::new(bridge));
@@ -565,9 +632,13 @@ impl Shard {
             .expect("spawn shard worker");
         Shard { state, bridge, tx, handle: Mutex::new(Some(handle)) }
     }
+}
 
+// No bounds: `Engine`'s `Drop` (also unbounded) shuts workers down through
+// these for every instantiation.
+impl<T, M> Shard<T, M> {
     /// Enqueue a command (blocks when the queue is full — backpressure).
-    pub fn send(&self, cmd: ShardCmd) {
+    pub fn send(&self, cmd: ShardCmd<T>) {
         self.tx.send(cmd).expect("shard worker gone");
     }
 
@@ -582,16 +653,20 @@ impl Shard {
 
 /// The engine-owned parts of a worker's bridge context (the per-shard
 /// pieces — id and buffer — are filled in by [`Shard::resume`]).
-pub(crate) struct BridgeCtxSeed {
+pub(crate) struct BridgeCtxSeed<T, M> {
     pub n_shards: usize,
     pub bridge_k: usize,
     pub bridge_fanout: usize,
     pub alpha: f64,
     pub lag_limit: usize,
-    pub snaps: Arc<Snaps>,
+    pub snaps: Arc<Snaps<T, M>>,
 }
 
-fn run(state: Arc<RwLock<ShardState>>, rx: Receiver<ShardCmd>, ctx: BridgeCtx) {
+fn run<T: EngineItem, M: Metric<T> + Clone>(
+    state: Arc<RwLock<ShardState<T, M>>>,
+    rx: Receiver<ShardCmd<T>>,
+    ctx: BridgeCtx<T, M>,
+) {
     loop {
         match rx.recv() {
             Err(_) => break, // engine dropped without Shutdown

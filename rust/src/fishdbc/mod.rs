@@ -678,6 +678,107 @@ mod tests {
     }
 
     #[test]
+    fn hostile_metric_distances_are_sanitized_at_the_choke_point() {
+        // An arbitrary user metric may return NaN or -inf. Both must be
+        // mapped to +inf at the hnsw choke point before they can reach the
+        // neighbor heaps, the core-distance mirror, or Kruskal's total_cmp
+        // order (where NaN sorts *greatest* and would silently demote real
+        // edges, and -inf would win every min-weight dedup).
+        let hostile = |a: &Vec<f32>, b: &Vec<f32>| {
+            let d = euclidean(a, b);
+            // poison a deterministic subset of pairs both ways
+            let key = (a[0] + b[0] * 7.0) as i64;
+            match key.rem_euclid(5) {
+                0 => f64::NAN,
+                1 => f64::NEG_INFINITY,
+                _ => d,
+            }
+        };
+        let mut rng = Rng::new(21);
+        let mut f = Fishdbc::new(hostile, FishdbcParams {
+            min_pts: 4,
+            ef: 10,
+            ..Default::default()
+        });
+        for _ in 0..150 {
+            f.add(vec![rng.f32() * 10.0, rng.f32() * 10.0]);
+        }
+        f.update_mst();
+        // no poisoned value may survive anywhere distances are stored
+        for id in 0..f.len() as u32 {
+            let c = f.core_distance(id);
+            assert!(!c.is_nan() && c > f64::NEG_INFINITY, "core {c} for {id}");
+        }
+        for e in f.msf_edges() {
+            assert!(
+                !e.w.is_nan() && e.w > f64::NEG_INFINITY,
+                "forest edge {}-{} carries weight {}",
+                e.a,
+                e.b,
+                e.w
+            );
+        }
+        // weights are ascending under total_cmp — a NaN would sort last
+        // and break this ordering invariant the pipeline relies on
+        assert!(f.msf_edges().windows(2).all(|w| w[0].w <= w[1].w));
+        let c = f.cluster(4);
+        assert_eq!(c.labels.len(), 150);
+        // query path flows through the same choke point
+        let nn = f.nearest(&vec![5.0f32, 5.0], 3, None);
+        assert!(nn.iter().all(|&(_, d)| !d.is_nan() && d > f64::NEG_INFINITY));
+    }
+
+    #[test]
+    fn majority_vote_ties_break_toward_smaller_label() {
+        // the documented serving determinism contract, tested directly
+        assert_eq!(majority_vote([2, 1, 1, 2]), 1, "2-2 tie → smaller label");
+        assert_eq!(majority_vote([5, 3, 5, 3, 0]), 3, "2-2 tie among 3/5");
+        assert_eq!(majority_vote([7, 7, 2]), 7, "majority beats smaller");
+        assert_eq!(majority_vote([0, 1, 2]), 0, "all-singleton tie → smallest");
+        // noise abstains: it never outvotes a real label, at any count
+        assert_eq!(majority_vote([-1, -1, -1, 4]), 4);
+        assert_eq!(majority_vote([-1, 3, -1, 2]), 2, "tie after abstentions");
+        // the all-abstain path returns noise
+        assert_eq!(majority_vote([-1, -1, -1]), -1);
+        assert_eq!(majority_vote(std::iter::empty::<i32>()), -1, "no voters");
+    }
+
+    #[test]
+    fn classify_with_short_and_empty_label_vectors() {
+        // labels shorter than the item count must abstain (treated as -1)
+        // rather than panic or vote garbage — the contract `classify`
+        // documents and the engine's label path shares
+        let mut rng = Rng::new(9);
+        let items = blobs(&mut rng, 30, &[(0.0, 0.0), (50.0, 50.0)], 1.0);
+        let mut f = Fishdbc::new(metric(), FishdbcParams {
+            min_pts: 4,
+            ef: 15,
+            ..Default::default()
+        });
+        for it in items.iter().cloned() {
+            f.add(it);
+        }
+        let c = f.cluster(4);
+        assert_eq!(c.n_clusters, 2);
+        let probe = vec![0.2f32, 0.1];
+
+        // full labels: the probe lands in the first blob's cluster
+        let full = f.classify(&probe, &c.labels, 5);
+        assert!(full >= 0);
+
+        // empty labels: every voter abstains
+        assert_eq!(f.classify(&probe, &[], 5), -1);
+
+        // labels covering only the first blob (ids 0..30): the probe's
+        // neighbors are all in that range, so the vote still works, and
+        // ids above the vector abstain instead of panicking
+        let partial = &c.labels[..30];
+        assert_eq!(f.classify(&probe, partial, 5), full);
+        // a far probe whose neighbors are all above the range abstains
+        assert_eq!(f.classify(&vec![50.0f32, 50.0], partial, 5), -1);
+    }
+
+    #[test]
     fn deterministic_for_same_seed() {
         let mut rng = Rng::new(7);
         let items = blobs(&mut rng, 50, &[(0.0, 0.0), (40.0, 0.0)], 1.0);

@@ -9,7 +9,7 @@
 //! level multiplier `mL = 1/ln(M)`, select-neighbors heuristic with pruned
 //! connection keeping).
 
-use crate::distances::Metric;
+use crate::distances::{sanitize_distance, Metric};
 use crate::util::chunked::{ChunkDelta, ChunkedVec, ItemStore};
 use crate::util::rng::Rng;
 
@@ -251,6 +251,10 @@ impl Hnsw {
         ((-u.ln()) * self.mult).floor() as usize
     }
 
+    /// The single choke point every user distance flows through on the
+    /// build path: [`sanitize_distance`] maps `NaN`/`-inf` to `+inf` here,
+    /// so the neighbor heaps, the core-distance mirror, and Kruskal's
+    /// `total_cmp` order downstream only ever see well-ordered values.
     #[inline]
     fn eval<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
         &mut self,
@@ -260,7 +264,8 @@ impl Hnsw {
         b: u32,
         log: &mut DistLog,
     ) -> f64 {
-        let d = metric.dist(items.get(a as usize), items.get(b as usize));
+        let d =
+            sanitize_distance(metric.dist(items.get(a as usize), items.get(b as usize)));
         self.dist_calls += 1;
         log.push((a, b, d));
         d
@@ -343,7 +348,10 @@ impl Hnsw {
         ef: usize,
     ) -> Vec<(u32, f64)> {
         let Some(entry) = self.entry else { return Vec::new() };
-        let qd = |id: u32| metric.dist(query, items.get(id as usize));
+        // same sanitizing choke point as `eval`, for the query path (the
+        // engine's bridge searches and online labels run through here)
+        let qd =
+            |id: u32| sanitize_distance(metric.dist(query, items.get(id as usize)));
 
         // greedy descent to level 1
         let mut best = (entry, qd(entry));

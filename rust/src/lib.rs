@@ -49,11 +49,36 @@
 //! cluster would this item join?" against the latest epoch without
 //! mutating any state — the serving loop of a production deployment.
 //!
+//! The engine is as generic as the core: `Engine<T, M>` shards **any**
+//! item type under **any** cloneable metric — a closure is enough — so
+//! the paper's flexibility axis holds at production scale:
+//!
+//! ```no_run
+//! use fishdbc::engine::{Engine, EngineConfig};
+//!
+//! let metric = |a: &Vec<i64>, b: &Vec<i64>| {
+//!     a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum()
+//! };
+//! let engine = Engine::spawn(
+//!     metric,
+//!     EngineConfig { shards: 4, ..Default::default() },
+//! );
+//! engine.add_batch(vec![vec![0i64, 0], vec![1, 0], vec![90, 90]]);
+//! let snapshot = engine.cluster(2);
+//! println!("{:?}", snapshot.clustering.labels);
+//! let label = engine.label(&vec![1i64, 1]);
+//! println!("online query joins cluster {label}");
+//! ```
+//!
+//! The dynamic [`Item`]/[`MetricKind`] pair the CLI and the framework
+//! datasets use is simply the default instantiation (`Engine` with no
+//! type arguments):
+//!
 //! ```no_run
 //! use fishdbc::engine::{Engine, EngineConfig};
 //! use fishdbc::{Item, MetricKind};
 //!
-//! let engine = Engine::spawn(
+//! let engine: Engine = Engine::spawn(
 //!     MetricKind::Euclidean,
 //!     EngineConfig { shards: 4, ..Default::default() },
 //! );

@@ -350,11 +350,11 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
     let recluster_every = args.usize_or("recluster-every", 0)?;
     let bridge_refresh = args.usize_or("bridge-refresh", 0)?;
 
-    let (engine, resumed) = match args.get("load") {
+    let (engine, resumed): (Engine, bool) = match args.get("load") {
         Some(path) => {
             let e = Engine::load_from_path(path)
                 .map_err(|e| format!("loading engine state {path}: {e}"))?;
-            if e.metric() != metric {
+            if *e.metric() != metric {
                 return Err(format!(
                     "engine state {path} was built with metric {}, but the \
                      dataset/--metric selects {} — refusing to mix",
@@ -431,10 +431,11 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
     let stats = engine.stats();
     println!(
         "ingest: {ingest:.3}s wall ({:.0} items/s) | busiest shard {:.3}s | \
-         {} dist calls across {} shards",
+         {} insert dist calls ({} total metric calls) across {} shards",
         ds.n() as f64 / ingest.max(1e-9),
         stats.build_secs,
         stats.dist_calls,
+        stats.metric_calls,
         engine.n_shards(),
     );
     for (i, s) in stats.shard_stats.iter().enumerate() {
@@ -484,13 +485,20 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
         );
         println!(
             "  bridges: {} buffered edges ({} found at insert time, \
-             {:.3}s), {} items covered ({} by merge catch-up), {} compactions",
+             {:.3}s), {} items covered ({} by merge catch-up, {} window \
+             re-searches), {} compactions",
             es.bridge_edges,
             es.bridge_insert_edges,
             es.bridge_insert_secs,
             es.bridge_covered,
             es.bridge_catch_up_items,
+            es.bridge_recheck_items,
             es.bridge_compactions,
+        );
+        println!(
+            "  distance calls: {} total across every path ({} on the \
+             insert path) — the paper's cost model",
+            es.metric_calls, es.dist_calls,
         );
         let chunks = es.pipeline.snapshot_chunks_copied
             + es.pipeline.snapshot_chunks_shared;

@@ -8,13 +8,23 @@
 //! fixed-width scalars, length-prefixed sequences, a magic header and a
 //! format version byte. All reads are bounds-checked; corrupt files produce
 //! errors, never panics or unbounded allocations.
+//!
+//! Both containers are **generic over the item type** through an
+//! [`ItemCodec`]: the single-instance `FISHDBC` blob and the multi-shard
+//! `FISHENG` container serialize any `Fishdbc<T, M>` / `Engine<T, M>` given
+//! a codec for `T` and a metric name string (generic metrics are code, not
+//! data — the name is stored and handed back to a caller-supplied resolver
+//! on load). The framework pair ([`Item`] via [`FrameworkCodec`],
+//! [`MetricKind`] via its parse/name round trip) is the default
+//! instantiation behind `save`/`load`, and its bytes are unchanged —
+//! pinned by the checked-in `FISHENG` v1/v2 fixtures.
 
 use std::io::{self, Read, Write};
 
-use crate::distances::{bitmap::Bitmap, fuzzy::Digest, Item, MetricKind};
+use crate::distances::{bitmap::Bitmap, fuzzy::Digest, Counting, Item, Metric, MetricKind};
 use crate::engine::merge::{MergeCache, MergeState, ShardStamp};
 use crate::engine::shard::{BridgeState, ShardState};
-use crate::engine::{Engine, EngineConfig};
+use crate::engine::{Engine, EngineConfig, EngineItem};
 use crate::fishdbc::{neighbors::NeighborStore, Fishdbc, FishdbcParams};
 use crate::hnsw::{Hnsw, HnswExport, HnswParams};
 use crate::mst::{Edge, Msf};
@@ -188,109 +198,133 @@ impl<R: Read> BinReader<R> {
 
 // ------------------------------------------------------------ item codec --
 
-fn write_item<W: Write>(w: &mut BinWriter<W>, item: &Item) -> io::Result<()> {
-    match item {
-        Item::Dense(v) => {
-            w.u8(0)?;
-            w.f32s(v)
-        }
-        Item::Sparse { idx, val } => {
-            w.u8(1)?;
-            w.u32s(idx)?;
-            w.f32s(val)
-        }
-        Item::Set(s) => {
-            w.u8(2)?;
-            w.u32s(s)
-        }
-        Item::Text(t) => {
-            w.u8(3)?;
-            w.str(t)
-        }
-        Item::Bits(b) => {
-            w.u8(4)?;
-            w.len(b.len())?;
-            w.len(b.words().len())?;
-            for &word in b.words() {
-                w.u64(word)?;
+/// Byte codec for one stored item: how a `T` enters and leaves the
+/// versioned containers. Implementations must be self-delimiting (read
+/// exactly the bytes write produced) and deterministic (identical items
+/// serialize identically — the fixture byte-identity tests rely on it).
+pub trait ItemCodec<T> {
+    fn write_item<W: Write>(&self, w: &mut BinWriter<W>, item: &T) -> io::Result<()>;
+    fn read_item<R: Read>(&self, r: &mut BinReader<R>) -> io::Result<T>;
+}
+
+/// The framework codec for the dynamic [`Item`] type: a one-byte variant
+/// tag followed by the payload. This is the original on-disk item format,
+/// byte for byte — the `FISHENG`/`FISHDBC` fixtures pin it.
+pub struct FrameworkCodec;
+
+impl ItemCodec<Item> for FrameworkCodec {
+    fn write_item<W: Write>(&self, w: &mut BinWriter<W>, item: &Item) -> io::Result<()> {
+        match item {
+            Item::Dense(v) => {
+                w.u8(0)?;
+                w.f32s(v)
             }
-            Ok(())
-        }
-        Item::Digest(d) => {
-            w.u8(5)?;
-            w.len(d.minhashes.len())?;
-            for &h in &d.minhashes {
-                w.u64(h)?;
+            Item::Sparse { idx, val } => {
+                w.u8(1)?;
+                w.u32s(idx)?;
+                w.f32s(val)
             }
-            w.bytes(&d.histogram)?;
-            w.len(d.features.len())?;
-            w.len(d.features.words().len())?;
-            for &word in d.features.words() {
-                w.u64(word)?;
+            Item::Set(s) => {
+                w.u8(2)?;
+                w.u32s(s)
             }
-            Ok(())
+            Item::Text(t) => {
+                w.u8(3)?;
+                w.str(t)
+            }
+            Item::Bits(b) => {
+                w.u8(4)?;
+                w.len(b.len())?;
+                w.len(b.words().len())?;
+                for &word in b.words() {
+                    w.u64(word)?;
+                }
+                Ok(())
+            }
+            Item::Digest(d) => {
+                w.u8(5)?;
+                w.len(d.minhashes.len())?;
+                for &h in &d.minhashes {
+                    w.u64(h)?;
+                }
+                w.bytes(&d.histogram)?;
+                w.len(d.features.len())?;
+                w.len(d.features.words().len())?;
+                for &word in d.features.words() {
+                    w.u64(word)?;
+                }
+                Ok(())
+            }
         }
+    }
+
+    fn read_item<R: Read>(&self, r: &mut BinReader<R>) -> io::Result<Item> {
+        Ok(match r.u8()? {
+            0 => Item::Dense(r.f32s()?),
+            1 => {
+                let idx = r.u32s()?;
+                let val = r.f32s()?;
+                if idx.len() != val.len() {
+                    return Err(bad("sparse idx/val length mismatch"));
+                }
+                Item::Sparse { idx, val }
+            }
+            2 => Item::Set(r.u32s()?),
+            3 => Item::Text(r.str()?),
+            4 => {
+                let bits = r.len()?;
+                let n_words = r.len()?;
+                if n_words != bits.div_ceil(64) {
+                    return Err(bad("bitmap word count mismatch"));
+                }
+                let mut words = Vec::with_capacity(n_words.min(1 << 20));
+                for _ in 0..n_words {
+                    words.push(r.u64()?);
+                }
+                Item::Bits(Bitmap::from_raw(bits, words))
+            }
+            5 => {
+                let n_mh = r.len()?;
+                let mut minhashes = Vec::with_capacity(n_mh.min(1 << 16));
+                for _ in 0..n_mh {
+                    minhashes.push(r.u64()?);
+                }
+                let histogram = r.bytes()?;
+                let bits = r.len()?;
+                let n_words = r.len()?;
+                if n_words != bits.div_ceil(64) {
+                    return Err(bad("digest bitmap word count mismatch"));
+                }
+                let mut words = Vec::with_capacity(n_words.min(1 << 20));
+                for _ in 0..n_words {
+                    words.push(r.u64()?);
+                }
+                Item::Digest(Digest {
+                    minhashes,
+                    histogram,
+                    features: Bitmap::from_raw(bits, words),
+                })
+            }
+            t => return Err(bad(&format!("unknown item tag {t}"))),
+        })
     }
 }
 
-fn read_item<R: Read>(r: &mut BinReader<R>) -> io::Result<Item> {
-    Ok(match r.u8()? {
-        0 => Item::Dense(r.f32s()?),
-        1 => {
-            let idx = r.u32s()?;
-            let val = r.f32s()?;
-            if idx.len() != val.len() {
-                return Err(bad("sparse idx/val length mismatch"));
-            }
-            Item::Sparse { idx, val }
-        }
-        2 => Item::Set(r.u32s()?),
-        3 => Item::Text(r.str()?),
-        4 => {
-            let bits = r.len()?;
-            let n_words = r.len()?;
-            if n_words != bits.div_ceil(64) {
-                return Err(bad("bitmap word count mismatch"));
-            }
-            let mut words = Vec::with_capacity(n_words.min(1 << 20));
-            for _ in 0..n_words {
-                words.push(r.u64()?);
-            }
-            Item::Bits(Bitmap::from_raw(bits, words))
-        }
-        5 => {
-            let n_mh = r.len()?;
-            let mut minhashes = Vec::with_capacity(n_mh.min(1 << 16));
-            for _ in 0..n_mh {
-                minhashes.push(r.u64()?);
-            }
-            let histogram = r.bytes()?;
-            let bits = r.len()?;
-            let n_words = r.len()?;
-            if n_words != bits.div_ceil(64) {
-                return Err(bad("digest bitmap word count mismatch"));
-            }
-            let mut words = Vec::with_capacity(n_words.min(1 << 20));
-            for _ in 0..n_words {
-                words.push(r.u64()?);
-            }
-            Item::Digest(Digest {
-                minhashes,
-                histogram,
-                features: Bitmap::from_raw(bits, words),
-            })
-        }
-        t => return Err(bad(&format!("unknown item tag {t}"))),
-    })
+/// Resolver for the framework metric: the stored name parses back to a
+/// [`MetricKind`].
+fn parse_metric(name: &str) -> io::Result<MetricKind> {
+    MetricKind::parse(name).ok_or_else(|| bad(&format!("unknown metric {name:?}")))
 }
 
 // --------------------------------------------------------- fishdbc codec --
 
-/// Everything needed to resurrect a `Fishdbc<Item, MetricKind>`.
-pub struct SavedState {
-    pub metric: MetricKind,
+/// Everything needed to resurrect a `Fishdbc<T, M>`. Metrics are code, not
+/// data: only their *name* is stored, and the loader hands it to a
+/// caller-supplied resolver (for the framework pair, `MetricKind::parse`).
+pub struct SavedState<T = Item> {
+    pub metric_name: String,
     pub params: FishdbcParams,
-    pub items: Vec<Item>,
+    pub items: Vec<T>,
     pub hnsw: HnswExport,
     pub neighbor_sets: Vec<Vec<(u32, f64)>>,
     pub msf_edges: Vec<Edge>,
@@ -298,13 +332,17 @@ pub struct SavedState {
     pub mst_updates: u64,
 }
 
-/// Serialize a full state snapshot.
-pub fn write_state<W: Write>(w: W, s: &SavedState) -> io::Result<()> {
+/// Serialize a full state snapshot through `codec`.
+pub fn write_state<T, C: ItemCodec<T>, W: Write>(
+    w: W,
+    codec: &C,
+    s: &SavedState<T>,
+) -> io::Result<()> {
     let mut w = BinWriter::new(w);
     w.w.write_all(MAGIC)?;
     w.u8(VERSION)?;
 
-    w.str(s.metric.name())?;
+    w.str(&s.metric_name)?;
     w.u64(s.params.min_pts as u64)?;
     w.u64(s.params.ef as u64)?;
     w.f64(s.params.alpha)?;
@@ -312,7 +350,7 @@ pub fn write_state<W: Write>(w: W, s: &SavedState) -> io::Result<()> {
 
     w.len(s.items.len())?;
     for it in &s.items {
-        write_item(&mut w, it)?;
+        codec.write_item(&mut w, it)?;
     }
 
     // hnsw
@@ -367,7 +405,10 @@ pub fn write_state<W: Write>(w: W, s: &SavedState) -> io::Result<()> {
 
 /// Deserialize a state snapshot (strict: trailing garbage is not checked,
 /// wrong magic/version/structure is an error).
-pub fn read_state<R: Read>(r: R) -> io::Result<SavedState> {
+pub fn read_state<T, C: ItemCodec<T>, R: Read>(
+    r: R,
+    codec: &C,
+) -> io::Result<SavedState<T>> {
     let mut r = BinReader::new(r);
     let mut magic = [0u8; 8];
     r.r.read_exact(&mut magic)?;
@@ -379,8 +420,6 @@ pub fn read_state<R: Read>(r: R) -> io::Result<SavedState> {
     }
 
     let metric_name = r.str()?;
-    let metric = MetricKind::parse(&metric_name)
-        .ok_or_else(|| bad(&format!("unknown metric {metric_name:?}")))?;
     let params = FishdbcParams {
         min_pts: r.u64()? as usize,
         ef: r.u64()? as usize,
@@ -391,7 +430,7 @@ pub fn read_state<R: Read>(r: R) -> io::Result<SavedState> {
     let n_items = r.len()?;
     let mut items = Vec::with_capacity(n_items.min(1 << 20));
     for _ in 0..n_items {
-        items.push(read_item(&mut r)?);
+        items.push(codec.read_item(&mut r)?);
     }
 
     let hnsw_params = HnswParams {
@@ -450,7 +489,7 @@ pub fn read_state<R: Read>(r: R) -> io::Result<SavedState> {
     let mst_updates = r.u64()?;
 
     Ok(SavedState {
-        metric,
+        metric_name,
         params,
         items,
         hnsw: HnswExport { params: hnsw_params, links, entry, rng_state, dist_calls },
@@ -461,12 +500,37 @@ pub fn read_state<R: Read>(r: R) -> io::Result<SavedState> {
     })
 }
 
-impl Fishdbc<Item, MetricKind> {
-    /// Serialize the complete state to a writer. The reloaded instance
-    /// behaves identically for all future `add`/`cluster` calls.
-    pub fn save<W: Write>(&self, w: W) -> io::Result<()> {
-        write_state(w, &SavedState {
-            metric: *self.metric(),
+/// Rebuild a `Fishdbc` from a deserialized snapshot plus a live metric.
+fn fishdbc_from_saved<T: Clone, M: Metric<T>>(
+    metric: M,
+    s: SavedState<T>,
+) -> Fishdbc<T, M> {
+    let n = s.items.len();
+    let min_pts = s.params.min_pts;
+    Fishdbc::from_parts(
+        metric,
+        s.params,
+        s.items,
+        Hnsw::import(s.hnsw),
+        NeighborStore::import(min_pts, s.neighbor_sets),
+        Msf::from_parts(s.msf_edges, n),
+        s.candidates,
+        s.mst_updates,
+    )
+}
+
+impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
+    /// Serialize the complete state of any typed instance through `codec`,
+    /// recording `metric_name` for the loader's resolver. The reloaded
+    /// instance behaves identically for all future `add`/`cluster` calls.
+    pub fn save_with<C: ItemCodec<T>, W: Write>(
+        &self,
+        metric_name: &str,
+        codec: &C,
+        w: W,
+    ) -> io::Result<()> {
+        write_state(w, codec, &SavedState {
+            metric_name: metric_name.to_string(),
             params: *self.params(),
             items: self.items().to_vec(),
             hnsw: self.hnsw_export(),
@@ -477,21 +541,34 @@ impl Fishdbc<Item, MetricKind> {
         })
     }
 
+    /// Reload a state previously written by [`Fishdbc::save_with`]:
+    /// `resolve` turns the stored metric name back into a live metric (or
+    /// rejects a file built under a different one).
+    pub fn load_with<C: ItemCodec<T>, R: Read, F>(
+        codec: &C,
+        resolve: F,
+        r: R,
+    ) -> io::Result<Self>
+    where
+        F: FnOnce(&str) -> io::Result<M>,
+    {
+        let s = read_state(r, codec)?;
+        let metric = resolve(&s.metric_name)?;
+        Ok(fishdbc_from_saved(metric, s))
+    }
+}
+
+impl Fishdbc<Item, MetricKind> {
+    /// Serialize the complete state to a writer (framework instantiation:
+    /// [`FrameworkCodec`] items, metric stored by name). The reloaded
+    /// instance behaves identically for all future `add`/`cluster` calls.
+    pub fn save<W: Write>(&self, w: W) -> io::Result<()> {
+        self.save_with(self.metric().name(), &FrameworkCodec, w)
+    }
+
     /// Reload a state previously written by [`Fishdbc::save`].
     pub fn load<R: Read>(r: R) -> io::Result<Self> {
-        let s = read_state(r)?;
-        let n = s.items.len();
-        let min_pts = s.params.min_pts;
-        Ok(Fishdbc::from_parts(
-            s.metric,
-            s.params,
-            s.items,
-            Hnsw::import(s.hnsw),
-            NeighborStore::import(min_pts, s.neighbor_sets),
-            Msf::from_parts(s.msf_edges, n),
-            s.candidates,
-            s.mst_updates,
-        ))
+        Self::load_with(&FrameworkCodec, parse_metric, r)
     }
 
     /// Save to a file path (convenience).
@@ -530,17 +607,27 @@ fn read_edge_triples<R: Read>(
     Ok(v)
 }
 
-impl Engine {
-    /// Serialize the complete multi-shard engine state: a versioned
-    /// container holding every shard's full FISHDBC snapshot plus its
-    /// local→global id map and — since v2 — the recluster-pipeline epoch
-    /// state (bridge buffers, coverage watermarks, cached global MSF), so
-    /// a sharded deployment survives restarts and keeps ingesting
-    /// **exactly** where it left off (same routing, same per-shard RNG
-    /// streams, same future clusterings), reclustering incrementally
-    /// instead of re-paying the full bridge search. Flushes first so no
-    /// queued batch is lost.
-    pub fn save<W: Write>(&self, w: W) -> io::Result<()> {
+impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
+    /// Serialize the complete multi-shard engine state through `codec`: a
+    /// versioned container holding every shard's full FISHDBC snapshot
+    /// plus its local→global id map and — since v2 — the
+    /// recluster-pipeline epoch state (bridge buffers, coverage
+    /// watermarks, cached global MSF), so a sharded deployment survives
+    /// restarts and keeps ingesting **exactly** where it left off (same
+    /// routing, same per-shard RNG streams, same future clusterings),
+    /// reclustering incrementally instead of re-paying the full bridge
+    /// search. Flushes first so no queued batch is lost.
+    ///
+    /// The persisted watermark is each shard's *merge-final* one: a
+    /// checkpoint taken mid-epoch-window makes the next merge after reload
+    /// re-run the (bounded) window search, so the same-epoch cross-shard
+    /// guarantee survives save/load too.
+    pub fn save_with<C: ItemCodec<T>, W: Write>(
+        &self,
+        metric_name: &str,
+        codec: &C,
+        w: W,
+    ) -> io::Result<()> {
         // Consistent cut under concurrent ingest: barrier, lock every
         // shard, then verify the locked states form a dense id space
         // 0..total (a batch routed between the barrier and the locks
@@ -575,7 +662,7 @@ impl Engine {
         w.u8(ENGINE_VERSION)?;
 
         let cfg = *self.config();
-        w.str(self.metric().name())?;
+        w.str(metric_name)?;
         w.u64(self.n_shards() as u64)?;
         w.u64(next_global)?;
         w.u64(cfg.mcs as u64)?;
@@ -595,9 +682,12 @@ impl Engine {
             w.u64(st.batches)?;
             w.f64(st.build_secs)?;
             // nested single-instance snapshot (own magic + version)
-            st.f.save(&mut w.w)?;
+            st.f.save_with(metric_name, codec, &mut w.w)?;
             let br = shard.bridge.lock().unwrap();
-            w.u64(br.covered as u64)?;
+            // the merge-final watermark (see the method docs): items
+            // inside an unfinished epoch window re-run their window
+            // search after reload instead of silently skipping it
+            w.u64(br.merge_covered as u64)?;
             w.u64(br.generation)?;
             write_edges(&mut w, br.msf.edges())?;
             let buf = br.buf_export();
@@ -630,13 +720,22 @@ impl Engine {
         Ok(())
     }
 
-    /// Reload an engine previously written by [`Engine::save`] (v2, or a
-    /// pre-pipeline v1 file — the latter resumes with empty pipeline
-    /// state, so its first recluster is a from-scratch merge). All reads
-    /// are validated: shard counts, id-map lengths, global-id ranges and
-    /// per-shard metrics must be mutually consistent or the load errors
-    /// (never panics).
-    pub fn load<R: Read>(r: R) -> io::Result<Engine> {
+    /// Reload an engine previously written by [`Engine::save_with`] (v2,
+    /// or a pre-pipeline v1 file — the latter resumes with empty pipeline
+    /// state, so its first recluster is a from-scratch merge). `resolve`
+    /// turns the stored metric name back into a live metric (or rejects a
+    /// file built under a different one). All reads are validated: shard
+    /// counts, id-map lengths, global-id ranges and per-shard metric
+    /// names must be mutually consistent or the load errors (never
+    /// panics).
+    pub fn load_with<C: ItemCodec<T>, R: Read, F>(
+        codec: &C,
+        resolve: F,
+        r: R,
+    ) -> io::Result<Engine<T, M>>
+    where
+        F: FnOnce(&str) -> io::Result<M>,
+    {
         let mut r = BinReader::new(r);
         let mut magic = [0u8; 8];
         r.r.read_exact(&mut magic)?;
@@ -650,8 +749,7 @@ impl Engine {
         let v2 = version >= 2;
 
         let metric_name = r.str()?;
-        let metric = MetricKind::parse(&metric_name)
-            .ok_or_else(|| bad(&format!("unknown metric {metric_name:?}")))?;
+        let metric = Counting::new(resolve(&metric_name)?);
         let n_shards = r.u64()? as usize;
         if n_shards == 0 || n_shards > 4096 {
             return Err(bad("implausible shard count"));
@@ -667,22 +765,24 @@ impl Engine {
             (0, 0, 0)
         };
 
-        let mut parts = Vec::with_capacity(n_shards);
+        let mut parts: Vec<(ShardState<T, M>, BridgeState)> =
+            Vec::with_capacity(n_shards);
         let mut total = 0u64;
         let mut params: Option<FishdbcParams> = None;
         for _ in 0..n_shards {
             let globals = r.u32s()?;
             let batches = r.u64()?;
             let build_secs = r.f64()?;
-            let f = Fishdbc::load(&mut r.r)?;
+            let saved = read_state(&mut r.r, codec)?;
+            if saved.metric_name != metric_name {
+                return Err(bad("shard metric disagrees with engine header"));
+            }
+            let f = fishdbc_from_saved(metric.clone(), saved);
             if f.len() != globals.len() {
                 return Err(bad("shard global-id map length mismatch"));
             }
             if globals.iter().any(|&g| g as u64 >= next_global) {
                 return Err(bad("shard global id out of range"));
-            }
-            if *f.metric() != metric {
-                return Err(bad("shard metric disagrees with engine header"));
             }
             let bridge = if v2 {
                 let covered = r.u64()? as usize;
@@ -728,6 +828,10 @@ impl Engine {
         if total != next_global {
             return Err(bad("shard item counts do not sum to the global count"));
         }
+        // resume the shared distance-call counter from the persisted
+        // insert-path totals so `metric_calls >= dist_calls` keeps holding
+        // after a reload (prior search-path calls are not persisted)
+        metric.add_calls(parts.iter().map(|(st, _)| st.f.dist_calls()).sum());
 
         let merge_state = if v2 && r.u8()? == 1 {
             let n = r.u64()? as usize;
@@ -791,6 +895,22 @@ impl Engine {
             epoch,
         ))
     }
+}
+
+impl Engine {
+    /// [`Engine::save_with`] for the framework instantiation
+    /// ([`FrameworkCodec`] items, metric stored by name). Bytes are
+    /// unchanged from before the generic refactor — pinned by the
+    /// checked-in `FISHENG` fixtures.
+    pub fn save<W: Write>(&self, w: W) -> io::Result<()> {
+        self.save_with(self.metric().name(), &FrameworkCodec, w)
+    }
+
+    /// Reload an engine previously written by [`Engine::save`] (v2, or a
+    /// pre-pipeline v1 file).
+    pub fn load<R: Read>(r: R) -> io::Result<Engine> {
+        Self::load_with(&FrameworkCodec, parse_metric, r)
+    }
 
     /// Save to a file path (convenience).
     pub fn save_to_path(&self, path: impl AsRef<std::path::Path>) -> io::Result<()> {
@@ -809,6 +929,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::datasets;
+    use crate::engine::ShardKey;
 
     fn build(n: usize, seed: u64) -> Fishdbc<Item, MetricKind> {
         let ds = datasets::blobs::generate(n, 8, 4, seed);
@@ -882,11 +1003,11 @@ mod tests {
         let mut buf = Vec::new();
         let mut w = BinWriter::new(&mut buf);
         for it in &items {
-            write_item(&mut w, it).unwrap();
+            FrameworkCodec.write_item(&mut w, it).unwrap();
         }
         let mut r = BinReader::new(buf.as_slice());
         for it in &items {
-            let got = read_item(&mut r).unwrap();
+            let got = FrameworkCodec.read_item(&mut r).unwrap();
             assert_eq!(&got, it);
         }
     }
@@ -976,7 +1097,96 @@ mod tests {
         let stats = reloaded.stats();
         assert_eq!(stats.bridge_covered, 300, "coverage watermarks resumed");
         assert!(stats.bridge_edges > 0, "bridge buffers resumed");
+        assert!(
+            stats.metric_calls >= stats.dist_calls,
+            "reload must re-seed the shared counter from the persisted \
+             insert-path totals: {} < {}",
+            stats.metric_calls,
+            stats.dist_calls
+        );
         reloaded.shutdown();
+    }
+
+    #[test]
+    fn generic_engine_persists_through_custom_codec() {
+        // the FISHENG container is generic: a typed engine over Vec<u32>
+        // items under a plain function metric round-trips through a
+        // five-line caller-supplied codec, pipeline state included
+        struct U32VecCodec;
+        impl ItemCodec<Vec<u32>> for U32VecCodec {
+            fn write_item<W: Write>(
+                &self,
+                w: &mut BinWriter<W>,
+                item: &Vec<u32>,
+            ) -> io::Result<()> {
+                w.u32s(item)
+            }
+            fn read_item<R: Read>(
+                &self,
+                r: &mut BinReader<R>,
+            ) -> io::Result<Vec<u32>> {
+                r.u32s()
+            }
+        }
+        type L1 = fn(&Vec<u32>, &Vec<u32>) -> f64;
+        // &Vec (not &[u32]) is forced by the Metric<Vec<u32>> signature
+        #[allow(clippy::ptr_arg)]
+        fn l1(a: &Vec<u32>, b: &Vec<u32>) -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(&x, &y)| (x as f64 - y as f64).abs())
+                .sum()
+        }
+
+        // two well-separated integer clusters
+        let items: Vec<Vec<u32>> = (0..120u32)
+            .map(|i| vec![i % 10 + (i % 2) * 500, i / 10])
+            .collect();
+        let engine: Engine<Vec<u32>, L1> =
+            Engine::spawn(l1 as L1, EngineConfig {
+                fishdbc: FishdbcParams { min_pts: 4, ef: 15, ..Default::default() },
+                shards: 2,
+                mcs: 4,
+                ..Default::default()
+            });
+        engine.add_batch(items.clone());
+        let want = engine.cluster(4);
+        let mut buf = Vec::new();
+        engine.save_with("l1-u32", &U32VecCodec, &mut buf).unwrap();
+        engine.shutdown();
+
+        // the resolver validates the stored metric name
+        let wrong: io::Result<Engine<Vec<u32>, L1>> = Engine::load_with(
+            &U32VecCodec,
+            |name| {
+                if name == "other" {
+                    Ok(l1 as L1)
+                } else {
+                    Err(bad("metric mismatch"))
+                }
+            },
+            buf.as_slice(),
+        );
+        assert!(wrong.is_err(), "resolver rejection must fail the load");
+
+        let resumed: Engine<Vec<u32>, L1> = Engine::load_with(
+            &U32VecCodec,
+            |name| {
+                assert_eq!(name, "l1-u32");
+                Ok(l1 as L1)
+            },
+            buf.as_slice(),
+        )
+        .unwrap();
+        assert_eq!(resumed.len(), 120);
+        assert_eq!(resumed.n_shards(), 2);
+        let got = resumed.cluster(4);
+        assert_eq!(got.clustering.labels, want.clustering.labels);
+        assert_eq!(
+            got.n_changed_shards, 0,
+            "pipeline state resumed through the custom codec"
+        );
+        resumed.shutdown();
     }
 
     #[test]
@@ -989,7 +1199,7 @@ mod tests {
             .map(|_| (Fishdbc::new(MetricKind::Euclidean, p), Vec::new()))
             .collect();
         for (gid, it) in ds.items.iter().enumerate() {
-            let s = (crate::engine::item_hash(it) % 2) as usize;
+            let s = (it.shard_key() % 2) as usize;
             shards[s].0.add(it.clone());
             shards[s].1.push(gid as u32);
         }

@@ -37,10 +37,18 @@ const MASK: usize = CHUNK - 1;
 
 /// Append-mostly vector in `Arc`-shared fixed-size chunks (see the module
 /// docs for the copy-on-write sharing model).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ChunkedVec<T> {
     chunks: Vec<Arc<Vec<T>>>,
     len: usize,
+}
+
+/// Manual (not derived) so an empty store exists for every `T` — the
+/// derive would demand a spurious `T: Default`.
+impl<T> Default for ChunkedVec<T> {
+    fn default() -> Self {
+        ChunkedVec::new()
+    }
 }
 
 impl<T> Clone for ChunkedVec<T> {

@@ -6,9 +6,10 @@
 use fishdbc::coordinator::{Coordinator, CoordinatorConfig};
 use fishdbc::datasets;
 use fishdbc::distances::{Item, MetricKind};
-use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::engine::{Engine, EngineConfig, ShardKey};
 use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
 use fishdbc::metrics::{adjusted_rand_index, score_external};
+use fishdbc::util::rng::Rng;
 
 fn blobs(n: usize, seed: u64) -> datasets::Dataset {
     // dim 32 / 5 centers: decisively separated, so both the single-shard
@@ -370,6 +371,187 @@ fn bridge_refresh_capture_preserves_coverage_watermark() {
         "an item was bridge-searched twice"
     );
     engine.shutdown();
+}
+
+/// Regression for the (formerly documented) same-epoch approximation: a
+/// cross-shard pair whose two endpoints both arrive inside one epoch
+/// window, each insert-covered against a frozen snapshot that predates
+/// the other, used to be skipped by the merge catch-up — silently losing
+/// the only correct MSF links between the halves. The window re-search
+/// closes it: the next merge re-searches every item insert-covered since
+/// the previous one against the *live* states.
+#[test]
+fn same_epoch_cross_shard_pairs_are_bridged() {
+    let p = FishdbcParams { min_pts: 4, ef: 20, ..Default::default() };
+    let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+        fishdbc: p,
+        shards: 2,
+        mcs: 4,
+        ..Default::default()
+    });
+
+    // epoch 1: a base blob at the origin (hash-splits across both shards)
+    // gives every shard density, and the merge freezes the snapshots the
+    // window items will insert-cover against
+    let mut rng = Rng::new(4242);
+    let base: Vec<Item> = (0..60)
+        .map(|_| Item::Dense(vec![rng.normal() as f32, rng.normal() as f32]))
+        .collect();
+    engine.add_batch(base);
+    let first = engine.cluster(4);
+    assert_eq!(first.n_items, 60);
+
+    // epoch window 2: a brand-new, far-away, very tight blob arrives
+    // entirely inside the window, exactly 8 items per shard (rejection-
+    // sampled on the routing hash so both halves get finite cores from
+    // their own shard). Its only light MSF links cross the shard boundary
+    // between items no frozen snapshot has seen.
+    let mut cloud: Vec<Item> = Vec::new();
+    let (mut s0, mut s1) = (0usize, 0usize);
+    while s0 < 8 || s1 < 8 {
+        let it = Item::Dense(vec![
+            500.0 + (rng.normal() * 0.05) as f32,
+            500.0 + (rng.normal() * 0.05) as f32,
+        ]);
+        match (it.shard_key() % 2) as usize {
+            0 if s0 < 8 => {
+                s0 += 1;
+                cloud.push(it);
+            }
+            1 if s1 < 8 => {
+                s1 += 1;
+                cloud.push(it);
+            }
+            _ => {}
+        }
+    }
+    engine.add_batch(cloud);
+    engine.flush(); // insert-time walks cover the window against stale snaps
+    let mid = engine.stats();
+    assert_eq!(
+        mid.bridge_covered, 76,
+        "premise: both halves must be insert-covered before the merge \
+         (otherwise this test is not exercising the same-epoch gap)"
+    );
+
+    let second = engine.cluster(4);
+    assert_eq!(second.n_items, 76);
+    let after = engine.stats();
+    assert!(
+        after.bridge_recheck_items > 0,
+        "the window re-search never ran"
+    );
+    // the tight far blob is one spatial cluster; without the re-searched
+    // cross-shard bridges its two 8-item halves (each >= mcs) extract as
+    // two separate clusters
+    let labels = &second.clustering.labels[60..];
+    assert!(
+        labels.iter().all(|&l| l >= 0),
+        "window blob items must be clustered: {labels:?}"
+    );
+    assert!(
+        labels.iter().all(|&l| l == labels[0]),
+        "same-epoch cross-shard halves did not fuse into one cluster: \
+         {labels:?}"
+    );
+    // and the published epoch still conforms to the from-scratch oracle
+    let reference = engine.reference_cluster(4);
+    assert_eq!(second.n_msf_edges, reference.n_msf_edges);
+    engine.shutdown();
+}
+
+/// Table 1's Finefoods shape at engine scale: Text items under
+/// Jaro-Winkler — an expensive, non-Euclidean string distance — ingested
+/// through 2 shards with the background serving loop, merged into epochs,
+/// and served online. The strong assertion is conformance: the published
+/// epoch equals the from-scratch reference merge.
+#[test]
+fn text_jaro_winkler_engine_end_to_end() {
+    let ds = datasets::reviews::generate(260, 71);
+    let engine = Engine::spawn(ds.metric, EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 4, ef: 10, ..Default::default() },
+        shards: 2,
+        mcs: 4,
+        recluster_every: 100,
+        ..Default::default()
+    });
+    for chunk in ds.items.chunks(52) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let snap = engine.cluster(4);
+    assert_eq!(snap.n_items, 260);
+    assert_eq!(snap.clustering.labels.len(), 260);
+    assert!(snap.clustering.n_clusters >= 1, "text structure must survive");
+    let reference = engine.reference_cluster(4);
+    assert_eq!(
+        snap.n_msf_edges, reference.n_msf_edges,
+        "JW delta merge != from-scratch merge"
+    );
+    assert_eq!(
+        canon(&snap.clustering.labels),
+        canon(&reference.clustering.labels),
+        "JW epoch labels diverge from the reference merge"
+    );
+    // online serving under the string metric
+    let l = engine.label(&ds.items[0]);
+    let latest = engine.latest().expect("epoch published");
+    assert!(l >= -1 && (l as i64) < latest.clustering.n_clusters as i64);
+    let stats = engine.stats();
+    assert_eq!(stats.items, 260);
+    assert!(stats.metric_calls > 0, "JW calls must land in the cost model");
+    engine.shutdown();
+}
+
+/// The DW-* bag-of-words shape at engine scale: Sparse items under cosine
+/// distance, same end-to-end path and conformance oracle.
+#[test]
+fn sparse_cosine_engine_end_to_end() {
+    let ds = datasets::docword::generate(500, 512, 73);
+    let engine = Engine::spawn(ds.metric, EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 4, ef: 10, ..Default::default() },
+        shards: 3,
+        mcs: 4,
+        ..Default::default()
+    });
+    for chunk in ds.items.chunks(125) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let first = engine.cluster(4);
+    assert_eq!(first.n_items, 500);
+    // incremental epoch on top (exercises the delta + window paths under
+    // a sparse metric)
+    engine.add_batch(ds.items[..60].to_vec());
+    let second = engine.cluster(4);
+    assert_eq!(second.n_items, 560);
+    assert!(second.epoch > first.epoch);
+    let reference = engine.reference_cluster(4);
+    assert_eq!(second.n_msf_edges, reference.n_msf_edges);
+    assert_eq!(
+        canon(&second.clustering.labels),
+        canon(&reference.clustering.labels),
+        "sparse-cosine epoch labels diverge from the reference merge"
+    );
+    let l = engine.label(&ds.items[3]);
+    assert!(l >= -1);
+    assert!(engine.stats().metric_calls > 0);
+    engine.shutdown();
+}
+
+/// Canonical relabeling (clusters numbered by first occurrence) so label
+/// vectors compare as partitions.
+fn canon(labels: &[i32]) -> Vec<i32> {
+    let mut map = std::collections::HashMap::new();
+    labels
+        .iter()
+        .map(|&l| {
+            if l < 0 {
+                -1
+            } else {
+                let next = map.len() as i32;
+                *map.entry(l).or_insert(next)
+            }
+        })
+        .collect()
 }
 
 #[test]

@@ -1,8 +1,11 @@
 //! Deterministic engine stress harness: a seeded *virtual scheduler*
 //! replays a reproducible interleaving of `add_batch`, recluster epochs,
 //! online `label()` queries, mid-epoch snapshot refreshes, and mid-stream
-//! save/load over S ∈ {1, 2, 4} shards. The conformance invariant, checked
-//! at **every** published epoch:
+//! save/load over S ∈ {1, 2, 4} shards — on Euclidean blobs and on the
+//! paper's non-Euclidean workloads (Jaro-Winkler text, sparse cosine),
+//! since the generic engine must honor the conformance contract for any
+//! metric. The conformance invariant, checked at **every** published
+//! epoch:
 //!
 //! * labels are index-aligned with the input stream (`labels.len()` ==
 //!   items ingested so far, global ids = arrival order), and
@@ -79,9 +82,24 @@ fn check_epoch(engine: &Engine, cursor: usize, mcs: usize, ctx: &str) {
 
 fn stress(shards: usize, rounds: usize, max_items: usize, seed: u64) {
     let ds = datasets::blobs::generate(max_items, 16, 4, seed);
-    let mcs = 5;
+    let params = FishdbcParams { min_pts: 5, ef: 15, ..Default::default() };
+    stress_on(ds, shards, rounds, seed, params);
+}
+
+/// The harness proper, over any framework dataset (and therefore any of
+/// the paper's metrics — the scheduler and the conformance contract are
+/// metric-agnostic).
+fn stress_on(
+    ds: datasets::Dataset,
+    shards: usize,
+    rounds: usize,
+    seed: u64,
+    params: FishdbcParams,
+) {
+    let max_items = ds.n();
+    let mcs = params.min_pts;
     let config = EngineConfig {
-        fishdbc: FishdbcParams { min_pts: 5, ef: 15, ..Default::default() },
+        fishdbc: params,
         shards,
         mcs,
         ..Default::default()
@@ -193,6 +211,35 @@ fn stress_two_shards() {
 #[test]
 fn stress_four_shards() {
     stress(4, 40, 900, 0xCAFE);
+}
+
+/// Non-Euclidean conformance (tentpole acceptance): a sharded engine over
+/// **Jaro-Winkler text** — the paper's Finefoods-shaped workload, an
+/// expensive, non-metric string distance — must publish epochs identical
+/// to the from-scratch reference merge under the same adversarial
+/// schedule. Smaller n: each distance call is O(len²) on ~430-char texts.
+#[test]
+fn stress_text_jaro_winkler_two_shards() {
+    stress_on(
+        datasets::reviews::generate(220, 0x7E47),
+        2,
+        24,
+        0x7E47,
+        FishdbcParams { min_pts: 4, ef: 10, ..Default::default() },
+    );
+}
+
+/// Non-Euclidean conformance over **sparse cosine** (the paper's DW-*
+/// bag-of-words shape).
+#[test]
+fn stress_sparse_cosine_two_shards() {
+    stress_on(
+        datasets::docword::generate(400, 512, 0x51C0),
+        2,
+        30,
+        0x51C0,
+        FishdbcParams { min_pts: 4, ef: 10, ..Default::default() },
+    );
 }
 
 /// S=1 admits a *stronger* oracle than the same-state reference merge:
