@@ -1,0 +1,142 @@
+//! Deletion churn — incremental removal vs rebuilding from survivors
+//! (ISSUE 5 acceptance).
+//!
+//! Protocol: ingest n blob points into a 4-shard engine and publish an
+//! epoch. Then remove a 10% id-scattered subset by value (`remove_batch`)
+//! and time (a) the removal itself and (b) the churn `cluster()` that
+//! folds it in — the non-monotone window pays one full re-fold of the
+//! retained summaries, but no bridge re-search and no per-shard
+//! recompute. Compare against the brute-force alternative a system
+//! without incremental deletion would pay: a fresh engine over the
+//! survivors, built and merged from scratch. Conformance is asserted,
+//! not just printed: the churned epoch must be partition-identical to
+//! `Engine::reference_cluster`, deleted ids must label -1, and the merge
+//! after the churn must be back on the cached path.
+//!
+//! Run: `cargo bench --bench deletion_churn` (optional first arg
+//! overrides n, e.g. `-- 2000` for the CI smoke pass).
+
+use std::time::Instant;
+
+use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::metrics::canonical_labels as canon;
+use fishdbc::{datasets, Item};
+
+fn main() {
+    let n: usize = std::env::args()
+        .skip(1)
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(50_000);
+    let dim = 16;
+    let ds = datasets::blobs::generate(n, dim, 10, 42);
+    let config = EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
+        shards: 4,
+        mcs: 10,
+        ..Default::default()
+    };
+    println!(
+        "# deletion churn: blobs n={n}, dim={dim}, 4 shards, MinPts=10 \
+         ef=20, compact_at={}",
+        config.compact_at
+    );
+
+    let engine = Engine::spawn(ds.metric, config);
+    let t0 = Instant::now();
+    for chunk in ds.items.chunks(512) {
+        engine.add_batch(chunk.to_vec());
+    }
+    engine.flush();
+    let ingest_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let base = engine.cluster(10);
+    let base_cluster_secs = t1.elapsed().as_secs_f64();
+    println!(
+        "ingest {ingest_secs:8.3}s | base cluster {base_cluster_secs:8.3}s \
+         ({} clusters over {} items)",
+        base.clustering.n_clusters, base.n_items
+    );
+
+    // 10% id-scattered churn, removed by value
+    let victims: Vec<Item> = ds.items.iter().step_by(10).cloned().collect();
+    let t2 = Instant::now();
+    let removed = engine.remove_batch(&victims);
+    let remove_secs = t2.elapsed().as_secs_f64();
+    assert_eq!(removed, victims.len(), "every victim must be found");
+    let t3 = Instant::now();
+    let churn = engine.cluster(10);
+    let churn_secs = t3.elapsed().as_secs_f64();
+    let stats = engine.stats();
+    println!(
+        "remove {removed:6} items: {remove_secs:8.3}s ({:.0} removals/s) | \
+         churn cluster {churn_secs:8.3}s | {} changed shards, {} \
+         compactions, {} tombstones left",
+        removed as f64 / remove_secs.max(1e-9),
+        churn.n_changed_shards,
+        stats.compactions,
+        stats.tombstoned_items,
+    );
+
+    // conformance: partition-identical to the from-scratch reference over
+    // the survivors, deleted ids -1
+    let reference = engine.reference_cluster(10);
+    assert_eq!(churn.n_msf_edges, reference.n_msf_edges);
+    let conformant = canon(&churn.clustering.labels)
+        == canon(&reference.clustering.labels);
+    let deleted_ok = engine
+        .deleted_globals()
+        .iter()
+        .all(|&g| churn.clustering.labels[g as usize] == -1);
+    // post-churn window is monotone again: cached path
+    let t4 = Instant::now();
+    let after = engine.cluster(10);
+    let idle_secs = t4.elapsed().as_secs_f64();
+    println!(
+        "idle  cluster {idle_secs:8.3}s | {} changed shards (cached path \
+         restored: {})",
+        after.n_changed_shards,
+        after.n_changed_shards == 0,
+    );
+
+    // the brute-force alternative: rebuild from the survivors
+    let survivors: Vec<Item> = ds
+        .items
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % 10 != 0)
+        .map(|(_, it)| it.clone())
+        .collect();
+    let fresh = Engine::spawn(ds.metric, config);
+    let t5 = Instant::now();
+    for chunk in survivors.chunks(512) {
+        fresh.add_batch(chunk.to_vec());
+    }
+    fresh.flush();
+    let _ = fresh.cluster(10);
+    let rebuild_secs = t5.elapsed().as_secs_f64();
+    fresh.shutdown();
+
+    let churn_total = remove_secs + churn_secs;
+    println!(
+        "# churn handling (remove + recluster): {churn_total:.3}s vs \
+         {rebuild_secs:.3}s rebuild-from-survivors ({:.1}% of rebuild)",
+        churn_total / rebuild_secs.max(1e-9) * 100.0
+    );
+    let correct = conformant && deleted_ok && after.n_changed_shards == 0;
+    let pass = correct && churn_total < rebuild_secs;
+    println!(
+        "# acceptance: {} (conformant={conformant} deleted-1={deleted_ok} \
+         cached-after={} faster-than-rebuild={})",
+        if pass { "PASS" } else { "FAIL" },
+        after.n_changed_shards == 0,
+        churn_total < rebuild_secs,
+    );
+    engine.shutdown();
+    // the correctness conditions gate CI (the bench-smoke job runs this
+    // binary); the timing comparison stays advisory — tiny-n CI boxes
+    // are too noisy to gate on wall clock
+    if !correct {
+        std::process::exit(1);
+    }
+}

@@ -13,6 +13,32 @@
 //! changed shards' forests ∪ changed shards' bridge sets), and a merge
 //! where nothing changed reuses the cached forest outright.
 //!
+//! **The cached-MSF lemma is explicitly *non-monotone-unsafe*.** Deletion
+//! removes nodes, so the union graph can shrink — and then "an evicted
+//! edge can never re-enter" stops being true: an edge that lost a Kruskal
+//! cycle *through a now-deleted node* would belong in the new MSF, but
+//! nobody retained it. The engine handles this in two layers. (1) A
+//! shard's merge **stamp includes its cumulative removal count**, so any
+//! deletion flips that shard to "changed" and its whole surviving
+//! contribution (tombstone-filtered forest + bridge set) is re-derived
+//! from live state. (2) A window that saw any deletion **drops the cached
+//! global forest outright** and re-folds every retained structure — all
+//! current forests plus all bridge sets, filtered of deleted endpoints.
+//! Merely filtering the cache would not do: it can neither resurrect an
+//! edge it evicted through a dead cycle nor notice an edge its source
+//! structure dropped inside the same window (see `merge_forest`). The
+//! O(Δ) cached path is therefore only ever taken across *monotone*
+//! windows, where the lemma holds unconditionally. What deletion can
+//! still lose — inside retained per-shard structures — are candidate
+//! edges evicted in earlier epochs by Kruskal cycles through the deleted
+//! node (they were never recorded anywhere); that residual approximation
+//! is shared with the reference oracle (which reads the same retained
+//! structures) and erased by compaction, which replays the shard's
+//! survivors from scratch once the tombstone ratio crosses
+//! `EngineConfig::compact_at`. The conformance contract is unaffected:
+//! [`Engine::reference_cluster`] merges the same surviving state from
+//! scratch, and the stress harness holds every epoch to it.
+//!
 //! Bridges use mutual reachability max(d, core_s(x), core_t(y)) with each
 //! endpoint's core distance taken from its own shard — shard-local cores
 //! are computed from a uniform subsample (hash routing), so they estimate
@@ -35,7 +61,7 @@ use std::time::Instant;
 
 use crate::distances::Metric;
 use crate::mst::{Edge, Msf};
-use crate::util::fasthash::FastMap;
+use crate::util::fasthash::{FastMap, FastSet};
 
 use super::pipeline::Pipeline;
 use super::shard::{rotation_target, BridgeState, ShardState};
@@ -49,6 +75,11 @@ pub(crate) struct ShardStamp {
     pub mst_updates: u64,
     pub msf_len: usize,
     pub bridge_gen: u64,
+    /// Cumulative removals ([`ShardState::removed_globals`] length): any
+    /// deletion must flip the shard to "changed" — the cached-path lemma
+    /// assumes monotone growth (see the module docs) — even when it
+    /// happens to leave the item count and forest length untouched.
+    pub removals: usize,
 }
 
 /// The previous epoch's merge result (the "cached global MSF").
@@ -107,18 +138,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         let states: Vec<&ShardState<T, M>> = guards.iter().map(|g| &**g).collect();
         let bridges: Vec<&Arc<Mutex<BridgeState>>> =
             self.shard_handles().iter().map(|s| &s.bridge).collect();
-        let n_items: usize = states.iter().map(|st| st.f.len()).sum();
-        // the label space must cover every *applied* global id — with
-        // concurrent ingestion a shard can have applied ids whose batch
-        // siblings are still queued elsewhere, and interleaved add_batch
-        // callers can even make a shard's globals non-monotone, so scan
-        // for the true maximum
-        let n = states
-            .iter()
-            .filter_map(|st| st.globals.iter().copied().max())
-            .max()
-            .map_or(0, |m| m as usize + 1)
-            .max(n_items);
+        let (n_items, removed, n) = survivor_space(&states);
 
         // 1. bridge catch-up: first-cover above each coverage watermark,
         //    re-search the closing same-epoch window below it
@@ -129,6 +149,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
             self.config().bridge_k,
             self.config().bridge_fanout,
             self.config().fishdbc.alpha,
+            self.deleted_registry(),
         );
         let bridge_secs = tb.elapsed().as_secs_f64();
 
@@ -145,12 +166,13 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
                     mst_updates: st.f.stats().mst_updates,
                     msf_len: st.f.msf_edges().len(),
                     bridge_gen: b.generation,
+                    removals: st.removed_globals.len(),
                 }
             })
             .collect();
         let tk = Instant::now();
         let (msf, n_bridge_edges, n_changed_shards) =
-            merge_forest(ms.cache.as_ref(), &states, &bridges, &stamps, n);
+            merge_forest(ms.cache.as_ref(), &states, &bridges, &stamps, n, &removed);
         let kruskal_secs = tk.elapsed().as_secs_f64();
 
         // 3. next epoch's frozen snapshots, while the read guards are
@@ -164,15 +186,20 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         drop(guards);
 
         // 4. back half through the shared pipeline (content-hash cached)
-        let (clustering, stages) = ms.pipeline.run(msf.edges(), n, mcs, false);
+        let (mut clustering, stages) = ms.pipeline.run(msf.edges(), n, mcs, false);
         let n_msf_edges = msf.edges().len();
         ms.cache = Some(MergeCache { global: msf, n, stamps });
         ms.merges += 1;
         drop(ms);
 
+        // deleted ids label -1 in every epoch (they are edge-free
+        // singletons already; the mask pins the contract)
+        mask_deleted(&mut clustering.labels, &removed);
+
         let snap = Arc::new(EngineSnapshot {
             epoch,
             n_items,
+            n_deleted: removed.len(),
             n_shards: self.n_shards(),
             n_bridge_edges,
             n_msf_edges,
@@ -186,6 +213,47 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         self.set_latest(Arc::clone(&snap));
         snap
     }
+}
+
+/// Force every deleted global id to the noise label (shared by the delta
+/// merge and the reference merge so the two cannot drift).
+fn mask_deleted(labels: &mut [i32], removed: &[u32]) {
+    for &gid in removed {
+        if let Some(l) = labels.get_mut(gid as usize) {
+            *l = -1;
+        }
+    }
+}
+
+/// Survivor accounting, shared verbatim by the delta merge and the
+/// reference merge (the conformance contract depends on both paths
+/// computing the identical id space): `(live item count, cumulative
+/// deleted-gid list, label-space size n)`.
+///
+/// `n_items` counts survivors only — tombstones occupy label slots but
+/// are not items. The label space must cover every *applied* global id:
+/// with concurrent ingestion a shard can have applied ids whose batch
+/// siblings are still queued elsewhere, and interleaved `add_batch`
+/// callers can even make a shard's globals non-monotone, so scan for the
+/// true maximum. Deleted ids keep their (noise) slots even after
+/// compaction erases them from the id maps — the stream stays
+/// index-aligned — so the removed list joins the scan.
+fn survivor_space<T: EngineItem, M: Metric<T> + Clone>(
+    states: &[&ShardState<T, M>],
+) -> (usize, Vec<u32>, usize) {
+    let n_items: usize = states.iter().map(|st| st.f.n_alive()).sum();
+    let removed: Vec<u32> = states
+        .iter()
+        .flat_map(|st| st.removed_globals.iter().copied())
+        .collect();
+    let n = states
+        .iter()
+        .filter_map(|st| st.globals.iter().copied().max())
+        .chain(removed.iter().copied())
+        .max()
+        .map_or(0, |m| m as usize + 1)
+        .max(n_items);
+    (n_items, removed, n)
 }
 
 /// Delta bridge search, two bounded jobs per source shard (one scoped
@@ -220,6 +288,7 @@ pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
     k: usize,
     fanout: usize,
     alpha: f64,
+    deleted: &Mutex<FastSet<u32>>,
 ) {
     let s = states.len();
     if s < 2 || k == 0 || fanout == 0 {
@@ -264,8 +333,13 @@ pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
                 // 1. same-epoch window re-search against live states
                 let recheck_end = br.covered.min(len);
                 for li in br.merge_covered..recheck_end {
+                    // tombstoned inside the window: nothing left to bridge
+                    if !st.f.alive(li as u32) {
+                        continue;
+                    }
                     // covered implies the core was finite when first
-                    // searched, and cores only shrink — defensive guard
+                    // searched — but a *deletion* can push it back to +∞
+                    // (fewer known neighbors), so the guard is load-bearing
                     let ci = st.f.cores()[li];
                     if !ci.is_finite() {
                         continue;
@@ -273,7 +347,11 @@ pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
                     let mut searched = false;
                     for j in 0..fanout {
                         let t = rotation_target(si, li, j, s);
-                        if states[t].f.len() <= br.window_seen(t) {
+                        // growth is judged on the monotone insert
+                        // watermark, not the length (compaction shrinks
+                        // lengths without shrinking content the window
+                        // has not seen)
+                        if states[t].inserts as usize <= br.window_seen(t) {
                             continue; // remote has nothing the window missed
                         }
                         searched = true;
@@ -286,6 +364,13 @@ pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
                 // 2. first-pass coverage above the watermark
                 while br.covered < len {
                     let li = br.covered;
+                    // tombstoned before ever being covered: count it
+                    // covered (its +∞ core must not stall the walk)
+                    if !st.f.alive(li as u32) {
+                        br.covered = li + 1;
+                        br.catch_up_items += 1;
+                        continue;
+                    }
                     // O(1) chunked reads (no O(n) bulk core fetch per merge)
                     let ci = st.f.cores()[li];
                     if !ci.is_finite() {
@@ -298,7 +383,7 @@ pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
                     br.covered = li + 1;
                     br.catch_up_items += 1;
                 }
-                br.maybe_compact(alpha, len);
+                br.maybe_compact(alpha, len, deleted);
                 if changed {
                     br.generation += 1;
                 }
@@ -310,13 +395,28 @@ pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
 
 /// Fold the deltas into a new global forest. Returns the forest, the
 /// number of (deduplicated) bridge edges offered to this merge, and the
-/// number of changed shards.
+/// number of stamp-changed shards.
+///
+/// `removed` is the cumulative deleted-gid list. A window that saw any
+/// deletion (detected on the removal stamps) **drops the cached global
+/// forest entirely** and re-folds every retained structure — all current
+/// shard forests plus all bridge sets, filtered of deleted endpoints.
+/// Merely *filtering* the cached forest would be wrong in both
+/// directions: an edge evicted from it by a Kruskal cycle through a
+/// now-deleted node could never re-enter (the cycle no longer exists in
+/// the survivors' graph), and a cached edge whose source structure
+/// dropped it inside the same window would linger. Re-collection costs
+/// one O(n)-edge Kruskal — no per-shard recompute and no bridge
+/// re-search happen for untouched shards, whose stamps stay unchanged
+/// (`n_changed_shards` proves it), and the next deletion-free window is
+/// back on the cached path against the rebuilt cache.
 fn merge_forest<T: EngineItem, M: Metric<T> + Clone>(
     cache: Option<&MergeCache>,
     states: &[&ShardState<T, M>],
     bridges: &[&Arc<Mutex<BridgeState>>],
     stamps: &[ShardStamp],
     n: usize,
+    removed: &[u32],
 ) -> (Msf, usize, usize) {
     let valid = cache
         .map_or(false, |c| c.stamps.len() == stamps.len() && c.n <= n);
@@ -332,29 +432,48 @@ fn merge_forest<T: EngineItem, M: Metric<T> + Clone>(
         // nothing moved since the previous epoch: reuse the cached forest
         // verbatim — skipping even the Kruskal pass keeps its edge order
         // (and therefore the pipeline's content hash) byte-stable, so the
-        // back half short-circuits too
+        // back half short-circuits too. Sound under deletion because the
+        // stamps include removal counts: n_changed == 0 implies no
+        // deletion since the cache, and the cache was rebuilt clean at
+        // the deletion's own merge.
         let c = cache.expect("valid implies cache");
         return (c.global.clone(), 0, 0);
     }
 
-    // changed shards' forests, relabeled local → global
-    let mut lists: Vec<Vec<Edge>> = Vec::with_capacity(n_changed + 1);
+    // monotone window ⇔ no removal stamp moved: only then is the cached
+    // forest a lossless summary (see the module docs)
+    let monotone = valid && {
+        let c = cache.expect("valid implies cache");
+        stamps
+            .iter()
+            .zip(&c.stamps)
+            .all(|(now, then)| now.removals == then.removals)
+    };
+    let select: Vec<bool> =
+        if monotone { changed } else { vec![true; states.len()] };
+
+    let deleted: FastSet<u32> = removed.iter().copied().collect();
+
+    // selected shards' forests, relabeled local → global (tombstone-free
+    // by construction: removal filters the local forest eagerly)
+    let mut lists: Vec<Vec<Edge>> = Vec::with_capacity(states.len() + 1);
     for (si, st) in states.iter().enumerate() {
-        if changed[si] {
+        if select[si] {
             lists.push(relabel_forest(st));
         }
     }
-    // changed shards' bridge sets, deduplicated across shards: when item
+    // selected shards' bridge sets, deduplicated across shards: when item
     // a in S1 discovered b in S2 and b later discovered a, both buffers
     // hold the pair — offer one edge on the canonical (min, max) key with
-    // the smaller weight
-    let bridge_list = dedup_bridges(bridges, &changed);
+    // the smaller weight. Buffers can still hold offers to since-deleted
+    // remote items (frozen snapshots lag); those are dropped here.
+    let bridge_list = dedup_bridges(bridges, &select, &deleted);
     let n_bridge_edges = bridge_list.len();
     lists.push(bridge_list);
 
     let mut refs: Vec<&[Edge]> = Vec::with_capacity(lists.len() + 1);
-    if valid {
-        refs.push(cache.expect("valid implies cache").global.edges());
+    if monotone {
+        refs.push(cache.expect("monotone implies cache").global.edges());
     }
     refs.extend(lists.iter().map(|l| l.as_slice()));
     let msf = Msf::from_edge_lists(&refs, n.max(1));
@@ -375,16 +494,21 @@ fn relabel_forest<T: EngineItem, M: Metric<T> + Clone>(
 }
 
 /// Canonical-key min-weight deduplication of the selected shards' bridge
-/// sets (shared by the delta merge and the reference merge).
+/// sets, dropping edges to deleted endpoints (shared by the delta merge
+/// and the reference merge).
 fn dedup_bridges(
     bridges: &[&Arc<Mutex<BridgeState>>],
     selected: &[bool],
+    deleted: &FastSet<u32>,
 ) -> Vec<Edge> {
     let mut dedup: FastMap<(u32, u32), f64> = FastMap::default();
     for (si, br) in bridges.iter().enumerate() {
         if selected[si] {
             let b = br.lock().unwrap();
             for e in b.edges() {
+                if deleted.contains(&e.a) || deleted.contains(&e.b) {
+                    continue;
+                }
                 dedup
                     .entry(Edge::key(e.a, e.b))
                     .and_modify(|w| {
@@ -425,10 +549,14 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     /// same forest, and therefore the same labels, as the delta path; the
     /// deterministic stress harness (`tests/engine_stress.rs`) asserts
     /// exactly that after every published epoch — for the framework
-    /// instantiation *and* for non-Euclidean typed engines. Read-only: no
-    /// catch-up search runs, no epoch is published, no cache is touched —
-    /// call it right after [`Engine::cluster`] (with no interleaved
-    /// ingest) so both paths see identical shard state.
+    /// instantiation *and* for non-Euclidean typed engines. Under churn
+    /// the oracle covers the **surviving set**: the reference replays the
+    /// surviving state from scratch (tombstone-filtered forests, bridge
+    /// sets filtered of deleted endpoints, no cached global MSF, no
+    /// stamps), and deleted ids mask to -1 exactly as published epochs
+    /// do. Read-only: no catch-up search runs, no epoch is published, no
+    /// cache is touched — call it right after [`Engine::cluster`] (with
+    /// no interleaved ingest) so both paths see identical shard state.
     #[doc(hidden)]
     pub fn reference_cluster(&self, mcs: usize) -> ReferenceMerge {
         let inner = self.inner();
@@ -441,28 +569,24 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
         let states: Vec<&ShardState<T, M>> = guards.iter().map(|g| &**g).collect();
         let bridges: Vec<&Arc<Mutex<BridgeState>>> =
             inner.shard_handles().iter().map(|s| &s.bridge).collect();
-        let n_items: usize = states.iter().map(|st| st.f.len()).sum();
-        let n = states
-            .iter()
-            .filter_map(|st| st.globals.iter().copied().max())
-            .max()
-            .map_or(0, |m| m as usize + 1)
-            .max(n_items);
+        let (n_items, removed, n) = survivor_space(&states);
 
+        let deleted: FastSet<u32> = removed.iter().copied().collect();
         let lists: Vec<Vec<Edge>> =
             states.iter().map(|st| relabel_forest(st)).collect();
         let all = vec![true; states.len()];
-        let bridge_list = dedup_bridges(&bridges, &all);
+        let bridge_list = dedup_bridges(&bridges, &all, &deleted);
         let mut refs: Vec<&[Edge]> =
             lists.iter().map(|l| l.as_slice()).collect();
         refs.push(&bridge_list);
         let msf = Msf::from_edge_lists(&refs, n.max(1));
-        let clustering = crate::hdbscan::cluster_from_msf_opts(
+        let mut clustering = crate::hdbscan::cluster_from_msf_opts(
             msf.edges(),
             n.max(1),
             mcs,
             false,
         );
+        mask_deleted(&mut clustering.labels, &removed);
         ReferenceMerge {
             clustering,
             n_items,
@@ -575,7 +699,7 @@ mod tests {
         br.note_window_snap(2, 50);
         br.note_window_snap(2, 40);
         br.note_window_snap(2, 60);
-        assert_eq!(br.window_seen(2), 40, "min snapshot length wins");
+        assert_eq!(br.window_seen(2), 40, "min insert watermark wins");
         assert_eq!(br.window_seen(0), usize::MAX);
         br.covered = 7;
         br.finish_window();
@@ -589,6 +713,7 @@ mod tests {
         // UPDATE_MST lemma the merged forest must be unaffected
         let mut a = BridgeState::new();
         let mut b = BridgeState::new();
+        let none = Mutex::new(FastSet::default());
         let mut rng = crate::util::rng::Rng::new(99);
         let mut offers = Vec::new();
         for _ in 0..200 {
@@ -602,7 +727,7 @@ mod tests {
         for &(x, y, w) in &offers {
             a.offer(x, y, w);
             b.offer(x, y, w);
-            b.maybe_compact(0.1, 10); // aggressively compact b
+            b.maybe_compact(0.1, 10, &none); // aggressively compact b
         }
         assert!(b.compactions > 0, "compaction never triggered");
         let ea: Vec<Edge> = a.edges().collect();
@@ -616,5 +741,42 @@ mod tests {
             ma.total_weight()
         );
         assert_eq!(ma.edges().len(), mb.edges().len());
+    }
+
+    #[test]
+    fn bridge_compaction_filters_dead_edges() {
+        // A dead edge must not win a Kruskal cycle during bridge-buffer
+        // compaction: node 1 is deleted, so (0,1,1.0)+(1,2,1.0) must not
+        // evict the live (0,2,5.0) — the only real link between 0 and 2.
+        let mut br = BridgeState::new();
+        br.offer(0, 1, 1.0);
+        br.offer(1, 2, 1.0);
+        br.offer(0, 2, 5.0);
+        let dead: Mutex<FastSet<u32>> =
+            Mutex::new(std::iter::once(1u32).collect());
+        br.maybe_compact(0.0, 1, &dead); // force compaction
+        assert!(br.compactions > 0);
+        let edges: Vec<Edge> = br.edges().collect();
+        assert_eq!(edges.len(), 1, "dead edges survived: {edges:?}");
+        assert_eq!(Edge::key(edges[0].a, edges[0].b), (0, 2));
+        assert_eq!(edges[0].w, 5.0);
+
+        // and an already-compacted forest is re-filtered once its
+        // endpoints die
+        let mut br = BridgeState::new();
+        br.offer(3, 4, 1.0);
+        let none = Mutex::new(FastSet::default());
+        br.maybe_compact(0.0, 1, &none);
+        assert_eq!(br.n_edges(), 1);
+        br.offer(5, 6, 2.0);
+        let dead: Mutex<FastSet<u32>> =
+            Mutex::new(std::iter::once(4u32).collect());
+        br.maybe_compact(0.0, 1, &dead);
+        let edges: Vec<Edge> = br.edges().collect();
+        assert!(
+            edges.iter().all(|e| e.a != 4 && e.b != 4),
+            "forest kept a dead endpoint: {edges:?}"
+        );
+        assert_eq!(edges.len(), 1);
     }
 }

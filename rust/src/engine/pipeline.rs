@@ -40,7 +40,20 @@
 //!    identically to the previous epoch's (same `n`, same `mcs`), the
 //!    dendrogram → condense → extract stages are skipped entirely and the
 //!    cached clustering is republished.
-//! 4. **Chunked snapshot capture** — the frozen `ShardSnap`s that
+//! 4. **Deletion (non-monotone) windows** — removals tombstone in place
+//!    (`Engine::remove_batch`): the deleted item leaves every search and
+//!    every vote immediately, its global id labels -1 in all future
+//!    epochs, and the deleting shard's stamp flips (stamps carry the
+//!    cumulative removal count). Because the cached-global-MSF lemma in
+//!    step 2 *requires* monotone growth, a window containing any deletion
+//!    drops the cached forest and re-folds all retained structures —
+//!    collection-only work: untouched shards re-run no searches and
+//!    recompute nothing, and the following deletion-free window is back
+//!    on the cached path. Tombstone lifecycle details (tombstone → stamp
+//!    invalidation → compaction at `EngineConfig::compact_at`) live in
+//!    `engine::shard`; the non-monotone caveat is spelled out in
+//!    `engine::merge`.
+//! 5. **Chunked snapshot capture** — the frozen `ShardSnap`s that
 //!    insert-time bridging queries are captured copy-on-write from the
 //!    shards' chunked stores (items, HNSW nodes, cores, id maps — see the
 //!    snapshot-lifecycle notes in `engine::shard`): a capture republishes

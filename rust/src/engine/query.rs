@@ -42,6 +42,17 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     /// nearest clustered neighbors (noise neighbors abstain; ties break
     /// toward the smaller label for determinism — pinned by the
     /// `majority_vote` unit tests in [`crate::fishdbc`]).
+    ///
+    /// Voter slots are reserved for items the pinned epoch *knows*: a
+    /// neighbor ingested after the epoch was published has no label yet
+    /// and is skipped before the `k` budget is spent — it must not crowd
+    /// out labeled voters and flip a probe to noise mid-window (it used
+    /// to: the old path let unknown-global neighbors consume slots and
+    /// then abstain). Tombstoned neighbors never appear at all — the
+    /// shard searches filter them — so churn cannot crowd the vote
+    /// either. Noise-labeled voters still occupy slots: "my neighborhood
+    /// is noise" is information; "my neighborhood is too new to say" is
+    /// not.
     pub fn label_against(
         &self,
         item: &T,
@@ -58,9 +69,13 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             }
         }
         hits.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
-        majority_vote(hits.iter().take(k).map(|&(_, gid)| {
-            snap.clustering.labels.get(gid as usize).copied().unwrap_or(-1)
-        }))
+        majority_vote(
+            hits.iter()
+                .filter_map(|&(_, gid)| {
+                    snap.clustering.labels.get(gid as usize).copied()
+                })
+                .take(k),
+        )
     }
 }
 
@@ -164,6 +179,88 @@ mod tests {
         let l = engine.label_against(&items[0], &snap, 5);
         assert!(l >= -1);
         assert!((l as i64) < snap.clustering.n_clusters as i64);
+        engine.shutdown();
+    }
+
+    /// Regression (ISSUE 5 headline satellite): items ingested after the
+    /// pinned epoch used to consume voter slots — `take(k)` ran before
+    /// the label lookup, so a burst of fresh neighbors ate the whole k
+    /// budget, every one abstained, and the probe flipped to noise
+    /// mid-window. Unknown-global voters are now skipped before `k` is
+    /// spent.
+    #[test]
+    fn fresh_inserts_do_not_eat_voter_slots_on_pinned_snapshot() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(41);
+        let mut items = Vec::new();
+        for _ in 0..150 {
+            items.push(Item::Dense(vec![rng.normal() as f32, rng.normal() as f32]));
+        }
+        for _ in 0..150 {
+            items.push(Item::Dense(vec![
+                100.0 + rng.normal() as f32,
+                100.0 + rng.normal() as f32,
+            ]));
+        }
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            fishdbc: FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+            shards: 2,
+            mcs: 5,
+            ..Default::default()
+        });
+        engine.add_batch(items);
+        let snap = engine.cluster(5);
+        assert!(snap.clustering.n_clusters >= 2);
+        let probe = Item::Dense(vec![0.0, 0.0]);
+        let want = engine.label_against(&probe, &snap, 5);
+        assert!(want >= 0, "probe at a blob center must label");
+
+        // a burst of fresh items swarming the probe: strictly closer than
+        // any stored neighbor, but unknown to the pinned epoch
+        let burst: Vec<Item> = (0..8)
+            .map(|_| {
+                Item::Dense(vec![
+                    (rng.normal() * 0.001) as f32,
+                    (rng.normal() * 0.001) as f32,
+                ])
+            })
+            .collect();
+        engine.add_batch(burst);
+        engine.flush();
+        let got = engine.label_against(&probe, &snap, 5);
+        assert_eq!(
+            got, want,
+            "fresh unknown neighbors ate the voter budget and flipped the \
+             probe"
+        );
+        engine.shutdown();
+    }
+
+    /// Churn-proof serving: removed neighbors vanish from the vote
+    /// immediately (the shard searches filter tombstones), so a probe
+    /// keeps labeling into its surviving cluster against a pinned epoch.
+    #[test]
+    fn removed_neighbors_do_not_flip_pinned_labels() {
+        let (engine, items) = engine_on_blobs(450, 2, 43);
+        let snap = engine.cluster(5);
+        let probe = &items[0];
+        let want = engine.label_against(probe, &snap, 5);
+        if want < 0 {
+            engine.shutdown();
+            return; // noise probe: nothing to defend
+        }
+        // remove half the probe's cluster-mates (every second item of the
+        // same generator blob — ids stride by the 3 centers)
+        let victims: Vec<Item> = items
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % 6 == 3)
+            .map(|(_, it)| it.clone())
+            .collect();
+        let removed = engine.remove_batch(&victims);
+        assert!(removed > 0, "victims must exist");
+        let got = engine.label_against(probe, &snap, 5);
+        assert_eq!(got, want, "churn flipped a pinned-label probe");
         engine.shutdown();
     }
 

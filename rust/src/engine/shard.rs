@@ -35,7 +35,7 @@ use crate::fishdbc::{Fishdbc, FishdbcParams};
 use crate::hnsw::Hnsw;
 use crate::mst::{Edge, Msf};
 use crate::util::chunked::{ChunkDelta, ChunkedVec};
-use crate::util::fasthash::FastMap;
+use crate::util::fasthash::{FastMap, FastSet};
 
 use super::EngineItem;
 
@@ -50,14 +50,59 @@ pub(crate) enum ShardCmd<T> {
 }
 
 /// Shard-local state: the FISHDBC instance plus bookkeeping.
+///
+/// ## Deletion lifecycle (tombstone → stamp invalidation → compaction)
+///
+/// `Engine::remove_batch` routes removals by content hash exactly like
+/// ingest, then applies them here under the shard's *write* lock:
+///
+/// 1. **Tombstone** — the matched local ids are tombstoned inside the
+///    shard's `Fishdbc` (HNSW node kept for routability, core invalidated,
+///    neighbor cores recomputed, forest/candidate edges dropped), the
+///    matching global ids are appended to [`ShardState::removed_globals`]
+///    (the permanent record — deleted global ids label `-1` forever), and
+///    [`ShardState::version`] is bumped so stale frozen snapshots stop
+///    counting as current.
+/// 2. **Stamp invalidation** — the per-shard merge stamp includes the
+///    cumulative removal count, so the next merge re-derives this shard's
+///    whole contribution (filtered forest + bridge set) from scratch:
+///    deletion breaks the monotone-growth premise behind the cached
+///    global MSF, so the O(Δ) cached path is only sound for shards with
+///    no deletions in the window. Untouched shards keep it.
+/// 3. **Compaction** — once the tombstone ratio crosses
+///    `EngineConfig::compact_at`, [`compact_shard`] rebuilds the shard's
+///    FISHDBC by replaying the survivors (fresh HNSW with no dead nodes).
+///    Global ids are stable (survivors keep theirs through the rebuilt
+///    id map); local ids remap, so the bridge coverage watermarks are
+///    remapped to the surviving prefix counts — coverage already earned
+///    is kept, order is preserved.
 pub(crate) struct ShardState<T, M> {
     pub f: Fishdbc<T, Counting<M>>,
-    /// `globals[local_id] = global_id` (dense, append-only, chunked so
-    /// snapshots capture it copy-on-write).
+    /// `globals[local_id] = global_id` (dense, append-only between
+    /// compactions, chunked so snapshots capture it copy-on-write).
     pub globals: ChunkedVec<u32>,
     pub batches: u64,
     /// Wall time this shard spent inserting (its lane of the build).
     pub build_secs: f64,
+    /// Every global id ever removed from this shard, in removal order —
+    /// cumulative: survives compaction (which erases the tombstones
+    /// themselves) and persists in FISHENG v3. The merge filters the
+    /// cached global forest and stale bridge offers against the union of
+    /// these, and masks their labels to -1 in every epoch.
+    pub removed_globals: Vec<u32>,
+    /// Monotone count of items ever *inserted* (never decremented — not
+    /// by removal, not by compaction). The same-epoch window bookkeeping
+    /// compares remote growth against this, because snapshot *lengths*
+    /// stop being monotone once compaction can shrink them.
+    pub inserts: u64,
+    /// Monotone mutation stamp: bumped on every applied batch, removal
+    /// and compaction. A frozen [`ShardSnap`] carrying the same version is
+    /// content-identical to the live state (the "same length ⇒ same
+    /// content" shortcut is unsound under deletion: a removal leaves the
+    /// length unchanged).
+    pub version: u64,
+    /// Compactions run (stats).
+    pub compactions: u64,
 }
 
 impl<T: EngineItem, M: Metric<T> + Clone> ShardState<T, M> {
@@ -67,8 +112,51 @@ impl<T: EngineItem, M: Metric<T> + Clone> ShardState<T, M> {
             globals: ChunkedVec::new(),
             batches: 0,
             build_secs: 0.0,
+            removed_globals: Vec::new(),
+            inserts: 0,
+            version: 0,
+            compactions: 0,
         }
     }
+}
+
+/// Rebuild a shard without its tombstones: replay the survivors through a
+/// fresh FISHDBC (new HNSW, new neighborhoods, new forest — the from-
+/// scratch state the deletion approximations documented at
+/// `Fishdbc::remove_batch_ids` converge back to). Global ids are stable;
+/// local ids remap by surviving order, and the bridge coverage watermarks
+/// remap to the surviving prefix counts so first-pass coverage is neither
+/// lost nor repeated. Bridge buffers/forests are keyed by global ids and
+/// survive as-is (edges to deleted ids are filtered at every merge).
+pub(crate) fn compact_shard<T: EngineItem, M: Metric<T> + Clone>(
+    st: &mut ShardState<T, M>,
+    br: &mut BridgeState,
+) {
+    let old_len = st.f.len();
+    let old_covered = br.covered.min(old_len);
+    let old_merge_covered = br.merge_covered.min(old_covered);
+    let mut f = Fishdbc::new(st.f.metric().clone(), *st.f.params());
+    let mut globals = ChunkedVec::new();
+    let (mut covered, mut merge_covered) = (0usize, 0usize);
+    for li in 0..old_len {
+        if !st.f.alive(li as u32) {
+            continue;
+        }
+        f.add(st.f.items()[li].clone());
+        globals.push(st.globals[li]);
+        if li < old_covered {
+            covered += 1;
+        }
+        if li < old_merge_covered {
+            merge_covered += 1;
+        }
+    }
+    st.f = f;
+    st.globals = globals;
+    st.compactions += 1;
+    st.version += 1;
+    br.covered = covered;
+    br.merge_covered = merge_covered;
 }
 
 // ------------------------------------------------------------- snapshots --
@@ -117,6 +205,17 @@ pub(crate) struct ShardSnap<T, M> {
     pub cores: ChunkedVec<f64>,
     /// local → global id map at snapshot time.
     pub globals: ChunkedVec<u32>,
+    /// Tombstone marks at snapshot time: bridge searches route through
+    /// tombstoned nodes but never return them. (Items deleted *after*
+    /// capture can still be offered; the merge filters those edges against
+    /// the global deleted set.)
+    pub tombs: ChunkedVec<bool>,
+    /// Capture-time [`ShardState::version`] — the content-identity stamp.
+    pub version: u64,
+    /// Capture-time [`ShardState::inserts`] (same-epoch window bookkeeping).
+    pub inserts: u64,
+    /// Live tombstone count at capture (search-degradation guard).
+    pub n_tombs: usize,
 }
 
 /// Approximate bytes of one stored item (bytes-copied accounting), built
@@ -126,7 +225,7 @@ fn item_bytes<T: EngineItem>(item: &T) -> usize {
 }
 
 impl<T: EngineItem, M: Metric<T> + Clone> ShardSnap<T, M> {
-    /// O(Δ) capture: four chunk-pointer clones under the shard's read
+    /// O(Δ) capture: five chunk-pointer clones under the shard's read
     /// lock. See the snapshot-lifecycle notes at the top of this section.
     pub fn capture(st: &ShardState<T, M>) -> ShardSnap<T, M> {
         ShardSnap {
@@ -136,12 +235,28 @@ impl<T: EngineItem, M: Metric<T> + Clone> ShardSnap<T, M> {
             hnsw: st.f.hnsw().clone(),
             cores: st.f.cores().clone(),
             globals: st.globals.clone(),
+            tombs: st.f.tombs().clone(),
+            version: st.version,
+            inserts: st.inserts,
+            n_tombs: st.f.n_tombstoned(),
         }
     }
 
     /// Approximate k nearest stored items to `query`, ascending distance.
+    /// Tombstoned nodes are traversed but never returned.
     pub fn nearest(&self, query: &T, k: usize) -> Vec<(u32, f64)> {
-        self.hnsw.search(&self.items, &self.metric, query, k, self.ef)
+        if self.n_tombs == 0 {
+            self.hnsw.search(&self.items, &self.metric, query, k, self.ef)
+        } else {
+            self.hnsw.search_filtered(
+                &self.items,
+                &self.metric,
+                query,
+                k,
+                self.ef,
+                |id| !self.tombs[id as usize],
+            )
+        }
     }
 
     /// Copied-vs-shared chunk accounting against the snapshot this one
@@ -152,6 +267,7 @@ impl<T: EngineItem, M: Metric<T> + Clone> ShardSnap<T, M> {
         });
         d.add(self.cores.chunk_delta(prev.map(|p| &p.cores), |c| c.len() * 8));
         d.add(self.globals.chunk_delta(prev.map(|p| &p.globals), |c| c.len() * 4));
+        d.add(self.tombs.chunk_delta(prev.map(|p| &p.tombs), |c| c.len()));
         d.add(self.hnsw.node_chunk_delta(prev.map(|p| &p.hnsw)));
         d
     }
@@ -188,19 +304,22 @@ impl<T: EngineItem, M: Metric<T> + Clone> Snaps<T, M> {
     }
 
     pub fn set(&self, shard: usize, snap: Arc<ShardSnap<T, M>>) {
-        let len = snap.items.len();
-        self.lens[shard].fetch_max(len as u64, Ordering::Relaxed);
+        // (`lens` is NOT updated here: captures run outside the state
+        // lock, and a stale capture racing a compaction could re-raise a
+        // length that legitimately shrank. `set_len` under the state lock
+        // is the single writer.)
         // The delta walk is stats-only work, and bridge workers read this
         // slot on their hot path, so it runs with the slot lock released.
         // Captures of the same shard can race (cadence refresh vs merge
-        // refresh): a newer-or-equal incumbent always wins — equal-length
-        // snapshots are content-identical (the stores are pure functions
-        // of the insert sequence) — and the counter delta is only applied
-        // when the publish replaces exactly the snapshot it was computed
-        // against, so no copied chunk is ever counted twice.
+        // refresh): a newer-or-equal incumbent always wins — equal-version
+        // snapshots are content-identical (the version stamp bumps on
+        // every mutation, including removals, which item *counts* cannot
+        // see) — and the counter delta is only applied when the publish
+        // replaces exactly the snapshot it was computed against, so no
+        // copied chunk is ever counted twice.
         let mut prev = self.slots[shard].lock().unwrap().clone();
         loop {
-            if prev.as_ref().is_some_and(|p| p.items.len() >= len) {
+            if prev.as_ref().is_some_and(|p| p.version >= snap.version) {
                 return;
             }
             let delta = snap.chunk_delta_vs(prev.as_deref());
@@ -237,9 +356,13 @@ impl<T: EngineItem, M: Metric<T> + Clone> Snaps<T, M> {
         )
     }
 
-    /// Publish a shard's live item count (its worker, after each batch).
+    /// Publish a shard's live item count. Callers hold the shard's state
+    /// lock (worker after a batch, engine thread after a removal or
+    /// compaction), so writes are serialized and a plain store is right —
+    /// compaction legitimately *shrinks* the count, which a max would
+    /// never let drop.
     pub fn set_len(&self, shard: usize, len: usize) {
-        self.lens[shard].fetch_max(len as u64, Ordering::Relaxed);
+        self.lens[shard].store(len as u64, Ordering::Relaxed);
     }
 
     pub fn live_len(&self, shard: usize) -> usize {
@@ -280,10 +403,13 @@ pub(crate) struct BridgeState {
     /// Persisted as the v2 `covered` field, so a reloaded engine re-runs
     /// the (bounded) window re-search instead of silently dropping it.
     pub merge_covered: usize,
-    /// Per remote shard: the smallest frozen-snapshot length any
-    /// insert-time walk of the current window queried (`usize::MAX` =
-    /// none). Lets the catch-up skip the window re-search for remotes
-    /// that did not grow past what every window item already saw.
+    /// Per remote shard: the smallest frozen-snapshot **insert watermark**
+    /// ([`ShardState::inserts`]) any insert-time walk of the current
+    /// window queried (`usize::MAX` = none). Lets the catch-up skip the
+    /// window re-search for remotes that did not grow past what every
+    /// window item already saw. Insert watermarks, not snapshot lengths:
+    /// lengths stop being monotone once compaction can shrink a remote,
+    /// which would make "remote grew" undetectable.
     pub window_seen: Vec<usize>,
     /// Bumped whenever the edge set changes (the merge's change detector).
     pub generation: u64,
@@ -295,11 +421,13 @@ pub(crate) struct BridgeState {
     pub insert_items: u64,
     /// Items the merge catch-up first-covered (this process). The two
     /// walks share each shard's ordered watermark, so for an engine that
-    /// was not reloaded mid-run, `covered == insert_items +
-    /// catch_up_items` at any flushed quiescent point — first-pass
-    /// coverage happens exactly once (a snapshot refresh that rewound a
-    /// watermark would break the equality). Regression-tested in
-    /// `engine_integration`. (Counters restart at 0 on engine reload; the
+    /// was not reloaded mid-run and saw no compaction, `covered ==
+    /// insert_items + catch_up_items` at any flushed quiescent point —
+    /// first-pass coverage happens exactly once (a snapshot refresh that
+    /// rewound a watermark would break the equality). Regression-tested
+    /// in `engine_integration` (deletion-free). (Counters restart at 0 on
+    /// engine reload, and compaction remaps `covered` down to the
+    /// surviving prefix without rescaling the historical counters; the
     /// watermark itself is persisted.)
     pub catch_up_items: u64,
     /// Items the merge catch-up *re-searched* to close the same-epoch
@@ -392,16 +520,17 @@ impl BridgeState {
     }
 
     /// Record that an insert-time walk of the current epoch window queried
-    /// remote shard `t` through a frozen snapshot of `snap_len` items.
-    pub fn note_window_snap(&mut self, t: usize, snap_len: usize) {
+    /// remote shard `t` through a frozen snapshot captured at insert
+    /// watermark `snap_inserts`.
+    pub fn note_window_snap(&mut self, t: usize, snap_inserts: usize) {
         if self.window_seen.len() <= t {
             self.window_seen.resize(t + 1, usize::MAX);
         }
-        self.window_seen[t] = self.window_seen[t].min(snap_len);
+        self.window_seen[t] = self.window_seen[t].min(snap_inserts);
     }
 
-    /// Smallest remote length of shard `t` any window item's insert-time
-    /// search saw (`usize::MAX` when no window item queried `t`).
+    /// Smallest insert watermark of shard `t` any window item's insert-
+    /// time search saw (`usize::MAX` when no window item queried `t`).
     pub fn window_seen(&self, t: usize) -> usize {
         self.window_seen.get(t).copied().unwrap_or(usize::MAX)
     }
@@ -413,17 +542,35 @@ impl BridgeState {
         self.window_seen.clear();
     }
 
-    /// α·n flush discipline: fold the buffer into the bridge forest when it
-    /// outgrows `alpha * local_len`.
-    pub fn maybe_compact(&mut self, alpha: f64, local_len: usize) {
+    /// α·n flush discipline: fold the buffer into the bridge forest when
+    /// it outgrows `alpha * local_len`. `deleted` is the engine-wide
+    /// deleted-global-id registry: edges touching a deleted id must not
+    /// enter this Kruskal pass — a dead edge winning a cycle here would
+    /// evict a *live* edge from the bridge forest even though the cycle
+    /// does not exist in the survivors' graph (the dead endpoint is
+    /// filtered from every merge), silently losing cross-shard
+    /// connectivity. Offers already buffered before a deletion are purged
+    /// on the same occasion.
+    pub fn maybe_compact(
+        &mut self,
+        alpha: f64,
+        local_len: usize,
+        deleted: &Mutex<FastSet<u32>>,
+    ) {
         if (self.buf.len() as f64) <= alpha * local_len.max(1) as f64 {
             return;
+        }
+        let dead = deleted.lock().unwrap();
+        if !dead.is_empty() {
+            self.msf.retain_nodes(|id| !dead.contains(&id));
         }
         let edges: Vec<Edge> = self
             .buf
             .drain()
+            .filter(|&((a, b), _)| !dead.contains(&a) && !dead.contains(&b))
             .map(|((a, b), w)| Edge::new(a, b, w))
             .collect();
+        drop(dead);
         let n = edges
             .iter()
             .map(|e| e.a.max(e.b) as usize + 1)
@@ -482,6 +629,11 @@ pub(crate) struct BridgeCtx<T, M> {
     pub lag_limit: usize,
     pub snaps: Arc<Snaps<T, M>>,
     pub bridge: Arc<Mutex<BridgeState>>,
+    /// Engine-wide deleted-global-id registry (bridge-forest compaction
+    /// must not let dead edges win Kruskal cycles). Lock order:
+    /// state → bridge → deleted, and `deleted` is only ever taken as a
+    /// leaf.
+    pub deleted: Arc<Mutex<FastSet<u32>>>,
 }
 
 /// Insert-time bridge maintenance: advance this shard's coverage watermark
@@ -546,6 +698,13 @@ fn bridge_new_items<T: EngineItem, M: Metric<T> + Clone>(
     let mut changed = false;
     while br.covered < len {
         let li = br.covered;
+        // tombstoned mid-window: nothing to bridge, and its +∞ core must
+        // not stall the watermark forever — count it covered and move on
+        if !st.f.alive(li as u32) {
+            br.covered = li + 1;
+            br.insert_items += 1;
+            continue;
+        }
         let ci = st.f.core_distance(li as u32);
         if !ci.is_finite() {
             break; // too few neighbors yet; retry once the shard has grown
@@ -562,12 +721,12 @@ fn bridge_new_items<T: EngineItem, M: Metric<T> + Clone>(
                     changed = true;
                 }
             }
-            br.note_window_snap(t, snap.items.len());
+            br.note_window_snap(t, snap.inserts as usize);
         }
         br.covered = li + 1;
         br.insert_items += 1;
     }
-    br.maybe_compact(ctx.alpha, len);
+    br.maybe_compact(ctx.alpha, len, &ctx.deleted);
     if changed {
         br.generation += 1;
     }
@@ -625,6 +784,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Shard<T, M> {
             lag_limit: ctx.lag_limit,
             snaps: ctx.snaps,
             bridge: Arc::clone(&bridge),
+            deleted: ctx.deleted,
         };
         let handle = std::thread::Builder::new()
             .name(format!("fishdbc-shard-{id}"))
@@ -642,10 +802,14 @@ impl<T, M> Shard<T, M> {
         self.tx.send(cmd).expect("shard worker gone");
     }
 
-    /// Idempotent: safe to call from both `Engine::shutdown` and `Drop`.
+    /// Idempotent: safe to call from both `Engine::shutdown` and `Drop` —
+    /// including during a panic unwind with poisoned locks (a worker that
+    /// died holding its state lock must not turn drop into a double
+    /// panic/abort; its handle is still joined).
     pub fn shutdown(&self) {
         let _ = self.tx.send(ShardCmd::Shutdown);
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        let mut guard = self.handle.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(h) = guard.take() {
             let _ = h.join();
         }
     }
@@ -660,6 +824,7 @@ pub(crate) struct BridgeCtxSeed<T, M> {
     pub alpha: f64,
     pub lag_limit: usize,
     pub snaps: Arc<Snaps<T, M>>,
+    pub deleted: Arc<Mutex<FastSet<u32>>>,
 }
 
 fn run<T: EngineItem, M: Metric<T> + Clone>(
@@ -673,11 +838,13 @@ fn run<T: EngineItem, M: Metric<T> + Clone>(
             Ok(ShardCmd::AddBatch(batch)) => {
                 let t0 = Instant::now();
                 let mut st = state.write().unwrap();
+                st.inserts += batch.len() as u64;
                 for (gid, item) in batch {
                     st.f.add(item);
                     st.globals.push(gid);
                 }
                 st.batches += 1;
+                st.version += 1;
                 st.build_secs += t0.elapsed().as_secs_f64();
                 ctx.snaps.set_len(ctx.si, st.f.len());
                 // insert-time bridge discovery against frozen snapshots

@@ -55,6 +55,10 @@ pub struct FishdbcStats {
     pub mst_updates: u64,
     pub candidate_edges_buffered: usize,
     pub msf_edges: usize,
+    /// Items tombstoned by [`Fishdbc::remove`] and still physically
+    /// present (the engine compacts them away past
+    /// `EngineConfig::compact_at`).
+    pub tombstoned: usize,
 }
 
 /// Incremental FISHDBC clusterer over items of type `T` under metric `M`.
@@ -74,6 +78,14 @@ pub struct Fishdbc<T, M> {
     candidates: FastMap<(u32, u32), f64>,
     mst_updates: u64,
     log_buf: DistLog,
+    /// Tombstone marks, index-aligned with `items` (chunked so the
+    /// engine's frozen snapshots capture them copy-on-write). A tombstoned
+    /// item stays in the HNSW for routability but is invisible to
+    /// `nearest`, contributes to nobody's core distance, and carries no
+    /// forest or candidate edges.
+    tombs: ChunkedVec<bool>,
+    /// Live tombstone count (`tombs.iter().filter(|t| **t).count()`).
+    n_tombs: usize,
 }
 
 impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
@@ -93,6 +105,8 @@ impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
             log_buf: DistLog::new(),
             params,
             items: ChunkedVec::new(),
+            tombs: ChunkedVec::new(),
+            n_tombs: 0,
         }
     }
 
@@ -132,24 +146,56 @@ impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
             mst_updates: self.mst_updates,
             candidate_edges_buffered: self.candidates.len(),
             msf_edges: self.msf.edges().len(),
+            tombstoned: self.n_tombs,
         }
     }
 
-    /// Core distance of an item (+∞ until MinPts neighbors are known).
+    /// Core distance of an item (+∞ until MinPts neighbors are known, and
+    /// permanently +∞ once the item is tombstoned).
     pub fn core_distance(&self, id: u32) -> f64 {
         self.neighbors.core(id)
+    }
+
+    /// Whether item `id` is stored and not tombstoned.
+    #[inline]
+    pub fn alive(&self, id: u32) -> bool {
+        (id as usize) < self.items.len() && !self.tombs[id as usize]
+    }
+
+    /// Live tombstone count (items removed but not yet compacted away).
+    pub fn n_tombstoned(&self) -> usize {
+        self.n_tombs
+    }
+
+    /// Items alive (stored minus tombstoned).
+    pub fn n_alive(&self) -> usize {
+        self.items.len() - self.n_tombs
+    }
+
+    /// The chunked tombstone marks (the engine's frozen snapshots clone
+    /// this alongside the other stores).
+    pub fn tombs(&self) -> &ChunkedVec<bool> {
+        &self.tombs
     }
 
     /// ADD (Algorithm 1): incrementally insert one item. Returns its id.
     pub fn add(&mut self, item: T) -> u32 {
         let id = self.items.len() as u32;
         self.items.push(item);
+        self.tombs.push(false);
         self.neighbors.ensure_len(self.items.len());
 
         // HNSW insertion; every d() call lands in log_buf (piggybacking)
         let mut log = std::mem::take(&mut self.log_buf);
         log.clear();
         self.hnsw.add(&self.items, &self.metric, id, &mut log);
+
+        // Tombstoned nodes stay routable (they appear in the log), but
+        // must not re-enter anyone's neighborhood or the candidate graph.
+        if self.n_tombs > 0 {
+            let tombs = &self.tombs;
+            log.retain(|&(a, b, _)| !tombs[a as usize] && !tombs[b as usize]);
+        }
 
         // First update all neighbor sets so core distances reflect
         // everything this insertion discovered, remembering whose top-k
@@ -206,6 +252,56 @@ impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
         }
     }
 
+    /// REMOVE: incrementally delete one item by id. See
+    /// [`Fishdbc::remove_batch_ids`]; returns false when the id is out of
+    /// range or already tombstoned.
+    pub fn remove(&mut self, id: u32) -> bool {
+        self.remove_batch_ids(&[id]) == 1
+    }
+
+    /// Incremental deletion (the engine's churn path): tombstone the given
+    /// local ids. For each removed item x:
+    ///
+    /// * its HNSW node **stays** (removing nodes would tear routing holes
+    ///   in the navigable graph); it is skipped by [`Fishdbc::nearest`]
+    ///   and never re-enters a neighborhood or the candidate graph,
+    /// * its core distance is invalidated (+∞) and every neighbor whose
+    ///   MinPts-neighborhood contained x gets its core recomputed — cores
+    ///   can only *increase*, matching the paper's "distance to the
+    ///   MinPts-th closest **known** neighbor" model with x unknown again,
+    /// * buffered candidate edges touching x are dropped, and the forest
+    ///   keeps only edges between survivors (a subsequence of a sorted
+    ///   forest is still a sorted forest).
+    ///
+    /// Deletion breaks UPDATE_MST's monotone-growth premise: an edge that
+    /// earlier lost a Kruskal cycle *through x* is not resurrected (it was
+    /// never retained), so the surviving forest is an MSF of the recorded
+    /// (forest ∪ buffer) graph minus x — not necessarily of everything
+    /// ever offered minus x. Surviving edge weights likewise keep their
+    /// discovery-time reachability (cores only rose, so they are lower
+    /// bounds). Both approximations disappear at the next compaction,
+    /// which replays the survivors from scratch.
+    ///
+    /// Returns how many ids were newly tombstoned (out-of-range and
+    /// already-tombstoned ids are skipped). O(batch + n·MinPts).
+    pub fn remove_batch_ids(&mut self, ids: &[u32]) -> usize {
+        let mut removed = crate::util::fasthash::FastSet::default();
+        for &id in ids {
+            if self.alive(id) && removed.insert(id) {
+                *self.tombs.get_mut(id as usize) = true;
+            }
+        }
+        if removed.is_empty() {
+            return 0;
+        }
+        self.n_tombs += removed.len();
+        self.neighbors.purge(&removed);
+        self.candidates
+            .retain(|&(a, b), _| !removed.contains(&a) && !removed.contains(&b));
+        self.msf.retain_nodes(|id| !removed.contains(&id));
+        removed.len()
+    }
+
     #[inline]
     fn offer_candidate(
         candidates: &mut FastMap<(u32, u32), f64>,
@@ -233,9 +329,13 @@ impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
         if self.candidates.is_empty() {
             return;
         }
+        // tombstoned endpoints cannot enter the forest (belt: the add and
+        // remove paths already keep them out of the buffer)
+        let tombs = &self.tombs;
         let edges: Vec<Edge> = self
             .candidates
             .drain()
+            .filter(|&((a, b), _)| !tombs[a as usize] && !tombs[b as usize])
             .map(|((a, b), w)| Edge::new(a, b, w))
             .collect();
         self.msf.update(edges, self.items.len());
@@ -256,12 +356,23 @@ impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
         if self.items.is_empty() {
             return cluster_from_msf_opts(&[], 1, mcs, allow_single_cluster);
         }
-        cluster_from_msf_opts(
+        let mut c = cluster_from_msf_opts(
             self.msf.edges(),
             self.items.len(),
             mcs,
             allow_single_cluster,
-        )
+        );
+        // tombstoned items are noise in every clustering (they are already
+        // edge-free singletons; the explicit mask pins the contract even
+        // for degenerate mcs / allow_single_cluster combinations)
+        if self.n_tombs > 0 {
+            for (i, &t) in self.tombs.iter().enumerate() {
+                if t {
+                    c.labels[i] = -1;
+                }
+            }
+        }
+        c
     }
 
     /// Current approximate MSF (introspection / tests).
@@ -295,6 +406,9 @@ impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
     pub fn knn_only_msf(&self) -> Msf {
         let mut edges = FastMap::default();
         for x in 0..self.items.len() as u32 {
+            if !self.alive(x) {
+                continue; // purge already emptied its set; belt
+            }
             for (y, d) in self.neighbors.get(x).iter() {
                 let rd =
                     d.max(self.neighbors.core(x)).max(self.neighbors.core(y));
@@ -346,6 +460,7 @@ impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
         candidates: Vec<(u32, u32, f64)>,
         mst_updates: u64,
     ) -> Self {
+        let n = items.len();
         Fishdbc {
             params,
             metric,
@@ -359,20 +474,52 @@ impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
                 .collect(),
             mst_updates,
             log_buf: DistLog::new(),
+            tombs: ChunkedVec::from_vec(vec![false; n]),
+            n_tombs: 0,
         }
+    }
+
+    /// Re-mark persisted tombstones on a freshly rebuilt instance (see
+    /// `persist`). The persisted neighbor sets, candidate buffer and
+    /// forest were already purged when the removal originally ran, so only
+    /// the marks themselves need restoring. Out-of-range ids are ignored
+    /// (the loader validates them first); duplicate ids count once.
+    pub fn apply_tombstones(&mut self, ids: &[u32]) {
+        for &id in ids {
+            if (id as usize) < self.items.len() && !self.tombs[id as usize] {
+                *self.tombs.get_mut(id as usize) = true;
+                self.n_tombs += 1;
+            }
+        }
+    }
+
+    /// Tombstoned local ids, ascending (persistence export).
+    pub fn tombs_export(&self) -> Vec<u32> {
+        self.tombs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &t)| t.then_some(i as u32))
+            .collect()
     }
 
     /// Approximate k-nearest neighbors of an *external* query item (no
     /// insertion, no state mutation, not counted in [`Self::dist_calls`]).
     /// Ascending distance. `ef` defaults to the construction beam width.
+    /// Tombstoned items are traversed (routability) but never returned.
     pub fn nearest(&self, query: &T, k: usize, ef: Option<usize>) -> Vec<(u32, f64)> {
-        self.hnsw.search(
-            &self.items,
-            &self.metric,
-            query,
-            k,
-            ef.unwrap_or(self.params.ef),
-        )
+        let ef = ef.unwrap_or(self.params.ef);
+        if self.n_tombs == 0 {
+            self.hnsw.search(&self.items, &self.metric, query, k, ef)
+        } else {
+            self.hnsw.search_filtered(
+                &self.items,
+                &self.metric,
+                query,
+                k,
+                ef,
+                |id| !self.tombs[id as usize],
+            )
+        }
     }
 
     /// Classify an external item against an existing clustering: the label
@@ -776,6 +923,99 @@ mod tests {
         assert_eq!(f.classify(&probe, partial, 5), full);
         // a far probe whose neighbors are all above the range abstains
         assert_eq!(f.classify(&vec![50.0f32, 50.0], partial, 5), -1);
+    }
+
+    #[test]
+    fn remove_tombstones_and_recomputes_cores() {
+        let mut rng = Rng::new(31);
+        let items = blobs(&mut rng, 60, &[(0.0, 0.0), (80.0, 80.0)], 1.5);
+        let mut f = Fishdbc::new(metric(), FishdbcParams {
+            min_pts: 4,
+            ef: 20,
+            ..Default::default()
+        });
+        for it in items.iter().cloned() {
+            f.add(it);
+        }
+        let c0 = f.cluster(4);
+        assert_eq!(c0.n_clusters, 2);
+
+        // remove a scattered third of the first blob
+        let victims: Vec<u32> = (0..60).step_by(3).collect();
+        assert_eq!(f.remove_batch_ids(&victims), victims.len());
+        assert_eq!(f.n_tombstoned(), victims.len());
+        assert_eq!(f.n_alive(), 120 - victims.len());
+        // idempotent: removing again is a no-op
+        assert_eq!(f.remove_batch_ids(&victims), 0);
+        // out-of-range ids are ignored
+        assert_eq!(f.remove_batch_ids(&[999]), 0);
+
+        for &v in &victims {
+            assert!(!f.alive(v));
+            assert_eq!(f.core_distance(v), f64::INFINITY, "core not invalidated");
+        }
+        // no forest edge or neighbor entry touches a tombstone
+        for e in f.msf_edges() {
+            assert!(f.alive(e.a) && f.alive(e.b), "forest kept a dead edge");
+        }
+        let dead: std::collections::HashSet<u32> =
+            victims.iter().copied().collect();
+        let sets = f.neighbors_export();
+        for (x, set) in sets.iter().enumerate() {
+            assert!(
+                set.iter().all(|&(y, _)| !dead.contains(&y)),
+                "node {x} still lists a removed neighbor"
+            );
+        }
+
+        // deleted ids label -1; survivors still form two clusters
+        let c = f.cluster(4);
+        assert_eq!(c.labels.len(), 120);
+        for &v in &victims {
+            assert_eq!(c.labels[v as usize], -1, "removed item got a label");
+        }
+        assert_eq!(c.n_clusters, 2, "survivors must keep both blobs");
+
+        // nearest never returns tombstones, but still finds survivors
+        let nn = f.nearest(&vec![0.0f32, 0.0], 5, Some(40));
+        assert_eq!(nn.len(), 5);
+        assert!(nn.iter().all(|&(id, _)| f.alive(id)), "nearest leaked: {nn:?}");
+    }
+
+    #[test]
+    fn removed_items_do_not_reenter_neighborhoods_on_later_adds() {
+        // after a removal, new inserts route *through* the tombstone but
+        // must not offer edges to it or count it as a neighbor
+        let mut rng = Rng::new(33);
+        let mut f = Fishdbc::new(metric(), FishdbcParams {
+            min_pts: 3,
+            ef: 15,
+            ..Default::default()
+        });
+        for _ in 0..50 {
+            f.add(vec![rng.f32() * 5.0, rng.f32() * 5.0]);
+        }
+        let victims: Vec<u32> = (0..50).step_by(5).collect();
+        f.remove_batch_ids(&victims);
+        for _ in 0..50 {
+            f.add(vec![rng.f32() * 5.0, rng.f32() * 5.0]);
+        }
+        f.update_mst();
+        let dead: std::collections::HashSet<u32> =
+            victims.iter().copied().collect();
+        for e in f.msf_edges() {
+            assert!(
+                !dead.contains(&e.a) && !dead.contains(&e.b),
+                "a post-removal insert re-linked a tombstone into the forest"
+            );
+        }
+        for set in f.neighbors_export() {
+            assert!(set.iter().all(|&(y, _)| !dead.contains(&y)));
+        }
+        let c = f.cluster(3);
+        for &v in &victims {
+            assert_eq!(c.labels[v as usize], -1);
+        }
     }
 
     #[test]

@@ -70,6 +70,22 @@ impl KBest {
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+
+    /// Drop every entry whose neighbor id fails `keep` (incremental
+    /// deletion: a removed item must stop counting toward anyone's
+    /// MinPts neighborhood). Returns true when the set changed — the
+    /// node's core distance can only have *increased*.
+    pub fn purge(&mut self, keep: impl Fn(u32) -> bool) -> bool {
+        let before = self.entries.len();
+        self.entries.retain(|&(id, _)| keep(id));
+        self.entries.len() != before
+    }
+
+    /// Drop all entries (the removed node itself: its neighborhood is
+    /// meaningless once tombstoned).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
 }
 
 /// All nodes' neighbor sets.
@@ -140,6 +156,32 @@ impl NeighborStore {
 
     pub fn is_empty(&self) -> bool {
         self.sets.is_empty()
+    }
+
+    /// Incremental deletion: remove the ids in `removed` from every
+    /// neighbor set (cores can only increase — fewer neighbors are known),
+    /// clear the removed nodes' own sets, and re-sync the chunked core
+    /// mirror for every node whose set changed. One pass over all sets:
+    /// O(n · k) per *batch*, not per removed id.
+    pub fn purge(&mut self, removed: &crate::util::fasthash::FastSet<u32>) {
+        if removed.is_empty() {
+            return;
+        }
+        for x in 0..self.sets.len() {
+            let changed = if removed.contains(&(x as u32)) {
+                let had = !self.sets[x].is_empty();
+                self.sets[x].clear();
+                had
+            } else {
+                self.sets[x].purge(|id| !removed.contains(&id))
+            };
+            if changed {
+                let c = self.sets[x].core(self.k);
+                if self.cores[x].to_bits() != c.to_bits() {
+                    *self.cores.get_mut(x) = c;
+                }
+            }
+        }
     }
 
     /// Export all neighbor sets (persistence): per node, the sorted
@@ -243,6 +285,39 @@ mod tests {
         ns.offer(0, 2, 2.0);
         assert_eq!(ns.core(0), 2.0);
         assert_eq!(ns.len(), 3);
+    }
+
+    #[test]
+    fn purge_raises_cores_and_clears_removed() {
+        use crate::util::fasthash::FastSet;
+        let mut ns = NeighborStore::new(2);
+        ns.ensure_len(4);
+        // node 0 knows {1 @ 1.0, 2 @ 2.0, 3 @ 3.0} (k=2 keeps 1.0, 2.0)
+        ns.offer(0, 1, 1.0);
+        ns.offer(0, 2, 2.0);
+        ns.offer(0, 3, 3.0);
+        ns.offer(1, 0, 1.0);
+        ns.offer(1, 2, 1.5);
+        ns.offer(2, 0, 4.0);
+        ns.offer(2, 3, 4.5);
+        assert_eq!(ns.core(0), 2.0);
+        assert_eq!(ns.core(1), 1.5);
+        assert_eq!(ns.core(2), 4.5);
+
+        let removed: FastSet<u32> = std::iter::once(2u32).collect();
+        ns.purge(&removed);
+        // node 0 lost its 2nd-closest: core rises to +inf (only 1 known —
+        // the dropped 3.0 entry is not resurrected, it was never kept)
+        assert_eq!(ns.core(0), f64::INFINITY);
+        assert!(ns.get(0).iter().all(|(id, _)| id != 2), "purged id survives");
+        // node 1 lost one of two: core back to +inf
+        assert_eq!(ns.core(1), f64::INFINITY);
+        // the removed node's own set is cleared and its core invalidated
+        assert!(ns.get(2).is_empty());
+        assert_eq!(ns.core(2), f64::INFINITY);
+        // purge is idempotent
+        ns.purge(&removed);
+        assert_eq!(ns.core(0), f64::INFINITY);
     }
 
     #[test]

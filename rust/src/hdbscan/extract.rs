@@ -176,6 +176,14 @@ pub fn extract_leaf(tree: &CondensedTree) -> Clustering {
 /// global density threshold — exactly the ε the paper says HDBSCAN\*
 /// removes ("tuned automatically and separately for each cluster", §2) —
 /// provided for exploration and for DBSCAN-comparison experiments.
+///
+/// Only **finite** edge weights can union: a `+∞` weight means "mutual
+/// reachability unknown" (a core distance never resolved, or a hostile
+/// metric's `NaN`/`-inf` sanitized at the HNSW choke point), not "within
+/// every ε". Without the guard, `eps = f64::INFINITY` — the natural "cut
+/// nothing" probe — would glue all components through those sentinel
+/// edges. A `NaN` eps fails every comparison and cuts everything, by the
+/// same IEEE rules.
 pub fn cut_at_distance(
     edges: &[crate::mst::Edge],
     n_points: usize,
@@ -184,7 +192,7 @@ pub fn cut_at_distance(
 ) -> Vec<i32> {
     let mut uf = crate::mst::UnionFind::new(n_points);
     for e in edges {
-        if e.w <= eps {
+        if e.w.is_finite() && e.w <= eps {
             uf.union(e.a, e.b);
         }
     }
@@ -318,6 +326,41 @@ mod tests {
         // min_size filters: singletons become noise
         let l = cut_at_distance(&edges, 10, 0.5, 2);
         assert!(l.iter().all(|&x| x == -1), "no edge ≤ 0.5 ⇒ all noise");
+    }
+
+    /// Regression (ISSUE 5 satellite): `+∞` sentinel weights — hostile
+    /// metrics sanitized at the HNSW choke point, or cores that never
+    /// resolved — must not glue components when callers probe with
+    /// `eps = f64::INFINITY`.
+    #[test]
+    fn cut_ignores_non_finite_weights_and_eps() {
+        // two finite chains joined only by a +inf sentinel edge
+        let mut edges = Vec::new();
+        for i in 0..4u32 {
+            edges.push(Edge::new(i, i + 1, 1.0));
+            edges.push(Edge::new(5 + i, 6 + i, 1.0));
+        }
+        edges.push(Edge::new(4, 5, f64::INFINITY));
+
+        // eps = +inf ("cut nothing"): the sentinel must still not union
+        let l = cut_at_distance(&edges, 10, f64::INFINITY, 2);
+        assert_eq!(
+            l.iter().collect::<std::collections::HashSet<_>>().len(),
+            2,
+            "infinite-weight edge glued the components: {l:?}"
+        );
+        assert_eq!(l[0], l[4]);
+        assert_ne!(l[0], l[5]);
+
+        // finite eps behaves as before
+        let l = cut_at_distance(&edges, 10, 2.0, 2);
+        assert_eq!(l[0], l[4]);
+        assert_ne!(l[0], l[5]);
+
+        // NaN eps: every comparison fails, everything is noise — never a
+        // panic, never a glue
+        let l = cut_at_distance(&edges, 10, f64::NAN, 2);
+        assert!(l.iter().all(|&x| x == -1), "NaN eps must cut everything");
     }
 
     #[test]

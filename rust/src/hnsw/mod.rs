@@ -347,6 +347,27 @@ impl Hnsw {
         k: usize,
         ef: usize,
     ) -> Vec<(u32, f64)> {
+        self.search_filtered(items, metric, query, k, ef, |_| true)
+    }
+
+    /// [`Hnsw::search`] with a result filter: nodes failing `accept` are
+    /// still **traversed** (they keep the graph navigable — this is how
+    /// tombstoned items stay routable after an incremental deletion) but
+    /// are never returned and never count toward the `ef` result beam.
+    /// With an all-accepting filter this is exactly `search`, step for
+    /// step. When almost everything is filtered out the beam cannot fill,
+    /// so the search degrades toward a full component walk — the engine
+    /// bounds that regime by compacting shards once the tombstone ratio
+    /// crosses `EngineConfig::compact_at`.
+    pub fn search_filtered<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
+        &self,
+        items: &S,
+        metric: &M,
+        query: &T,
+        k: usize,
+        ef: usize,
+        accept: impl Fn(u32) -> bool,
+    ) -> Vec<(u32, f64)> {
         let Some(entry) = self.entry else { return Vec::new() };
         // same sanitizing choke point as `eval`, for the query path (the
         // engine's bridge searches and online labels run through here)
@@ -372,14 +393,18 @@ impl Hnsw {
             }
         }
 
-        // beam search at level 0
+        // beam search at level 0 (rejected nodes feed `cands` so the walk
+        // can route *through* them, but never enter `results`)
         use std::cmp::Reverse;
         use std::collections::BinaryHeap;
         let ef = ef.max(k);
         let mut visited: std::collections::HashSet<u32> =
             std::iter::once(best.0).collect();
         let mut cands = BinaryHeap::from([Reverse((OrdF64(best.1), best.0))]);
-        let mut results = BinaryHeap::from([(OrdF64(best.1), best.0)]);
+        let mut results = BinaryHeap::new();
+        if accept(best.0) {
+            results.push((OrdF64(best.1), best.0));
+        }
         while let Some(Reverse((OrdF64(cd), c))) = cands.pop() {
             let worst = results.peek().map_or(f64::INFINITY, |&(OrdF64(d), _)| d);
             if cd > worst && results.len() >= ef {
@@ -394,9 +419,11 @@ impl Hnsw {
                     results.peek().map_or(f64::INFINITY, |&(OrdF64(w), _)| w);
                 if results.len() < ef || d < worst {
                     cands.push(Reverse((OrdF64(d), nb)));
-                    results.push((OrdF64(d), nb));
-                    if results.len() > ef {
-                        results.pop();
+                    if accept(nb) {
+                        results.push((OrdF64(d), nb));
+                        if results.len() > ef {
+                            results.pop();
+                        }
                     }
                 }
             }
@@ -744,6 +771,31 @@ mod tests {
         let _ = h.search(&items, &m, &items[0], 3, 20);
         assert_eq!(h.dist_calls(), calls_before);
         assert_eq!(log.len(), calls_before as usize);
+    }
+
+    #[test]
+    fn search_filtered_skips_rejected_but_stays_navigable() {
+        let mut rng = Rng::new(79);
+        let items = random_points(&mut rng, 150, 3);
+        let (h, _) = build(&items, HnswParams { m: 6, ef: 20, seed: 8 });
+        let m = metric();
+        let q = &items[0];
+
+        // an all-accepting filter is exactly `search`
+        let plain = h.search(&items, &m, q, 5, 30);
+        let all = h.search_filtered(&items, &m, q, 5, 30, |_| true);
+        assert_eq!(plain, all, "all-true filter must not change the search");
+
+        // rejecting the even ids: results contain only odd ids, and the
+        // beam still finds k of them by routing through rejected nodes
+        let odd = h.search_filtered(&items, &m, q, 5, 30, |id| id % 2 == 1);
+        assert_eq!(odd.len(), 5);
+        assert!(odd.iter().all(|&(id, _)| id % 2 == 1), "filter leaked: {odd:?}");
+        assert!(odd.windows(2).all(|w| w[0].1 <= w[1].1), "unsorted");
+
+        // rejecting everything returns nothing (and terminates)
+        let none = h.search_filtered(&items, &m, q, 5, 30, |_| false);
+        assert!(none.is_empty());
     }
 
     #[test]

@@ -48,6 +48,10 @@
 //! epochs automatically, and [`engine::Engine::label`] answers "which
 //! cluster would this item join?" against the latest epoch without
 //! mutating any state — the serving loop of a production deployment.
+//! Churn is first-class too: [`engine::Engine::remove_batch`] deletes
+//! items incrementally (tombstoned in place, invisible to every search
+//! at once, labeled -1 forever; shards compact past
+//! `EngineConfig::compact_at`).
 //!
 //! The engine is as generic as the core: `Engine<T, M>` shards **any**
 //! item type under **any** cloneable metric — a closure is enough — so

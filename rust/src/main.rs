@@ -29,7 +29,7 @@ const VALUE_KEYS: &[&str] = &[
     "dataset", "n", "dim", "ef", "min-pts", "mcs", "alpha", "seed", "chunk",
     "recluster-every", "metric", "silhouette-max", "input", "format", "save",
     "load", "out", "labels-out", "efs", "shards", "bridge-k", "bridge-fanout",
-    "bridge-refresh",
+    "bridge-refresh", "churn", "compact-at",
 ];
 
 fn main() {
@@ -112,10 +112,18 @@ labels):
   --bridge-refresh B   also refresh the frozen bridge snapshots every B
                     items (default 0 = only at merges; captures are
                     chunked copy-on-write, so refreshes cost O(delta))
-  --stats           print per-stage pipeline timings, cache counters and
-                    snapshot copied-vs-shared chunk counts
+  --churn P         after the merge, remove an id-scattered P% of the
+                    stream (incremental deletion), re-cluster, and verify
+                    the churned epoch serves: deleted ids label -1 and a
+                    probe query still answers (exit 1 otherwise)
+  --compact-at R    per-shard tombstone ratio that triggers compaction
+                    (rebuild without tombstones; default 0.25, 0 = never)
+  --stats           print per-stage pipeline timings, cache counters,
+                    snapshot copied-vs-shared chunk counts and churn
+                    (removed/tombstoned/compactions) counters
   --save PATH       persist the multi-shard engine state after building
-                    (v2 container: includes bridge buffers + cached MSF)
+                    (v3 container: bridge buffers + cached MSF +
+                    tombstone state)
   --load PATH       resume a saved engine state (then add items on top)
   --quality         external metrics vs the generator labels (fresh runs)",
         names = datasets::DATASET_NAMES.join("|")
@@ -349,6 +357,11 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
         args.usize_or("bridge-fanout", shards.saturating_sub(1).max(1))?;
     let recluster_every = args.usize_or("recluster-every", 0)?;
     let bridge_refresh = args.usize_or("bridge-refresh", 0)?;
+    let compact_at = args.f64_or("compact-at", EngineConfig::default().compact_at)?;
+    let churn = args.f64_or("churn", 0.0)?;
+    if !(0.0..=100.0).contains(&churn) {
+        return Err("--churn expects a percentage in [0, 100]".into());
+    }
 
     let (engine, resumed): (Engine, bool) = match args.get("load") {
         Some(path) => {
@@ -381,6 +394,7 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
                 queue_depth: 16,
                 recluster_every,
                 bridge_refresh,
+                compact_at,
             }),
             false,
         ),
@@ -511,6 +525,14 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
             es.pipeline.snapshot_chunks_shared,
             es.pipeline.snapshot_bytes_copied as f64 / (1024.0 * 1024.0),
         );
+        println!(
+            "  churn: {} ids removed, {} tombstones live, {} shard \
+             compactions (compact_at {})",
+            es.removed_items,
+            es.tombstoned_items,
+            es.compactions,
+            engine.config().compact_at,
+        );
     }
 
     // global ids are arrival order, so labels align with the dataset —
@@ -519,6 +541,56 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
         report_quality(args, &ds, metric, "Engine", &snap.clustering)?;
     } else if args.flag("quality") {
         println!("  (skipping --quality: resumed state offsets the labels)");
+    }
+
+    // --churn P: incremental-deletion smoke — remove an id-scattered P%
+    // of the stream by value, re-cluster, and verify the churned epoch
+    // serves (deleted ids label -1; an online probe stays in contract)
+    if churn > 0.0 && !resumed && ds.n() > 0 {
+        let stride = ((100.0 / churn).round() as usize).max(1);
+        let victims: Vec<Item> =
+            ds.items.iter().step_by(stride).cloned().collect();
+        let t = std::time::Instant::now();
+        let removed = engine.remove_batch(&victims);
+        let remove_secs = t.elapsed().as_secs_f64();
+        let t = std::time::Instant::now();
+        let churned = engine.cluster(mcs);
+        let churn_secs = t.elapsed().as_secs_f64();
+        let es = engine.stats();
+        println!(
+            "churn: removed {removed}/{} targets in {remove_secs:.3}s | \
+             re-cluster {churn_secs:.3}s | epoch {}: {} survivors, {} \
+             deleted, {} clusters, {} shards changed | {} tombstones \
+             live, {} compactions",
+            victims.len(),
+            churned.epoch,
+            churned.n_items,
+            churned.n_deleted,
+            churned.clustering.n_clusters,
+            churned.n_changed_shards,
+            es.tombstoned_items,
+            es.compactions,
+        );
+        let leaked = engine
+            .deleted_globals()
+            .into_iter()
+            .filter(|&gid| {
+                churned.clustering.labels.get(gid as usize).copied()
+                    != Some(-1)
+            })
+            .count();
+        if leaked > 0 {
+            return Err(format!("churn: {leaked} deleted ids kept labels"));
+        }
+        // a survivor when P < 100 (and the dataset has one)
+        let probe = &ds.items[((stride > 1) as usize).min(ds.n() - 1)];
+        let l = engine.label(probe);
+        if (l as i64) >= churned.clustering.n_clusters as i64 {
+            return Err(format!("churn: probe label {l} out of contract"));
+        }
+        println!("churn: OK (deleted ids label -1, probe label {l})");
+    } else if churn > 0.0 {
+        println!("churn: skipped (resumed state or empty dataset)");
     }
 
     if let Some(path) = args.get("save") {

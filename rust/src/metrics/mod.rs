@@ -22,6 +22,27 @@ pub enum NoiseMode {
     NoiseAsCluster,
 }
 
+/// Canonical relabeling: clusters numbered by first occurrence, noise
+/// stays -1. Two label vectors describe the same **partition** iff their
+/// canonical forms are equal — the comparison the engine's conformance
+/// harness, the churn bench and the integration tests all share
+/// (extraction numbers clusters by traversal order, which is not part of
+/// the conformance contract when equal-weight edges tie).
+pub fn canonical_labels(labels: &[i32]) -> Vec<i32> {
+    let mut map = std::collections::HashMap::new();
+    labels
+        .iter()
+        .map(|&l| {
+            if l < 0 {
+                -1
+            } else {
+                let next = map.len() as i32;
+                *map.entry(l).or_insert(next)
+            }
+        })
+        .collect()
+}
+
 /// Prepare (prediction, truth) pairs under a noise mode. `labels` uses -1
 /// for noise; truth labels are arbitrary usize classes.
 pub fn align_labels(
@@ -82,6 +103,23 @@ mod tests {
         let (p, g) = align_labels(&labels, &truth, NoiseMode::NoiseAsCluster);
         assert_eq!(p, vec![0, 2, 1, 2]); // noise becomes cluster 2
         assert_eq!(g, truth);
+    }
+
+    #[test]
+    fn canonical_labels_compare_partitions() {
+        // same partition under different numbering ⇒ same canonical form
+        assert_eq!(
+            canonical_labels(&[2, 2, 0, -1, 0]),
+            canonical_labels(&[1, 1, 5, -1, 5])
+        );
+        // different partitions stay different
+        assert_ne!(
+            canonical_labels(&[0, 0, 1, 1]),
+            canonical_labels(&[0, 1, 0, 1])
+        );
+        // noise is preserved, clusters numbered by first occurrence
+        assert_eq!(canonical_labels(&[7, -1, 3, 7]), vec![0, -1, 1, 0]);
+        assert_eq!(canonical_labels(&[]), Vec::<i32>::new());
     }
 
     #[test]

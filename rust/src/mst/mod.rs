@@ -146,6 +146,18 @@ impl Msf {
     pub fn components(&self) -> usize {
         self.n - self.edges.len()
     }
+
+    /// Incremental deletion support: drop every edge with an endpoint
+    /// failing `keep`. Removing edges from a forest leaves a forest, and a
+    /// subsequence of a weight-sorted list stays sorted, so the invariant
+    /// holds without re-running Kruskal. Note the *caveat* documented at
+    /// `Fishdbc::remove_batch_ids`: an edge evicted earlier by a cycle
+    /// through a now-removed node is not resurrected (it was never
+    /// retained), so this is an MSF of the recorded graph minus the nodes,
+    /// not of everything ever offered minus the nodes.
+    pub fn retain_nodes(&mut self, keep: impl Fn(u32) -> bool) {
+        self.edges.retain(|e| keep(e.a) && keep(e.b));
+    }
 }
 
 #[cfg(test)]

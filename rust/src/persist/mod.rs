@@ -31,6 +31,11 @@ use crate::mst::{Edge, Msf};
 
 const MAGIC: &[u8; 8] = b"FISHDBC\0";
 const VERSION: u8 = 1;
+/// Single-instance files grow a trailing tombstone-id list when — and
+/// only when — the instance has live tombstones. A clean instance keeps
+/// writing byte-identical v1 (pinned by the checked-in fixtures), so the
+/// version byte doubles as the "has tombstones" flag.
+const VERSION_TOMBS: u8 = 2;
 /// Multi-shard engine container: its own magic + version so single-instance
 /// and engine state files are never confused.
 const ENGINE_MAGIC: &[u8; 8] = b"FISHENG\0";
@@ -38,9 +43,14 @@ const ENGINE_MAGIC: &[u8; 8] = b"FISHENG\0";
 /// epoch state: per-shard bridge buffers/forests with coverage watermarks,
 /// the serving-loop config knobs, and the cached global MSF with its
 /// change stamps — so a restarted engine reclusters incrementally instead
-/// of re-paying the full bridge search. v1 files still load (with empty
-/// pipeline state).
-const ENGINE_VERSION: u8 = 2;
+/// of re-paying the full bridge search. v3 adds the deletion state:
+/// `compact_at` in the header, each shard's cumulative removed-global-id
+/// list (tombstones inside the nested FISHDBC blobs ride along as v2
+/// single-instance blobs), and the per-shard removal count in the merge
+/// stamps. v1/v2 files still load (with empty pipeline/deletion state
+/// respectively).
+const ENGINE_VERSION: u8 = 3;
+const ENGINE_VERSION_V2: u8 = 2;
 const ENGINE_VERSION_V1: u8 = 1;
 /// Sanity cap on any single length prefix (guards corrupt files from
 /// triggering huge allocations).
@@ -330,6 +340,9 @@ pub struct SavedState<T = Item> {
     pub msf_edges: Vec<Edge>,
     pub candidates: Vec<(u32, u32, f64)>,
     pub mst_updates: u64,
+    /// Tombstoned local ids, ascending (empty ⇒ the file is written as
+    /// plain v1, byte-identical to the pre-deletion format).
+    pub tombstones: Vec<u32>,
 }
 
 /// Serialize a full state snapshot through `codec`.
@@ -340,7 +353,7 @@ pub fn write_state<T, C: ItemCodec<T>, W: Write>(
 ) -> io::Result<()> {
     let mut w = BinWriter::new(w);
     w.w.write_all(MAGIC)?;
-    w.u8(VERSION)?;
+    w.u8(if s.tombstones.is_empty() { VERSION } else { VERSION_TOMBS })?;
 
     w.str(&s.metric_name)?;
     w.u64(s.params.min_pts as u64)?;
@@ -400,6 +413,9 @@ pub fn write_state<T, C: ItemCodec<T>, W: Write>(
         w.f64(d)?;
     }
     w.u64(s.mst_updates)?;
+    if !s.tombstones.is_empty() {
+        w.u32s(&s.tombstones)?;
+    }
     Ok(())
 }
 
@@ -415,7 +431,8 @@ pub fn read_state<T, C: ItemCodec<T>, R: Read>(
     if &magic != MAGIC {
         return Err(bad("not a FISHDBC state file"));
     }
-    if r.u8()? != VERSION {
+    let version = r.u8()?;
+    if version != VERSION && version != VERSION_TOMBS {
         return Err(bad("unsupported format version"));
     }
 
@@ -487,6 +504,18 @@ pub fn read_state<T, C: ItemCodec<T>, R: Read>(
         candidates.push((r.u32()?, r.u32()?, r.f64()?));
     }
     let mst_updates = r.u64()?;
+    let tombstones = if version >= VERSION_TOMBS {
+        let t = r.u32s()?;
+        if t.is_empty() {
+            return Err(bad("v2 state without tombstones"));
+        }
+        if t.iter().any(|&id| id as usize >= n_items) {
+            return Err(bad("tombstone id out of range"));
+        }
+        t
+    } else {
+        Vec::new()
+    };
 
     Ok(SavedState {
         metric_name,
@@ -497,6 +526,7 @@ pub fn read_state<T, C: ItemCodec<T>, R: Read>(
         msf_edges,
         candidates,
         mst_updates,
+        tombstones,
     })
 }
 
@@ -507,7 +537,7 @@ fn fishdbc_from_saved<T: Clone, M: Metric<T>>(
 ) -> Fishdbc<T, M> {
     let n = s.items.len();
     let min_pts = s.params.min_pts;
-    Fishdbc::from_parts(
+    let mut f = Fishdbc::from_parts(
         metric,
         s.params,
         s.items,
@@ -516,7 +546,11 @@ fn fishdbc_from_saved<T: Clone, M: Metric<T>>(
         Msf::from_parts(s.msf_edges, n),
         s.candidates,
         s.mst_updates,
-    )
+    );
+    // re-mark persisted tombstones (the neighbor sets / forest / buffer
+    // were already purged when the removal originally ran)
+    f.apply_tombstones(&s.tombstones);
+    f
 }
 
 impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
@@ -538,6 +572,7 @@ impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
             msf_edges: self.msf().edges().to_vec(),
             candidates: self.candidates_export(),
             mst_updates: self.stats().mst_updates,
+            tombstones: self.tombs_export(),
         })
     }
 
@@ -610,13 +645,16 @@ fn read_edge_triples<R: Read>(
 impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     /// Serialize the complete multi-shard engine state through `codec`: a
     /// versioned container holding every shard's full FISHDBC snapshot
-    /// plus its local→global id map and — since v2 — the
-    /// recluster-pipeline epoch state (bridge buffers, coverage
-    /// watermarks, cached global MSF), so a sharded deployment survives
+    /// plus its local→global id map, the recluster-pipeline epoch state
+    /// (bridge buffers, coverage watermarks, cached global MSF — since
+    /// v2), and the deletion state (tombstone sets inside the nested
+    /// blobs, each shard's cumulative removed-global-id record,
+    /// `compact_at` — since v3), so a sharded deployment survives
     /// restarts and keeps ingesting **exactly** where it left off (same
     /// routing, same per-shard RNG streams, same future clusterings),
     /// reclustering incrementally instead of re-paying the full bridge
-    /// search. Flushes first so no queued batch is lost.
+    /// search, with deleted ids staying deleted forever. Flushes first so
+    /// no queued batch is lost.
     ///
     /// The persisted watermark is each shard's *merge-final* one: a
     /// checkpoint taken mid-epoch-window makes the next merge after reload
@@ -641,12 +679,27 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
                 .iter()
                 .map(|s| s.state.read().unwrap())
                 .collect();
-            let total: usize = guards.iter().map(|g| g.f.len()).sum();
+            // assigned ids = stored (live + tombstoned) + compacted-away
+            // deletions (on the removed record but in no id map)
+            let total: usize = guards
+                .iter()
+                .map(|g| {
+                    g.f.len() + g.removed_globals.len() - g.f.n_tombstoned()
+                })
+                .sum();
             // true maximum, not .last(): interleaved add_batch callers can
-            // leave a shard's globals non-monotone
+            // leave a shard's globals non-monotone; the removed record
+            // joins the scan (the max id may itself be deleted)
             let max_gid = guards
                 .iter()
-                .filter_map(|g| g.globals.iter().copied().max())
+                .flat_map(|g| {
+                    g.globals
+                        .iter()
+                        .copied()
+                        .max()
+                        .into_iter()
+                        .chain(g.removed_globals.iter().copied().max())
+                })
                 .max()
                 .map_or(0, |m| m as usize + 1);
             if max_gid == total {
@@ -654,8 +707,12 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             }
             drop(guards);
         };
-        let next_global: u64 =
-            guards.iter().map(|g| g.f.len() as u64).sum();
+        let next_global: u64 = guards
+            .iter()
+            .map(|g| {
+                (g.f.len() + g.removed_globals.len() - g.f.n_tombstoned()) as u64
+            })
+            .sum();
 
         let mut w = BinWriter::new(w);
         w.w.write_all(ENGINE_MAGIC)?;
@@ -671,6 +728,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
         w.u64(cfg.queue_depth as u64)?;
         w.u64(cfg.recluster_every as u64)?;
         w.u64(cfg.bridge_refresh as u64)?;
+        w.f64(cfg.compact_at)?;
         w.u64(self.epoch())?;
 
         // shards are quiescent behind the read guards, so their bridge
@@ -679,6 +737,9 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
         for (shard, st) in inner.shard_handles().iter().zip(&guards) {
             // dense export: the chunked in-memory layout never reaches disk
             w.u32s(&st.globals.to_vec())?;
+            // cumulative removed global ids (deleted-forever record; the
+            // live tombstone marks ride inside the nested blob)
+            w.u32s(&st.removed_globals)?;
             w.u64(st.batches)?;
             w.f64(st.build_secs)?;
             // nested single-instance snapshot (own magic + version)
@@ -708,11 +769,19 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             Some(c) => {
                 w.u8(1)?;
                 w.u64(c.n as u64)?;
-                for s in &c.stamps {
-                    w.u64(s.items as u64)?;
+                for (s, st) in c.stamps.iter().zip(&guards) {
+                    // A compaction after the cached merge can shrink a
+                    // shard below its stamped item count; clamp so the
+                    // loader's `items <= len` validation accepts the file.
+                    // Sound: the compaction's removals also moved the
+                    // removal stamp, so the shard still reads as changed
+                    // (full re-fold) on the first post-load merge, and
+                    // min() is idempotent across save/load/save cycles.
+                    w.u64(s.items.min(st.f.len()) as u64)?;
                     w.u64(s.mst_updates)?;
                     w.u64(s.msf_len as u64)?;
                     w.u64(s.bridge_gen)?;
+                    w.u64(s.removals as u64)?;
                 }
                 write_edges(&mut w, c.global.edges())?;
             }
@@ -743,10 +812,14 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             return Err(bad("not a FISHDBC engine state file"));
         }
         let version = r.u8()?;
-        if version != ENGINE_VERSION && version != ENGINE_VERSION_V1 {
+        if version != ENGINE_VERSION
+            && version != ENGINE_VERSION_V2
+            && version != ENGINE_VERSION_V1
+        {
             return Err(bad("unsupported engine format version"));
         }
         let v2 = version >= 2;
+        let v3 = version >= 3;
 
         let metric_name = r.str()?;
         let metric = Counting::new(resolve(&metric_name)?);
@@ -759,11 +832,21 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
         let bridge_k = r.u64()? as usize;
         let bridge_fanout = r.u64()? as usize;
         let queue_depth = r.u64()? as usize;
-        let (recluster_every, bridge_refresh, epoch) = if v2 {
-            (r.u64()? as usize, r.u64()? as usize, r.u64()?)
+        let (recluster_every, bridge_refresh) = if v2 {
+            (r.u64()? as usize, r.u64()? as usize)
         } else {
-            (0, 0, 0)
+            (0, 0)
         };
+        let compact_at = if v3 {
+            let ca = r.f64()?;
+            if !ca.is_finite() || ca < 0.0 {
+                return Err(bad("implausible compact_at"));
+            }
+            ca
+        } else {
+            EngineConfig::default().compact_at
+        };
+        let epoch = if v2 { r.u64()? } else { 0 };
 
         let mut parts: Vec<(ShardState<T, M>, BridgeState)> =
             Vec::with_capacity(n_shards);
@@ -771,6 +854,10 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
         let mut params: Option<FishdbcParams> = None;
         for _ in 0..n_shards {
             let globals = r.u32s()?;
+            let removed_globals = if v3 { r.u32s()? } else { Vec::new() };
+            if removed_globals.iter().any(|&g| g as u64 >= next_global) {
+                return Err(bad("removed global id out of range"));
+            }
             let batches = r.u64()?;
             let build_secs = r.f64()?;
             let saved = read_state(&mut r.r, codec)?;
@@ -783,6 +870,16 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             }
             if globals.iter().any(|&g| g as u64 >= next_global) {
                 return Err(bad("shard global id out of range"));
+            }
+            // every live tombstone must be on the permanent removed record
+            if f.n_tombstoned() > 0 {
+                let removed_set: std::collections::HashSet<u32> =
+                    removed_globals.iter().copied().collect();
+                for li in f.tombs_export() {
+                    if !removed_set.contains(&globals[li as usize]) {
+                        return Err(bad("tombstone missing from removed record"));
+                    }
+                }
             }
             let bridge = if v2 {
                 let covered = r.u64()? as usize;
@@ -811,16 +908,22 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             } else {
                 BridgeState::new()
             };
-            total += globals.len() as u64;
+            total += globals.len() as u64 + removed_globals.len() as u64
+                - f.n_tombstoned() as u64;
             if params.is_none() {
                 params = Some(*f.params());
             }
+            let inserts = f.len() as u64;
             parts.push((
                 ShardState {
                     f,
                     globals: crate::util::chunked::ChunkedVec::from_vec(globals),
                     batches,
                     build_secs,
+                    removed_globals,
+                    inserts,
+                    version: 0,
+                    compactions: 0,
                 },
                 bridge,
             ));
@@ -844,11 +947,19 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
                 if items > st.f.len() {
                     return Err(bad("stamp item count exceeds shard size"));
                 }
+                let mst_updates = r.u64()?;
+                let msf_len = r.u64()? as usize;
+                let bridge_gen = r.u64()?;
+                let removals = if v3 { r.u64()? as usize } else { 0 };
+                if removals > st.removed_globals.len() {
+                    return Err(bad("stamp removals exceed the removed record"));
+                }
                 stamps.push(ShardStamp {
                     items,
-                    mst_updates: r.u64()?,
-                    msf_len: r.u64()? as usize,
-                    bridge_gen: r.u64()?,
+                    mst_updates,
+                    msf_len,
+                    bridge_gen,
+                    removals,
                 });
             }
             let global = read_edge_triples(&mut r)?;
@@ -885,6 +996,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             queue_depth,
             recluster_every,
             bridge_refresh,
+            compact_at,
         };
         Ok(Engine::from_resumed(
             metric,
@@ -1187,6 +1299,146 @@ mod tests {
             "pipeline state resumed through the custom codec"
         );
         resumed.shutdown();
+    }
+
+    #[test]
+    fn single_instance_tombstones_roundtrip_and_clean_saves_stay_v1() {
+        let mut f = build(200, 31);
+        let mut clean = Vec::new();
+        f.save(&mut clean).unwrap();
+        assert_eq!(clean[8], 1, "clean instance must stay format v1");
+
+        let victims: Vec<u32> = (0..200).step_by(7).collect();
+        f.remove_batch_ids(&victims);
+        let mut dirty = Vec::new();
+        f.save(&mut dirty).unwrap();
+        assert_eq!(dirty[8], 2, "tombstoned instance must write v2");
+
+        let mut g = Fishdbc::<Item, MetricKind>::load(dirty.as_slice()).unwrap();
+        assert_eq!(g.n_tombstoned(), victims.len());
+        assert_eq!(g.tombs_export(), f.tombs_export());
+        // save → load → save is byte-stable (checked before cluster():
+        // extraction folds the candidate buffer, legitimately changing
+        // the state)
+        let mut again = Vec::new();
+        g.save(&mut again).unwrap();
+        assert_eq!(dirty, again, "tombstoned save/load/save drifted");
+        let cf = f.cluster(5);
+        let cg = g.cluster(5);
+        assert_eq!(cf.labels, cg.labels);
+        for &v in &victims {
+            assert_eq!(cg.labels[v as usize], -1);
+        }
+    }
+
+    #[test]
+    fn engine_v3_roundtrips_tombstones_and_compaction_state() {
+        let ds = datasets::blobs::generate(400, 8, 4, 23);
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            fishdbc: FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+            shards: 3,
+            mcs: 5,
+            compact_at: 0.0, // keep tombstones in the saved state
+            ..Default::default()
+        });
+        for chunk in ds.items.chunks(64) {
+            engine.add_batch(chunk.to_vec());
+        }
+        let victims: Vec<Item> = ds.items.iter().step_by(9).cloned().collect();
+        assert_eq!(engine.remove_batch(&victims), victims.len());
+        let want = engine.cluster(5);
+        assert_eq!(want.n_deleted, victims.len());
+
+        let mut buf = Vec::new();
+        engine.save(&mut buf).unwrap();
+        assert_eq!(buf[8], 3, "engine container must be v3");
+        let deleted = engine.deleted_globals();
+        engine.shutdown();
+
+        let reloaded = Engine::load(buf.as_slice()).unwrap();
+        assert_eq!(reloaded.len(), 400, "assigned ids survive");
+        assert_eq!(reloaded.deleted_globals(), deleted);
+        let stats = reloaded.stats();
+        assert_eq!(stats.removed_items, victims.len());
+        assert_eq!(stats.tombstoned_items, victims.len());
+        // save → load → save byte-stability for the v3 container (checked
+        // before the merge below advances the persisted epoch counter)
+        let mut again = Vec::new();
+        reloaded.save(&mut again).unwrap();
+        assert_eq!(buf, again, "v3 save/load/save drifted");
+        let got = reloaded.cluster(5);
+        assert_eq!(got.n_items, want.n_items);
+        assert_eq!(got.n_deleted, want.n_deleted);
+        assert_eq!(got.clustering.labels, want.clustering.labels);
+        assert_eq!(
+            got.n_changed_shards, 0,
+            "resume keeps the delta path under tombstones"
+        );
+        for gid in &deleted {
+            assert_eq!(got.clustering.labels[*gid as usize], -1);
+        }
+        reloaded.shutdown();
+
+        // and the same through a *compacted* engine: compaction erases
+        // tombstones but the removed record persists
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            fishdbc: FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+            shards: 2,
+            mcs: 5,
+            compact_at: 0.05,
+            ..Default::default()
+        });
+        engine.add_batch(ds.items.clone());
+        let victims: Vec<Item> = ds.items.iter().step_by(4).cloned().collect();
+        assert_eq!(engine.remove_batch(&victims), victims.len());
+        assert!(engine.stats().compactions >= 1, "25% churn must compact");
+        let want = engine.cluster(5);
+        let mut buf = Vec::new();
+        engine.save(&mut buf).unwrap();
+        let deleted = engine.deleted_globals();
+        engine.shutdown();
+        let reloaded = Engine::load(buf.as_slice()).unwrap();
+        assert_eq!(reloaded.deleted_globals(), deleted);
+        assert_eq!(reloaded.stats().tombstoned_items, 0);
+        assert_eq!(reloaded.len(), 400, "assigned id space survives compaction");
+        let got = reloaded.cluster(5);
+        assert_eq!(got.clustering.labels, want.clustering.labels);
+        reloaded.shutdown();
+    }
+
+    /// Regression (code review): a checkpoint taken after a compaction
+    /// but *before* any new merge used to write the cached merge stamps
+    /// verbatim — with pre-compaction item counts exceeding the shrunken
+    /// shard — and the loader rejected its own file ("stamp item count
+    /// exceeds shard size"). The writer now clamps; the removal stamps
+    /// still force the full re-fold on the first post-load merge.
+    #[test]
+    fn save_right_after_compaction_reloads() {
+        let ds = datasets::blobs::generate(300, 8, 4, 29);
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            fishdbc: FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+            shards: 2,
+            mcs: 5,
+            compact_at: 0.05,
+            ..Default::default()
+        });
+        engine.add_batch(ds.items.clone());
+        let _ = engine.cluster(5); // builds the cache with full lens
+        let victims: Vec<Item> = ds.items.iter().step_by(3).cloned().collect();
+        assert_eq!(engine.remove_batch(&victims), victims.len());
+        assert!(engine.stats().compactions >= 1, "33% churn must compact");
+        // checkpoint with the cache still stamped pre-compaction
+        let mut buf = Vec::new();
+        engine.save(&mut buf).unwrap();
+        let want = engine.cluster(5);
+        engine.shutdown();
+
+        let reloaded = Engine::load(buf.as_slice())
+            .expect("post-compaction checkpoint must reload");
+        let got = reloaded.cluster(5);
+        assert_eq!(got.n_deleted, victims.len());
+        assert_eq!(got.clustering.labels, want.clustering.labels);
+        reloaded.shutdown();
     }
 
     #[test]

@@ -53,6 +53,9 @@ pub type FastBuild = BuildHasherDefault<FastHasher>;
 /// HashMap with the fast hasher.
 pub type FastMap<K, V> = std::collections::HashMap<K, V, FastBuild>;
 
+/// HashSet with the fast hasher (e.g. the engine's deleted-id registry).
+pub type FastSet<K> = std::collections::HashSet<K, FastBuild>;
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -2,13 +2,17 @@
 """Regenerate the checked-in FISHENG persistence fixtures.
 
 Writes fisheng_v1.bin (the pre-pipeline engine container) and
-fisheng_v2.bin (the current container with bridge buffers, coverage
+fisheng_v2.bin (the pre-deletion container with bridge buffers, coverage
 watermarks and the cached global MSF) byte-for-byte in the hand-rolled
 little-endian format of rust/src/persist/mod.rs. The fixtures pin the
-on-disk layout: `failure_injection.rs` loads both, re-clusters them, and
-asserts that saving the reloaded v2 engine reproduces the fixture bytes
-exactly — so any accidental format change (for example, the chunked
-copy-on-write stores leaking their in-memory layout to disk) fails CI.
+legacy on-disk layouts: `failure_injection.rs` loads both, re-clusters
+them, and asserts that saving the reloaded v2 engine upgrades it to a
+v3 container (the deletion-state format) whose own save/load/save cycle
+is byte-stable — so any accidental format change (for example, the
+chunked copy-on-write stores leaking their in-memory layout to disk)
+fails CI. v3 bytes themselves are pinned by in-test round trips
+(persist::tests::engine_v3_roundtrips_tombstones_and_compaction_state),
+not by a checked-in fixture.
 
 The v2 content is deliberately canonical where the format round-trips
 through a re-sort on load: MSF edge lists are written in Kruskal's total

@@ -8,7 +8,9 @@ use fishdbc::datasets;
 use fishdbc::distances::{Item, MetricKind};
 use fishdbc::engine::{Engine, EngineConfig, ShardKey};
 use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
-use fishdbc::metrics::{adjusted_rand_index, score_external};
+use fishdbc::metrics::{
+    adjusted_rand_index, canonical_labels as canon, score_external,
+};
 use fishdbc::util::rng::Rng;
 
 fn blobs(n: usize, seed: u64) -> datasets::Dataset {
@@ -537,21 +539,117 @@ fn sparse_cosine_engine_end_to_end() {
     engine.shutdown();
 }
 
-/// Canonical relabeling (clusters numbered by first occurrence) so label
-/// vectors compare as partitions.
-fn canon(labels: &[i32]) -> Vec<i32> {
-    let mut map = std::collections::HashMap::new();
-    labels
+/// ISSUE 5 acceptance: after ingesting n blob items and removing a 10%
+/// id-scattered subset, the next `cluster()` epoch is partition-identical
+/// to `Engine::reference_cluster` over the survivors, deleted ids label
+/// -1, the survivors still recover the generator structure, and FISHENG
+/// v3 round-trips the tombstone state.
+#[test]
+fn churn_ten_percent_removal_acceptance() {
+    let ds = blobs(1500, 61);
+    let truth = ds.primary_labels().unwrap().to_vec();
+    let engine = spawn_engine(3);
+    for chunk in ds.items.chunks(128) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let first = engine.cluster(10);
+    assert_eq!(first.n_items, 1500);
+
+    // a 10% id-scattered subset, removed by value
+    let victims: Vec<Item> = ds.items.iter().step_by(10).cloned().collect();
+    assert_eq!(engine.remove_batch(&victims), victims.len());
+
+    let snap = engine.cluster(10);
+    assert_eq!(snap.n_items, 1500 - victims.len());
+    assert_eq!(snap.n_deleted, victims.len());
+    assert_eq!(snap.clustering.labels.len(), 1500, "slots are stable");
+
+    // deleted ids label -1, everywhere and forever
+    let deleted = engine.deleted_globals();
+    assert_eq!(deleted.len(), victims.len());
+    for gid in &deleted {
+        assert_eq!(snap.clustering.labels[*gid as usize], -1);
+    }
+
+    // partition-identical to the from-scratch reference over survivors
+    let reference = engine.reference_cluster(10);
+    assert_eq!(reference.n_items, snap.n_items);
+    assert_eq!(snap.n_msf_edges, reference.n_msf_edges);
+    assert_eq!(
+        canon(&snap.clustering.labels),
+        canon(&reference.clustering.labels),
+        "churned delta merge != from-scratch reference merge"
+    );
+
+    // survivors still recover the generator structure
+    let (mut pred, mut t) = (Vec::new(), Vec::new());
+    for (i, &l) in snap.clustering.labels.iter().enumerate() {
+        if i % 10 != 0 {
+            pred.push((l + 1) as usize);
+            t.push(truth[i]);
+        }
+    }
+    let ari = adjusted_rand_index(&pred, &t);
+    assert!(ari >= 0.9, "survivor ARI vs truth {ari}");
+
+    // FISHENG v3 round-trips the tombstone state
+    let mut buf = Vec::new();
+    engine.save(&mut buf).unwrap();
+    engine.shutdown();
+    let reloaded = Engine::load(buf.as_slice()).unwrap();
+    assert_eq!(reloaded.deleted_globals(), deleted);
+    let got = reloaded.cluster(10);
+    assert_eq!(got.clustering.labels, snap.clustering.labels);
+    assert_eq!(got.n_changed_shards, 0, "reload keeps the delta path");
+    reloaded.shutdown();
+}
+
+/// ISSUE 5 acceptance: only shards containing deletions pay the full
+/// local re-derivation — the change-stamp counters prove the untouched
+/// shards stayed on the cached path.
+#[test]
+fn deletions_flip_only_their_own_shards_stamp() {
+    let ds = blobs(900, 63);
+    let engine = spawn_engine(3);
+    for chunk in ds.items.chunks(100) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let first = engine.cluster(10);
+    assert_eq!(first.n_changed_shards, 3, "first merge is from-scratch");
+    // a no-op merge proves the baseline: everything cached
+    let idle = engine.cluster(10);
+    assert_eq!(idle.n_changed_shards, 0);
+
+    // removals confined to shard 0 by routing hash
+    let victims: Vec<Item> = ds
+        .items
         .iter()
-        .map(|&l| {
-            if l < 0 {
-                -1
-            } else {
-                let next = map.len() as i32;
-                *map.entry(l).or_insert(next)
-            }
-        })
-        .collect()
+        .filter(|it| it.shard_key() % 3 == 0)
+        .step_by(7)
+        .take(25)
+        .cloned()
+        .collect();
+    assert!(!victims.is_empty());
+    assert_eq!(engine.remove_batch(&victims), victims.len());
+
+    let churn = engine.cluster(10);
+    assert_eq!(
+        churn.n_changed_shards, 1,
+        "a deletion in one shard must not flip the other shards' stamps"
+    );
+    assert_eq!(churn.n_deleted, victims.len());
+    // conformance holds on the churned epoch
+    let reference = engine.reference_cluster(10);
+    assert_eq!(churn.n_msf_edges, reference.n_msf_edges);
+    assert_eq!(
+        canon(&churn.clustering.labels),
+        canon(&reference.clustering.labels)
+    );
+    // and the window after the churn is monotone again: cached path
+    let after = engine.cluster(10);
+    assert_eq!(after.n_changed_shards, 0, "churn must not poison the cache");
+    assert_eq!(after.clustering.labels, churn.clustering.labels);
+    engine.shutdown();
 }
 
 #[test]

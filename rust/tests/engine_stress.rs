@@ -1,17 +1,20 @@
 //! Deterministic engine stress harness: a seeded *virtual scheduler*
-//! replays a reproducible interleaving of `add_batch`, recluster epochs,
-//! online `label()` queries, mid-epoch snapshot refreshes, and mid-stream
-//! save/load over S ∈ {1, 2, 4} shards — on Euclidean blobs and on the
-//! paper's non-Euclidean workloads (Jaro-Winkler text, sparse cosine),
-//! since the generic engine must honor the conformance contract for any
-//! metric. The conformance invariant, checked at **every** published
-//! epoch:
+//! replays a reproducible interleaving of `add_batch`, `remove_batch`
+//! churn (including remove-then-reinsert of an equal item and removals
+//! landing mid-epoch-window), recluster epochs, online `label()` queries,
+//! mid-epoch snapshot refreshes, and mid-stream save/load over
+//! S ∈ {1, 2, 4} shards — on Euclidean blobs and on the paper's
+//! non-Euclidean workloads (Jaro-Winkler text, sparse cosine), since the
+//! generic engine must honor the conformance contract for any metric.
+//! The conformance invariant, checked at **every** published epoch:
 //!
 //! * labels are index-aligned with the input stream (`labels.len()` ==
-//!   items ingested so far, global ids = arrival order), and
+//!   global ids assigned so far, global ids = arrival order; deleted ids
+//!   keep their slots and label -1), and
 //! * the epoch's clustering is identical to a **from-scratch merge of the
-//!   same prefix state** (`Engine::reference_cluster`): one Kruskal over
-//!   all current shard forests plus all current bridge sets, bypassing the
+//!   same surviving prefix state** (`Engine::reference_cluster`): one
+//!   Kruskal over all current tombstone-filtered shard forests plus all
+//!   current bridge sets (deleted endpoints dropped), bypassing the
 //!   cached global MSF, the per-shard change stamps, and the memoizing
 //!   extraction pipeline.
 //!
@@ -35,40 +38,44 @@
 use fishdbc::datasets;
 use fishdbc::engine::{Engine, EngineConfig};
 use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::metrics::canonical_labels as canon;
 use fishdbc::util::rng::Rng;
 
-/// Canonical relabeling: clusters numbered by first occurrence, noise
-/// stays -1. Two label vectors describe the same partition iff their
-/// canonical forms are equal.
-fn canon(labels: &[i32]) -> Vec<i32> {
-    let mut map = std::collections::HashMap::new();
-    labels
-        .iter()
-        .map(|&l| {
-            if l < 0 {
-                -1
-            } else {
-                let next = map.len() as i32;
-                *map.entry(l).or_insert(next)
-            }
-        })
-        .collect()
-}
-
-/// One epoch's conformance check (call only with no ingest since the
-/// epoch was published).
-fn check_epoch(engine: &Engine, cursor: usize, mcs: usize, ctx: &str) {
+/// One epoch's conformance check (call only with no ingest/churn since
+/// the epoch was published). `assigned` is the global ids handed out so
+/// far; `removed` the cumulative deletions — survivors = assigned −
+/// removed.
+fn check_epoch(
+    engine: &Engine,
+    assigned: usize,
+    removed: usize,
+    mcs: usize,
+    ctx: &str,
+) {
     let snap = engine.latest().expect("epoch published");
-    assert_eq!(snap.n_items, cursor, "{ctx}: epoch item count");
-    if cursor > 0 {
+    assert_eq!(snap.n_items, assigned - removed, "{ctx}: epoch item count");
+    assert_eq!(snap.n_deleted, removed, "{ctx}: epoch deletion count");
+    if assigned > 0 {
         assert_eq!(
             snap.clustering.labels.len(),
-            cursor,
+            assigned,
             "{ctx}: labels not index-aligned with the stream"
         );
     }
+    let deleted = engine.deleted_globals();
+    assert_eq!(deleted.len(), removed, "{ctx}: deleted-id registry count");
+    for gid in &deleted {
+        assert_eq!(
+            snap.clustering.labels[*gid as usize], -1,
+            "{ctx}: deleted id {gid} kept a label"
+        );
+    }
     let reference = engine.reference_cluster(mcs);
-    assert_eq!(reference.n_items, cursor, "{ctx}: reference item count");
+    assert_eq!(
+        reference.n_items,
+        assigned - removed,
+        "{ctx}: reference item count"
+    );
     assert_eq!(
         snap.n_msf_edges, reference.n_msf_edges,
         "{ctx}: delta forest size != from-scratch forest size"
@@ -106,19 +113,22 @@ fn stress_on(
     };
     let mut engine = Engine::spawn(ds.metric, config);
     let mut rng = Rng::new(seed ^ 0x57E55);
-    let mut cursor = 0usize;
+    let mut cursor = 0usize; // dataset prefix ingested
+    let mut assigned = 0usize; // global ids handed out (incl. reinserts)
+    let mut removed = 0usize; // cumulative deletions (engine-confirmed)
     let mut last_epoch = 0u64;
-    let mut clean = false; // no ingest since the latest epoch
+    let mut clean = false; // no ingest/churn since the latest epoch
     let mut saves = 0usize;
 
     for round in 0..rounds {
-        match rng.below(12) {
+        match rng.below(15) {
             // ingest a batch (the common action)
             0..=6 => {
                 if cursor < max_items {
                     let take = (1 + rng.below(64)).min(max_items - cursor);
                     engine.add_batch(ds.items[cursor..cursor + take].to_vec());
                     cursor += take;
+                    assigned += take;
                     clean = false;
                 }
             }
@@ -129,7 +139,13 @@ fn stress_on(
                 assert!(snap.epoch > last_epoch, "epochs must be monotone");
                 last_epoch = snap.epoch;
                 clean = true;
-                check_epoch(&engine, cursor, mcs, &format!("round {round}"));
+                check_epoch(
+                    &engine,
+                    assigned,
+                    removed,
+                    mcs,
+                    &format!("round {round}"),
+                );
             }
             // online label query: read-only, contract-shaped. When no
             // epoch exists yet this lazily publishes one — deterministic,
@@ -149,7 +165,8 @@ fn stress_on(
                         clean = true;
                         check_epoch(
                             &engine,
-                            cursor,
+                            assigned,
+                            removed,
                             config.mcs,
                             &format!("round {round} (lazy label merge)"),
                         );
@@ -162,6 +179,37 @@ fn stress_on(
                 engine.flush();
                 engine.refresh_bridges();
             }
+            // churn: remove a random handful of already-ingested values —
+            // often mid-epoch-window, sometimes already-removed (no-op by
+            // contract). The engine's return value is the ground truth
+            // for how many actually died (duplicate values in text/sparse
+            // datasets remove one live copy per match).
+            11 | 12 => {
+                if cursor > 0 {
+                    let take = 1 + rng.below(8);
+                    let victims: Vec<_> = (0..take)
+                        .map(|_| ds.items[rng.below(cursor)].clone())
+                        .collect();
+                    let n = engine.remove_batch(&victims);
+                    removed += n;
+                    if n > 0 {
+                        clean = false;
+                    }
+                }
+            }
+            // churn: remove-then-reinsert of an equal item — the old id
+            // must stay deleted forever, the copy re-enters under a fresh
+            // id
+            13 => {
+                if cursor > 0 {
+                    let item = ds.items[rng.below(cursor)].clone();
+                    let n = engine.remove_batch(std::slice::from_ref(&item));
+                    removed += n;
+                    engine.add_batch(vec![item]);
+                    assigned += 1;
+                    clean = false;
+                }
+            }
             // mid-stream save / load (bounded: checkpoints are the
             // expensive action)
             _ => {
@@ -172,14 +220,19 @@ fn stress_on(
                     let reloaded = Engine::load(buf.as_slice()).unwrap();
                     let old = std::mem::replace(&mut engine, reloaded);
                     old.shutdown();
-                    assert_eq!(engine.len(), cursor, "reload lost items");
+                    assert_eq!(engine.len(), assigned, "reload lost ids");
+                    assert_eq!(
+                        engine.deleted_globals().len(),
+                        removed,
+                        "reload lost deletions"
+                    );
                     assert_eq!(engine.n_shards(), shards);
                     assert!(engine.epoch() >= last_epoch, "epoch counter rewound");
                     clean = false; // latest() is not persisted
                 }
             }
         }
-        // published epochs stay comparable only while no ingest happened
+        // published epochs stay comparable only while nothing changed
         if clean {
             let snap = engine.latest().expect("clean implies epoch");
             assert_eq!(snap.epoch, last_epoch);
@@ -188,9 +241,9 @@ fn stress_on(
 
     // final barrier: one more epoch over everything, fully checked
     let snap = engine.cluster(mcs);
-    assert_eq!(snap.n_items, cursor);
+    assert_eq!(snap.n_items, assigned - removed);
     last_epoch = snap.epoch;
-    check_epoch(&engine, cursor, mcs, "final");
+    check_epoch(&engine, assigned, removed, mcs, "final");
     // and an idle re-merge must short-circuit to the identical clustering
     let again = engine.cluster(mcs);
     assert_eq!(again.epoch, last_epoch + 1);

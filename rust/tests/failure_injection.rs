@@ -234,20 +234,31 @@ fn fisheng_v1_fixture_loads_and_reclusters() {
 }
 
 /// v2 engine files carry the pipeline epoch state; a reloaded engine must
-/// recluster *incrementally* (matching change stamps, no bridge re-search)
-/// — and saving it right back must reproduce the fixture byte for byte,
-/// proving the chunked copy-on-write stores never leak their in-memory
-/// layout into the container format.
+/// recluster *incrementally* (matching change stamps, no bridge re-search).
+/// Saving it re-emits the state as a v3 container (the deletion-state
+/// upgrade) whose own save → load → save cycle must be byte-stable —
+/// proving the chunked copy-on-write stores (and the empty deletion
+/// state) never leak their in-memory layout into the container format.
 #[test]
-fn fisheng_v2_fixture_reclusters_incrementally_and_roundtrips_bytes() {
+fn fisheng_v2_fixture_reclusters_incrementally_and_upgrades_to_v3() {
     let bytes = fixture("fisheng_v2.bin");
     let engine = Engine::load(bytes.as_slice()).unwrap();
     assert_eq!(engine.len(), 8);
     assert_eq!(engine.epoch(), 3, "epoch counter resumes");
 
-    let mut resaved = Vec::new();
-    engine.save(&mut resaved).unwrap();
-    assert_eq!(resaved, bytes, "save(load(v2 fixture)) changed the bytes");
+    // the upgrade rewrite: same state, v3 container
+    let mut v3 = Vec::new();
+    engine.save(&mut v3).unwrap();
+    assert_eq!(v3[..8], bytes[..8], "container magic changed");
+    assert_eq!(v3[8], 3, "save must emit the current (v3) container");
+    let upgraded = Engine::load(v3.as_slice()).unwrap();
+    assert_eq!(upgraded.len(), 8);
+    assert_eq!(upgraded.epoch(), 3);
+    assert!(upgraded.deleted_globals().is_empty());
+    let mut again = Vec::new();
+    upgraded.save(&mut again).unwrap();
+    assert_eq!(again, v3, "v3 save(load(save)) changed the bytes");
+    upgraded.shutdown();
 
     let snap = engine.cluster(2);
     assert_eq!(snap.epoch, 4);
