@@ -21,6 +21,7 @@ use std::time::Instant;
 use fishdbc::engine::{Engine, EngineConfig};
 use fishdbc::fishdbc::FishdbcParams;
 use fishdbc::metrics::canonical_labels as canon;
+use fishdbc::util::bench::emit_bench_json;
 use fishdbc::{datasets, Item};
 
 fn main() {
@@ -132,6 +133,20 @@ fn main() {
         after.n_changed_shards == 0,
         churn_total < rebuild_secs,
     );
+
+    emit_bench_json("deletion_churn", |w| {
+        w.usize("n", n)
+            .usize("shards", 4)
+            .usize("removed", removed)
+            .f64("remove_secs", remove_secs)
+            .f64("removals_per_sec", removed as f64 / remove_secs.max(1e-9))
+            .f64("churn_cluster_secs", churn_secs)
+            .f64("rebuild_secs", rebuild_secs)
+            .f64("churn_over_rebuild", churn_total / rebuild_secs.max(1e-9))
+            .u64("compactions", stats.compactions)
+            .u64("metric_calls", stats.metric_calls)
+            .str("acceptance", if pass { "PASS" } else { "FAIL" });
+    });
     engine.shutdown();
     // the correctness conditions gate CI (the bench-smoke job runs this
     // binary); the timing comparison stays advisory — tiny-n CI boxes

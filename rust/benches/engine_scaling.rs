@@ -24,6 +24,8 @@ use fishdbc::datasets;
 use fishdbc::engine::{Engine, EngineConfig};
 use fishdbc::fishdbc::FishdbcParams;
 use fishdbc::metrics::adjusted_rand_index;
+use fishdbc::obs::HistId;
+use fishdbc::util::bench::emit_bench_json;
 
 fn to_pred(labels: &[i32]) -> Vec<usize> {
     labels.iter().map(|&l| (l + 1) as usize).collect()
@@ -93,6 +95,30 @@ fn main() {
             snap.n_bridge_edges,
             ari
         );
+
+        // one line-delimited record per configuration (BENCH_engine_scaling.json)
+        let ingest_hist =
+            engine.registry().hist(HistId::IngestBatch).snapshot();
+        emit_bench_json("engine_scaling", |w| {
+            w.str("dataset", &ds.name)
+                .usize("n", n)
+                .usize("shards", shards)
+                .f64("ingest_secs", ingest)
+                .f64("items_per_sec", n as f64 / ingest.max(1e-9))
+                .f64("merge_secs", snap.extract_secs)
+                .u64("metric_calls", calls)
+                .usize("clusters", snap.clustering.n_clusters)
+                .usize("bridges", snap.n_bridge_edges)
+                .f64("ari_vs_s1", ari)
+                .f64(
+                    "ingest_batch_p50_us",
+                    ingest_hist.quantile_ns(0.5) as f64 / 1e3,
+                )
+                .f64(
+                    "ingest_batch_p99_us",
+                    ingest_hist.quantile_ns(0.99) as f64 / 1e3,
+                );
+        });
 
         if base.is_none() {
             base = Some((ingest, snap.clustering.labels.clone()));

@@ -15,6 +15,8 @@ use std::time::Instant;
 
 use fishdbc::engine::{Engine, EngineConfig};
 use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::obs::HistId;
+use fishdbc::util::bench::emit_bench_json;
 use fishdbc::{datasets, metrics::score_external};
 
 fn main() {
@@ -101,5 +103,20 @@ fn main() {
         "# acceptance: {}",
         if ratio < 0.25 { "PASS" } else { "FAIL" }
     );
+
+    let merge_hist = engine.registry().hist(HistId::Merge).snapshot();
+    emit_bench_json("recluster_latency", |w| {
+        w.usize("n", n)
+            .usize("shards", 4)
+            .f64("full_secs", full_secs)
+            .f64("delta_secs", inc_secs)
+            .f64("idle_secs", idle_secs)
+            .f64("delta_over_full", ratio)
+            .f64("ari_star", quality.ari_star)
+            .u64("metric_calls", engine.stats().metric_calls)
+            .f64("merge_p50_s", merge_hist.quantile_secs(0.5))
+            .f64("merge_p99_s", merge_hist.quantile_secs(0.99))
+            .str("acceptance", if ratio < 0.25 { "PASS" } else { "FAIL" });
+    });
     engine.shutdown();
 }

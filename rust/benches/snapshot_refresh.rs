@@ -24,6 +24,8 @@ use std::time::Instant;
 use fishdbc::datasets;
 use fishdbc::engine::{Engine, EngineConfig};
 use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::obs::HistId;
+use fishdbc::util::bench::emit_bench_json;
 
 fn main() {
     let n: usize = std::env::args()
@@ -96,6 +98,19 @@ fn main() {
         if (ratio - 0.01).abs() < 1e-9 {
             one_percent_bytes = bytes;
         }
+        let cap = engine.registry().hist(HistId::SnapshotCapture).snapshot();
+        emit_bench_json("snapshot_refresh", |w| {
+            w.usize("n", n)
+                .usize("shards", 2)
+                .f64("dirty_ratio", ratio)
+                .f64("capture_ms", ms)
+                .u64("chunks_copied", copied)
+                .u64("chunks_shared", shared)
+                .u64("bytes_copied", bytes)
+                .f64("capture_p50_ms", cap.quantile_secs(0.5) * 1e3)
+                .f64("capture_p99_ms", cap.quantile_secs(0.99) * 1e3)
+                .u64("metric_calls", engine.stats().metric_calls);
+        });
         prev = now;
     }
 

@@ -61,6 +61,7 @@ use std::time::Instant;
 
 use crate::distances::Metric;
 use crate::mst::{Edge, Msf};
+use crate::obs::{CacheKind, CounterId, HistId, JournalEvent, Registry};
 use crate::util::fasthash::{FastMap, FastSet};
 
 use super::pipeline::Pipeline;
@@ -112,6 +113,15 @@ impl MergeState {
     pub fn resumed(cache: Option<MergeCache>) -> MergeState {
         MergeState { pipeline: Pipeline::new(), cache, merges: 0 }
     }
+
+    /// Re-home the back-half pipeline onto the engine's shared telemetry
+    /// registry, so pipeline spans and counters land in the same
+    /// [`Registry`] every other engine metric uses. Safe any time before
+    /// the first merge: the pipeline's memo caches are empty at
+    /// construction and at load, so swapping the instance loses nothing.
+    pub fn attach_registry(&mut self, obs: Arc<Registry>) {
+        self.pipeline = Pipeline::with_registry(obs);
+    }
 }
 
 impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
@@ -139,6 +149,9 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         let bridges: Vec<&Arc<Mutex<BridgeState>>> =
             self.shard_handles().iter().map(|s| &s.bridge).collect();
         let (n_items, removed, n) = survivor_space(&states);
+        let obs = self.obs();
+        obs.journal
+            .push(obs.uptime_secs(), JournalEvent::MergeStart { n_items });
 
         // 1. bridge catch-up: first-cover above each coverage watermark,
         //    re-search the closing same-epoch window below it
@@ -150,8 +163,11 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
             self.config().bridge_fanout,
             self.config().fishdbc.alpha,
             self.deleted_registry(),
+            obs,
         );
-        let bridge_secs = tb.elapsed().as_secs_f64();
+        let bridge_elapsed = tb.elapsed();
+        let bridge_secs = bridge_elapsed.as_secs_f64();
+        obs.record(HistId::BridgeCatchUp, bridge_elapsed);
 
         // 2. delta Kruskal under the merge lock (serializes merges; the
         //    serving path never takes this lock)
@@ -171,9 +187,11 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
             })
             .collect();
         let tk = Instant::now();
-        let (msf, n_bridge_edges, n_changed_shards) =
+        let (msf, n_bridge_edges, n_changed_shards, cache_kind) =
             merge_forest(ms.cache.as_ref(), &states, &bridges, &stamps, n, &removed);
-        let kruskal_secs = tk.elapsed().as_secs_f64();
+        let kruskal_elapsed = tk.elapsed();
+        let kruskal_secs = kruskal_elapsed.as_secs_f64();
+        obs.record(HistId::Kruskal, kruskal_elapsed);
 
         // 3. next epoch's frozen snapshots, while the read guards are
         //    still held (so they capture exactly the merged state)
@@ -211,6 +229,30 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
             clustering,
         });
         self.set_latest(Arc::clone(&snap));
+
+        // exactly one MergeEnd per published epoch — the journal entry's
+        // shard-change count and cache kind are cross-checked against the
+        // registry counters by `tests/engine_integration.rs`
+        let total = t0.elapsed();
+        obs.inc(CounterId::Merges);
+        obs.inc(match cache_kind {
+            CacheKind::Reused => CounterId::MergeReused,
+            CacheKind::Delta => CounterId::MergeDelta,
+            CacheKind::Rebuild => CounterId::MergeRebuild,
+            CacheKind::Scratch => CounterId::MergeScratch,
+        });
+        obs.record(HistId::Merge, total);
+        obs.journal.push(
+            obs.uptime_secs(),
+            JournalEvent::MergeEnd {
+                epoch,
+                n_changed_shards,
+                cache: cache_kind,
+                n_items,
+                n_deleted: removed.len(),
+                secs: total.as_secs_f64(),
+            },
+        );
         snap
     }
 }
@@ -289,6 +331,7 @@ pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
     fanout: usize,
     alpha: f64,
     deleted: &Mutex<FastSet<u32>>,
+    obs: &Registry,
 ) {
     let s = states.len();
     if s < 2 || k == 0 || fanout == 0 {
@@ -331,7 +374,11 @@ pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
                     }
                 };
                 // 1. same-epoch window re-search against live states
+                // (per-shard span: the registry is Sync, so each scoped
+                // thread records its own sample lock-free)
                 let recheck_end = br.covered.min(len);
+                let tw = Instant::now();
+                let rechecking = br.merge_covered < recheck_end;
                 for li in br.merge_covered..recheck_end {
                     // tombstoned inside the window: nothing left to bridge
                     if !st.f.alive(li as u32) {
@@ -360,6 +407,9 @@ pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
                     if searched {
                         br.recheck_items += 1;
                     }
+                }
+                if rechecking {
+                    obs.record(HistId::WindowResearch, tw.elapsed());
                 }
                 // 2. first-pass coverage above the watermark
                 while br.covered < len {
@@ -394,8 +444,10 @@ pub(crate) fn catch_up_bridges<T: EngineItem, M: Metric<T> + Clone>(
 }
 
 /// Fold the deltas into a new global forest. Returns the forest, the
-/// number of (deduplicated) bridge edges offered to this merge, and the
-/// number of stamp-changed shards.
+/// number of (deduplicated) bridge edges offered to this merge, the
+/// number of stamp-changed shards, and which [`CacheKind`] path the fold
+/// took (journaled per epoch and counted per kind by the telemetry
+/// registry).
 ///
 /// `removed` is the cumulative deleted-gid list. A window that saw any
 /// deletion (detected on the removal stamps) **drops the cached global
@@ -417,7 +469,7 @@ fn merge_forest<T: EngineItem, M: Metric<T> + Clone>(
     stamps: &[ShardStamp],
     n: usize,
     removed: &[u32],
-) -> (Msf, usize, usize) {
+) -> (Msf, usize, usize, CacheKind) {
     let valid = cache
         .map_or(false, |c| c.stamps.len() == stamps.len() && c.n <= n);
     let changed: Vec<bool> = if valid {
@@ -437,7 +489,7 @@ fn merge_forest<T: EngineItem, M: Metric<T> + Clone>(
         // deletion since the cache, and the cache was rebuilt clean at
         // the deletion's own merge.
         let c = cache.expect("valid implies cache");
-        return (c.global.clone(), 0, 0);
+        return (c.global.clone(), 0, 0, CacheKind::Reused);
     }
 
     // monotone window ⇔ no removal stamp moved: only then is the cached
@@ -477,7 +529,14 @@ fn merge_forest<T: EngineItem, M: Metric<T> + Clone>(
     }
     refs.extend(lists.iter().map(|l| l.as_slice()));
     let msf = Msf::from_edge_lists(&refs, n.max(1));
-    (msf, n_bridge_edges, n_changed)
+    let kind = if !valid {
+        CacheKind::Scratch
+    } else if monotone {
+        CacheKind::Delta
+    } else {
+        CacheKind::Rebuild
+    };
+    (msf, n_bridge_edges, n_changed, kind)
 }
 
 /// One shard's local forest relabeled into global ids (shared by the

@@ -90,11 +90,15 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::distances::{Counting, Item, Metric, MetricKind};
 use crate::fishdbc::{FishdbcParams, FishdbcStats};
 use crate::hdbscan::Clustering;
+use crate::obs::{
+    export, CounterId, GaugeId, HistId, HistSnapshot, JournalEntry,
+    JournalEvent, MetricsServer, Registry, RegistrySnapshot,
+};
 use crate::util::fasthash::{FastHasher, FastMap, FastSet};
 use merge::MergeState;
 use pipeline::{PipelineRun, PipelineStats};
@@ -355,9 +359,23 @@ pub(crate) struct EngineInner<T, M> {
     epoch: AtomicU64,
     latest: Mutex<Option<Arc<EngineSnapshot>>>,
     pub(crate) merge: Mutex<MergeState>,
+    /// Per-engine telemetry: counters, gauges, latency histograms, and
+    /// the lifecycle journal (see [`crate::obs`]). Never global — each
+    /// engine owns its own registry, so concurrent tests stay isolated.
+    obs: Arc<Registry>,
+    /// Baseline for [`Engine::stats_delta`]'s snapshot-and-diff window.
+    window: Mutex<StatsWindow>,
     /// Shutdown flag + wakeup for the recluster thread.
     stop: Mutex<bool>,
     wake: Condvar,
+}
+
+/// Windowed-stats baseline: the registry snapshot (plus the out-of-
+/// registry absolute counters) captured at the previous
+/// [`Engine::stats_delta`] call.
+struct StatsWindow {
+    reg: RegistrySnapshot,
+    metric_calls: u64,
 }
 
 /// Handle to a running sharded engine over items of type `T` under metric
@@ -391,6 +409,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     pub fn spawn(metric: M, config: EngineConfig) -> Engine<T, M> {
         assert!(config.shards >= 1, "engine needs at least one shard");
         let metric = Counting::new(metric);
+        let obs = Arc::new(Registry::new(config.shards));
         let snaps = Arc::new(Snaps::new(config.shards));
         let deleted = Arc::new(Mutex::new(FastSet::default()));
         let shards = (0..config.shards)
@@ -400,10 +419,16 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
                     metric.clone(),
                     config.fishdbc,
                     config.queue_depth,
-                    seed_ctx(&config, &snaps, &deleted),
+                    seed_ctx(&config, &snaps, &deleted, &obs),
                 )
             })
             .collect();
+        let mut merge_state = MergeState::new();
+        merge_state.attach_registry(Arc::clone(&obs));
+        let window = Mutex::new(StatsWindow {
+            reg: obs.snapshot(),
+            metric_calls: metric.calls(),
+        });
         Engine::assemble(EngineInner {
             config,
             metric,
@@ -414,7 +439,9 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             merged_items: AtomicU64::new(0),
             epoch: AtomicU64::new(0),
             latest: Mutex::new(None),
-            merge: Mutex::new(MergeState::new()),
+            merge: Mutex::new(merge_state),
+            obs,
+            window,
             stop: Mutex::new(false),
             wake: Condvar::new(),
         })
@@ -427,9 +454,10 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
         config: EngineConfig,
         parts: Vec<(ShardState<T, M>, BridgeState)>,
         next_global: u64,
-        merge_state: MergeState,
+        mut merge_state: MergeState,
         epoch: u64,
     ) -> Engine<T, M> {
+        let obs = Arc::new(Registry::new(config.shards));
         let snaps = Arc::new(Snaps::new(config.shards));
         let deleted: FastSet<u32> = parts
             .iter()
@@ -445,10 +473,20 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
                     st,
                     br,
                     config.queue_depth,
-                    seed_ctx(&config, &snaps, &deleted),
+                    seed_ctx(&config, &snaps, &deleted, &obs),
                 )
             })
             .collect();
+        merge_state.attach_registry(Arc::clone(&obs));
+        obs.inc(CounterId::Loads);
+        obs.journal.push(
+            obs.uptime_secs(),
+            JournalEvent::Load { items: next_global as usize },
+        );
+        let window = Mutex::new(StatsWindow {
+            reg: obs.snapshot(),
+            metric_calls: metric.calls(),
+        });
         Engine::assemble(EngineInner {
             config,
             metric,
@@ -460,6 +498,8 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             epoch: AtomicU64::new(epoch),
             latest: Mutex::new(None),
             merge: Mutex::new(merge_state),
+            obs,
+            window,
             stop: Mutex::new(false),
             wake: Condvar::new(),
         })
@@ -504,6 +544,150 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     pub fn stats(&self) -> EngineStats {
         self.inner.stats()
     }
+
+    /// Windowed stats: everything that happened since the previous
+    /// `stats_delta` call (or since spawn, on the first call), as rates
+    /// plus per-window latency quantiles. Cumulative totals
+    /// ([`Engine::stats`]) are useless for a long-running serving
+    /// process — after hours of uptime they average over everything that
+    /// ever happened; this is the per-window view. Flushes first, like
+    /// [`Engine::stats`], then advances the baseline.
+    pub fn stats_delta(&self) -> StatsDelta {
+        self.inner.flush();
+        self.inner.refresh_gauges();
+        let reg = self.inner.obs.snapshot();
+        let metric_calls = self.inner.metric.calls();
+        let mut base = self.inner.window.lock().unwrap();
+        let window = reg.since(&base.reg);
+        let secs = window.uptime_secs.max(1e-9);
+        let delta = StatsDelta {
+            window_secs: window.uptime_secs,
+            items: window.counter(CounterId::IngestItems),
+            items_per_sec: window.counter(CounterId::IngestItems) as f64
+                / secs,
+            metric_calls: metric_calls.saturating_sub(base.metric_calls),
+            metric_calls_per_sec: metric_calls
+                .saturating_sub(base.metric_calls)
+                as f64
+                / secs,
+            merges: window.counter(CounterId::Merges),
+            label_queries: window.counter(CounterId::LabelQueries),
+            label_latency: *window.hist(HistId::Label),
+            ingest_latency: *window.hist(HistId::IngestBatch),
+            merge_latency: *window.hist(HistId::Merge),
+            window,
+        };
+        *base = StatsWindow { reg, metric_calls };
+        delta
+    }
+
+    /// The engine lifecycle journal: the most recent structured events
+    /// (merges with cache kind and changed-shard counts, compactions,
+    /// deletion windows, snapshot refreshes, save/load), oldest first.
+    /// Bounded ring — see [`crate::obs::journal`].
+    pub fn journal(&self) -> Vec<JournalEntry> {
+        self.inner.obs.journal.entries()
+    }
+
+    /// The engine's telemetry registry (counters, gauges, histograms).
+    pub fn registry(&self) -> &Registry {
+        &self.inner.obs
+    }
+
+    /// The full machine-readable stats document (schema
+    /// `fishdbc-stats-v1`; see EXPERIMENTS.md): engine counters, bridge
+    /// and pipeline totals, every registry histogram's quantiles, and
+    /// the journal tail. Flushes first. The CLI writes this via
+    /// `--stats-json`.
+    pub fn stats_json(&self) -> String {
+        self.inner.stats_json(true)
+    }
+
+    /// Serve Prometheus text exposition (`GET /metrics`) and the JSON
+    /// stats document (`GET /stats.json`) on `addr` (e.g.
+    /// `127.0.0.1:9100`; port 0 picks a free port) until the returned
+    /// server is dropped. Scrapes never take the flush barrier — they
+    /// read the lock-free registry plus brief per-shard gauge reads — so
+    /// scraping cannot stall ingest or merges. The server holds only a
+    /// weak engine reference: after the engine is dropped, `/metrics`
+    /// keeps answering from the registry's final totals and
+    /// `/stats.json` turns 404.
+    pub fn serve_metrics(
+        &self,
+        addr: &str,
+    ) -> std::io::Result<MetricsServer> {
+        let obs = Arc::clone(&self.inner.obs);
+        let weak = Arc::downgrade(&self.inner);
+        MetricsServer::serve(
+            addr,
+            Arc::new(move |path: &str| match path {
+                "/metrics" => {
+                    let mut extra_counters: Vec<(&str, &str, u64)> =
+                        Vec::new();
+                    if let Some(inner) = weak.upgrade() {
+                        inner.refresh_gauges();
+                        extra_counters.push((
+                            "metric_calls",
+                            "Distance metric evaluations on every path \
+                             (the paper's cost model)",
+                            inner.metric.calls(),
+                        ));
+                        extra_counters.push((
+                            "items_accepted",
+                            "Global ids assigned so far",
+                            inner.next_global.load(Ordering::Relaxed),
+                        ));
+                    }
+                    let extra_gauges = [(
+                        "uptime_seconds",
+                        "Seconds since the engine was spawned",
+                        obs.uptime_secs(),
+                    )];
+                    Some((
+                        export::render_prometheus(
+                            &obs.snapshot(),
+                            &extra_counters,
+                            &extra_gauges,
+                        ),
+                        "text/plain; version=0.0.4",
+                    ))
+                }
+                "/stats.json" => weak.upgrade().map(|inner| {
+                    // relaxed read: no flush barrier on the scrape path
+                    (inner.stats_json(false), "application/json")
+                }),
+                _ => None,
+            }),
+        )
+    }
+}
+
+/// One [`Engine::stats_delta`] window: counts, rates, and latency
+/// distributions for everything since the previous call.
+#[derive(Clone, Debug)]
+pub struct StatsDelta {
+    /// Wall seconds the window spans.
+    pub window_secs: f64,
+    /// Items accepted in the window.
+    pub items: u64,
+    pub items_per_sec: f64,
+    /// Distance metric evaluations in the window (the paper's cost
+    /// model, windowed).
+    pub metric_calls: u64,
+    pub metric_calls_per_sec: f64,
+    /// Epochs published in the window.
+    pub merges: u64,
+    /// `label()` queries served in the window.
+    pub label_queries: u64,
+    /// Windowed `label()` latency distribution.
+    pub label_latency: HistSnapshot,
+    /// Windowed `add_batch` latency distribution.
+    pub ingest_latency: HistSnapshot,
+    /// Windowed end-to-end merge latency distribution.
+    pub merge_latency: HistSnapshot,
+    /// The full windowed registry, for consumers that need more than the
+    /// named fields above.
+    pub window: RegistrySnapshot,
 }
 
 /// Incremental deletion (removal is keyed by item *value*, so it needs
@@ -631,6 +815,7 @@ fn seed_ctx<T, M>(
     config: &EngineConfig,
     snaps: &Arc<Snaps<T, M>>,
     deleted: &Arc<Mutex<FastSet<u32>>>,
+    obs: &Arc<Registry>,
 ) -> BridgeCtxSeed<T, M> {
     // Staleness bound for insert-time coverage: with a refresh cadence
     // configured, tolerate up to two refresh windows of remote growth;
@@ -651,6 +836,7 @@ fn seed_ctx<T, M>(
         lag_limit,
         snaps: Arc::clone(snaps),
         deleted: Arc::clone(deleted),
+        obs: Arc::clone(obs),
     }
 }
 
@@ -712,7 +898,13 @@ impl<T, M> EngineInner<T, M> {
         let mut slot = self.latest.lock().unwrap();
         if slot.as_ref().map_or(true, |old| old.epoch <= snap.epoch) {
             *slot = Some(snap);
+            self.obs.mark_publish();
         }
+    }
+
+    /// The engine's telemetry registry.
+    pub(crate) fn obs(&self) -> &Registry {
+        &self.obs
     }
 
     /// Claim the next merge epoch number.
@@ -751,6 +943,9 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         if items.is_empty() {
             return;
         }
+        // ingest latency as the caller experiences it: routing, enqueue,
+        // and any backpressure blocking, but not the async shard insert
+        let t_ingest = Instant::now();
         // validate before assigning ids: a rejected batch must not leak
         // global ids (persistence requires ids to be dense)
         for item in &items {
@@ -791,11 +986,16 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         if refresh > 0 && base / refresh != next / refresh {
             self.refresh_snaps();
         }
+        self.obs.inc(CounterId::IngestBatches);
+        self.obs.counter(CounterId::IngestItems).add(n_items);
+        self.obs.record(HistId::IngestBatch, t_ingest.elapsed());
     }
 
     /// Refresh every shard's frozen snapshot from its live state (taking
     /// each read lock briefly, one shard at a time).
     pub(crate) fn refresh_snaps(&self) {
+        let t0 = Instant::now();
+        let mut refreshed = 0usize;
         for (t, shard) in self.shards.iter().enumerate() {
             let snap = {
                 let st = shard.state.read().unwrap();
@@ -805,17 +1005,33 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
                 ShardSnap::capture(&st)
             };
             self.snaps.set(t, Arc::new(snap));
+            refreshed += 1;
+        }
+        if refreshed > 0 {
+            self.obs.record(HistId::SnapshotCapture, t0.elapsed());
+            self.obs.inc(CounterId::SnapshotRefreshes);
+            self.obs.journal.push(
+                self.obs.uptime_secs(),
+                JournalEvent::SnapshotRefresh { shards: refreshed },
+            );
         }
     }
 
     /// Refresh snapshots from already-held state views (the merge path,
-    /// which holds every read guard anyway).
+    /// which holds every read guard anyway). No journal entry: the
+    /// enclosing merge records its own `MergeEnd` event.
     pub(crate) fn refresh_snaps_from(&self, states: &[&ShardState<T, M>]) {
+        let t0 = Instant::now();
+        let mut refreshed = 0usize;
         for (t, st) in states.iter().enumerate() {
             if self.snap_is_current(t, st) {
                 continue;
             }
             self.snaps.set(t, Arc::new(ShardSnap::capture(st)));
+            refreshed += 1;
+        }
+        if refreshed > 0 {
+            self.obs.record(HistId::SnapshotCapture, t0.elapsed());
         }
     }
 
@@ -829,7 +1045,17 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
     }
 
     pub(crate) fn stats(&self) -> EngineStats {
-        self.flush();
+        self.stats_with(true)
+    }
+
+    /// Aggregate counters; `flush` gates the ingestion barrier. The
+    /// metrics scrape path passes `false` so an HTTP scrape can never
+    /// stall behind a busy shard queue.
+    pub(crate) fn stats_with(&self, flush: bool) -> EngineStats {
+        if flush {
+            self.flush();
+        }
+        self.refresh_gauges();
         let mut stats = EngineStats::default();
         for shard in &self.shards {
             {
@@ -869,6 +1095,157 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         stats.pipeline.metric_calls = stats.metric_calls;
         stats
     }
+
+    /// Refresh the point-in-time gauges from live engine state: bridge
+    /// coverage lag, per-shard tombstone ratios, live item count, epoch,
+    /// epoch age. Takes each shard's read lock and bridge mutex briefly
+    /// (same order as every other path); never the flush barrier.
+    pub(crate) fn refresh_gauges(&self) {
+        let mut stored = 0usize;
+        let mut tombstoned = 0usize;
+        let mut covered = 0usize;
+        for (si, shard) in self.shards.iter().enumerate() {
+            let (len, tombs) = {
+                let st = shard.state.read().unwrap();
+                (st.f.len(), st.f.n_tombstoned())
+            };
+            stored += len;
+            tombstoned += tombs;
+            let ratio = if len == 0 { 0.0 } else { tombs as f64 / len as f64 };
+            self.obs.shard_tombstone_gauge(si).set(ratio);
+            let br = shard.bridge.lock().unwrap();
+            covered += br.covered.min(len);
+        }
+        self.obs
+            .gauge(GaugeId::BridgeCoverageLag)
+            .set(stored.saturating_sub(covered) as f64);
+        self.obs
+            .gauge(GaugeId::LiveItems)
+            .set(stored.saturating_sub(tombstoned) as f64);
+        self.obs
+            .gauge(GaugeId::Epoch)
+            .set(self.epoch.load(Ordering::Relaxed) as f64);
+        self.obs
+            .gauge(GaugeId::EpochAgeSecs)
+            .set(self.obs.epoch_age_secs().unwrap_or(0.0));
+    }
+
+    /// Render the `fishdbc-stats-v1` JSON document (see EXPERIMENTS.md
+    /// for the schema). `flush` gates the ingestion barrier: the CLI
+    /// passes `true`, the HTTP scrape path `false`.
+    pub(crate) fn stats_json(&self, flush: bool) -> String {
+        let stats = self.stats_with(flush);
+        let reg = self.obs.snapshot();
+        let mut w = export::JsonW::new();
+        w.obj(None)
+            .str("schema", "fishdbc-stats-v1")
+            .f64("uptime_secs", reg.uptime_secs)
+            .u64("epoch", self.epoch.load(Ordering::Relaxed))
+            .usize("items", stats.items)
+            .usize("removed_items", stats.removed_items)
+            .usize("tombstoned_items", stats.tombstoned_items)
+            .u64("compactions", stats.compactions)
+            .u64("metric_calls", stats.metric_calls)
+            .u64("dist_calls", stats.dist_calls)
+            .u64("batches", stats.batches)
+            .u64("merges", stats.merges)
+            .f64("build_secs", stats.build_secs);
+        w.obj(Some("bridges"))
+            .usize("edges", stats.bridge_edges)
+            .u64("insert_edges", stats.bridge_insert_edges)
+            .usize("covered", stats.bridge_covered)
+            .u64("insert_items", stats.bridge_insert_items)
+            .u64("catch_up_items", stats.bridge_catch_up_items)
+            .u64("recheck_items", stats.bridge_recheck_items)
+            .u64("compactions", stats.bridge_compactions)
+            .f64("insert_secs", stats.bridge_insert_secs)
+            .end_obj();
+        w.obj(Some("pipeline"))
+            .u64("runs", stats.pipeline.runs)
+            .u64("short_circuits", stats.pipeline.short_circuits)
+            .u64("dendrogram_reuses", stats.pipeline.dendrogram_reuses)
+            .f64("dendrogram_secs", stats.pipeline.dendrogram_secs)
+            .f64("condense_secs", stats.pipeline.condense_secs)
+            .f64("extract_secs", stats.pipeline.extract_secs)
+            .end_obj();
+        w.obj(Some("snapshots"))
+            .u64("captures", stats.pipeline.snapshot_captures)
+            .u64("chunks_copied", stats.pipeline.snapshot_chunks_copied)
+            .u64("chunks_shared", stats.pipeline.snapshot_chunks_shared)
+            .u64("bytes_copied", stats.pipeline.snapshot_bytes_copied)
+            .end_obj();
+        w.obj(Some("counters"));
+        for &id in CounterId::ALL {
+            w.u64(id.name(), reg.counter(id));
+        }
+        w.end_obj();
+        w.obj(Some("gauges"));
+        for &id in GaugeId::ALL {
+            w.f64(id.name(), reg.gauge(id));
+        }
+        w.arr(Some("tombstone_ratio"));
+        for si in 0..reg.n_shards() {
+            w.obj(None)
+                .usize("shard", si)
+                .f64("ratio", reg.shard_tombstone(si))
+                .end_obj();
+        }
+        w.end_arr().end_obj();
+        w.obj(Some("histograms"));
+        for &id in HistId::ALL {
+            export::json_hist(&mut w, id.name(), reg.hist(id));
+        }
+        w.end_obj();
+        w.arr(Some("journal"));
+        for e in self.obs.journal.entries() {
+            journal_entry_json(&mut w, &e);
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+}
+
+/// One journal entry as a flat JSON object (stable `event` names, typed
+/// payload fields).
+fn journal_entry_json(w: &mut export::JsonW, e: &JournalEntry) {
+    w.obj(None)
+        .u64("seq", e.seq)
+        .f64("at_secs", e.at_secs)
+        .str("event", e.event.name());
+    match &e.event {
+        JournalEvent::MergeStart { n_items } => {
+            w.usize("n_items", *n_items);
+        }
+        JournalEvent::MergeEnd {
+            epoch,
+            n_changed_shards,
+            cache,
+            n_items,
+            n_deleted,
+            secs,
+        } => {
+            w.u64("epoch", *epoch)
+                .usize("n_changed_shards", *n_changed_shards)
+                .str("cache", cache.name())
+                .usize("n_items", *n_items)
+                .usize("n_deleted", *n_deleted)
+                .f64("secs", *secs);
+        }
+        JournalEvent::Compaction { shard, survivors } => {
+            w.usize("shard", *shard).usize("survivors", *survivors);
+        }
+        JournalEvent::DeletionWindow { removed } => {
+            w.usize("removed", *removed);
+        }
+        JournalEvent::SnapshotRefresh { shards } => {
+            w.usize("shards", *shards);
+        }
+        JournalEvent::Save { items } | JournalEvent::Load { items } => {
+            w.usize("items", *items);
+        }
+    }
+    w.end_obj();
 }
 
 impl<T: EngineItem + PartialEq, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
@@ -893,6 +1270,13 @@ impl<T: EngineItem + PartialEq, M: Metric<T> + Clone + 'static> EngineInner<T, M
             if !targets.is_empty() {
                 total += self.remove_from_shard(si, shard, targets);
             }
+        }
+        if total > 0 {
+            self.obs.inc(CounterId::DeletionWindows);
+            self.obs.journal.push(
+                self.obs.uptime_secs(),
+                JournalEvent::DeletionWindow { removed: total },
+            );
         }
         total
     }
@@ -951,10 +1335,17 @@ impl<T: EngineItem + PartialEq, M: Metric<T> + Clone + 'static> EngineInner<T, M
         // compaction past the tombstone-ratio threshold
         let ca = self.config.compact_at;
         if ca > 0.0 && (st.f.n_tombstoned() as f64) > ca * st.f.len() as f64 {
+            let t0 = Instant::now();
             compact_shard(&mut st, &mut br);
             // the live count legitimately shrank; peers' staleness checks
             // must see it (store under the held state lock)
             self.snaps.set_len(si, st.f.len());
+            self.obs.record(HistId::Compaction, t0.elapsed());
+            self.obs.inc(CounterId::Compactions);
+            self.obs.journal.push(
+                self.obs.uptime_secs(),
+                JournalEvent::Compaction { shard: si, survivors: st.f.len() },
+            );
         }
         removed
     }

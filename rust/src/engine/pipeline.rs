@@ -74,10 +74,12 @@
 //! from-scratch merge of the same state that bypasses every cache above.
 
 use std::hash::Hasher;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::hdbscan::{extract, Clustering, CondensedTree, Dendrogram};
 use crate::mst::Edge;
+use crate::obs::{CounterId, HistId, Registry};
 use crate::util::fasthash::FastHasher;
 
 /// Content hash of an MSF edge list (plus the node count): the cache key
@@ -146,23 +148,67 @@ pub struct PipelineRun {
 
 /// Memoizing MSF → clustering pipeline (one instance per serving loop;
 /// the caches hold exactly one entry — the previous epoch).
-#[derive(Default)]
+///
+/// All counters and stage timings land in an [`obs::Registry`]
+/// (span histograms [`HistId::Dendrogram`] / [`HistId::Condense`] /
+/// [`HistId::Extract`], counters [`CounterId::PipelineRuns`] etc.);
+/// [`Pipeline::stats`] assembles the legacy [`PipelineStats`] view from
+/// the registry, so the public stats surface is unchanged while the
+/// telemetry layer sees per-stage latency *distributions*, not just
+/// cumulative sums.
+///
+/// [`obs::Registry`]: crate::obs::Registry
 pub struct Pipeline {
+    /// Shared telemetry sink (the owning engine's registry; standalone
+    /// pipelines — the coordinator path, unit tests — get a private one).
+    obs: Arc<Registry>,
     /// `(input hash, dendrogram)` of the last non-cached run.
     dendro: Option<(u64, Dendrogram)>,
     /// `(input hash, mcs, allow_single_cluster, clustering)` of the last
     /// non-cached run.
     out: Option<(u64, usize, bool, Clustering)>,
-    stats: PipelineStats,
+}
+
+impl Default for Pipeline {
+    fn default() -> Pipeline {
+        Pipeline::new()
+    }
 }
 
 impl Pipeline {
+    /// A standalone pipeline with its own private registry (coordinator
+    /// and test path).
     pub fn new() -> Pipeline {
-        Pipeline::default()
+        Pipeline::with_registry(Arc::new(Registry::new(0)))
     }
 
+    /// A pipeline recording into a shared registry (the engine path).
+    pub fn with_registry(obs: Arc<Registry>) -> Pipeline {
+        Pipeline { obs, dendro: None, out: None }
+    }
+
+    /// Legacy cumulative counters, assembled as a thin view over the
+    /// registry. The engine-level fields (`snapshot_*`, `metric_calls`)
+    /// are filled in by `Engine::stats` — they live outside the
+    /// pipeline.
     pub fn stats(&self) -> PipelineStats {
-        self.stats
+        PipelineStats {
+            runs: self.obs.counter(CounterId::PipelineRuns).get(),
+            short_circuits: self
+                .obs
+                .counter(CounterId::PipelineShortCircuits)
+                .get(),
+            dendrogram_reuses: self
+                .obs
+                .counter(CounterId::DendrogramReuses)
+                .get(),
+            dendrogram_secs: self.obs.hist(HistId::Dendrogram).sum_ns() as f64
+                / 1e9,
+            condense_secs: self.obs.hist(HistId::Condense).sum_ns() as f64
+                / 1e9,
+            extract_secs: self.obs.hist(HistId::Extract).sum_ns() as f64 / 1e9,
+            ..Default::default()
+        }
     }
 
     /// Run (or short-circuit) the back half of the algorithm over a
@@ -177,11 +223,11 @@ impl Pipeline {
     ) -> (Clustering, PipelineRun) {
         let n = n_points.max(1);
         let key = edges_hash(edges, n);
-        self.stats.runs += 1;
+        self.obs.inc(CounterId::PipelineRuns);
 
         if let Some((k, m, a, c)) = &self.out {
             if *k == key && *m == mcs && *a == allow_single_cluster {
-                self.stats.short_circuits += 1;
+                self.obs.inc(CounterId::PipelineShortCircuits);
                 return (
                     c.clone(),
                     PipelineRun {
@@ -198,26 +244,29 @@ impl Pipeline {
         // dendrogram: reusable across mcs changes on the same forest
         let reuse_dendro = matches!(&self.dendro, Some((k, _)) if *k == key);
         if reuse_dendro {
-            self.stats.dendrogram_reuses += 1;
+            self.obs.inc(CounterId::DendrogramReuses);
             run.reused_dendrogram = true;
         } else {
             let t = Instant::now();
             let d = Dendrogram::from_msf(edges, n);
-            run.dendrogram_secs = t.elapsed().as_secs_f64();
-            self.stats.dendrogram_secs += run.dendrogram_secs;
+            let el = t.elapsed();
+            run.dendrogram_secs = el.as_secs_f64();
+            self.obs.record(HistId::Dendrogram, el);
             self.dendro = Some((key, d));
         }
         let dendro = &self.dendro.as_ref().expect("dendrogram cached").1;
 
         let t = Instant::now();
         let condensed = CondensedTree::from_dendrogram(dendro, mcs);
-        run.condense_secs = t.elapsed().as_secs_f64();
-        self.stats.condense_secs += run.condense_secs;
+        let el = t.elapsed();
+        run.condense_secs = el.as_secs_f64();
+        self.obs.record(HistId::Condense, el);
 
         let t = Instant::now();
         let clustering = extract::extract_flat_opts(&condensed, allow_single_cluster);
-        run.extract_secs = t.elapsed().as_secs_f64();
-        self.stats.extract_secs += run.extract_secs;
+        let el = t.elapsed();
+        run.extract_secs = el.as_secs_f64();
+        self.obs.record(HistId::Extract, el);
 
         self.out = Some((key, mcs, allow_single_cluster, clustering.clone()));
         (clustering, run)

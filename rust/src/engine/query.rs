@@ -6,8 +6,11 @@
 //! in the engine-wide `metric_calls` counter (but never in the shards'
 //! insert-path `dist_calls`).
 
+use std::time::Instant;
+
 use crate::distances::Metric;
 use crate::fishdbc::majority_vote;
+use crate::obs::{CounterId, HistId};
 
 use super::{Engine, EngineItem, EngineSnapshot};
 
@@ -53,12 +56,18 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     /// either. Noise-labeled voters still occupy slots: "my neighborhood
     /// is noise" is information; "my neighborhood is too new to say" is
     /// not.
+    ///
+    /// Telemetry on this path is **O(1) lock-free atomics only** (one
+    /// counter bump, one histogram sample into [`HistId::Label`]) — the
+    /// serving loop never blocks on observability, even while `/metrics`
+    /// is being scraped concurrently (pinned by `tests/obs_integration`).
     pub fn label_against(
         &self,
         item: &T,
         snap: &EngineSnapshot,
         k: usize,
     ) -> i32 {
+        let t0 = Instant::now();
         let k = k.max(1);
         // k nearest per shard, then merge to the global k nearest
         let mut hits: Vec<(f64, u32)> = Vec::new();
@@ -69,13 +78,17 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             }
         }
         hits.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
-        majority_vote(
+        let label = majority_vote(
             hits.iter()
                 .filter_map(|&(_, gid)| {
                     snap.clustering.labels.get(gid as usize).copied()
                 })
                 .take(k),
-        )
+        );
+        let obs = self.inner().obs();
+        obs.inc(CounterId::LabelQueries);
+        obs.record(HistId::Label, t0.elapsed());
+        label
     }
 }
 

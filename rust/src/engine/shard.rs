@@ -34,6 +34,7 @@ use crate::distances::{Counting, Metric};
 use crate::fishdbc::{Fishdbc, FishdbcParams};
 use crate::hnsw::Hnsw;
 use crate::mst::{Edge, Msf};
+use crate::obs::{HistId, Registry};
 use crate::util::chunked::{ChunkDelta, ChunkedVec};
 use crate::util::fasthash::{FastMap, FastSet};
 
@@ -634,6 +635,10 @@ pub(crate) struct BridgeCtx<T, M> {
     /// state → bridge → deleted, and `deleted` is only ever taken as a
     /// leaf.
     pub deleted: Arc<Mutex<FastSet<u32>>>,
+    /// Engine-wide telemetry registry: the worker records a
+    /// [`HistId::ShardInsert`] span per applied batch (lock-free atomics,
+    /// so the hot ingest loop never blocks on observability).
+    pub obs: Arc<Registry>,
 }
 
 /// Insert-time bridge maintenance: advance this shard's coverage watermark
@@ -785,6 +790,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Shard<T, M> {
             snaps: ctx.snaps,
             bridge: Arc::clone(&bridge),
             deleted: ctx.deleted,
+            obs: ctx.obs,
         };
         let handle = std::thread::Builder::new()
             .name(format!("fishdbc-shard-{id}"))
@@ -825,6 +831,7 @@ pub(crate) struct BridgeCtxSeed<T, M> {
     pub lag_limit: usize,
     pub snaps: Arc<Snaps<T, M>>,
     pub deleted: Arc<Mutex<FastSet<u32>>>,
+    pub obs: Arc<Registry>,
 }
 
 fn run<T: EngineItem, M: Metric<T> + Clone>(
@@ -845,7 +852,9 @@ fn run<T: EngineItem, M: Metric<T> + Clone>(
                 }
                 st.batches += 1;
                 st.version += 1;
-                st.build_secs += t0.elapsed().as_secs_f64();
+                let applied = t0.elapsed();
+                st.build_secs += applied.as_secs_f64();
+                ctx.obs.record(HistId::ShardInsert, applied);
                 ctx.snaps.set_len(ctx.si, st.f.len());
                 // insert-time bridge discovery against frozen snapshots
                 // (lock order: own state write guard → own bridge mutex)

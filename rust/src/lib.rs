@@ -11,7 +11,9 @@
 //!   (Algorithm 1), [`metrics`], [`datasets`], a streaming
 //!   [`coordinator`] (single-shard reference path), and the sharded
 //!   parallel [`engine`] (multi-core ingest + global merge + online
-//!   label queries).
+//!   label queries), watched end to end by the zero-dependency [`obs`]
+//!   telemetry layer (latency histograms, epoch event journal, and a
+//!   scrapeable Prometheus `/metrics` endpoint).
 //! * **Layer 2/1 (python/, build-time only)** — JAX distance graphs with
 //!   Pallas kernels, AOT-lowered to HLO text artifacts.
 //! * **[`runtime`]** (feature `xla`, off by default) — loads those
@@ -107,6 +109,7 @@ pub mod hdbscan;
 pub mod hnsw;
 pub mod metrics;
 pub mod mst;
+pub mod obs;
 pub mod persist;
 #[cfg(feature = "xla")]
 pub mod runtime;

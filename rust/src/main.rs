@@ -29,7 +29,8 @@ const VALUE_KEYS: &[&str] = &[
     "dataset", "n", "dim", "ef", "min-pts", "mcs", "alpha", "seed", "chunk",
     "recluster-every", "metric", "silhouette-max", "input", "format", "save",
     "load", "out", "labels-out", "efs", "shards", "bridge-k", "bridge-fanout",
-    "bridge-refresh", "churn", "compact-at",
+    "bridge-refresh", "churn", "compact-at", "metrics-addr", "stats-json",
+    "hold-secs",
 ];
 
 fn main() {
@@ -119,8 +120,20 @@ labels):
   --compact-at R    per-shard tombstone ratio that triggers compaction
                     (rebuild without tombstones; default 0.25, 0 = never)
   --stats           print per-stage pipeline timings, cache counters,
-                    snapshot copied-vs-shared chunk counts and churn
-                    (removed/tombstoned/compactions) counters
+                    snapshot copied-vs-shared chunk counts, churn
+                    (removed/tombstoned/compactions) counters, and the
+                    windowed rates/latency quantiles for the whole run
+  --stats-json PATH write the machine-readable fishdbc-stats-v1 document
+                    (counters, gauges, histogram quantiles, journal tail;
+                    PATH '-' prints to stdout)
+  --metrics-addr A  serve Prometheus text exposition on GET /metrics (and
+                    the stats document on /stats.json) at A, e.g.
+                    127.0.0.1:9100, concurrently with ingest and merges
+  --journal         print the epoch event journal (merges with cache kind
+                    and changed-shard counts, compactions, deletions,
+                    snapshot refreshes) after the run
+  --hold-secs N     keep the engine and /metrics endpoint alive N seconds
+                    after the run (scrape smoke tests)
   --save PATH       persist the multi-shard engine state after building
                     (v3 container: bridge buffers + cached MSF +
                     tombstone state)
@@ -400,6 +413,19 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
         ),
     };
 
+    // serve /metrics before the first batch, so the endpoint is live
+    // concurrently with ingest and recluster traffic from the start
+    let metrics = match args.get("metrics-addr") {
+        Some(addr) => {
+            let srv = engine
+                .serve_metrics(addr)
+                .map_err(|e| format!("binding --metrics-addr {addr}: {e}"))?;
+            println!("metrics: serving http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
+
     // report the *effective* parameters (on --load they come from the
     // state file, not the CLI flags)
     let eff = engine.config().fishdbc;
@@ -533,6 +559,30 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
             es.compactions,
             engine.config().compact_at,
         );
+        // windowed view: rates + latency quantiles for everything since
+        // spawn (or since the previous stats_delta call)
+        let d = engine.stats_delta();
+        println!(
+            "  window ({:.2}s): {} items ({:.0}/s), {} metric calls \
+             ({:.0}/s), {} merges, {} label queries",
+            d.window_secs,
+            d.items,
+            d.items_per_sec,
+            d.metric_calls,
+            d.metric_calls_per_sec,
+            d.merges,
+            d.label_queries,
+        );
+        println!(
+            "  window latencies: ingest p50 {:.1}us p99 {:.1}us | merge \
+             p50 {:.3}s p99 {:.3}s | label p50 {:.1}us p99 {:.1}us",
+            d.ingest_latency.quantile_ns(0.50) as f64 / 1e3,
+            d.ingest_latency.quantile_ns(0.99) as f64 / 1e3,
+            d.merge_latency.quantile_secs(0.50),
+            d.merge_latency.quantile_secs(0.99),
+            d.label_latency.quantile_ns(0.50) as f64 / 1e3,
+            d.label_latency.quantile_ns(0.99) as f64 / 1e3,
+        );
     }
 
     // global ids are arrival order, so labels align with the dataset —
@@ -599,6 +649,35 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
             .map_err(|e| format!("saving {path}: {e}"))?;
         println!("engine state saved to {path} ({} items)", engine.len());
     }
+
+    // machine-readable stats document, written after churn/save so the
+    // journal tail covers the whole run
+    if let Some(path) = args.get("stats-json") {
+        let doc = engine.stats_json();
+        if path == "-" {
+            println!("{doc}");
+        } else {
+            std::fs::write(path, &doc)
+                .map_err(|e| format!("{path}: {e}"))?;
+            println!("stats document written to {path} ({} bytes)", doc.len());
+        }
+    }
+
+    if args.flag("journal") {
+        let entries = engine.journal();
+        println!("journal ({} entries):", entries.len());
+        for e in entries {
+            println!("  #{:<5} t={:9.3}s {:?}", e.seq, e.at_secs, e.event);
+        }
+    }
+
+    // keep serving (e.g. /metrics scrape smoke tests) before shutdown
+    let hold = args.f64_or("hold-secs", 0.0)?;
+    if hold > 0.0 {
+        println!("holding engine alive for {hold}s");
+        std::thread::sleep(std::time::Duration::from_secs_f64(hold));
+    }
+    drop(metrics);
     engine.shutdown();
     Ok(())
 }

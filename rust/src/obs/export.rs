@@ -1,0 +1,332 @@
+//! Export renderers: Prometheus text exposition and hand-rolled JSON.
+//!
+//! Both formats render from a [`RegistrySnapshot`] — a plain-data copy —
+//! so a scrape never holds engine locks while formatting. The Prometheus
+//! renderer follows text exposition format 0.0.4 (`# HELP`/`# TYPE`
+//! preambles, cumulative `_bucket{le="..."}` histogram series ending in
+//! `+Inf`, `_sum`/`_count`). The JSON writer is the crate's only JSON
+//! emitter: a tiny comma-tracking builder that maps non-finite floats to
+//! `null`, so `python3 -m json.tool` (the CI schema check) always
+//! accepts the output.
+
+use super::hist::{bucket_upper_ns, HistSnapshot, BUCKETS};
+use super::{CounterId, GaugeId, HistId, RegistrySnapshot};
+
+/// Prefix every exported series shares.
+pub const PROM_PREFIX: &str = "fishdbc_";
+
+// ------------------------------------------------------------ prometheus --
+
+/// Render the full registry as Prometheus text exposition. Extra
+/// engine-level series (distance calls, item counts — values that live
+/// outside the registry) ride along as `(name, help, value)` triples.
+pub fn render_prometheus(
+    snap: &RegistrySnapshot,
+    extra_counters: &[(&str, &str, u64)],
+    extra_gauges: &[(&str, &str, f64)],
+) -> String {
+    let mut out = String::with_capacity(8 * 1024);
+    for &id in CounterId::ALL {
+        let name = format!("{PROM_PREFIX}{}_total", id.name());
+        preamble(&mut out, &name, id.help(), "counter");
+        line_u64(&mut out, &name, snap.counter(id));
+    }
+    for (name, help, v) in extra_counters {
+        let name = format!("{PROM_PREFIX}{name}_total");
+        preamble(&mut out, &name, help, "counter");
+        line_u64(&mut out, &name, *v);
+    }
+    for &id in GaugeId::ALL {
+        let name = format!("{PROM_PREFIX}{}", id.name());
+        preamble(&mut out, &name, id.help(), "gauge");
+        line_f64(&mut out, &name, snap.gauge(id));
+    }
+    for (name, help, v) in extra_gauges {
+        let name = format!("{PROM_PREFIX}{name}");
+        preamble(&mut out, &name, help, "gauge");
+        line_f64(&mut out, &name, *v);
+    }
+    if snap.n_shards() > 0 {
+        let name = format!("{PROM_PREFIX}tombstone_ratio");
+        preamble(
+            &mut out,
+            &name,
+            "Tombstoned fraction of stored items, per shard",
+            "gauge",
+        );
+        for si in 0..snap.n_shards() {
+            out.push_str(&format!(
+                "{name}{{shard=\"{si}\"}} {}\n",
+                prom_f64(snap.shard_tombstone(si))
+            ));
+        }
+    }
+    for &id in HistId::ALL {
+        let name = format!("{PROM_PREFIX}{}", id.name());
+        preamble(&mut out, &name, id.help(), "histogram");
+        render_prom_hist(&mut out, &name, snap.hist(id));
+    }
+    out
+}
+
+fn preamble(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+fn line_u64(out: &mut String, name: &str, v: u64) {
+    out.push_str(&format!("{name} {v}\n"));
+}
+
+fn line_f64(out: &mut String, name: &str, v: f64) {
+    out.push_str(&format!("{name} {}\n", prom_f64(v)));
+}
+
+/// Prometheus float formatting: plain decimal, `NaN` for non-finite
+/// (legal in the exposition format, unlike JSON).
+fn prom_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "NaN".to_string()
+    }
+}
+
+/// Cumulative `le` buckets in seconds; only buckets that move the
+/// cumulative count are emitted (plus the mandatory `+Inf`).
+fn render_prom_hist(out: &mut String, name: &str, h: &HistSnapshot) {
+    let mut cum = 0u64;
+    for idx in 0..BUCKETS {
+        if h.buckets[idx] == 0 {
+            continue;
+        }
+        cum += h.buckets[idx];
+        let le = if idx >= BUCKETS - 1 {
+            "+Inf".to_string()
+        } else {
+            format!("{:.9}", bucket_upper_ns(idx) as f64 / 1e9)
+        };
+        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+    out.push_str(&format!(
+        "{name}_sum {}\n",
+        prom_f64(h.sum_ns as f64 / 1e9)
+    ));
+    out.push_str(&format!("{name}_count {}\n", h.count));
+}
+
+// ------------------------------------------------------------------ json --
+
+/// Minimal JSON writer: tracks "need a comma" per nesting level, escapes
+/// strings, maps non-finite floats to `null`. The only JSON emitter in
+/// the crate (zero-dependency policy).
+pub struct JsonW {
+    out: String,
+    need_comma: Vec<bool>,
+}
+
+impl Default for JsonW {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonW {
+    pub fn new() -> Self {
+        JsonW { out: String::with_capacity(4 * 1024), need_comma: vec![false] }
+    }
+
+    fn sep(&mut self) {
+        if *self.need_comma.last().unwrap() {
+            self.out.push(',');
+        }
+        *self.need_comma.last_mut().unwrap() = true;
+    }
+
+    /// Open an object; pass `Some(key)` inside an object, `None` as an
+    /// array element or at the top level.
+    pub fn obj(&mut self, key: Option<&str>) -> &mut Self {
+        self.sep();
+        if let Some(k) = key {
+            self.push_key(k);
+        }
+        self.out.push('{');
+        self.need_comma.push(false);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        self.need_comma.pop();
+        self.out.push('}');
+        self
+    }
+
+    pub fn arr(&mut self, key: Option<&str>) -> &mut Self {
+        self.sep();
+        if let Some(k) = key {
+            self.push_key(k);
+        }
+        self.out.push('[');
+        self.need_comma.push(false);
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        self.need_comma.pop();
+        self.out.push(']');
+        self
+    }
+
+    pub fn u64(&mut self, key: &str, v: u64) -> &mut Self {
+        self.sep();
+        self.push_key(key);
+        self.out.push_str(&v.to_string());
+        self
+    }
+
+    pub fn usize(&mut self, key: &str, v: usize) -> &mut Self {
+        self.u64(key, v as u64)
+    }
+
+    /// Finite floats print as plain decimals; NaN/inf become `null`.
+    pub fn f64(&mut self, key: &str, v: f64) -> &mut Self {
+        self.sep();
+        self.push_key(key);
+        if v.is_finite() {
+            self.out.push_str(&format!("{v}"));
+        } else {
+            self.out.push_str("null");
+        }
+        self
+    }
+
+    pub fn str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.sep();
+        self.push_key(key);
+        self.push_escaped(v);
+        self
+    }
+
+    fn push_key(&mut self, k: &str) {
+        self.push_escaped(k);
+        self.out.push(':');
+    }
+
+    fn push_escaped(&mut self, s: &str) {
+        self.out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => self.out.push_str("\\\""),
+                '\\' => self.out.push_str("\\\\"),
+                '\n' => self.out.push_str("\\n"),
+                '\r' => self.out.push_str("\\r"),
+                '\t' => self.out.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    self.out.push_str(&format!("\\u{:04x}", c as u32))
+                }
+                c => self.out.push(c),
+            }
+        }
+        self.out.push('"');
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Append one histogram as a JSON object under `key`: count, quantile
+/// estimates in microseconds (honest units for sub-ms serving paths),
+/// and the exact accumulated sum in seconds.
+pub fn json_hist(w: &mut JsonW, key: &str, h: &HistSnapshot) {
+    w.obj(Some(key))
+        .u64("count", h.count)
+        .f64("p50_us", h.quantile_ns(0.50) as f64 / 1e3)
+        .f64("p90_us", h.quantile_ns(0.90) as f64 / 1e3)
+        .f64("p99_us", h.quantile_ns(0.99) as f64 / 1e3)
+        .f64("max_us", h.max_ns as f64 / 1e3)
+        .f64("sum_secs", h.sum_ns as f64 / 1e9)
+        .f64("mean_secs", h.mean_secs())
+        .end_obj();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{HistId, Registry};
+
+    #[test]
+    fn prometheus_exposition_has_preambles_and_monotone_buckets() {
+        let reg = Registry::new(2);
+        reg.inc(CounterId::Merges);
+        reg.gauge(GaugeId::Epoch).set(3.0);
+        reg.shard_tombstone_gauge(1).set(0.5);
+        for us in [5u64, 50, 500, 5000] {
+            reg.hist(HistId::Label).record_ns(us * 1000);
+        }
+        let text = render_prometheus(
+            &reg.snapshot(),
+            &[("metric_calls", "distance metric invocations", 42)],
+            &[("uptime_seconds", "seconds since spawn", 1.5)],
+        );
+        assert!(text.contains("# TYPE fishdbc_merges_total counter"));
+        assert!(text.contains("fishdbc_merges_total 1\n"));
+        assert!(text.contains("fishdbc_metric_calls_total 42\n"));
+        assert!(text.contains("fishdbc_uptime_seconds 1.5\n"));
+        assert!(text.contains("fishdbc_epoch 3\n"));
+        assert!(text.contains("fishdbc_tombstone_ratio{shard=\"1\"} 0.5\n"));
+        assert!(text.contains("fishdbc_label_latency_seconds_count 4\n"));
+        assert!(text
+            .contains("fishdbc_label_latency_seconds_bucket{le=\"+Inf\"} 4"));
+        // cumulative bucket counts must be monotone nondecreasing
+        let mut last = 0u64;
+        for line in text.lines() {
+            if let Some(rest) =
+                line.strip_prefix("fishdbc_label_latency_seconds_bucket")
+            {
+                let v: u64 =
+                    rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last, "bucket counts regressed: {line}");
+                last = v;
+            }
+        }
+        assert_eq!(last, 4);
+    }
+
+    #[test]
+    fn json_writer_emits_valid_structure() {
+        let mut w = JsonW::new();
+        w.obj(None)
+            .str("schema", "test \"quoted\"\n")
+            .u64("n", 7)
+            .f64("ok", 1.25)
+            .f64("bad", f64::NAN);
+        w.arr(Some("xs"));
+        for i in 0..3u64 {
+            w.obj(None).u64("i", i).end_obj();
+        }
+        w.end_arr().end_obj();
+        let s = w.finish();
+        assert_eq!(
+            s,
+            "{\"schema\":\"test \\\"quoted\\\"\\n\",\"n\":7,\"ok\":1.25,\
+             \"bad\":null,\"xs\":[{\"i\":0},{\"i\":1},{\"i\":2}]}"
+        );
+        assert!(!s.contains("NaN"));
+    }
+
+    #[test]
+    fn json_hist_reports_quantiles() {
+        let reg = Registry::new(1);
+        for _ in 0..100 {
+            reg.hist(HistId::Label).record_ns(1_000);
+        }
+        let mut w = JsonW::new();
+        w.obj(None);
+        json_hist(&mut w, "label", reg.snapshot().hist(HistId::Label));
+        w.end_obj();
+        let s = w.finish();
+        assert!(s.contains("\"count\":100"));
+        assert!(s.contains("\"p99_us\""));
+    }
+}

@@ -1,0 +1,317 @@
+//! Log-bucketed latency histograms — lock-free quantiles for the hot paths.
+//!
+//! A [`LogHistogram`] covers the full `u64` nanosecond range with 64
+//! fixed power-of-two buckets: a sample `v` lands in bucket
+//! `64 - v.leading_zeros()` (bucket `k` holds `[2^(k-1), 2^k)`, bucket 0
+//! holds the exact value 0). Recording is a handful of relaxed atomic
+//! RMWs — one bucket increment, a count, a sum, and a `fetch_max` — so
+//! the serving path (`Engine::label`) can record every call without a
+//! lock and without allocating.
+//!
+//! Quantile estimates return the *upper bound* of the bucket holding the
+//! requested rank, so for any exact sample value `v > 0` the estimate
+//! `e` satisfies `v <= e < 2 * v`: the error is bounded by the bucket
+//! width, which is the property test in this module pins. That factor-2
+//! envelope is plenty to answer the serving questions the paper's cost
+//! model raises (Figs. 1–2: runtime ∝ distance calls) — "does p99
+//! `label()` latency see merge pauses" needs orders of magnitude, not
+//! microsecond precision.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 buckets — one per possible `u64` bit length, plus the
+/// zero bucket folded into index 0.
+pub const BUCKETS: usize = 64;
+
+/// Lock-free log2-bucketed histogram over nanosecond samples.
+///
+/// All counters are relaxed atomics: `record` never blocks, never
+/// allocates, and costs O(1) RMWs regardless of contention. Reads
+/// (`snapshot`, `quantile_ns`) are not linearizable against concurrent
+/// writers — they can observe a sample's bucket before its count or vice
+/// versa — which is fine for monitoring and is why the concurrent stress
+/// test only asserts totals after the writers join.
+#[derive(Debug, Default)]
+pub struct LogHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+/// Bucket index for a nanosecond sample: 0 for 0, else `64 - lz(v)`
+/// clamped to the last bucket.
+#[inline]
+pub fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `idx` (the quantile estimate returned
+/// for samples landing there).
+#[inline]
+pub fn bucket_upper_ns(idx: usize) -> u64 {
+    if idx >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << idx) - 1
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one nanosecond sample. O(1) relaxed atomics, no locks.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Record a [`Duration`] sample (saturating at `u64::MAX` ns).
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples in nanoseconds (wraps after ~584 years of
+    /// accumulated latency; acceptable).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Largest sample seen, exact (not bucketed).
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Upper-bound estimate of the `q`-quantile (`0.0..=1.0`) in
+    /// nanoseconds; 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        self.snapshot().quantile_ns(q)
+    }
+
+    /// Consistent-enough point-in-time copy for diffing and export.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (b, a) in buckets.iter_mut().zip(&self.buckets) {
+            *b = a.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count(),
+            sum_ns: self.sum_ns(),
+            max_ns: self.max_ns(),
+        }
+    }
+}
+
+/// Plain-data copy of a [`LogHistogram`], subtractable for windowed
+/// stats ([`crate::engine::Engine::stats_delta`]).
+#[derive(Clone, Copy, Debug)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Upper-bound estimate of the `q`-quantile in nanoseconds; 0 when
+    /// the snapshot is empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // rank of the requested quantile, 1-based ("nearest rank")
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // the max is exact and always tighter than the last
+                // occupied bucket's upper bound
+                return bucket_upper_ns(idx).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Quantile in seconds (export convenience).
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        self.quantile_ns(q) as f64 / 1e9
+    }
+
+    /// Per-window difference: `self` must be the later snapshot. The max
+    /// is not subtractable, so the window max is the later cumulative max
+    /// (an upper bound on the true window max).
+    pub fn since(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (i, b) in buckets.iter_mut().enumerate() {
+            *b = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count.saturating_sub(earlier.count),
+            sum_ns: self.sum_ns.saturating_sub(earlier.sum_ns),
+            max_ns: self.max_ns,
+        }
+    }
+
+    /// Mean sample in seconds; 0 when empty.
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64 / 1e9
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_bounds_are_consistent() {
+        // every representable value lands in a bucket whose upper bound
+        // is >= the value and < 2x the value (the quantile error bound)
+        for shift in 0..63 {
+            for v in [1u64 << shift, (1u64 << shift) + 1, (1u64 << (shift + 1)) - 1] {
+                let idx = bucket_of(v);
+                let hi = bucket_upper_ns(idx);
+                assert!(hi >= v, "upper bound {hi} below sample {v}");
+                if hi != u64::MAX {
+                    assert!(hi < v.saturating_mul(2), "bucket too wide at {v}");
+                }
+            }
+        }
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_upper_ns(0), 0); // zero bucket is exact
+    }
+
+    /// Satellite: property test — quantile estimates vs exact sorted
+    /// quantiles over random samples, error bounded by the bucket width
+    /// (estimate in `[exact, 2*exact)` for positive samples).
+    #[test]
+    fn quantile_estimates_track_exact_quantiles() {
+        let cases: usize = std::env::var("FISHDBC_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1);
+        for case in 0..cases.max(1) as u64 {
+            let mut rng = Rng::new(0x1157 ^ case);
+            for scale_bits in [10u32, 20, 30, 40] {
+                let h = LogHistogram::new();
+                let mut exact: Vec<u64> = (0..2000)
+                    .map(|_| rng.next_u64() >> (64 - scale_bits))
+                    .collect();
+                for &v in &exact {
+                    h.record_ns(v);
+                }
+                exact.sort_unstable();
+                for &q in &[0.5, 0.9, 0.99, 1.0] {
+                    let rank =
+                        ((q * exact.len() as f64).ceil() as usize).max(1) - 1;
+                    let truth = exact[rank];
+                    let est = h.quantile_ns(q);
+                    assert!(
+                        est >= truth,
+                        "q={q}: estimate {est} below exact {truth}"
+                    );
+                    if truth > 0 {
+                        assert!(
+                            est < truth.saturating_mul(2),
+                            "q={q}: estimate {est} not within bucket width \
+                             of exact {truth}"
+                        );
+                    } else {
+                        assert!(est <= 1, "zero samples report ~0");
+                    }
+                }
+                assert_eq!(h.count(), 2000);
+                assert_eq!(h.max_ns(), *exact.last().unwrap());
+                assert_eq!(h.sum_ns(), exact.iter().sum::<u64>());
+            }
+        }
+    }
+
+    /// Satellite: concurrent recorders lose no counts — 8 threads x 20k
+    /// records each, totals must be exact after join.
+    #[test]
+    fn concurrent_recorders_lose_no_counts() {
+        const THREADS: u64 = 8;
+        const PER: u64 = 20_000;
+        let h = Arc::new(LogHistogram::new());
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(0xC0C0 + t);
+                    let mut local_sum = 0u64;
+                    for _ in 0..PER {
+                        let v = rng.next_u64() >> 34; // ~1s max in ns
+                        h.record_ns(v);
+                        local_sum += v;
+                    }
+                    local_sum
+                })
+            })
+            .collect();
+        let expect_sum: u64 =
+            handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(h.count(), THREADS * PER, "lost sample counts");
+        assert_eq!(h.sum_ns(), expect_sum, "lost sample sums");
+        let snap = h.snapshot();
+        assert_eq!(
+            snap.buckets.iter().sum::<u64>(),
+            THREADS * PER,
+            "bucket totals disagree with the count"
+        );
+    }
+
+    #[test]
+    fn snapshot_since_subtracts_windows() {
+        let h = LogHistogram::new();
+        h.record_ns(100);
+        h.record_ns(1000);
+        let first = h.snapshot();
+        h.record_ns(1_000_000);
+        let delta = h.snapshot().since(&first);
+        assert_eq!(delta.count, 1);
+        assert_eq!(delta.sum_ns, 1_000_000);
+        let q = delta.quantile_ns(0.5);
+        assert!((1_000_000..2_000_000).contains(&q));
+    }
+
+    #[test]
+    fn empty_histogram_is_quiet() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile_ns(0.99), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.snapshot().mean_secs(), 0.0);
+    }
+}

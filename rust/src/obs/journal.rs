@@ -1,0 +1,264 @@
+//! Bounded ring-buffer epoch event journal.
+//!
+//! Every engine lifecycle event — merge start/end, compaction, deletion
+//! window, snapshot refresh, save/load — appends one structured
+//! [`JournalEntry`] to a fixed-capacity ring. When the ring is full the
+//! *oldest* entry is dropped (newest always survive) and a drop counter
+//! records the loss, so `Engine::journal()` is always an honest recent
+//! history: seq numbers are gap-free among retained entries and strictly
+//! increasing.
+//!
+//! The journal answers "what did the engine do and when" where the
+//! [`Registry`](crate::obs::Registry) answers "how much / how fast":
+//! a [`JournalEvent::MergeEnd`] carries the epoch number, how many
+//! shards changed, and which cache path the merge took
+//! ([`CacheKind`]) — the incremental-cost story of the paper's §4 made
+//! inspectable per epoch. Pushes take a short mutex; nothing on the
+//! query path ever touches it.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Default ring capacity — enough for days of 30s-epoch operation
+/// while bounding memory to a few hundred KB.
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+/// Which path [`merge_forest`](crate::engine) took for one published
+/// epoch — the journal's per-epoch cache-hit kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheKind {
+    /// Nothing changed: the cached global forest was republished as-is.
+    Reused,
+    /// Monotone window: only changed shards were re-folded into the
+    /// cached forest (the paper's O(Δn) recluster claim).
+    Delta,
+    /// Non-monotone window (deletions): every summary re-folded, but no
+    /// bridge re-search and no per-shard recompute.
+    Rebuild,
+    /// No usable cache: first epoch, or first merge after a reload.
+    Scratch,
+}
+
+impl CacheKind {
+    /// Stable lower-case name used in JSON export and CLI dumps.
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheKind::Reused => "reused",
+            CacheKind::Delta => "delta",
+            CacheKind::Rebuild => "rebuild",
+            CacheKind::Scratch => "scratch",
+        }
+    }
+}
+
+/// One structured lifecycle event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JournalEvent {
+    /// A merge (`Engine::cluster`) began folding.
+    MergeStart {
+        /// Live id space the merge will cover.
+        n_items: usize,
+    },
+    /// A merge published an epoch — exactly one of these per epoch.
+    MergeEnd {
+        /// The epoch number the snapshot was published under.
+        epoch: u64,
+        /// Shards whose stamp moved since the cached merge.
+        n_changed_shards: usize,
+        /// Which cache path the global fold took.
+        cache: CacheKind,
+        /// Id-space size of the published snapshot.
+        n_items: usize,
+        /// Deleted ids masked out of the published labels.
+        n_deleted: usize,
+        /// End-to-end merge wall time in seconds.
+        secs: f64,
+    },
+    /// A shard compacted its tombstones away.
+    Compaction {
+        shard: usize,
+        /// Items surviving the compaction.
+        survivors: usize,
+    },
+    /// A `remove_batch` call tombstoned items.
+    DeletionWindow { removed: usize },
+    /// A mid-epoch frozen-snapshot refresh round ran.
+    SnapshotRefresh {
+        /// Shards whose snapshot was actually re-captured.
+        shards: usize,
+    },
+    /// The engine was checkpointed.
+    Save { items: usize },
+    /// The engine was restored from a checkpoint.
+    Load { items: usize },
+}
+
+impl JournalEvent {
+    /// Stable lower-snake event name (JSON `event` field, CLI dumps).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JournalEvent::MergeStart { .. } => "merge_start",
+            JournalEvent::MergeEnd { .. } => "merge_end",
+            JournalEvent::Compaction { .. } => "compaction",
+            JournalEvent::DeletionWindow { .. } => "deletion_window",
+            JournalEvent::SnapshotRefresh { .. } => "snapshot_refresh",
+            JournalEvent::Save { .. } => "save",
+            JournalEvent::Load { .. } => "load",
+        }
+    }
+}
+
+/// One journal record: a monotone sequence number, seconds since the
+/// engine started, and the event payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalEntry {
+    /// Strictly increasing, gap-free among all pushed events (dropped
+    /// entries leave the low seqs missing, never the high ones).
+    pub seq: u64,
+    /// Engine-relative timestamp in seconds (registry uptime clock).
+    pub at_secs: f64,
+    pub event: JournalEvent,
+}
+
+struct JournalInner {
+    ring: VecDeque<JournalEntry>,
+    next_seq: u64,
+    dropped: u64,
+}
+
+/// Fixed-capacity, oldest-drop event ring. See the module docs.
+pub struct Journal {
+    cap: usize,
+    inner: Mutex<JournalInner>,
+}
+
+impl Journal {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Journal {
+            cap,
+            inner: Mutex::new(JournalInner {
+                ring: VecDeque::with_capacity(cap.min(DEFAULT_CAPACITY)),
+                next_seq: 0,
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Append one event stamped `at_secs`; drops the oldest entry when
+    /// full. Poison-tolerant: a panicked pusher never wedges readers.
+    pub fn push(&self, at_secs: f64, event: JournalEvent) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        if g.ring.len() == self.cap {
+            g.ring.pop_front();
+            g.dropped += 1;
+        }
+        g.ring.push_back(JournalEntry { seq, at_secs, event });
+    }
+
+    /// All retained entries, oldest first.
+    pub fn entries(&self) -> Vec<JournalEntry> {
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.ring.iter().cloned().collect()
+    }
+
+    /// Entries evicted by ring wrap so far.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).dropped
+    }
+
+    /// Total events ever pushed (retained + dropped).
+    pub fn total(&self) -> u64 {
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .next_seq
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(n: usize) -> JournalEvent {
+        JournalEvent::DeletionWindow { removed: n }
+    }
+
+    /// Satellite: the ring wraps without losing the *newest* entries —
+    /// oldest are evicted, seqs stay strictly increasing and gap-free.
+    #[test]
+    fn ring_wrap_keeps_newest_entries() {
+        let j = Journal::new(8);
+        for i in 0..20 {
+            j.push(i as f64, ev(i));
+        }
+        let entries = j.entries();
+        assert_eq!(entries.len(), 8);
+        assert_eq!(j.dropped(), 12);
+        assert_eq!(j.total(), 20);
+        // newest 8 events, in order, gap-free seqs
+        for (k, e) in entries.iter().enumerate() {
+            assert_eq!(e.seq, 12 + k as u64);
+            assert_eq!(e.event, ev(12 + k));
+        }
+    }
+
+    #[test]
+    fn capacity_is_at_least_one() {
+        let j = Journal::new(0);
+        j.push(0.0, ev(1));
+        j.push(0.1, ev(2));
+        let entries = j.entries();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].event, ev(2), "newest survives at cap 1");
+    }
+
+    #[test]
+    fn concurrent_pushers_keep_seqs_unique() {
+        let j = std::sync::Arc::new(Journal::new(64));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let j = std::sync::Arc::clone(&j);
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        j.push(0.0, ev(t * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(j.total(), 400);
+        let entries = j.entries();
+        assert_eq!(entries.len(), 64);
+        for w in entries.windows(2) {
+            assert!(w[0].seq < w[1].seq, "seqs must strictly increase");
+        }
+        assert_eq!(entries.last().unwrap().seq, 399);
+    }
+
+    #[test]
+    fn event_names_are_stable() {
+        assert_eq!(
+            JournalEvent::MergeEnd {
+                epoch: 1,
+                n_changed_shards: 0,
+                cache: CacheKind::Reused,
+                n_items: 0,
+                n_deleted: 0,
+                secs: 0.0,
+            }
+            .name(),
+            "merge_end"
+        );
+        assert_eq!(CacheKind::Delta.name(), "delta");
+    }
+}

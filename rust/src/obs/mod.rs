@@ -1,0 +1,498 @@
+//! Unified telemetry for the sharded engine — counters, gauges, latency
+//! histograms, an epoch event journal, and zero-dependency exporters.
+//!
+//! # Why this layer exists
+//!
+//! The paper's cost model (Figs. 1–2) says FISHDBC runtime is dominated
+//! by distance computations, and the engine already counts those — but
+//! counts alone cannot answer the *serving-side* questions the ROADMAP
+//! north-star poses: what is p99 [`Engine::label`] latency while a
+//! background merge runs? How long does each merge phase take per epoch
+//! (the per-stage breakdowns that made accelerated HDBSCAN* tunable in
+//! McInnes & Healy, arXiv 1705.07321)? Is bridge coverage lagging
+//! ingest? This module gives the engine distributions, spans, and a
+//! lifecycle journal while keeping the repo's zero-external-crate
+//! policy: everything here is `std` atomics, `std::net`, and hand-rolled
+//! text formats.
+//!
+//! # Pieces
+//!
+//! * [`Registry`] — one per [`Engine`], never global, so concurrent
+//!   tests stay isolated. Fixed metric schema (enums [`CounterId`],
+//!   [`GaugeId`], [`HistId`] index pre-sized arrays; no maps, no string
+//!   lookups on hot paths). Counters are striped across padded cache
+//!   lines; recording a histogram sample is O(1) relaxed atomics.
+//! * [`journal::Journal`] — bounded ring buffer of structured lifecycle
+//!   events (merge start/end with changed-shard count and cache-hit
+//!   kind, compactions, deletion windows, snapshot refreshes,
+//!   save/load). Retrieved via `Engine::journal()`, dumped by the CLI
+//!   with `--journal`.
+//! * [`server::MetricsServer`] — a minimal hand-rolled HTTP/1.1
+//!   responder on [`std::net::TcpListener`] serving `GET /metrics`
+//!   (Prometheus text exposition) and `GET /stats.json`. This is the
+//!   first networking brick for the ROADMAP serving layer.
+//! * [`export`] — the Prometheus text and JSON renderers.
+//!
+//! # Metric reference (names as exported to Prometheus)
+//!
+//! | metric | kind | unit | meaning / paper mapping |
+//! |---|---|---|---|
+//! | `fishdbc_label_queries_total` | counter | calls | online `label()` queries (serving loop) |
+//! | `fishdbc_ingest_items_total` | counter | items | items accepted by `add_batch` |
+//! | `fishdbc_merges_total` | counter | epochs | published merge epochs |
+//! | `fishdbc_merges_cache_{reused,delta,rebuild,scratch}_total` | counter | epochs | cache-hit kind per merge (Fig. 2's incremental-cost claim: `delta`/`reused` should dominate steady state) |
+//! | `fishdbc_label_latency_seconds` | histogram | s | per-call `label()` latency — the serving p50/p99 |
+//! | `fishdbc_ingest_batch_seconds` | histogram | s | `add_batch` call latency (incl. backpressure) |
+//! | `fishdbc_span_*_seconds` | histogram | s | per-phase merge breakdown: bridge catch-up, window re-search, Kruskal fold, dendrogram, condense, extract, snapshot capture, compaction |
+//! | `fishdbc_bridge_coverage_lag` | gauge | items | items not yet covered by insert-time bridging (paper §4's cross-shard recall risk when high) |
+//! | `fishdbc_tombstone_ratio{shard=..}` | gauge | ratio | tombstoned / stored per shard (compaction pressure) |
+//! | `fishdbc_epoch_age_seconds` | gauge | s | staleness of the served clustering |
+//!
+//! All histogram samples are recorded in nanoseconds internally and
+//! exported in seconds (Prometheus convention). Quantiles are
+//! upper-bound estimates with error bounded by one log2 bucket — see
+//! [`hist`].
+//!
+//! [`Engine`]: crate::engine::Engine
+//! [`Engine::label`]: crate::engine::Engine::label
+
+pub mod export;
+pub mod hist;
+pub mod journal;
+pub mod server;
+
+pub use hist::{HistSnapshot, LogHistogram};
+pub use journal::{CacheKind, Journal, JournalEntry, JournalEvent};
+pub use server::MetricsServer;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+// ------------------------------------------------------------- schema --
+
+macro_rules! metric_enum {
+    ($(#[$m:meta])* $name:ident { $($(#[$vm:meta])* $v:ident => $s:literal, $help:literal;)+ }) => {
+        $(#[$m])*
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        #[repr(usize)]
+        pub enum $name {
+            $($(#[$vm])* $v,)+
+        }
+        impl $name {
+            /// Every variant, in declaration (= storage) order.
+            pub const ALL: &'static [$name] = &[$($name::$v,)+];
+            /// Number of variants (array sizing).
+            pub const COUNT: usize = Self::ALL.len();
+            /// Stable exported metric name (snake_case, no prefix).
+            pub fn name(self) -> &'static str {
+                match self { $($name::$v => $s,)+ }
+            }
+            /// One-line human description (Prometheus `# HELP`).
+            pub fn help(self) -> &'static str {
+                match self { $($name::$v => $help,)+ }
+            }
+            #[inline]
+            pub(crate) fn idx(self) -> usize {
+                self as usize
+            }
+        }
+    };
+}
+
+metric_enum! {
+    /// Monotone event counters. Exported with a `_total` suffix.
+    CounterId {
+        LabelQueries => "label_queries",
+            "Online label() queries served";
+        IngestBatches => "ingest_batches",
+            "add_batch calls accepted";
+        IngestItems => "ingest_items",
+            "Items accepted for ingest";
+        Merges => "merges",
+            "Published merge epochs";
+        MergeReused => "merges_cache_reused",
+            "Merges that republished the cached global forest unchanged";
+        MergeDelta => "merges_cache_delta",
+            "Merges that folded only changed shards into the cached forest";
+        MergeRebuild => "merges_cache_rebuild",
+            "Merges that re-folded all summaries (non-monotone window)";
+        MergeScratch => "merges_cache_scratch",
+            "Merges with no usable cache (first epoch or post-load)";
+        PipelineRuns => "pipeline_runs",
+            "Extraction pipeline invocations";
+        PipelineShortCircuits => "pipeline_short_circuits",
+            "Pipeline runs answered from the clustering cache";
+        DendrogramReuses => "pipeline_dendrogram_reuses",
+            "Pipeline runs that reused the cached dendrogram";
+        SnapshotRefreshes => "snapshot_refreshes",
+            "Mid-epoch frozen-snapshot refresh rounds";
+        Compactions => "compactions",
+            "Shard compactions (tombstone purges)";
+        DeletionWindows => "deletion_windows",
+            "remove_batch calls that tombstoned at least one item";
+        Saves => "saves",
+            "Engine checkpoints written";
+        Loads => "loads",
+            "Engine checkpoints restored";
+    }
+}
+
+metric_enum! {
+    /// Point-in-time gauges, refreshed on scrape / stats calls.
+    GaugeId {
+        BridgeCoverageLag => "bridge_coverage_lag",
+            "Stored items not yet covered by insert-time cross-shard bridging";
+        EpochAgeSecs => "epoch_age_seconds",
+            "Seconds since the served epoch was published";
+        LiveItems => "live_items",
+            "Items stored and not tombstoned";
+        Epoch => "epoch",
+            "Latest published merge epoch";
+    }
+}
+
+metric_enum! {
+    /// Latency histograms (nanosecond samples, exported in seconds).
+    HistId {
+        Label => "label_latency_seconds",
+            "Per-call online label() latency";
+        IngestBatch => "ingest_batch_seconds",
+            "add_batch call latency including routing and backpressure";
+        ShardInsert => "shard_insert_seconds",
+            "Per-batch shard-local HNSW insert time (worker side)";
+        Merge => "merge_seconds",
+            "End-to-end cluster()/merge latency per epoch";
+        BridgeCatchUp => "span_bridge_catch_up_seconds",
+            "Merge span: bridge catch-up over uncovered items";
+        WindowResearch => "span_window_research_seconds",
+            "Merge span: per-shard same-epoch window re-search";
+        Kruskal => "span_kruskal_seconds",
+            "Merge span: global Kruskal fold over summaries + bridges";
+        Dendrogram => "span_dendrogram_seconds",
+            "Pipeline span: single-linkage dendrogram build";
+        Condense => "span_condense_seconds",
+            "Pipeline span: condensed-tree construction";
+        Extract => "span_extract_seconds",
+            "Pipeline span: stable cluster extraction + labeling";
+        SnapshotCapture => "span_snapshot_capture_seconds",
+            "Span: chunked copy-on-write shard snapshot capture round";
+        Compaction => "span_compaction_seconds",
+            "Span: one shard compaction (survivor replay)";
+    }
+}
+
+// ----------------------------------------------------- striped counter --
+
+/// Stripes per counter — enough to keep S ingest workers plus the merge
+/// and serving threads off each other's cache lines without bloating the
+/// registry (16 counters x 8 stripes x 64 B = 8 KiB).
+const STRIPES: usize = 8;
+
+static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Each thread picks a home stripe once; round-robin assignment
+    /// spreads unrelated threads across lines.
+    static HOME_STRIPE: usize =
+        NEXT_STRIPE.fetch_add(1, Ordering::Relaxed) % STRIPES;
+}
+
+/// One cache line per stripe so concurrent recorders do not false-share.
+#[repr(align(64))]
+#[derive(Default)]
+struct Stripe(AtomicU64);
+
+/// A monotone counter sharded across padded atomic cells: `add` touches
+/// only the calling thread's home stripe, `get` sums all stripes.
+#[derive(Default)]
+pub struct Counter {
+    stripes: [Stripe; STRIPES],
+}
+
+impl Counter {
+    /// Add `n`. O(1) relaxed RMW on the caller's home stripe.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        let s = HOME_STRIPE.with(|s| *s);
+        self.stripes[s].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current total across all stripes.
+    pub fn get(&self) -> u64 {
+        self.stripes
+            .iter()
+            .map(|s| s.0.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+/// An `f64` gauge stored as bits in an atomic (set-wins, no RMW races).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+// --------------------------------------------------------------- registry --
+
+/// Per-engine telemetry registry: every counter, gauge, histogram, and
+/// the event journal, allocated once at engine construction.
+///
+/// Not global by design — each [`Engine`](crate::engine::Engine) owns
+/// its own `Arc<Registry>`, so parallel tests and embedded multi-engine
+/// processes never share metric state. All recording methods take
+/// `&self` and are lock-free except the journal (a short mutex push on
+/// rare lifecycle events, never on the query path).
+pub struct Registry {
+    counters: Vec<Counter>,
+    gauges: Vec<Gauge>,
+    hists: Vec<LogHistogram>,
+    /// Tombstone ratio per shard (label dimension fixed at spawn).
+    shard_tombstone: Vec<Gauge>,
+    /// Lifecycle event ring (see [`journal`]).
+    pub journal: Journal,
+    /// Time origin for uptime/epoch-age arithmetic.
+    start: Instant,
+    /// Nanoseconds-since-`start` of the latest epoch publish (0 = none).
+    last_publish_ns: AtomicU64,
+}
+
+impl Registry {
+    /// Build a registry for an engine with `n_shards` shards.
+    pub fn new(n_shards: usize) -> Self {
+        Registry {
+            counters: (0..CounterId::COUNT).map(|_| Counter::default()).collect(),
+            gauges: (0..GaugeId::COUNT).map(|_| Gauge::default()).collect(),
+            hists: (0..HistId::COUNT).map(|_| LogHistogram::new()).collect(),
+            shard_tombstone: (0..n_shards).map(|_| Gauge::default()).collect(),
+            journal: Journal::new(journal::DEFAULT_CAPACITY),
+            start: Instant::now(),
+            last_publish_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn counter(&self, id: CounterId) -> &Counter {
+        &self.counters[id.idx()]
+    }
+
+    #[inline]
+    pub fn gauge(&self, id: GaugeId) -> &Gauge {
+        &self.gauges[id.idx()]
+    }
+
+    #[inline]
+    pub fn hist(&self, id: HistId) -> &LogHistogram {
+        &self.hists[id.idx()]
+    }
+
+    /// Increment a counter by 1.
+    #[inline]
+    pub fn inc(&self, id: CounterId) {
+        self.counter(id).add(1);
+    }
+
+    /// Record an elapsed-time sample against `id`.
+    #[inline]
+    pub fn record(&self, id: HistId, d: std::time::Duration) {
+        self.hist(id).record(d);
+    }
+
+    /// Record a seconds sample against `id` (for spans already measured
+    /// as `f64` by the legacy timing code).
+    #[inline]
+    pub fn record_secs(&self, id: HistId, secs: f64) {
+        let ns = (secs.max(0.0) * 1e9).round();
+        self.hist(id).record_ns(if ns >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            ns as u64
+        });
+    }
+
+    /// Per-shard tombstone-ratio gauge (`shard < n_shards` as passed to
+    /// [`Registry::new`]).
+    pub fn shard_tombstone_gauge(&self, shard: usize) -> &Gauge {
+        &self.shard_tombstone[shard]
+    }
+
+    /// Number of per-shard gauge slots.
+    pub fn n_shards(&self) -> usize {
+        self.shard_tombstone.len()
+    }
+
+    /// Seconds since the registry (= engine) was created.
+    pub fn uptime_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Mark "an epoch was just published" — drives the epoch-age gauge.
+    pub fn mark_publish(&self) {
+        let ns = u64::try_from(self.start.elapsed().as_nanos())
+            .unwrap_or(u64::MAX)
+            .max(1);
+        self.last_publish_ns.store(ns, Ordering::Relaxed);
+    }
+
+    /// Seconds since the last epoch publish; `None` before the first.
+    pub fn epoch_age_secs(&self) -> Option<f64> {
+        let at = self.last_publish_ns.load(Ordering::Relaxed);
+        if at == 0 {
+            return None;
+        }
+        Some((self.start.elapsed().as_secs_f64() - at as f64 / 1e9).max(0.0))
+    }
+
+    /// Point-in-time copy of every counter, gauge, and histogram, for
+    /// export and for windowed diffing
+    /// ([`Engine::stats_delta`](crate::engine::Engine::stats_delta)).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: self.counters.iter().map(Counter::get).collect(),
+            gauges: self.gauges.iter().map(Gauge::get).collect(),
+            shard_tombstone: self
+                .shard_tombstone
+                .iter()
+                .map(Gauge::get)
+                .collect(),
+            hists: self.hists.iter().map(LogHistogram::snapshot).collect(),
+            uptime_secs: self.uptime_secs(),
+        }
+    }
+}
+
+/// Plain-data snapshot of a [`Registry`]; subtract two with
+/// [`RegistrySnapshot::since`] for per-window rates.
+#[derive(Clone, Debug)]
+pub struct RegistrySnapshot {
+    counters: Vec<u64>,
+    gauges: Vec<f64>,
+    shard_tombstone: Vec<f64>,
+    hists: Vec<HistSnapshot>,
+    /// Seconds since registry creation when the snapshot was taken.
+    pub uptime_secs: f64,
+}
+
+impl RegistrySnapshot {
+    pub fn counter(&self, id: CounterId) -> u64 {
+        self.counters[id.idx()]
+    }
+
+    pub fn gauge(&self, id: GaugeId) -> f64 {
+        self.gauges[id.idx()]
+    }
+
+    pub fn shard_tombstone(&self, shard: usize) -> f64 {
+        self.shard_tombstone.get(shard).copied().unwrap_or(0.0)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shard_tombstone.len()
+    }
+
+    pub fn hist(&self, id: HistId) -> &HistSnapshot {
+        &self.hists[id.idx()]
+    }
+
+    /// Windowed difference (`self` later, `earlier` earlier): counters
+    /// and histogram buckets subtract; gauges keep the later value.
+    pub fn since(&self, earlier: &RegistrySnapshot) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: self
+                .counters
+                .iter()
+                .zip(&earlier.counters)
+                .map(|(a, b)| a.saturating_sub(*b))
+                .collect(),
+            gauges: self.gauges.clone(),
+            shard_tombstone: self.shard_tombstone.clone(),
+            hists: self
+                .hists
+                .iter()
+                .zip(&earlier.hists)
+                .map(|(a, b)| a.since(b))
+                .collect(),
+            uptime_secs: (self.uptime_secs - earlier.uptime_secs).max(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_across_threads() {
+        let reg = std::sync::Arc::new(Registry::new(2));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let reg = std::sync::Arc::clone(&reg);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        reg.inc(CounterId::LabelQueries);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.counter(CounterId::LabelQueries).get(), 40_000);
+        assert_eq!(reg.counter(CounterId::Merges).get(), 0);
+    }
+
+    #[test]
+    fn gauges_hold_latest_value() {
+        let reg = Registry::new(3);
+        reg.gauge(GaugeId::BridgeCoverageLag).set(12.5);
+        reg.shard_tombstone_gauge(2).set(0.25);
+        assert_eq!(reg.gauge(GaugeId::BridgeCoverageLag).get(), 12.5);
+        assert_eq!(reg.shard_tombstone_gauge(2).get(), 0.25);
+        assert_eq!(reg.shard_tombstone_gauge(0).get(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_since_gives_window_counts() {
+        let reg = Registry::new(1);
+        reg.counter(CounterId::IngestItems).add(100);
+        reg.record_secs(HistId::Label, 0.001);
+        let first = reg.snapshot();
+        reg.counter(CounterId::IngestItems).add(50);
+        reg.record_secs(HistId::Label, 0.002);
+        reg.record_secs(HistId::Label, 0.004);
+        let delta = reg.snapshot().since(&first);
+        assert_eq!(delta.counter(CounterId::IngestItems), 50);
+        assert_eq!(delta.hist(HistId::Label).count, 2);
+    }
+
+    #[test]
+    fn epoch_age_tracks_publishes() {
+        let reg = Registry::new(1);
+        assert!(reg.epoch_age_secs().is_none());
+        reg.mark_publish();
+        let age = reg.epoch_age_secs().expect("published");
+        assert!(age >= 0.0 && age < 60.0);
+    }
+
+    #[test]
+    fn metric_names_are_unique_and_stable() {
+        let mut names: Vec<&str> = CounterId::ALL
+            .iter()
+            .map(|c| c.name())
+            .chain(GaugeId::ALL.iter().map(|g| g.name()))
+            .chain(HistId::ALL.iter().map(|h| h.name()))
+            .collect();
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate exported metric name");
+    }
+}

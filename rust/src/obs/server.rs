@@ -1,0 +1,275 @@
+//! Minimal hand-rolled HTTP/1.1 responder for `GET /metrics`.
+//!
+//! Zero dependencies: a [`std::net::TcpListener`] in non-blocking accept
+//! mode, one short-lived thread per connection, and just enough HTTP to
+//! satisfy a Prometheus scraper — request-line parsing, fragmented-read
+//! tolerance (the request is buffered until the blank line), fixed
+//! `Content-Length` responses, `Connection: close`. This is deliberately
+//! the smallest networking brick that can serve an exposition; the
+//! ROADMAP serving layer will grow from it.
+//!
+//! The server owns only a *render callback*, not the engine: the engine
+//! side hands in a closure over a [`Weak`](std::sync::Weak) engine
+//! reference, so a dropped engine degrades scrapes gracefully (the
+//! registry keeps rendering its last totals; live-state paths 404)
+//! instead of keeping the whole engine alive or panicking. Teardown is
+//! poison-tolerant and bounded: dropping [`MetricsServer`] stops the
+//! accept loop and joins every in-flight connection thread (each capped
+//! by a read timeout).
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Maximum buffered request size; anything larger is answered 400.
+const MAX_REQUEST: usize = 8 * 1024;
+/// Per-connection socket read/write timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+/// Accept-loop poll interval while idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Route callback: path → `Some((body, content_type))` or `None` (404).
+pub type Render =
+    dyn Fn(&str) -> Option<(String, &'static str)> + Send + Sync;
+
+/// A running metrics endpoint. Dropping it shuts the listener down and
+/// joins all connection threads.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`; port 0 picks a free port —
+    /// read it back from [`MetricsServer::addr`]) and serve `render` on
+    /// a background thread until dropped.
+    pub fn serve(addr: &str, render: Arc<Render>) -> io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("fishdbc-metrics".into())
+            .spawn(move || accept_loop(listener, stop2, render))
+            .expect("spawn metrics accept thread");
+        Ok(MetricsServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            // the accept thread joins its connection threads before
+            // returning; a panicked handler never wedges the teardown
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    render: Arc<Render>,
+) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                conns.retain(|h| !h.is_finished());
+                let render = Arc::clone(&render);
+                // concurrent scrapes each get their own thread; a slow
+                // client only stalls itself (bounded by IO_TIMEOUT)
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("fishdbc-metrics-conn".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, &render);
+                    })
+                {
+                    conns.push(h);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Read one request (tolerating arbitrary fragmentation), answer it,
+/// close. Any socket error just drops the connection.
+fn handle_conn(mut stream: TcpStream, render: &Arc<Render>) -> io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+
+    // fragmented reads: keep appending until the header terminator
+    // arrives, the client gives up, or the request is implausibly large
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 1024];
+    let headers_end = loop {
+        if let Some(end) = find_headers_end(&buf) {
+            break Some(end);
+        }
+        if buf.len() > MAX_REQUEST {
+            break None;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break None,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => break None,
+        }
+    };
+    if headers_end.is_none() {
+        return respond(
+            &mut stream,
+            400,
+            "Bad Request",
+            "text/plain",
+            "bad request\n",
+        );
+    }
+
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("/");
+    if method != "GET" {
+        return respond(
+            &mut stream,
+            405,
+            "Method Not Allowed",
+            "text/plain",
+            "only GET is supported\n",
+        );
+    }
+    // ignore any query string: /metrics?x=1 is still /metrics
+    let path = path.split('?').next().unwrap_or(path);
+    match render(path) {
+        Some((body, ctype)) => respond(&mut stream, 200, "OK", ctype, &body),
+        None => respond(&mut stream, 404, "Not Found", "text/plain", "not found\n"),
+    }
+}
+
+fn find_headers_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    code: u16,
+    reason: &str,
+    ctype: &str,
+    body: &str,
+) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start() -> MetricsServer {
+        MetricsServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|path: &str| match path {
+                "/metrics" => {
+                    Some(("fishdbc_up 1\n".to_string(), "text/plain"))
+                }
+                _ => None,
+            }),
+        )
+        .expect("bind")
+    }
+
+    fn get(addr: SocketAddr, request: &str) -> String {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_unknown_paths() {
+        let srv = start();
+        let ok = get(srv.addr(), "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(ok.starts_with("HTTP/1.1 200 OK"), "got: {ok}");
+        assert!(ok.contains("fishdbc_up 1"));
+        let missing = get(srv.addr(), "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404"), "got: {missing}");
+        let query =
+            get(srv.addr(), "GET /metrics?x=1 HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(query.starts_with("HTTP/1.1 200"), "got: {query}");
+    }
+
+    #[test]
+    fn tolerates_fragmented_requests() {
+        let srv = start();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        for frag in ["GE", "T /met", "rics HTTP/1.1\r\nHo", "st: x\r\n\r\n"] {
+            s.write_all(frag.as_bytes()).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK"), "got: {out}");
+    }
+
+    #[test]
+    fn rejects_non_get() {
+        let srv = start();
+        let resp =
+            get(srv.addr(), "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 405"), "got: {resp}");
+    }
+
+    #[test]
+    fn concurrent_scrapes_all_answer() {
+        let srv = start();
+        let addr = srv.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    get(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n")
+                })
+            })
+            .collect();
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert!(resp.starts_with("HTTP/1.1 200 OK"));
+        }
+    }
+
+    #[test]
+    fn shutdown_releases_the_port() {
+        let srv = start();
+        let addr = srv.addr();
+        drop(srv);
+        // the port must be rebindable once drop returns
+        let rebound = TcpListener::bind(addr);
+        assert!(rebound.is_ok(), "port still held after shutdown");
+    }
+}

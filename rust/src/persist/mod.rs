@@ -786,6 +786,12 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
                 write_edges(&mut w, c.global.edges())?;
             }
         }
+        let obs = inner.obs();
+        obs.inc(crate::obs::CounterId::Saves);
+        obs.journal.push(
+            obs.uptime_secs(),
+            crate::obs::JournalEvent::Save { items: next_global as usize },
+        );
         Ok(())
     }
 

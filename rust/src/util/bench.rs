@@ -3,9 +3,14 @@
 //! Used by the `rust/benches/*.rs` targets (`harness = false`): each bench is
 //! a plain binary that times closures with warmup + repeated samples and
 //! prints mean / stddev / min, plus CSV-ish rows the paper-table harness
-//! consumes.
+//! consumes. [`emit_bench_json`] additionally appends one line-delimited
+//! JSON record per configuration to `BENCH_<name>.json` so runs can be
+//! diffed across commits without scraping the human-readable tables.
 
+use std::io::Write;
 use std::time::Instant;
+
+use crate::obs::export::JsonW;
 
 /// Result of a timed run.
 #[derive(Clone, Debug)]
@@ -57,6 +62,41 @@ pub fn time_once<T>(mut f: impl FnMut() -> T) -> (f64, T) {
     (t0.elapsed().as_secs_f64(), v)
 }
 
+/// Append one machine-readable record to `BENCH_<bench>.json` in the
+/// current directory (line-delimited JSON — one self-contained object per
+/// line, each parseable by `python3 -m json.tool`) and echo the same line
+/// to stdout prefixed with `BENCH_JSON `. The record always carries a
+/// `"bench"` field; `fill` adds the rest (n, shards, items/s, quantiles,
+/// metric_calls, …) through the same hand-rolled [`JsonW`] writer the
+/// `/metrics` endpoint uses, so non-finite floats serialize as `null`
+/// here too. File-IO failures are reported to stderr but never fail the
+/// bench — the stdout echo is the fallback record.
+pub fn emit_bench_json(bench: &str, fill: impl FnOnce(&mut JsonW)) {
+    let line = bench_json_line(bench, fill);
+    println!("BENCH_JSON {line}");
+    let path = format!("BENCH_{bench}.json");
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| writeln!(f, "{line}"));
+    if let Err(e) = appended {
+        eprintln!("bench: could not append to {path}: {e}");
+    }
+}
+
+/// The single-line JSON record [`emit_bench_json`] writes (split out so
+/// the format is unit-testable without touching the filesystem).
+pub fn bench_json_line(bench: &str, fill: impl FnOnce(&mut JsonW)) -> String {
+    let mut w = JsonW::new();
+    w.obj(None).str("bench", bench);
+    fill(&mut w);
+    w.end_obj();
+    let line = w.finish();
+    debug_assert!(!line.contains('\n'), "records must stay line-delimited");
+    line
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,5 +119,21 @@ mod tests {
         let (t, v) = time_once(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn bench_json_line_is_one_parseable_object() {
+        let line = bench_json_line("engine_scaling", |w| {
+            w.usize("n", 50_000)
+                .usize("shards", 4)
+                .f64("items_per_sec", 12_345.6)
+                .f64("nan_field", f64::NAN)
+                .u64("metric_calls", 987);
+        });
+        assert!(line.starts_with('{') && line.ends_with('}'));
+        assert!(!line.contains('\n'));
+        assert!(line.contains("\"bench\":\"engine_scaling\""));
+        assert!(line.contains("\"shards\":4"));
+        assert!(line.contains("\"nan_field\":null"), "non-finite -> null");
     }
 }

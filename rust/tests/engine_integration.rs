@@ -661,3 +661,83 @@ fn incompatible_items_rejected_in_caller() {
     assert!(result.is_err(), "type mismatch must panic in the caller");
     engine.shutdown();
 }
+
+/// ISSUE 6 acceptance: every published epoch leaves exactly one
+/// `MergeEnd` journal entry whose fields match the snapshot it describes,
+/// the cache-kind sequence walks Scratch → Reused → Delta → Rebuild
+/// across a no-change / growth / deletion schedule, and the per-kind
+/// registry counters agree with the journal (and with `stats().merges`).
+#[test]
+fn journal_records_one_merge_end_per_epoch_matching_counters() {
+    use fishdbc::obs::{CacheKind, CounterId, JournalEvent};
+
+    let ds = blobs(900, 17);
+    let engine = spawn_engine(3);
+    for chunk in ds.items[..600].chunks(200) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let s1 = engine.cluster(10); // first merge: no usable cache (Scratch)
+    let s2 = engine.cluster(10); // nothing changed (Reused)
+    engine.add_batch(ds.items[600..].to_vec()); // monotone growth (Delta)
+    let s3 = engine.cluster(10);
+    let removed = engine.remove_batch(&ds.items[..40]);
+    assert!(removed > 0, "victims must exist");
+    let s4 = engine.cluster(10); // non-monotone window (Rebuild)
+
+    let journal = engine.journal();
+    let ends: Vec<_> = journal
+        .iter()
+        .filter_map(|e| match e.event {
+            JournalEvent::MergeEnd {
+                epoch,
+                n_changed_shards,
+                cache,
+                n_items,
+                n_deleted,
+                secs,
+            } => Some((epoch, n_changed_shards, cache, n_items, n_deleted, secs)),
+            _ => None,
+        })
+        .collect();
+    let snaps = [&s1, &s2, &s3, &s4];
+    assert_eq!(ends.len(), snaps.len(), "one MergeEnd per published epoch");
+    for (got, snap) in ends.iter().zip(snaps) {
+        assert_eq!(got.0, snap.epoch, "journal epoch matches the snapshot");
+        assert_eq!(
+            got.1, snap.n_changed_shards,
+            "journal changed-shard count matches the snapshot"
+        );
+        assert_eq!(got.3, snap.n_items, "journal item count matches");
+        assert!(got.5 >= 0.0, "merge duration is recorded");
+    }
+    let mut epochs: Vec<u64> = ends.iter().map(|e| e.0).collect();
+    let before = epochs.len();
+    epochs.dedup();
+    assert_eq!(epochs.len(), before, "no duplicate MergeEnd epochs");
+    assert_eq!(
+        ends.iter().map(|e| e.2).collect::<Vec<_>>(),
+        vec![
+            CacheKind::Scratch,
+            CacheKind::Reused,
+            CacheKind::Delta,
+            CacheKind::Rebuild
+        ],
+        "cache-kind walk across no-change / growth / deletion"
+    );
+    assert_eq!(ends[3].4, removed, "Rebuild entry reports the deletions");
+
+    // registry counters and the legacy stats surface agree with the journal
+    let reg = engine.registry();
+    assert_eq!(reg.counter(CounterId::Merges).get(), 4);
+    assert_eq!(reg.counter(CounterId::MergeScratch).get(), 1);
+    assert_eq!(reg.counter(CounterId::MergeReused).get(), 1);
+    assert_eq!(reg.counter(CounterId::MergeDelta).get(), 1);
+    assert_eq!(reg.counter(CounterId::MergeRebuild).get(), 1);
+    assert_eq!(engine.stats().merges, 4);
+    let starts = journal
+        .iter()
+        .filter(|e| matches!(e.event, JournalEvent::MergeStart { .. }))
+        .count();
+    assert_eq!(starts, 4, "every MergeEnd has its MergeStart");
+    engine.shutdown();
+}

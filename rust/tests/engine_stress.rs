@@ -85,6 +85,30 @@ fn check_epoch(
         canon(&reference.clustering.labels),
         "{ctx}: delta merge clustering != from-scratch merge clustering"
     );
+    // telemetry rides the same contract: the newest MergeEnd journal
+    // entry must describe exactly this epoch, and no epoch may journal
+    // twice (the ring holds far more than one schedule's merges)
+    let ends: Vec<(u64, usize)> = engine
+        .journal()
+        .iter()
+        .filter_map(|e| match e.event {
+            fishdbc::obs::JournalEvent::MergeEnd {
+                epoch, n_changed_shards, ..
+            } => Some((epoch, n_changed_shards)),
+            _ => None,
+        })
+        .collect();
+    let (end_epoch, end_changed) =
+        *ends.last().expect("published epoch journals a MergeEnd");
+    assert_eq!(end_epoch, snap.epoch, "{ctx}: newest MergeEnd epoch");
+    assert_eq!(
+        end_changed, snap.n_changed_shards,
+        "{ctx}: newest MergeEnd changed-shard count"
+    );
+    let mut seen = std::collections::HashSet::new();
+    for (e, _) in &ends {
+        assert!(seen.insert(*e), "{ctx}: duplicate MergeEnd for epoch {e}");
+    }
 }
 
 fn stress(shards: usize, rounds: usize, max_items: usize, seed: u64) {

@@ -1,0 +1,191 @@
+//! Telemetry integration: the observability layer must observe without
+//! perturbing — label-path counters stay exact under concurrency with
+//! merges, the `/metrics` endpoint serves while ingest and reclustering
+//! are running, and a dropped engine degrades the endpoint gracefully
+//! (metrics keep answering from the final totals; `/stats.json` turns
+//! 404) instead of wedging scrapers.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use fishdbc::datasets;
+use fishdbc::distances::MetricKind;
+use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::obs::{CounterId, HistId};
+
+fn spawn_engine(shards: usize, n: usize, seed: u64) -> Engine {
+    let items = datasets::blobs::generate(n, 16, 3, seed).items;
+    let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+        shards,
+        mcs: 5,
+        ..Default::default()
+    });
+    for chunk in items.chunks(128) {
+        engine.add_batch(chunk.to_vec());
+    }
+    engine
+}
+
+/// Plain-text HTTP GET against the metrics server; returns (status, body).
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect to metrics server");
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n")
+        .expect("send request");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("malformed status line in {raw:?}"));
+    let body = match raw.split_once("\r\n\r\n") {
+        Some((_, b)) => b.to_string(),
+        None => String::new(),
+    };
+    (status, body)
+}
+
+/// Acceptance: the label path's telemetry is O(1) lock-free atomics, so
+/// hammering `label_against` from several threads *while merges run* must
+/// lose no samples — the counter and histogram totals equal the number of
+/// queries issued, exactly, at every shard count.
+#[test]
+fn label_telemetry_is_exact_under_concurrent_merges() {
+    for shards in [1usize, 2, 4] {
+        let engine = spawn_engine(shards, 600, 71);
+        let snap = engine.cluster(5);
+        let probes = datasets::blobs::generate(32, 16, 3, 99).items;
+        let before = engine.registry().counter(CounterId::LabelQueries).get();
+
+        const THREADS: usize = 4;
+        const PER: usize = 50;
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let engine = &engine;
+                let snap = &snap;
+                let probes = &probes;
+                s.spawn(move || {
+                    for i in 0..PER {
+                        let p = &probes[(t * PER + i) % probes.len()];
+                        let _ = engine.label_against(p, snap, 5);
+                    }
+                });
+            }
+            // churn merges underneath the serving threads, on this thread
+            // (the scope joins the probe threads only after it finishes,
+            // so ingest+merge genuinely overlap the queries)
+            let extra = datasets::blobs::generate(100, 16, 3, 101).items;
+            for chunk in extra.chunks(20) {
+                engine.add_batch(chunk.to_vec());
+                let _ = engine.cluster(5);
+            }
+        });
+
+        let issued = (THREADS * PER) as u64;
+        let counted =
+            engine.registry().counter(CounterId::LabelQueries).get() - before;
+        assert_eq!(
+            counted, issued,
+            "S={shards}: label counter lost samples under concurrency"
+        );
+        let h = engine.registry().hist(HistId::Label).snapshot();
+        assert!(
+            h.count >= issued,
+            "S={shards}: label histogram recorded {} < {issued} samples",
+            h.count
+        );
+        engine.shutdown();
+    }
+}
+
+/// `/metrics` and `/stats.json` serve concurrently with ingest and
+/// reclustering: every scrape answers 200, the Prometheus text carries
+/// the engine series, and the JSON document parses far enough to carry
+/// its schema tag.
+#[test]
+fn metrics_endpoint_serves_during_ingest_and_merge() {
+    let engine = spawn_engine(2, 400, 73);
+    let _ = engine.cluster(5);
+    let server = engine.serve_metrics("127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    std::thread::scope(|s| {
+        // concurrent scrapers...
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut ok = 0;
+                    for _ in 0..10 {
+                        let (code, body) = http_get(addr, "/metrics");
+                        assert_eq!(code, 200);
+                        assert!(
+                            body.contains("fishdbc_merges_total"),
+                            "scrape missing engine series"
+                        );
+                        ok += 1;
+                    }
+                    ok
+                })
+            })
+            .collect();
+        // ...while the engine keeps working
+        let extra = datasets::blobs::generate(200, 16, 3, 103).items;
+        for chunk in extra.chunks(50) {
+            engine.add_batch(chunk.to_vec());
+            let _ = engine.cluster(5);
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 10);
+        }
+    });
+
+    let (code, body) = http_get(addr, "/metrics");
+    assert_eq!(code, 200);
+    assert!(body.contains("# TYPE fishdbc_label_queries_total counter"));
+    assert!(body.contains("fishdbc_merge_seconds_bucket"));
+    assert!(body.contains("fishdbc_live_items"));
+    assert!(body.contains("fishdbc_uptime_seconds"));
+
+    let (code, body) = http_get(addr, "/stats.json");
+    assert_eq!(code, 200);
+    assert!(body.starts_with('{') && body.trim_end().ends_with('}'));
+    assert!(body.contains("\"schema\":\"fishdbc-stats-v1\""));
+    assert!(body.contains("\"histograms\""));
+    assert!(body.contains("\"journal\""));
+
+    let (code, _) = http_get(addr, "/nope");
+    assert_eq!(code, 404);
+
+    drop(server);
+    engine.shutdown();
+}
+
+/// Graceful degradation: dropping the engine must not wedge the endpoint.
+/// `/metrics` keeps serving the registry's final totals (the server holds
+/// the registry strongly); `/stats.json` needs the live engine and turns
+/// 404 once it is gone.
+#[test]
+fn endpoint_outlives_engine_with_final_totals() {
+    let engine = spawn_engine(2, 300, 79);
+    let _ = engine.cluster(5);
+    let server = engine.serve_metrics("127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    let (code, live) = http_get(addr, "/stats.json");
+    assert_eq!(code, 200, "stats.json serves while the engine is alive");
+    assert!(live.contains("fishdbc-stats-v1"));
+
+    engine.shutdown(); // joins workers and drops the last strong inner ref
+
+    let (code, body) = http_get(addr, "/metrics");
+    assert_eq!(code, 200, "metrics must keep serving final totals");
+    assert!(body.contains("fishdbc_merges_total"));
+
+    let (code, _) = http_get(addr, "/stats.json");
+    assert_eq!(code, 404, "stats.json needs the live engine");
+    drop(server);
+}
