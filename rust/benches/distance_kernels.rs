@@ -1,0 +1,109 @@
+//! Distance kernels — scalar `dist` loop vs one `Metric::distance_batch`
+//! dispatch (ISSUE 7).
+//!
+//! Measures exactly what the HNSW rewire buys at the metric layer: the
+//! batch entry hoists the query-side work (dense borrow, cosine query
+//! norm) and drives the shared chunked kernels with the candidate loop
+//! inside, instead of paying one virtual call + per-pair setup per
+//! candidate. Dense metrics are timed at dim ∈ {16, 128}; Jaro-Winkler
+//! rides the default scalar-loop fallback, so its row documents the
+//! expected ~1× parity — the batch hook is an amortization, never a
+//! different algorithm.
+//!
+//! Each configuration asserts bit-identity between the two paths before
+//! timing (the conformance property from `distances::tests`, re-checked
+//! on bench-sized data) and appends one LDJSON record to
+//! `BENCH_distance_kernels.json`.
+//!
+//! Run: `cargo bench --bench distance_kernels` (optional numeric arg
+//! overrides the candidate count, e.g. `-- 2000` for the CI smoke run).
+
+use fishdbc::distances::{Item, Metric, MetricKind};
+use fishdbc::util::bench::{emit_bench_json, time_n};
+use fishdbc::util::rng::Rng;
+
+/// One timed comparison: `cands.len()` pairs per iteration on both paths.
+fn run_case(kind: MetricKind, label: &str, dim: usize, q: &Item, cands: &[Item]) {
+    let refs: Vec<&Item> = cands.iter().collect();
+    let mut out = vec![0.0f64; refs.len()];
+
+    // conformance first: timing a wrong kernel is worse than useless
+    kind.distance_batch(q, &refs, &mut out);
+    for (c, &b) in refs.iter().zip(&out) {
+        assert_eq!(
+            kind.dist(q, c).to_bits(),
+            b.to_bits(),
+            "batch diverged from scalar for {label}"
+        );
+    }
+
+    let iters = if refs.len() >= 100_000 { 20 } else { 50 };
+    let scalar = time_n(&format!("{label} scalar"), 3, iters, || {
+        let mut acc = 0.0f64;
+        for c in &refs {
+            acc += kind.dist(q, c);
+        }
+        acc
+    });
+    let batch = time_n(&format!("{label} batch"), 3, iters, || {
+        kind.distance_batch(q, &refs, &mut out);
+        out[0]
+    });
+    scalar.print();
+    batch.print();
+    let speedup = scalar.mean_s / batch.mean_s.max(1e-12);
+    println!("#   {label}: batch speedup {speedup:.2}x");
+
+    emit_bench_json("distance_kernels", |w| {
+        w.str("kernel", label)
+            .usize("dim", dim)
+            .usize("n", refs.len())
+            .f64("scalar_secs", scalar.mean_s)
+            .f64("batch_secs", batch.mean_s)
+            .f64("speedup", speedup)
+            .f64("pairs_per_sec", refs.len() as f64 / batch.mean_s.max(1e-12));
+    });
+}
+
+fn dense(rng: &mut Rng, dim: usize) -> Item {
+    Item::Dense((0..dim).map(|_| rng.f32() - 0.5).collect())
+}
+
+fn word(rng: &mut Rng) -> Item {
+    let len = 4 + rng.below(12);
+    Item::Text(
+        (0..len)
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect(),
+    )
+}
+
+fn main() {
+    let mut n: usize = 200_000;
+    for a in std::env::args().skip(1) {
+        if let Ok(v) = a.parse::<usize>() {
+            n = v;
+        }
+    }
+    let mut rng = Rng::new(7);
+    println!("# distance kernels: scalar loop vs distance_batch, n={n} pairs");
+
+    for dim in [16usize, 128] {
+        let q = dense(&mut rng, dim);
+        let cands: Vec<Item> = (0..n).map(|_| dense(&mut rng, dim)).collect();
+        for (kind, name) in [
+            (MetricKind::SqEuclidean, "sqeuclidean"),
+            (MetricKind::Euclidean, "euclidean"),
+            (MetricKind::Cosine, "cosine"),
+        ] {
+            run_case(kind, &format!("{name}/d{dim}"), dim, &q, &cands);
+        }
+    }
+
+    // non-dense fallback: the default scalar-loop distance_batch — the
+    // record documents parity (strings are far slower per pair, so cap n)
+    let tn = n.min(20_000);
+    let q = word(&mut rng);
+    let cands: Vec<Item> = (0..tn).map(|_| word(&mut rng)).collect();
+    run_case(MetricKind::JaroWinkler, "jaro_winkler/fallback", 0, &q, &cands);
+}

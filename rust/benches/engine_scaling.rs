@@ -14,9 +14,11 @@
 //! `docword` (sparse cosine). Distance calls (the paper's cost model) are
 //! reported per row from the engine's shared metric counter.
 //!
-//! Run: `cargo bench --bench engine_scaling` (optional args override n and
-//! the dataset, e.g. `cargo bench --bench engine_scaling -- 10000` for a
-//! quick blobs pass or `-- 600 reviews` for the text workload).
+//! Run: `cargo bench --bench engine_scaling` (optional args override n,
+//! dim and the dataset: the first numeric arg is n, the second is dim —
+//! e.g. `cargo bench --bench engine_scaling -- 10000` for a quick blobs
+//! pass, `-- 50000 128` for the wide-vector row of the EXPERIMENTS.md
+//! batching table, or `-- 600 reviews` for the text workload).
 
 use std::time::Instant;
 
@@ -33,10 +35,19 @@ fn to_pred(labels: &[i32]) -> Vec<usize> {
 
 fn main() {
     let mut n: usize = 50_000;
+    let mut dim: usize = 16;
     let mut dataset = "blobs".to_string();
+    let mut numerics = 0usize;
     for a in std::env::args().skip(1) {
         match a.parse::<usize>() {
-            Ok(v) => n = v,
+            Ok(v) => {
+                if numerics == 0 {
+                    n = v;
+                } else {
+                    dim = v;
+                }
+                numerics += 1;
+            }
             Err(_) => {
                 if datasets::DATASET_NAMES.contains(&a.as_str()) {
                     dataset = a;
@@ -44,13 +55,12 @@ fn main() {
             }
         }
     }
-    let dim = 16;
     let ds = datasets::generate(&dataset, n, dim, 42).expect("known dataset");
     let n = ds.n();
     let params = FishdbcParams { min_pts: 10, ef: 20, ..Default::default() };
 
     println!(
-        "# engine scaling: {} n={n} metric={}, MinPts=10 ef=20",
+        "# engine scaling: {} n={n} dim={dim} metric={}, MinPts=10 ef=20",
         ds.name,
         ds.metric.name()
     );
@@ -76,7 +86,8 @@ fn main() {
         let ingest = t0.elapsed().as_secs_f64();
 
         let snap = engine.cluster(10);
-        let calls = engine.stats().metric_calls;
+        let stats = engine.stats();
+        let calls = stats.metric_calls;
         let ari = match &base {
             None => 1.0,
             Some((_, labels)) => adjusted_rand_index(
@@ -102,11 +113,13 @@ fn main() {
         emit_bench_json("engine_scaling", |w| {
             w.str("dataset", &ds.name)
                 .usize("n", n)
+                .usize("dim", dim)
                 .usize("shards", shards)
                 .f64("ingest_secs", ingest)
                 .f64("items_per_sec", n as f64 / ingest.max(1e-9))
                 .f64("merge_secs", snap.extract_secs)
                 .u64("metric_calls", calls)
+                .u64("batch_evals", stats.batch_evals)
                 .usize("clusters", snap.clustering.n_clusters)
                 .usize("bridges", snap.n_bridge_edges)
                 .f64("ari_vs_s1", ari)

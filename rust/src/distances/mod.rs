@@ -25,6 +25,31 @@ use std::sync::Arc;
 pub trait Metric<T: ?Sized>: Send + Sync {
     fn dist(&self, a: &T, b: &T) -> f64;
 
+    /// Evaluate one query against many candidates in a single call — the
+    /// batching hook the HNSW hot loop drives (ROADMAP item 3): beam
+    /// search collects a node's unvisited neighbors and evaluates them
+    /// with one `distance_batch` instead of one virtual `dist` per pair.
+    ///
+    /// Contract (pinned by the conformance property in
+    /// `distances::tests`): `out.len() == cands.len()`, and the result
+    /// must be **bit-identical** to `out[i] = self.dist(q, cands[i])` for
+    /// every `i` — a batch is an amortization, never an approximation.
+    /// Outputs are *raw*: hostile values (NaN / -inf) pass through
+    /// unmodified; [`sanitize_distance`] is applied per element at the
+    /// algorithm's choke points, exactly as on the scalar path.
+    ///
+    /// The default is the scalar loop. Override when query-side work can
+    /// be hoisted out of the pair loop ([`MetricKind`] hoists the dense
+    /// query borrow and the cosine query norm) or when a backend can
+    /// evaluate many pairs per dispatch (the PJRT adapter in
+    /// `hdbscan::exact_pjrt` maps one batch to one device execution).
+    fn distance_batch(&self, q: &T, cands: &[&T], out: &mut [f64]) {
+        debug_assert_eq!(cands.len(), out.len());
+        for (o, c) in out.iter_mut().zip(cands) {
+            *o = self.dist(q, c);
+        }
+    }
+
     /// Validate an item *before* it enters any index (the sharded engine
     /// calls this in `add_batch`, in the caller's thread). The default
     /// accepts everything — a typed metric cannot receive the wrong shape
@@ -118,6 +143,16 @@ impl<T: ?Sized, M: Metric<T>> Metric<T> for Counting<M> {
     fn dist(&self, a: &T, b: &T) -> f64 {
         self.calls.fetch_add(1, Ordering::Relaxed);
         self.inner.dist(a, b)
+    }
+
+    /// One counter add of `cands.len()` per batch: every pairwise
+    /// evaluation still counts exactly once (the paper's cost model is
+    /// pairs, not dispatches), clones still share the cell, and the
+    /// inner metric's batch kernel is preserved.
+    #[inline]
+    fn distance_batch(&self, q: &T, cands: &[&T], out: &mut [f64]) {
+        self.calls.fetch_add(cands.len() as u64, Ordering::Relaxed);
+        self.inner.distance_batch(q, cands, out);
     }
 
     #[inline]
@@ -348,6 +383,39 @@ impl Metric<Item> for MetricKind {
         MetricKind::dist(self, a, b)
     }
 
+    /// Dense kinds resolve the enum dispatch and unwrap the query payload
+    /// **once per batch** instead of once per pair, then run the shared
+    /// lane cores from [`vector`]; cosine additionally hoists the query
+    /// norm ([`vector::cosine_with_qnorm`]). Every other kind takes the
+    /// scalar loop. Bit-identical to N scalar [`MetricKind::dist`] calls
+    /// either way (conformance-tested per kind).
+    fn distance_batch(&self, q: &Item, cands: &[&Item], out: &mut [f64]) {
+        debug_assert_eq!(cands.len(), out.len());
+        match (self, q) {
+            (MetricKind::Euclidean, Item::Dense(x)) => {
+                for (o, c) in out.iter_mut().zip(cands) {
+                    *o = vector::euclidean(x, c.as_dense());
+                }
+            }
+            (MetricKind::SqEuclidean, Item::Dense(x)) => {
+                for (o, c) in out.iter_mut().zip(cands) {
+                    *o = vector::sqeuclidean(x, c.as_dense());
+                }
+            }
+            (MetricKind::Cosine, Item::Dense(x)) => {
+                let nq = vector::norm_sq(x);
+                for (o, c) in out.iter_mut().zip(cands) {
+                    *o = vector::cosine_with_qnorm(nq, x, c.as_dense());
+                }
+            }
+            _ => {
+                for (o, c) in out.iter_mut().zip(cands) {
+                    *o = MetricKind::dist(self, q, c);
+                }
+            }
+        }
+    }
+
     /// The dynamic pair can mismatch at runtime; reject incompatible items
     /// before they enter any index (the engine calls this in the caller's
     /// thread, before assigning global ids).
@@ -437,5 +505,152 @@ mod tests {
     #[should_panic(expected = "incompatible")]
     fn mismatched_items_panic() {
         MetricKind::Euclidean.dist(&Item::Text("a".into()), &Item::Text("b".into()));
+    }
+
+    /// All Table 1 metrics, for the batch conformance sweep.
+    const ALL_KINDS: [MetricKind; 10] = [
+        MetricKind::Euclidean,
+        MetricKind::SqEuclidean,
+        MetricKind::Cosine,
+        MetricKind::SparseCosine,
+        MetricKind::Jaccard,
+        MetricKind::JaroWinkler,
+        MetricKind::Simpson,
+        MetricKind::Lzjd,
+        MetricKind::Tlsh,
+        MetricKind::Sdhash,
+    ];
+
+    /// A random item compatible with `kind`.
+    fn gen_item(kind: MetricKind, rng: &mut crate::util::rng::Rng) -> Item {
+        match kind {
+            MetricKind::Euclidean | MetricKind::SqEuclidean | MetricKind::Cosine => {
+                let dim = 1 + rng.below(3) * 6; // 1, 7, 13: lanes + tails
+                Item::Dense((0..dim).map(|_| rng.f32() - 0.5).collect())
+            }
+            MetricKind::SparseCosine => {
+                let mut idx = Vec::new();
+                let mut cur = 0u32;
+                for _ in 0..(1 + rng.below(6)) {
+                    cur += 1 + rng.below(5) as u32;
+                    idx.push(cur);
+                }
+                let val = idx.iter().map(|_| rng.f32() + 0.1).collect();
+                Item::Sparse { idx, val }
+            }
+            MetricKind::Jaccard => {
+                let mut set = Vec::new();
+                let mut cur = 0u32;
+                for _ in 0..(1 + rng.below(8)) {
+                    cur += 1 + rng.below(4) as u32;
+                    set.push(cur);
+                }
+                Item::Set(set)
+            }
+            MetricKind::JaroWinkler => {
+                let len = 1 + rng.below(12);
+                Item::Text(
+                    (0..len)
+                        .map(|_| (b'a' + rng.below(6) as u8) as char)
+                        .collect(),
+                )
+            }
+            MetricKind::Simpson => {
+                let bools: Vec<bool> = (0..64).map(|_| rng.bool(0.4)).collect();
+                Item::Bits(bitmap::Bitmap::from_bools(&bools))
+            }
+            MetricKind::Lzjd | MetricKind::Tlsh | MetricKind::Sdhash => {
+                let content: Vec<u8> =
+                    (0..200).map(|_| rng.next_u64() as u8).collect();
+                Item::Digest(fuzzy::Digest::from_bytes(&content))
+            }
+        }
+    }
+
+    #[test]
+    fn prop_distance_batch_bit_matches_scalar_for_every_kind() {
+        // the batch path is an amortization, never an approximation:
+        // for every Table 1 metric, one distance_batch call must produce
+        // exactly the f64 bits of N scalar dist calls
+        crate::util::proptest::check("batch-vs-scalar", 12, |rng, _| {
+            for kind in ALL_KINDS {
+                let q = gen_item(kind, rng);
+                let cands: Vec<Item> =
+                    (0..(1 + rng.below(7))).map(|_| gen_item(kind, rng)).collect();
+                let refs: Vec<&Item> = cands.iter().collect();
+                let mut out = vec![-1.0f64; refs.len()];
+                kind.distance_batch(&q, &refs, &mut out);
+                for (o, c) in out.iter().zip(&refs) {
+                    assert_eq!(
+                        o.to_bits(),
+                        MetricKind::dist(&kind, &q, c).to_bits(),
+                        "{kind:?} batch diverged from scalar"
+                    );
+                }
+                // empty batches are legal no-ops
+                kind.distance_batch(&q, &[], &mut []);
+            }
+        });
+    }
+
+    #[test]
+    fn closure_metrics_inherit_batch_conformance() {
+        // arbitrary user closures get the default loop impl: trivially
+        // conformant, so generic code can batch unconditionally
+        let m = |a: &i64, b: &i64| (a - b).abs() as f64;
+        let q = 5i64;
+        let cands = [1i64, -3, 8, 5];
+        let refs: Vec<&i64> = cands.iter().collect();
+        let mut out = [0.0f64; 4];
+        m.distance_batch(&q, &refs, &mut out);
+        for (o, c) in out.iter().zip(&refs) {
+            assert_eq!(o.to_bits(), m.dist(&q, c).to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_outputs_are_raw_and_sanitized_per_element_downstream() {
+        // hostile metrics: the batch itself passes NaN/-inf through
+        // bit-identically to the scalar path (raw contract); containment
+        // is sanitize_distance applied per element at the choke points
+        let hostile = |_a: &f64, b: &f64| {
+            if *b < 0.0 {
+                f64::NAN
+            } else if *b == 0.0 {
+                f64::NEG_INFINITY
+            } else {
+                *b
+            }
+        };
+        let q = 0.5f64;
+        let cands = [-1.0f64, 0.0, 2.0];
+        let refs: Vec<&f64> = cands.iter().collect();
+        let mut out = [0.0f64; 3];
+        hostile.distance_batch(&q, &refs, &mut out);
+        assert!(out[0].is_nan(), "NaN must pass through raw");
+        assert_eq!(out[1], f64::NEG_INFINITY, "-inf must pass through raw");
+        assert_eq!(out[2], 2.0);
+        let cleaned: Vec<f64> = out.iter().map(|&d| sanitize_distance(d)).collect();
+        assert_eq!(cleaned, [f64::INFINITY, f64::INFINITY, 2.0]);
+    }
+
+    #[test]
+    fn counting_batch_counts_each_pair_once_across_clones() {
+        // one counter add of cands.len() per batch, shared cell: the
+        // engine's metric_calls stays exact under the batched search loop
+        let m = Counting::new(|a: &f64, b: &f64| (a - b).abs());
+        let c = m.clone();
+        let q = 0.0f64;
+        let cands = [1.0f64, 2.0, 4.0];
+        let refs: Vec<&f64> = cands.iter().collect();
+        let mut out = [0.0f64; 3];
+        m.distance_batch(&q, &refs, &mut out);
+        assert_eq!(m.calls(), 3, "each pairwise eval counts exactly once");
+        assert_eq!(out, [1.0, 2.0, 4.0], "wrapper preserves inner results");
+        c.distance_batch(&q, &refs[..2], &mut out[..2]);
+        assert_eq!(m.calls(), 5, "clone lands in the same cell");
+        assert_eq!(c.calls(), 5);
+        m.dist(&q, &1.0);
+        assert_eq!(c.calls(), 6, "scalar and batch share the counter");
     }
 }

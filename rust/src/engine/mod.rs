@@ -297,6 +297,12 @@ pub struct EngineStats {
     /// counter from the persisted insert-path totals (prior search-path
     /// calls are not persisted).
     pub metric_calls: u64,
+    /// Batched distance dispatches on the insert path (sum of the shards'
+    /// HNSW counters). Each dispatch covered many of the `dist_calls`
+    /// pairwise evaluations via [`Metric::distance_batch`]
+    /// (`crate::distances::Metric::distance_batch`); CI asserts this stays
+    /// > 0 so the batch hot path cannot silently regress to scalar.
+    pub batch_evals: u64,
     /// Batches processed (sum over shards).
     pub batches: u64,
     /// Critical-path build time: the busiest shard's insert wall time.
@@ -1066,6 +1072,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
                 stats.tombstoned_items += fs.tombstoned;
                 stats.compactions += st.compactions;
                 stats.dist_calls += fs.dist_calls;
+                stats.batch_evals += fs.batch_evals;
                 stats.batches += st.batches;
                 stats.build_secs = stats.build_secs.max(st.build_secs);
                 stats.shard_stats.push(fs);
@@ -1147,6 +1154,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
             .u64("compactions", stats.compactions)
             .u64("metric_calls", stats.metric_calls)
             .u64("dist_calls", stats.dist_calls)
+            .u64("batch_evals", stats.batch_evals)
             .u64("batches", stats.batches)
             .u64("merges", stats.merges)
             .f64("build_secs", stats.build_secs);
@@ -1573,6 +1581,24 @@ mod tests {
             "pipeline stats mirror the engine-wide counter"
         );
         assert!(s.batches >= 3, "every non-empty shard saw its sub-batch");
+        assert!(
+            s.batch_evals > 0,
+            "the batched distance hot path must be exercised"
+        );
+        assert!(
+            s.batch_evals < s.dist_calls,
+            "each batch dispatch covers many pairwise evals"
+        );
+        assert_eq!(
+            s.batch_evals,
+            s.shard_stats.iter().map(|fs| fs.batch_evals).sum::<u64>(),
+            "engine total is the sum of the shard counters"
+        );
+        let json = engine.stats_json(true);
+        assert!(
+            json.contains("\"batch_evals\":"),
+            "fishdbc-stats-v1 must export batch_evals"
+        );
         assert_eq!(engine.len(), 240);
         engine.shutdown();
     }

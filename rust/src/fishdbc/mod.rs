@@ -52,6 +52,10 @@ impl Default for FishdbcParams {
 pub struct FishdbcStats {
     pub items: usize,
     pub dist_calls: u64,
+    /// Batched distance dispatches on the insert path (each covering many
+    /// of the `dist_calls` pairwise evaluations) — the "is the batch hot
+    /// path live" telemetry CI asserts on.
+    pub batch_evals: u64,
     pub mst_updates: u64,
     pub candidate_edges_buffered: usize,
     pub msf_edges: usize,
@@ -143,6 +147,7 @@ impl<T: Clone, M: Metric<T>> Fishdbc<T, M> {
         FishdbcStats {
             items: self.items.len(),
             dist_calls: self.dist_calls(),
+            batch_evals: self.hnsw.batch_evals(),
             mst_updates: self.mst_updates,
             candidate_edges_buffered: self.candidates.len(),
             msf_edges: self.msf.edges().len(),

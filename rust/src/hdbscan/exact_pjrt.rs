@@ -10,13 +10,195 @@
 //! on accelerator targets the same artifacts run unchanged — the rust side
 //! only ever sees padded `[B, D]` buffers.
 
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+
 use anyhow::{anyhow, Result};
 
-use crate::distances::Item;
+use crate::distances::{Item, Metric};
 use crate::fishdbc::neighbors::KBest;
 use crate::hdbscan::{cluster_from_msf, Clustering};
 use crate::mst::Edge;
 use crate::runtime::Runtime;
+
+/// Chunked one-query-×-many-candidates evaluation through the compiled
+/// `pairwise_*` module: the PJRT instantiation of the
+/// [`Metric::distance_batch`] contract. Each ≤B-candidate chunk is one
+/// kernel execution; a backend failure degrades that chunk to `NaN`
+/// ("unknown"), which the algorithm's [`sanitize_distance`]
+/// (`crate::distances::sanitize_distance`) choke points map to `+inf` —
+/// a failing accelerator makes results conservative, never corrupt.
+fn pairwise_batch_into(
+    rt: &Runtime,
+    module: &str,
+    b: usize,
+    q: &Item,
+    cands: &[&Item],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(cands.len(), out.len());
+    let qrow = [q.as_dense()];
+    let mut done = 0usize;
+    for chunk in cands.chunks(b.max(1)) {
+        let ys: Vec<&[f32]> = chunk.iter().map(|c| c.as_dense()).collect();
+        match rt.pairwise(module, &qrow, &ys) {
+            Ok(rows) => {
+                for (j, &d) in rows[0].iter().enumerate() {
+                    out[done + j] = d as f64;
+                }
+            }
+            Err(_) => out[done..done + chunk.len()].fill(f64::NAN),
+        }
+        done += chunk.len();
+    }
+}
+
+/// Borrow-based batch adapter over one loaded [`Runtime`]: the dense PJRT
+/// path expressed as the `distance_batch` hook. [`exact_hdbscan_pjrt`]
+/// routes its core-distance blocks through this adapter, so the exact
+/// baseline and any batch caller share one kernel entry.
+///
+/// The inherent `dist`/`distance_batch` mirror the [`Metric`] contract
+/// exactly (batch ≡ N× dist), but the *trait* cannot be implemented for a
+/// `&Runtime`-holding type — `Metric: Send + Sync` (metrics are shared
+/// across shard threads) while PJRT client handles are thread-confined.
+/// [`PjrtMetric`] is the trait-implementing owner for that use.
+pub struct PjrtBatchMetric<'rt> {
+    rt: &'rt Runtime,
+    module: String,
+    b: usize,
+}
+
+impl<'rt> PjrtBatchMetric<'rt> {
+    /// Bind to the `pairwise_<metric_name>` module covering `dim`.
+    pub fn new(rt: &'rt Runtime, metric_name: &str, dim: usize) -> Result<Self> {
+        let (b, module) = rt
+            .find_module("pairwise", metric_name, dim)
+            .ok_or_else(|| {
+                anyhow!("no pairwise_{metric_name} module for dim {dim}")
+            })?
+            .clone_meta();
+        Ok(PjrtBatchMetric { rt, module, b })
+    }
+
+    /// Kernel block size B (one execution covers up to B×B pairs).
+    pub fn block(&self) -> usize {
+        self.b
+    }
+
+    /// [`Metric::dist`]-shaped scalar evaluation (one 1×1 kernel exec).
+    pub fn dist(&self, a: &Item, b: &Item) -> f64 {
+        let mut out = [0.0f64];
+        self.distance_batch(a, &[b], &mut out);
+        out[0]
+    }
+
+    /// [`Metric::distance_batch`]-shaped batch evaluation.
+    pub fn distance_batch(&self, q: &Item, cands: &[&Item], out: &mut [f64]) {
+        pairwise_batch_into(self.rt, &self.module, self.b, q, cands, out);
+    }
+
+    /// Full-block entry for the exact baseline's core-distance stage:
+    /// one ≤B×B kernel execution per call (callers tile larger inputs),
+    /// preserving the B×B exec count of the hand-rolled loop it replaced.
+    pub fn distance_block(
+        &self,
+        xs: &[&[f32]],
+        ys: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.rt.pairwise(&self.module, xs, ys)
+    }
+}
+
+thread_local! {
+    /// Per-thread runtime cache for [`PjrtMetric`]: PJRT client handles
+    /// are neither `Send` nor `Sync`, so each thread that evaluates
+    /// distances loads (and keeps) its own runtime, keyed by artifacts
+    /// dir.
+    static THREAD_RT: RefCell<Option<(PathBuf, Runtime)>> =
+        const { RefCell::new(None) };
+}
+
+/// Owned, `Send + Sync` PJRT metric: the accelerated instantiation of
+/// [`Metric::distance_batch`], usable anywhere a `Metric<Item>` is (the
+/// engine hands clones to its shard threads; each thread lazily loads a
+/// thread-local [`Runtime`] from the artifacts dir). Scalar `dist` is a
+/// 1-candidate batch, so batch ≡ N× dist holds by construction.
+#[derive(Clone)]
+pub struct PjrtMetric {
+    dir: PathBuf,
+    module: String,
+    b: usize,
+    dim: usize,
+}
+
+impl PjrtMetric {
+    /// Validate the artifacts dir and bind the `pairwise_<metric_name>`
+    /// module covering `dim` (loads a runtime once to resolve it; worker
+    /// threads load their own lazily).
+    pub fn new(
+        dir: impl AsRef<Path>,
+        metric_name: &str,
+        dim: usize,
+    ) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let rt = Runtime::load(&dir)?;
+        let (b, module) = rt
+            .find_module("pairwise", metric_name, dim)
+            .ok_or_else(|| {
+                anyhow!("no pairwise_{metric_name} module for dim {dim}")
+            })?
+            .clone_meta();
+        Ok(PjrtMetric { dir, module, b, dim })
+    }
+
+    fn with_runtime<R>(&self, f: impl FnOnce(&Runtime) -> R) -> Result<R> {
+        THREAD_RT.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            let stale =
+                !matches!(&*slot, Some((dir, _)) if *dir == self.dir);
+            if stale {
+                *slot = Some((self.dir.clone(), Runtime::load(&self.dir)?));
+            }
+            let (_, rt) = slot.as_ref().expect("runtime just installed");
+            Ok(f(rt))
+        })
+    }
+}
+
+impl Metric<Item> for PjrtMetric {
+    fn dist(&self, a: &Item, b: &Item) -> f64 {
+        let mut out = [0.0f64];
+        self.distance_batch(a, &[b], &mut out);
+        out[0]
+    }
+
+    fn distance_batch(&self, q: &Item, cands: &[&Item], out: &mut [f64]) {
+        if cands.is_empty() {
+            return;
+        }
+        // a thread that cannot load the runtime evaluates to NaN →
+        // sanitized to +inf at the choke points (conservative, not wrong)
+        let ran = self.with_runtime(|rt| {
+            pairwise_batch_into(rt, &self.module, self.b, q, cands, out);
+        });
+        if ran.is_err() {
+            out.fill(f64::NAN);
+        }
+    }
+
+    fn check_item(&self, item: &Item) {
+        match item {
+            Item::Dense(v) => assert!(
+                v.len() <= self.dim,
+                "item dim {} exceeds module dim {}",
+                v.len(),
+                self.dim
+            ),
+            other => panic!("PjrtMetric needs dense items, got {other:?}"),
+        }
+    }
+}
 
 /// Result of the PJRT-backed exact baseline.
 #[derive(Debug)]
@@ -55,15 +237,12 @@ pub fn exact_hdbscan_pjrt(
         .collect::<Result<_>>()?;
     let dim = rows.iter().map(|r| r.len()).max().unwrap_or(0);
 
-    let pw = rt
-        .find_module("pairwise", metric_name, dim)
-        .ok_or_else(|| anyhow!("no pairwise_{metric_name} module for dim {dim}"))?
-        .clone_meta();
+    let pw = PjrtBatchMetric::new(rt, metric_name, dim)?;
     let mr = rt
         .find_module("mreach", metric_name, dim)
         .ok_or_else(|| anyhow!("no mreach_{metric_name} module for dim {dim}"))?
         .clone_meta();
-    let b = pw.0;
+    let b = pw.block();
     let execs0 = rt.exec_count();
 
     // --- core distances: k-th closest neighbor (self excluded), computed
@@ -76,7 +255,7 @@ pub fn exact_hdbscan_pjrt(
         .collect();
     for &(xi, xe) in &blocks {
         for &(yi, ye) in &blocks {
-            let block = rt.pairwise(&pw.1, &rows[xi..xe], &rows[yi..ye])?;
+            let block = pw.distance_block(&rows[xi..xe], &rows[yi..ye])?;
             for (i, row) in block.iter().enumerate() {
                 let gi = xi + i;
                 for (j, &d) in row.iter().enumerate() {
@@ -190,6 +369,43 @@ mod tests {
         let ami = adjusted_mutual_info(&pjrt_pred, &native_pred);
         assert!(ami > 0.99, "PJRT vs native AMI {ami}");
         assert!(pjrt.kernel_execs > 0);
+    }
+
+    #[test]
+    fn adapter_batch_matches_scalar_and_counts_execs() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let ds = datasets::blobs::generate(40, 16, 3, 11);
+        let pw = PjrtBatchMetric::new(&rt, "euclidean", 16).unwrap();
+
+        let q = &ds.items[0];
+        let cands: Vec<&Item> = ds.items[1..].iter().collect();
+        let execs0 = rt.exec_count();
+        let mut batch = vec![0.0f64; cands.len()];
+        pw.distance_batch(q, &cands, &mut batch);
+        assert!(rt.exec_count() > execs0, "batch dispatched no kernels");
+
+        // batch ≡ N× dist: both sides go through the same f32 kernel, so
+        // the equality is exact, not a tolerance check
+        for (c, &bd) in cands.iter().zip(&batch) {
+            assert_eq!(pw.dist(q, c).to_bits(), bd.to_bits());
+        }
+    }
+
+    #[test]
+    fn owned_metric_is_trait_conformant() {
+        if runtime_or_skip().is_none() {
+            return;
+        }
+        let m = PjrtMetric::new(default_artifacts_dir(), "euclidean", 16)
+            .unwrap();
+        let ds = datasets::blobs::generate(20, 16, 2, 7);
+        let q = &ds.items[0];
+        let cands: Vec<&Item> = ds.items[1..].iter().collect();
+        let mut batch = vec![0.0f64; cands.len()];
+        Metric::distance_batch(&m, q, &cands, &mut batch);
+        for (c, &bd) in cands.iter().zip(&batch) {
+            assert_eq!(Metric::dist(&m, q, c).to_bits(), bd.to_bits());
+        }
     }
 
     #[test]

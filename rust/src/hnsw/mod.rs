@@ -34,16 +34,117 @@ impl Ord for OrdF64 {
     }
 }
 
-/// Per-node adjacency: one neighbor list per level the node exists on.
+/// Words before the per-level lengths in [`Node::data`]: `n_levels`,
+/// `cap0`, `capl`.
+const NODE_HDR: usize = 3;
+
+/// Per-node adjacency in **one flat allocation** (SmallVec-style inline
+/// capacity): beam search walks a node's neighbors as one contiguous
+/// `&[u32]` instead of pointer-chasing a `Vec<Vec<u32>>` — one heap block
+/// per node instead of `levels + 1`, and `Clone` (the copy-on-write path
+/// when a snapshot pins a chunk) is a single `memcpy`.
+///
+/// Layout of `data`: `[n_levels, cap0, capl, len[0..n_levels],
+/// slots(level 0: cap0 words)(levels 1..: capl words each)]`. Capacities
+/// carry one slot of slack over the degree bounds (`cap0 = 2m + 1`,
+/// `capl = m + 1`) so [`Hnsw::link`]'s push-then-shrink transient
+/// overflow stays in place. The layout is in-memory only: export/import
+/// speak nested lists, so persisted bytes are unchanged.
 #[derive(Clone, Debug)]
 struct Node {
-    /// `links[l]` = neighbor ids at level `l` (0 = bottom).
-    links: Vec<Vec<u32>>,
+    data: Box<[u32]>,
 }
 
 impl Node {
+    /// Empty node spanning levels `0..=level` with explicit capacities.
+    fn with_caps(level: usize, cap0: usize, capl: usize) -> Node {
+        let n_levels = level + 1;
+        let mut data = vec![0u32; NODE_HDR + n_levels + cap0 + level * capl];
+        data[0] = n_levels as u32;
+        data[1] = cap0 as u32;
+        data[2] = capl as u32;
+        Node { data: data.into_boxed_slice() }
+    }
+
+    /// Empty node with the standard slack capacities for parameter `m`.
+    fn with_capacity(level: usize, m: usize) -> Node {
+        Node::with_caps(level, 2 * m + 1, m + 1)
+    }
+
+    /// Rebuild from nested lists (import path). Capacities are the
+    /// standard ones for `m` — self-produced exports always fit, so a
+    /// round-tripped index continues exactly like the original — widened
+    /// (plus slack) only for foreign files with oversized lists.
+    fn from_lists(lists: &[Vec<u32>], m: usize) -> Node {
+        let level = lists.len() - 1;
+        let cap0 = (2 * m + 1).max(lists[0].len() + 1);
+        let widest = lists[1..].iter().map(Vec::len).max().unwrap_or(0);
+        let capl = (m + 1).max(widest + 1);
+        let mut n = Node::with_caps(level, cap0, capl);
+        for (l, list) in lists.iter().enumerate() {
+            n.set_links(l, list);
+        }
+        n
+    }
+
+    /// Nested-list view (export path).
+    fn to_lists(&self) -> Vec<Vec<u32>> {
+        (0..self.n_levels()).map(|l| self.links(l).to_vec()).collect()
+    }
+
+    #[inline]
+    fn n_levels(&self) -> usize {
+        self.data[0] as usize
+    }
+
+    #[inline]
     fn level(&self) -> usize {
-        self.links.len() - 1
+        self.n_levels() - 1
+    }
+
+    #[inline]
+    fn len(&self, l: usize) -> usize {
+        debug_assert!(l < self.n_levels());
+        self.data[NODE_HDR + l] as usize
+    }
+
+    #[inline]
+    fn cap(&self, l: usize) -> usize {
+        if l == 0 { self.data[1] as usize } else { self.data[2] as usize }
+    }
+
+    #[inline]
+    fn slot_base(&self, l: usize) -> usize {
+        debug_assert!(l < self.n_levels());
+        let base = NODE_HDR + self.n_levels();
+        if l == 0 {
+            base
+        } else {
+            base + self.data[1] as usize + (l - 1) * self.data[2] as usize
+        }
+    }
+
+    /// Neighbor ids at level `l` — one contiguous slice, no indirection.
+    #[inline]
+    fn links(&self, l: usize) -> &[u32] {
+        let b = self.slot_base(l);
+        &self.data[b..b + self.len(l)]
+    }
+
+    #[inline]
+    fn push_link(&mut self, l: usize, v: u32) {
+        let len = self.len(l);
+        assert!(len < self.cap(l), "link slots exhausted at level {l}");
+        let b = self.slot_base(l);
+        self.data[b + len] = v;
+        self.data[NODE_HDR + l] = (len + 1) as u32;
+    }
+
+    fn set_links(&mut self, l: usize, links: &[u32]) {
+        assert!(links.len() <= self.cap(l), "links exceed level {l} capacity");
+        let b = self.slot_base(l);
+        self.data[b..b + links.len()].copy_from_slice(links);
+        self.data[NODE_HDR + l] = links.len() as u32;
     }
 }
 
@@ -96,6 +197,12 @@ pub struct Hnsw {
     rng: Rng,
     mult: f64,
     dist_calls: u64,
+    /// Batched distance dispatches on the build path — each covered
+    /// `ids.len()` pairwise evaluations already counted in `dist_calls`.
+    /// Telemetry only (CI asserts the batch path is exercised): carried
+    /// across clones like `dist_calls`, but **not** part of the persisted
+    /// interchange — FISHENG bytes are unchanged; import restarts it at 0.
+    batch_evals: u64,
     // --- transient perf state (not persisted) ---
     /// Epoch-stamped visited marks: `visited_mark[id] == epoch` ⇔ visited
     /// in the current search. Avoids a HashSet allocation per search_layer
@@ -104,6 +211,9 @@ pub struct Hnsw {
     epoch: u32,
     /// Reusable frontier buffer (avoids cloning neighbor lists).
     scratch: Vec<u32>,
+    /// Reusable distance buffer, paired with `scratch` by the batched
+    /// evaluation path.
+    scratch_d: Vec<f64>,
 }
 
 impl Clone for Hnsw {
@@ -120,9 +230,11 @@ impl Clone for Hnsw {
             rng: self.rng.clone(),
             mult: self.mult,
             dist_calls: self.dist_calls,
+            batch_evals: self.batch_evals,
             visited_mark: Vec::new(),
             epoch: 0,
             scratch: Vec::new(),
+            scratch_d: Vec::new(),
         }
     }
 }
@@ -137,9 +249,11 @@ impl Hnsw {
             entry: None,
             mult,
             dist_calls: 0,
+            batch_evals: 0,
             visited_mark: Vec::new(),
             epoch: 0,
             scratch: Vec::new(),
+            scratch_d: Vec::new(),
         }
     }
 
@@ -177,6 +291,14 @@ impl Hnsw {
         self.dist_calls
     }
 
+    /// Batched distance dispatches performed during construction (each
+    /// covering many pairwise evaluations, all of which are individually
+    /// counted in [`Hnsw::dist_calls`]). Telemetry for "is the batch hot
+    /// path actually in use" — not persisted.
+    pub fn batch_evals(&self) -> u64 {
+        self.batch_evals
+    }
+
     /// Top level of the hierarchy (None when empty).
     pub fn top_level(&self) -> Option<usize> {
         self.entry.map(|e| self.nodes[e as usize].level())
@@ -184,7 +306,9 @@ impl Hnsw {
 
     /// Neighbor list of `id` at `level` (introspection / tests).
     pub fn neighbors(&self, id: u32, level: usize) -> &[u32] {
-        &self.nodes[id as usize].links[level]
+        let n = &self.nodes[id as usize];
+        assert!(level < n.n_levels(), "level {level} out of range for {id}");
+        n.links(level)
     }
 
     /// Level of node `id`.
@@ -196,7 +320,7 @@ impl Hnsw {
     pub fn export(&self) -> HnswExport {
         HnswExport {
             params: self.params,
-            links: self.nodes.iter().map(|n| n.links.clone()).collect(),
+            links: self.nodes.iter().map(|n| n.to_lists()).collect(),
             entry: self.entry,
             rng_state: self.rng.state(),
             dist_calls: self.dist_calls,
@@ -212,16 +336,21 @@ impl Hnsw {
         let mult = 1.0 / (e.params.m.max(2) as f64).ln();
         Hnsw {
             rng: Rng::from_state(e.rng_state),
-            params: e.params,
             nodes: ChunkedVec::from_vec(
-                e.links.into_iter().map(|links| Node { links }).collect(),
+                e.links
+                    .iter()
+                    .map(|lists| Node::from_lists(lists, e.params.m))
+                    .collect(),
             ),
+            params: e.params,
             entry: e.entry,
             mult,
             dist_calls: e.dist_calls,
+            batch_evals: 0,
             visited_mark: Vec::new(),
             epoch: 0,
             scratch: Vec::new(),
+            scratch_d: Vec::new(),
         }
     }
 
@@ -234,13 +363,7 @@ impl Hnsw {
                 .iter()
                 .map(|n| {
                     std::mem::size_of::<Node>()
-                        + n.links
-                            .iter()
-                            .map(|l| {
-                                std::mem::size_of::<Vec<u32>>()
-                                    + l.len() * std::mem::size_of::<u32>()
-                            })
-                            .sum::<usize>()
+                        + n.data.len() * std::mem::size_of::<u32>()
                 })
                 .sum()
         })
@@ -271,6 +394,39 @@ impl Hnsw {
         d
     }
 
+    /// Batched twin of [`Hnsw::eval`]: evaluate `fixed` against every id
+    /// in `ids` with **one** [`Metric::distance_batch`] dispatch, then
+    /// apply the same per-element choke-point duties — sanitize, count
+    /// into `dist_calls`, append to the eval log (`(fixed, id)` order
+    /// when `fixed_first`, `(id, fixed)` otherwise, matching what the
+    /// scalar call sites logged). `out` holds the sanitized distances,
+    /// index-aligned with `ids`.
+    fn eval_batch<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
+        &mut self,
+        items: &S,
+        metric: &M,
+        fixed: u32,
+        ids: &[u32],
+        fixed_first: bool,
+        out: &mut Vec<f64>,
+        log: &mut DistLog,
+    ) {
+        out.clear();
+        if ids.is_empty() {
+            return;
+        }
+        out.resize(ids.len(), 0.0);
+        let refs: Vec<&T> = ids.iter().map(|&id| items.get(id as usize)).collect();
+        metric.distance_batch(items.get(fixed as usize), &refs, out);
+        self.dist_calls += ids.len() as u64;
+        self.batch_evals += 1;
+        for (i, &id) in ids.iter().enumerate() {
+            let d = sanitize_distance(out[i]);
+            out[i] = d;
+            log.push(if fixed_first { (fixed, id, d) } else { (id, fixed, d) });
+        }
+    }
+
     /// Insert the item with id `new_id` (ids must be dense: `new_id ==
     /// self.len()`; the caller owns the item store and must have pushed the
     /// item already). Every distance computed is appended to `log`;
@@ -287,7 +443,7 @@ impl Hnsw {
         assert_eq!(new_id as usize, self.nodes.len(), "ids must be dense");
         assert!((new_id as usize) < items.len(), "item must be pushed first");
         let level = self.random_level();
-        self.nodes.push(Node { links: vec![Vec::new(); level + 1] });
+        self.nodes.push(Node::with_capacity(level, self.params.m));
 
         let Some(entry) = self.entry else {
             self.entry = Some(new_id);
@@ -370,20 +526,25 @@ impl Hnsw {
     ) -> Vec<(u32, f64)> {
         let Some(entry) = self.entry else { return Vec::new() };
         // same sanitizing choke point as `eval`, for the query path (the
-        // engine's bridge searches and online labels run through here)
+        // engine's bridge searches and online labels run through here);
+        // `query_batch` applies it per element on the batched dispatches
         let qd =
             |id: u32| sanitize_distance(metric.dist(query, items.get(id as usize)));
+        let mut dists: Vec<f64> = Vec::new();
 
-        // greedy descent to level 1
+        // greedy descent to level 1: each pass batches the current best's
+        // whole neighbor list, then folds with the same strict `<` the
+        // scalar loop used (first minimum wins ties — identical walk)
         let mut best = (entry, qd(entry));
         let top = self.nodes[entry as usize].level();
         for l in (1..=top).rev() {
             loop {
+                let nbs = self.nodes[best.0 as usize].links(l);
+                query_batch(items, metric, query, nbs, &mut dists);
                 let mut improved = false;
-                for &nb in &self.nodes[best.0 as usize].links[l] {
-                    let d = qd(nb);
-                    if d < best.1 {
-                        best = (nb, d);
+                for (i, &nb) in nbs.iter().enumerate() {
+                    if dists[i] < best.1 {
+                        best = (nb, dists[i]);
                         improved = true;
                     }
                 }
@@ -394,12 +555,15 @@ impl Hnsw {
         }
 
         // beam search at level 0 (rejected nodes feed `cands` so the walk
-        // can route *through* them, but never enter `results`)
+        // can route *through* them, but never enter `results`); unvisited
+        // neighbors are collected per node and evaluated with one batched
+        // dispatch, heap updates replaying in scalar order
         use std::cmp::Reverse;
         use std::collections::BinaryHeap;
         let ef = ef.max(k);
         let mut visited: std::collections::HashSet<u32> =
             std::iter::once(best.0).collect();
+        let mut frontier: Vec<u32> = Vec::new();
         let mut cands = BinaryHeap::from([Reverse((OrdF64(best.1), best.0))]);
         let mut results = BinaryHeap::new();
         if accept(best.0) {
@@ -410,11 +574,15 @@ impl Hnsw {
             if cd > worst && results.len() >= ef {
                 break;
             }
-            for &nb in &self.nodes[c as usize].links[0] {
-                if !visited.insert(nb) {
-                    continue;
+            frontier.clear();
+            for &nb in self.nodes[c as usize].links(0) {
+                if visited.insert(nb) {
+                    frontier.push(nb);
                 }
-                let d = qd(nb);
+            }
+            query_batch(items, metric, query, &frontier, &mut dists);
+            for (i, &nb) in frontier.iter().enumerate() {
+                let d = dists[i];
                 let worst =
                     results.peek().map_or(f64::INFINITY, |&(OrdF64(w), _)| w);
                 if results.len() < ef || d < worst {
@@ -460,6 +628,7 @@ impl Hnsw {
         let mut results: BinaryHeap<(OrdF64, u32)> =
             ep.into_iter().map(|(id, d)| (OrdF64(d), id)).collect();
         let mut scratch = std::mem::take(&mut self.scratch);
+        let mut dists = std::mem::take(&mut self.scratch_d);
 
         while let Some(Reverse((OrdF64(cd), c))) = cands.pop() {
             let worst = results.peek().map_or(f64::INFINITY, |&(OrdF64(d), _)| d);
@@ -467,19 +636,23 @@ impl Hnsw {
                 break;
             }
             // collect unvisited neighbors into the reusable frontier buffer
-            // (marks + scratch are disjoint fields, so no neighbor-list clone)
+            // (marks + scratch are disjoint fields, so no neighbor-list
+            // clone), then evaluate the whole frontier with one batched
+            // dispatch; the heap updates below replay per element in the
+            // same order the scalar loop used, so results are unchanged
             scratch.clear();
-            if let Some(links) = self.nodes[c as usize].links.get(level) {
-                for &nb in links {
+            let node = &self.nodes[c as usize];
+            if level < node.n_levels() {
+                for &nb in node.links(level) {
                     if self.visited_mark[nb as usize] != epoch {
                         self.visited_mark[nb as usize] = epoch;
                         scratch.push(nb);
                     }
                 }
             }
-            for i in 0..scratch.len() {
-                let nb = scratch[i];
-                let d = self.eval(items, metric, nb, q_id, log);
+            self.eval_batch(items, metric, q_id, &scratch, false, &mut dists, log);
+            for (i, &nb) in scratch.iter().enumerate() {
+                let d = dists[i];
                 let worst =
                     results.peek().map_or(f64::INFINITY, |&(OrdF64(w), _)| w);
                 if results.len() < ef || d < worst {
@@ -492,6 +665,7 @@ impl Hnsw {
             }
         }
         self.scratch = scratch;
+        self.scratch_d = dists;
         results.into_iter().map(|(OrdF64(d), id)| (id, d)).collect()
     }
 
@@ -500,6 +674,13 @@ impl Hnsw {
     /// sorted by distance ascending. Distance calls between existing nodes
     /// are logged too — exactly the "farther away item" information FISHDBC
     /// needs to keep local clusters connected (paper §3.1).
+    ///
+    /// Deliberately **scalar**: the diversity check early-exits as soon as
+    /// one selected neighbor refutes a candidate, so pre-batching every
+    /// candidate×selected pair would evaluate up to `m`× more distances —
+    /// the wrong trade under the paper's cost model (distance calls *are*
+    /// the runtime). The batched select-neighbors work lives in
+    /// [`Hnsw::shrink`], whose candidate distances have no early exit.
     fn select_heuristic<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
         &mut self,
         items: &S,
@@ -555,16 +736,16 @@ impl Hnsw {
         m_max: usize,
         log: &mut DistLog,
     ) {
-        self.nodes.get_mut(new_id as usize).links[level].push(nb);
+        self.nodes.get_mut(new_id as usize).push_link(level, nb);
         // read-only probe first: get_mut would copy-on-write nb's chunk
         // even on the branch that writes nothing
-        if self.nodes[nb as usize].links.len() <= level {
+        if self.nodes[nb as usize].level() < level {
             return;
         }
         let overflow = {
-            let nb_list = &mut self.nodes.get_mut(nb as usize).links[level];
-            nb_list.push(new_id);
-            nb_list.len() > m_max
+            let nb_node = self.nodes.get_mut(nb as usize);
+            nb_node.push_link(level, new_id);
+            nb_node.len(level) > m_max
         };
         if overflow {
             self.shrink(items, metric, nb, level, m_max, log);
@@ -581,18 +762,39 @@ impl Hnsw {
         m_max: usize,
         log: &mut DistLog,
     ) {
-        let list = std::mem::take(&mut self.nodes.get_mut(id as usize).links[level]);
-        let mut with_d: Vec<(u32, f64)> = list
-            .into_iter()
-            .map(|nb| {
-                let d = self.eval(items, metric, id, nb, log);
-                (nb, d)
-            })
-            .collect();
+        let list: Vec<u32> = self.nodes[id as usize].links(level).to_vec();
+        let mut dists = std::mem::take(&mut self.scratch_d);
+        self.eval_batch(items, metric, id, &list, true, &mut dists, log);
+        let mut with_d: Vec<(u32, f64)> =
+            list.iter().zip(&dists).map(|(&nb, &d)| (nb, d)).collect();
+        self.scratch_d = dists;
         with_d.sort_unstable_by(|x, y| x.1.total_cmp(&y.1));
         let selected = self.select_heuristic(items, metric, &with_d, m_max, log);
-        self.nodes.get_mut(id as usize).links[level] =
-            selected.into_iter().map(|(nb, _)| nb).collect();
+        let links: Vec<u32> = selected.into_iter().map(|(nb, _)| nb).collect();
+        self.nodes.get_mut(id as usize).set_links(level, &links);
+    }
+}
+
+/// Query-path twin of [`Hnsw::eval_batch`] (free function: the query path
+/// is `&self`): one [`Metric::distance_batch`] dispatch, sanitized per
+/// element — no logging and no counter, exactly like the scalar `qd`
+/// closure it batches. `out` is index-aligned with `ids`.
+fn query_batch<T, S: ItemStore<T> + ?Sized, M: Metric<T>>(
+    items: &S,
+    metric: &M,
+    query: &T,
+    ids: &[u32],
+    out: &mut Vec<f64>,
+) {
+    out.clear();
+    if ids.is_empty() {
+        return;
+    }
+    out.resize(ids.len(), 0.0);
+    let refs: Vec<&T> = ids.iter().map(|&id| items.get(id as usize)).collect();
+    metric.distance_batch(query, &refs, out);
+    for d in out.iter_mut() {
+        *d = sanitize_distance(*d);
     }
 }
 
@@ -861,6 +1063,52 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn flat_node_links_roundtrip() {
+        // the flat inline-capacity layout behaves exactly like the nested
+        // lists it replaced: per-level push/set/read plus list round-trip
+        let mut n = Node::with_capacity(2, 3);
+        assert_eq!(n.level(), 2);
+        for l in 0..=2 {
+            assert!(n.links(l).is_empty());
+        }
+        n.push_link(0, 4);
+        n.push_link(0, 9);
+        n.push_link(2, 7);
+        assert_eq!(n.links(0), &[4, 9]);
+        assert!(n.links(1).is_empty());
+        assert_eq!(n.links(2), &[7]);
+        n.set_links(0, &[1, 2, 3]);
+        assert_eq!(n.links(0), &[1, 2, 3]);
+        let lists = n.to_lists();
+        assert_eq!(lists, vec![vec![1, 2, 3], vec![], vec![7]]);
+        let back = Node::from_lists(&lists, 3);
+        assert_eq!(back.to_lists(), lists);
+        // capacity slack: level 0 admits the m_max+1 = 2m+1 transient that
+        // link() creates right before shrink() restores the bound
+        let mut f = Node::with_capacity(0, 2);
+        for v in 0..5u32 {
+            f.push_link(0, v);
+        }
+        assert_eq!(f.links(0), &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn build_exercises_the_batch_path() {
+        let mut rng = Rng::new(21);
+        let items = random_points(&mut rng, 60, 3);
+        let (h, log) = build(&items, HnswParams { m: 5, ef: 10, seed: 3 });
+        assert!(h.batch_evals() > 0, "construction never batched");
+        assert!(
+            h.batch_evals() < h.dist_calls(),
+            "batches must cover many pairwise evals"
+        );
+        assert_eq!(h.dist_calls() as usize, log.len());
+        // clones carry the counter; imports restart it (not persisted)
+        assert_eq!(h.clone().batch_evals(), h.batch_evals());
+        assert_eq!(Hnsw::import(h.export()).batch_evals(), 0);
     }
 
     #[test]

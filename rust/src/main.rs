@@ -537,8 +537,9 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
         );
         println!(
             "  distance calls: {} total across every path ({} on the \
-             insert path) — the paper's cost model",
-            es.metric_calls, es.dist_calls,
+             insert path, via {} batched dispatches) — the paper's cost \
+             model",
+            es.metric_calls, es.dist_calls, es.batch_evals,
         );
         let chunks = es.pipeline.snapshot_chunks_copied
             + es.pipeline.snapshot_chunks_shared;

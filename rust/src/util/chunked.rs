@@ -27,31 +27,72 @@
 
 use std::sync::Arc;
 
-/// log2 of the chunk size. 32 elements balances copy-on-write granularity
-/// (a post-snapshot write copies at most 32 elements) against per-chunk
-/// `Arc` overhead; see the `snapshot_refresh` bench for measured ratios.
-pub const CHUNK_BITS: usize = 5;
-/// Elements per chunk.
+/// Parse a decimal chunk-bits override at compile time (const context:
+/// no `str::parse`). Rejects non-digits and out-of-range values with a
+/// compile error rather than silently falling back.
+const fn parse_chunk_bits(env: Option<&str>) -> usize {
+    match env {
+        None => 5,
+        Some(s) => {
+            let bytes = s.as_bytes();
+            assert!(!bytes.is_empty(), "FISHDBC_CHUNK_BITS must not be empty");
+            let mut v = 0usize;
+            let mut i = 0;
+            while i < bytes.len() {
+                assert!(
+                    bytes[i].is_ascii_digit(),
+                    "FISHDBC_CHUNK_BITS must be a decimal integer"
+                );
+                v = v * 10 + (bytes[i] - b'0') as usize;
+                i += 1;
+            }
+            assert!(v != 0, "FISHDBC_CHUNK_BITS must be in 1..=16");
+            assert!(v <= 16, "FISHDBC_CHUNK_BITS must be in 1..=16");
+            v
+        }
+    }
+}
+
+/// log2 of the default chunk size, compile-time overridable: build with
+/// `FISHDBC_CHUNK_BITS=6 cargo build` to try other granularities without
+/// touching code (ROADMAP open item 6 wants this tuned on real hardware).
+///
+/// The tradeoff being tuned is **rewire write-amplification vs per-chunk
+/// overhead**: after a snapshot, the first rewire into a shared chunk
+/// copies the whole chunk, and HNSW insertion rewires ~MinPts scattered
+/// neighbors per item — so the copy-on-write cost of one insert is up to
+/// MinPts·CHUNK element copies in the worst case. Bigger chunks amortize
+/// `Arc` bookkeeping and help sequential scans (the flat HNSW link layout
+/// walks chunk-contiguous nodes) but inflate that per-insert copy bill;
+/// smaller chunks invert both. 32 elements (bits = 5) balances the two on
+/// the workloads measured so far; see the `snapshot_refresh` bench for
+/// copied-vs-shared ratios. The chunk layout is never persisted, so
+/// builds with different values read each other's files fine.
+pub const CHUNK_BITS: usize = parse_chunk_bits(option_env!("FISHDBC_CHUNK_BITS"));
+/// Elements per chunk (at the default [`CHUNK_BITS`]).
 pub const CHUNK: usize = 1 << CHUNK_BITS;
-const MASK: usize = CHUNK - 1;
 
 /// Append-mostly vector in `Arc`-shared fixed-size chunks (see the module
-/// docs for the copy-on-write sharing model).
+/// docs for the copy-on-write sharing model). The chunk size is a const
+/// generic (`1 << BITS`) so the property suite can exercise a second
+/// granularity; every production user takes the default, which is
+/// [`CHUNK_BITS`] and therefore `FISHDBC_CHUNK_BITS`-overridable at
+/// compile time.
 #[derive(Debug)]
-pub struct ChunkedVec<T> {
+pub struct ChunkedVec<T, const BITS: usize = CHUNK_BITS> {
     chunks: Vec<Arc<Vec<T>>>,
     len: usize,
 }
 
 /// Manual (not derived) so an empty store exists for every `T` — the
 /// derive would demand a spurious `T: Default`.
-impl<T> Default for ChunkedVec<T> {
+impl<T, const BITS: usize> Default for ChunkedVec<T, BITS> {
     fn default() -> Self {
         ChunkedVec::new()
     }
 }
 
-impl<T> Clone for ChunkedVec<T> {
+impl<T, const BITS: usize> Clone for ChunkedVec<T, BITS> {
     /// O(n / CHUNK): clones the chunk *pointers*, not the elements. This
     /// is the snapshot operation.
     fn clone(&self) -> Self {
@@ -59,7 +100,11 @@ impl<T> Clone for ChunkedVec<T> {
     }
 }
 
-impl<T> ChunkedVec<T> {
+impl<T, const BITS: usize> ChunkedVec<T, BITS> {
+    /// Elements per chunk for this instantiation.
+    pub const CHUNK: usize = 1 << BITS;
+    const MASK: usize = (1 << BITS) - 1;
+
     pub fn new() -> Self {
         ChunkedVec { chunks: Vec::new(), len: 0 }
     }
@@ -123,7 +168,7 @@ impl<T> ChunkedVec<T> {
     #[inline]
     pub fn get(&self, i: usize) -> &T {
         debug_assert!(i < self.len, "index {i} out of bounds (len {})", self.len);
-        &self.chunks[i >> CHUNK_BITS][i & MASK]
+        &self.chunks[i >> BITS][i & Self::MASK]
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &T> + '_ {
@@ -131,16 +176,16 @@ impl<T> ChunkedVec<T> {
     }
 }
 
-impl<T: Clone> ChunkedVec<T> {
+impl<T: Clone, const BITS: usize> ChunkedVec<T, BITS> {
     /// Build from a dense vector. The layout is identical to pushing the
     /// elements one by one (determinism: reloads chunk exactly like the
     /// original run).
     pub fn from_vec(v: Vec<T>) -> Self {
         let len = v.len();
-        let mut chunks = Vec::with_capacity(len.div_ceil(CHUNK));
+        let mut chunks = Vec::with_capacity(len.div_ceil(Self::CHUNK));
         let mut it = v.into_iter();
         loop {
-            let chunk: Vec<T> = it.by_ref().take(CHUNK).collect();
+            let chunk: Vec<T> = it.by_ref().take(Self::CHUNK).collect();
             if chunk.is_empty() {
                 break;
             }
@@ -158,8 +203,8 @@ impl<T: Clone> ChunkedVec<T> {
     /// Append. Copy-on-write: if a snapshot still references the tail
     /// chunk, that chunk (≤ [`CHUNK`] elements) is copied first.
     pub fn push(&mut self, v: T) {
-        if self.len & MASK == 0 {
-            self.chunks.push(Arc::new(Vec::with_capacity(CHUNK)));
+        if self.len & Self::MASK == 0 {
+            self.chunks.push(Arc::new(Vec::with_capacity(Self::CHUNK)));
         }
         let tail = self.chunks.last_mut().expect("tail chunk present");
         Arc::make_mut(tail).push(v);
@@ -172,11 +217,11 @@ impl<T: Clone> ChunkedVec<T> {
     #[inline]
     pub fn get_mut(&mut self, i: usize) -> &mut T {
         debug_assert!(i < self.len, "index {i} out of bounds (len {})", self.len);
-        &mut Arc::make_mut(&mut self.chunks[i >> CHUNK_BITS])[i & MASK]
+        &mut Arc::make_mut(&mut self.chunks[i >> BITS])[i & Self::MASK]
     }
 }
 
-impl<T> std::ops::Index<usize> for ChunkedVec<T> {
+impl<T, const BITS: usize> std::ops::Index<usize> for ChunkedVec<T, BITS> {
     type Output = T;
 
     #[inline]
@@ -185,7 +230,7 @@ impl<T> std::ops::Index<usize> for ChunkedVec<T> {
     }
 }
 
-impl<T: PartialEq> PartialEq for ChunkedVec<T> {
+impl<T: PartialEq, const BITS: usize> PartialEq for ChunkedVec<T, BITS> {
     fn eq(&self, other: &Self) -> bool {
         self.len == other.len && self.iter().eq(other.iter())
     }
@@ -249,7 +294,7 @@ impl<T> ItemStore<T> for Vec<T> {
     }
 }
 
-impl<T> ItemStore<T> for ChunkedVec<T> {
+impl<T, const BITS: usize> ItemStore<T> for ChunkedVec<T, BITS> {
     #[inline]
     fn len(&self) -> usize {
         ChunkedVec::len(self)
@@ -265,6 +310,15 @@ impl<T> ItemStore<T> for ChunkedVec<T> {
 mod tests {
     use super::*;
     use crate::util::proptest::check;
+
+    #[test]
+    fn chunk_bits_parser_accepts_defaults_and_overrides() {
+        assert_eq!(parse_chunk_bits(None), 5);
+        assert_eq!(parse_chunk_bits(Some("5")), 5);
+        assert_eq!(parse_chunk_bits(Some("2")), 2);
+        assert_eq!(parse_chunk_bits(Some("16")), 16);
+        assert_eq!(CHUNK, 1 << CHUNK_BITS);
+    }
 
     #[test]
     fn push_index_iter_match_dense() {
@@ -358,40 +412,77 @@ mod tests {
         assert!(!live.chunk_shared_with(&snap, 1), "tail was copied");
     }
 
+    /// The random-op equivalence body, generic over chunk size so the
+    /// property runs at the production granularity *and* a deliberately
+    /// tiny one (more chunk boundaries per op — the regime where an
+    /// off-by-one in the `BITS`/`MASK` arithmetic would actually bite).
+    fn chunked_equals_dense_under_random_ops<const BITS: usize>(
+        rng: &mut crate::util::rng::Rng,
+    ) {
+        let mut cv: ChunkedVec<u64, BITS> = ChunkedVec::new();
+        let mut dense: Vec<u64> = Vec::new();
+        let mut snaps: Vec<(ChunkedVec<u64, BITS>, Vec<u64>)> = Vec::new();
+        for step in 0..400 {
+            match rng.below(10) {
+                0..=5 => {
+                    let v = rng.next_u64();
+                    cv.push(v);
+                    dense.push(v);
+                }
+                6 | 7 if !dense.is_empty() => {
+                    let i = rng.below(dense.len());
+                    let v = rng.next_u64();
+                    *cv.get_mut(i) = v;
+                    dense[i] = v;
+                }
+                8 => snaps.push((cv.clone(), dense.clone())),
+                _ => {}
+            }
+            if step % 37 == 0 {
+                assert_eq!(cv.to_vec(), dense);
+            }
+        }
+        assert_eq!(cv.to_vec(), dense);
+        for (snap, want) in &snaps {
+            assert_eq!(&snap.to_vec(), want, "snapshot drifted");
+        }
+    }
+
     #[test]
     fn prop_chunked_equals_dense_under_random_ops() {
         // random interleavings of push / overwrite / snapshot: the live
         // store must always read like the dense mirror, and every snapshot
         // must stay frozen at its capture state
         check("chunked-vs-dense", 20, |rng, _| {
-            let mut cv: ChunkedVec<u64> = ChunkedVec::new();
-            let mut dense: Vec<u64> = Vec::new();
-            let mut snaps: Vec<(ChunkedVec<u64>, Vec<u64>)> = Vec::new();
-            for step in 0..400 {
-                match rng.below(10) {
-                    0..=5 => {
-                        let v = rng.next_u64();
-                        cv.push(v);
-                        dense.push(v);
-                    }
-                    6 | 7 if !dense.is_empty() => {
-                        let i = rng.below(dense.len());
-                        let v = rng.next_u64();
-                        *cv.get_mut(i) = v;
-                        dense[i] = v;
-                    }
-                    8 => snaps.push((cv.clone(), dense.clone())),
-                    _ => {}
-                }
-                if step % 37 == 0 {
-                    assert_eq!(cv.to_vec(), dense);
-                }
-            }
-            assert_eq!(cv.to_vec(), dense);
-            for (snap, want) in &snaps {
-                assert_eq!(&snap.to_vec(), want, "snapshot drifted");
-            }
+            chunked_equals_dense_under_random_ops::<CHUNK_BITS>(rng);
         });
+    }
+
+    #[test]
+    fn prop_chunked_equals_dense_at_second_chunk_size() {
+        // same property at 4-element chunks: every behavior must be
+        // chunk-size-independent (the compile-time override relies on it)
+        check("chunked-vs-dense-alt-size", 20, |rng, _| {
+            chunked_equals_dense_under_random_ops::<2>(rng);
+        });
+    }
+
+    #[test]
+    fn from_vec_layout_matches_pushes_at_second_chunk_size() {
+        type Tiny = ChunkedVec<u32, 2>;
+        assert_eq!(Tiny::CHUNK, 4);
+        for n in [0, 3, 4, 5, 23] {
+            let dense: Vec<u32> = (0..n as u32).collect();
+            let a = Tiny::from_vec(dense.clone());
+            let mut b = Tiny::new();
+            for x in &dense {
+                b.push(*x);
+            }
+            assert_eq!(a.n_chunks(), b.n_chunks(), "n={n}");
+            assert_eq!(a.n_chunks(), n.div_ceil(4), "n={n}");
+            assert_eq!(a, b, "n={n}");
+            assert_eq!(a.to_vec(), dense);
+        }
     }
 
     #[test]
