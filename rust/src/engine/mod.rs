@@ -538,6 +538,19 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
         self.inner.add_batch(items)
     }
 
+    /// Non-blocking [`Engine::add_batch`]: admission-checked against each
+    /// target shard's bounded command queue. When every routed shard has
+    /// a free batch slot the whole batch is accepted exactly like
+    /// `add_batch` (ids assigned, enqueued, recluster wake-up); when any
+    /// queue is full the batch is rejected atomically — no ids consumed,
+    /// nothing enqueued anywhere — and the items come back in `Err` so
+    /// the caller can retry or shed load. This is the `Busy` path of
+    /// `fishdbc serve`: a saturated engine answers immediately instead of
+    /// wedging a connection-handler thread on backpressure.
+    pub fn try_add_batch(&self, items: Vec<T>) -> Result<(), Vec<T>> {
+        self.inner.try_add_batch(items)
+    }
+
     /// Refresh the frozen remote snapshots the shards bridge against at
     /// insert time (also happens automatically at every merge and, when
     /// `bridge_refresh > 0`, on that item cadence).
@@ -957,6 +970,57 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         for item in &items {
             self.metric.check_item(item);
         }
+        self.commit_batch(items, false, t_ingest);
+    }
+
+    /// Non-blocking admission twin of [`EngineInner::add_batch`]: accept
+    /// the batch only if every routed shard has a free slot in its
+    /// bounded command queue, otherwise hand the items back untouched.
+    /// All-or-nothing — on `Err` no global ids were consumed and nothing
+    /// was enqueued anywhere, so the dense-id invariant persistence
+    /// relies on survives rejected batches.
+    pub(crate) fn try_add_batch(&self, items: Vec<T>) -> Result<(), Vec<T>> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let t_ingest = Instant::now();
+        for item in &items {
+            self.metric.check_item(item);
+        }
+        let s = self.shards.len();
+        let mut touched = vec![false; s];
+        for item in &items {
+            let si =
+                if s == 1 { 0 } else { (item.shard_key() % s as u64) as usize };
+            touched[si] = true;
+        }
+        // reserve a queue slot on every target shard, backing already
+        // taken ones out again on the first refusal (atomic admission)
+        let mut reserved: Vec<usize> = Vec::new();
+        for (si, hit) in touched.iter().enumerate() {
+            if !hit {
+                continue;
+            }
+            if self.shards[si].try_reserve_batch_slot(self.config.queue_depth)
+            {
+                reserved.push(si);
+            } else {
+                for &r in &reserved {
+                    self.shards[r].release_batch_slot();
+                }
+                return Err(items);
+            }
+        }
+        self.commit_batch(items, true, t_ingest);
+        Ok(())
+    }
+
+    /// Shared commit tail for both ingest paths: id assignment, routing,
+    /// enqueue, recluster wake-up, bridge refresh, telemetry. With
+    /// `slots_reserved` the per-shard queue slots were already taken by
+    /// the non-blocking admission check; otherwise [`Shard::send`] takes
+    /// them itself and blocks on a full queue (backpressure).
+    fn commit_batch(&self, items: Vec<T>, slots_reserved: bool, t_ingest: Instant) {
         let s = self.shards.len();
         // reserve the id range atomically, rejecting before committing: a
         // panic here must not consume ids (dense-id invariant)
@@ -975,7 +1039,12 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
             routed[shard].push((base as u32 + i as u32, item));
         }
         for (shard, batch) in self.shards.iter().zip(routed) {
-            if !batch.is_empty() {
+            if batch.is_empty() {
+                continue;
+            }
+            if slots_reserved {
+                shard.send_reserved(batch);
+            } else {
                 shard.send(ShardCmd::AddBatch(batch));
             }
         }
@@ -1708,6 +1777,58 @@ mod tests {
             1,
             "a panicking caller leaked an engine thread"
         );
+    }
+
+    /// `try_add_batch` must answer `Busy` without blocking once a shard's
+    /// bounded queue is full, consume no global ids doing so, and accept
+    /// again after the queue drains. A gated metric wedges the single
+    /// shard worker mid-insert so the queue state is deterministic: after
+    /// four accepted single-item batches at `queue_depth = 2`, at most
+    /// two were dequeued (the worker is stuck inside the second item's
+    /// distance evaluation), so pending ≥ 2 = depth and admission must
+    /// refuse.
+    #[test]
+    fn try_add_batch_refuses_when_full_and_recovers() {
+        let gate = Arc::new((Mutex::new(true), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        let metric = move |a: &Vec<i64>, b: &Vec<i64>| {
+            let (closed, cv) = &*g2;
+            let mut closed = closed.lock().unwrap();
+            while *closed {
+                closed = cv.wait(closed).unwrap();
+            }
+            drop(closed);
+            a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>()
+        };
+        let engine = Engine::spawn(metric, EngineConfig {
+            shards: 1,
+            queue_depth: 2,
+            ..Default::default()
+        });
+        // first item inserts with no distance call; the second wedges the
+        // worker inside the gated metric; the rest pile up in the queue
+        for i in 0..4i64 {
+            engine.add_batch(vec![vec![i]]);
+        }
+        let back = engine
+            .try_add_batch(vec![vec![9i64]])
+            .expect_err("queue full, admission must refuse");
+        assert_eq!(back, vec![vec![9i64]], "rejected items must come back");
+        // rejection consumed no ids: the id counter still reads 4
+        assert_eq!(engine.len(), 4);
+        // open the gate; once the queue drains, admission accepts again
+        {
+            let (closed, cv) = &*gate;
+            *closed.lock().unwrap() = false;
+            cv.notify_all();
+        }
+        engine.flush();
+        engine
+            .try_add_batch(vec![vec![9i64]])
+            .expect("drained queue must accept");
+        engine.flush();
+        assert_eq!(engine.len(), 5);
+        engine.shutdown();
     }
 
     /// Drop must tolerate poisoned locks: a thread that panicked while

@@ -24,7 +24,7 @@
 //! [`ShardSnap`]s (plain `Arc`s), never another shard's live `RwLock`:
 //! two workers bridging against each other's live state would deadlock.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
@@ -746,6 +746,16 @@ pub(crate) struct Shard<T, M> {
     /// The shard's bridge buffer (shared with its worker).
     pub bridge: Arc<Mutex<BridgeState>>,
     tx: SyncSender<ShardCmd<T>>,
+    /// `AddBatch` commands sent but not yet dequeued by the worker.
+    /// `sync_channel` has no capacity introspection, so this shadow count
+    /// is what the non-blocking admission path ([`Engine::try_add_batch`])
+    /// checks against `queue_depth`: slots are reserved here *before*
+    /// sending, and released by the worker at dequeue. The blocking
+    /// [`Shard::send`] path bumps it too, so both paths see one coherent
+    /// queue picture.
+    ///
+    /// [`Engine::try_add_batch`]: crate::engine::Engine::try_add_batch
+    pending: Arc<AtomicUsize>,
     handle: Mutex<Option<JoinHandle<()>>>,
 }
 
@@ -792,11 +802,13 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Shard<T, M> {
             deleted: ctx.deleted,
             obs: ctx.obs,
         };
+        let pending = Arc::new(AtomicUsize::new(0));
+        let worker_pending = Arc::clone(&pending);
         let handle = std::thread::Builder::new()
             .name(format!("fishdbc-shard-{id}"))
-            .spawn(move || run(worker_state, rx, worker_ctx))
+            .spawn(move || run(worker_state, rx, worker_ctx, worker_pending))
             .expect("spawn shard worker");
-        Shard { state, bridge, tx, handle: Mutex::new(Some(handle)) }
+        Shard { state, bridge, tx, pending, handle: Mutex::new(Some(handle)) }
     }
 }
 
@@ -805,7 +817,36 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Shard<T, M> {
 impl<T, M> Shard<T, M> {
     /// Enqueue a command (blocks when the queue is full — backpressure).
     pub fn send(&self, cmd: ShardCmd<T>) {
+        if matches!(cmd, ShardCmd::AddBatch(_)) {
+            self.pending.fetch_add(1, Ordering::Relaxed);
+        }
         self.tx.send(cmd).expect("shard worker gone");
+    }
+
+    /// Reserve one `AddBatch` queue slot iff fewer than `depth` batches
+    /// are pending, without blocking. The caller must follow up with
+    /// either [`Shard::send_reserved`] or [`Shard::release_batch_slot`].
+    pub fn try_reserve_batch_slot(&self, depth: usize) -> bool {
+        self.pending
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |p| {
+                (p < depth.max(1)).then_some(p + 1)
+            })
+            .is_ok()
+    }
+
+    /// Give back a slot taken by [`Shard::try_reserve_batch_slot`]
+    /// without sending anything (the all-or-nothing admission path backs
+    /// out reservations on sibling shards when one shard is full).
+    pub fn release_batch_slot(&self) {
+        self.pending.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Send an `AddBatch` whose queue slot was already reserved. The
+    /// channel itself can only momentarily block behind a `Flush` or
+    /// `Shutdown` command (those do not take batch slots); batch-vs-batch
+    /// backpressure was settled at reservation time.
+    pub fn send_reserved(&self, batch: Vec<(u32, T)>) {
+        self.tx.send(ShardCmd::AddBatch(batch)).expect("shard worker gone");
     }
 
     /// Idempotent: safe to call from both `Engine::shutdown` and `Drop` —
@@ -838,11 +879,15 @@ fn run<T: EngineItem, M: Metric<T> + Clone>(
     state: Arc<RwLock<ShardState<T, M>>>,
     rx: Receiver<ShardCmd<T>>,
     ctx: BridgeCtx<T, M>,
+    pending: Arc<AtomicUsize>,
 ) {
     loop {
         match rx.recv() {
             Err(_) => break, // engine dropped without Shutdown
             Ok(ShardCmd::AddBatch(batch)) => {
+                // slot freed at dequeue: the batch being *applied* no
+                // longer counts against the admission depth
+                pending.fetch_sub(1, Ordering::Relaxed);
                 let t0 = Instant::now();
                 let mut st = state.write().unwrap();
                 st.inserts += batch.len() as u64;

@@ -113,6 +113,7 @@ pub mod obs;
 pub mod persist;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use distances::{Item, Metric, MetricKind};

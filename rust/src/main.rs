@@ -4,6 +4,7 @@
 //!   run        cluster a generated dataset (FISHDBC and/or exact HDBSCAN*)
 //!   stream     streaming-coordinator demo with periodic re-clustering
 //!   engine     sharded parallel ingest + global merge + online labels
+//!   serve      network front-end: framed TCP protocol over a live engine
 //!   artifacts  list the AOT modules the PJRT runtime can load
 //!   help       this text
 //!
@@ -12,6 +13,8 @@
 //!   fishdbc run --dataset usps --n 2196 --exact --quality
 //!   fishdbc stream --dataset reviews --n 5000 --chunk 250 --recluster-every 1000
 //!   fishdbc engine --dataset blobs --n 50000 --shards 4 --quality
+//!   fishdbc serve --addr 127.0.0.1:7979 --shards 4 --recluster-every 1000
+//!   fishdbc serve --client-probe --addr 127.0.0.1:7979 --probe-n 64
 //!   fishdbc artifacts
 
 use fishdbc::cli;
@@ -21,8 +24,11 @@ use fishdbc::engine::{Engine, EngineConfig};
 use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
 use fishdbc::hdbscan::exact::{exact_hdbscan, ExactParams};
 use fishdbc::metrics::{internal, score_external};
+use fishdbc::obs::CounterId;
+use fishdbc::persist::FrameworkCodec;
 #[cfg(feature = "xla")]
 use fishdbc::runtime::{default_artifacts_dir, Runtime};
+use fishdbc::serve::{Client, ServeConfig, Server};
 use fishdbc::{Item, MetricKind};
 
 const VALUE_KEYS: &[&str] = &[
@@ -30,7 +36,8 @@ const VALUE_KEYS: &[&str] = &[
     "recluster-every", "metric", "silhouette-max", "input", "format", "save",
     "load", "out", "labels-out", "efs", "shards", "bridge-k", "bridge-fanout",
     "bridge-refresh", "churn", "compact-at", "metrics-addr", "stats-json",
-    "hold-secs",
+    "hold-secs", "addr", "threads", "max-conns", "drain-secs", "preload",
+    "probe-n", "queue-depth",
 ];
 
 fn main() {
@@ -47,6 +54,7 @@ fn main() {
         "run" => cmd_run(&args),
         "stream" => cmd_stream(&args),
         "engine" => cmd_engine(&args),
+        "serve" => cmd_serve(&args),
         "export" => cmd_export(&args),
         "sweep" => cmd_sweep(&args),
         "artifacts" => cmd_artifacts(),
@@ -66,7 +74,7 @@ fn print_help() {
     println!(
         "fishdbc — flexible incremental scalable hierarchical density-based clustering
 
-USAGE: fishdbc <run|stream|engine|export|sweep|artifacts|help> [options]
+USAGE: fishdbc <run|stream|engine|serve|export|sweep|artifacts|help> [options]
 
 Common options:
   --dataset NAME    one of {names}   (default blobs)
@@ -138,7 +146,25 @@ labels):
                     (v3 container: bridge buffers + cached MSF +
                     tombstone state)
   --load PATH       resume a saved engine state (then add items on top)
-  --quality         external metrics vs the generator labels (fresh runs)",
+  --quality         external metrics vs the generator labels (fresh runs)
+
+serve options (framed TCP protocol over a live engine; Label/LabelBatch/
+Ingest/Remove/Stats/Ping — see src/serve/frame.rs for the wire format):
+  --addr A          listen address (default 127.0.0.1:7979; port 0 = any)
+  --threads T       connection-handler pool size (default 4)
+  --max-conns Q     accepted-but-unclaimed connection queue bound
+                    (default 64; beyond it new connections get Busy)
+  --drain-secs S    graceful-drain window on SIGTERM/SIGINT (default 2.0;
+                    in-flight requests finish, acked ingests are flushed)
+  --queue-depth D   per-shard ingest queue depth (default 16; full queues
+                    answer Ingest with Busy instead of blocking)
+  --preload N       generate + ingest N items from --dataset before
+                    binding, then publish an initial epoch (labels work
+                    from the first request)
+  --shards/--recluster-every/--metrics-addr/--hold-secs as for `engine`
+  --client-probe    be a client instead: connect to --addr, ping, ingest
+                    --probe-n items (default 64), label, remove, stats;
+                    exit 0 iff every acked ingest is visible",
         names = datasets::DATASET_NAMES.join("|")
     );
 }
@@ -768,6 +794,250 @@ fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
         );
     }
     Ok(())
+}
+
+/// `fishdbc serve`: bind the framed TCP protocol (src/serve) over a live
+/// engine and run until SIGTERM/SIGINT (or `--hold-secs`), then drain
+/// gracefully — in-flight requests finish and every acknowledged ingest
+/// is flushed into the engine before the process exits 0.
+fn cmd_serve(args: &cli::Args) -> Result<(), String> {
+    if args.flag("client-probe") {
+        return cmd_serve_probe(args);
+    }
+    let (params, mcs) = params_from(args)?;
+    let shards = args.usize_or("shards", 4)?;
+    if shards == 0 {
+        return Err("--shards must be at least 1".into());
+    }
+    let preload = args.usize_or("preload", 0)?;
+
+    // with --preload the dataset picks the metric (unless --metric
+    // overrides it); a cold server defaults to Euclidean vectors
+    let (metric, preload_items) = if preload > 0 {
+        let name = args.get_or("dataset", "blobs");
+        let dim = args.usize_or("dim", 64)?;
+        let seed = args.u64_or("seed", 42)?;
+        let ds = datasets::generate(name, preload, dim, seed)
+            .ok_or_else(|| format!("unknown dataset {name:?}"))?;
+        (metric_override(args, &ds)?, ds.items)
+    } else {
+        let metric = match args.get("metric") {
+            None => MetricKind::Euclidean,
+            Some(m) => MetricKind::parse(m)
+                .ok_or_else(|| format!("unknown metric {m:?}"))?,
+        };
+        (metric, Vec::new())
+    };
+
+    let engine: std::sync::Arc<Engine> =
+        std::sync::Arc::new(Engine::spawn(metric, EngineConfig {
+            fishdbc: params,
+            shards,
+            mcs,
+            bridge_k: args.usize_or("bridge-k", 3)?,
+            bridge_fanout: args
+                .usize_or("bridge-fanout", shards.saturating_sub(1).max(1))?,
+            queue_depth: args.usize_or("queue-depth", 16)?,
+            recluster_every: args.usize_or("recluster-every", 0)?,
+            bridge_refresh: args.usize_or("bridge-refresh", 0)?,
+            compact_at: args
+                .f64_or("compact-at", EngineConfig::default().compact_at)?,
+        }));
+
+    if !preload_items.is_empty() {
+        for chunk in preload_items.chunks(512) {
+            engine.add_batch(chunk.to_vec());
+        }
+        let snap = engine.cluster(mcs);
+        println!(
+            "preload: {} items, epoch {} ({} clusters)",
+            engine.len(),
+            snap.epoch,
+            snap.clustering.n_clusters
+        );
+    }
+
+    let metrics = match args.get("metrics-addr") {
+        Some(addr) => {
+            let srv = engine
+                .serve_metrics(addr)
+                .map_err(|e| format!("binding --metrics-addr {addr}: {e}"))?;
+            println!("metrics: serving http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
+
+    let addr = args.get_or("addr", "127.0.0.1:7979");
+    let cfg = ServeConfig {
+        threads: args.usize_or("threads", 4)?,
+        max_pending_conns: args.usize_or("max-conns", 64)?,
+        drain_timeout: std::time::Duration::from_secs_f64(
+            args.f64_or("drain-secs", 2.0)?,
+        ),
+        ..ServeConfig::default()
+    };
+    let server =
+        Server::start(std::sync::Arc::clone(&engine), FrameworkCodec, addr, cfg)
+            .map_err(|e| format!("binding --addr {addr}: {e}"))?;
+    println!(
+        "serve: listening on {} ({} handler threads, metric {}, {} shards)",
+        server.addr(),
+        cfg.threads.max(1),
+        engine.metric().name(),
+        engine.n_shards()
+    );
+
+    sig::install();
+    let hold = args.f64_or("hold-secs", 0.0)?;
+    let t0 = std::time::Instant::now();
+    loop {
+        if sig::terminated() {
+            println!("serve: signal received, draining");
+            break;
+        }
+        if hold > 0.0 && t0.elapsed().as_secs_f64() >= hold {
+            println!("serve: --hold-secs {hold} elapsed, draining");
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+
+    let report = server.shutdown();
+    let reg = engine.registry();
+    let c = |id: CounterId| reg.counter(id).get();
+    println!(
+        "serve: drained cleanly | accepted_ids={} requests={} labels={} \
+         ingested={} removed={} busy={} errors={} dropped_conns={}",
+        engine.len(),
+        c(CounterId::ServeRequests),
+        c(CounterId::ServeLabelOps),
+        c(CounterId::ServeIngestOps),
+        c(CounterId::ServeRemoveOps),
+        c(CounterId::ServeBusy),
+        c(CounterId::ServeErrors),
+        report.dropped_pending_conns,
+    );
+    drop(metrics);
+    Ok(())
+}
+
+/// `fishdbc serve --client-probe`: a self-checking client round trip used
+/// by CI. Exits non-zero unless every acknowledged ingest is visible in
+/// the server's item count — the client side of the durability contract.
+fn cmd_serve_probe(args: &cli::Args) -> Result<(), String> {
+    let addr = args.get_or("addr", "127.0.0.1:7979").to_string();
+    let probe_n = args.usize_or("probe-n", 64)?.max(16);
+    let dim = args.usize_or("dim", 8)?;
+    let seed = args.u64_or("seed", 42)?;
+    let items = datasets::generate("blobs", probe_n, dim, seed)
+        .ok_or("blobs generator missing")?
+        .items;
+
+    // the server may still be binding (CI starts it in the background):
+    // retry the connect for up to ~20 s before giving up
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(20);
+    let mut client = loop {
+        match Client::connect(addr.as_str(), FrameworkCodec) {
+            Ok(c) => break c,
+            Err(_) if std::time::Instant::now() < deadline => {
+                std::thread::sleep(std::time::Duration::from_millis(250));
+            }
+            Err(e) => return Err(format!("connecting to {addr}: {e}")),
+        }
+    };
+    client
+        .set_timeout(Some(std::time::Duration::from_secs(10)))
+        .map_err(|e| format!("{e}"))?;
+
+    let (items0, epoch0) = client.ping().map_err(|e| format!("ping: {e}"))?;
+    println!("probe: connected to {addr} (items={items0} epoch={epoch0})");
+
+    let mut acked: u64 = 0;
+    for chunk in items.chunks(16) {
+        acked += client
+            .ingest_retrying(
+                chunk,
+                std::time::Duration::from_millis(100),
+                40,
+            )
+            .map_err(|e| format!("ingest: {e}"))?;
+    }
+
+    let k = 8.min(items.len());
+    let labels = client
+        .label_batch(&items[..k], 0)
+        .map_err(|e| format!("label_batch: {e}"))?;
+    if labels.len() != k {
+        return Err(format!("label_batch: {k} items, {} labels", labels.len()));
+    }
+    let removed = client
+        .remove(&items[..2])
+        .map_err(|e| format!("remove: {e}"))?;
+    let stats = client.stats_json().map_err(|e| format!("stats: {e}"))?;
+    if !stats.contains("fishdbc-stats-v1") {
+        return Err("stats response is not a fishdbc-stats-v1 document".into());
+    }
+
+    // ids are monotone (removal tombstones, it never reuses ids), so the
+    // durability check is a plain inequality
+    let (items1, epoch1) = client.ping().map_err(|e| format!("ping: {e}"))?;
+    if items1 < items0 + acked {
+        return Err(format!(
+            "server lost acked ingests: items {items0} -> {items1}, \
+             but {acked} were acknowledged"
+        ));
+    }
+    println!(
+        "probe: OK acked={acked} labels={} removed={removed} \
+         items={items1} epoch={epoch1}",
+        labels.len()
+    );
+    Ok(())
+}
+
+/// SIGTERM/SIGINT notification without a signal-handling crate: the
+/// classic `signal(2)` registration of a handler that only stores to an
+/// atomic (async-signal-safe), polled by `cmd_serve`'s run loop.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_signum: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        // libc signal(2); handlers are passed as raw function addresses
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        let h = on_term as extern "C" fn(i32) as usize;
+        unsafe {
+            signal(SIGTERM, h);
+            signal(SIGINT, h);
+        }
+    }
+
+    pub fn terminated() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+/// Non-unix fallback: no signal hook; `--hold-secs` (or ^C killing the
+/// process outright) is the only way out of the serve loop.
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+    pub fn terminated() -> bool {
+        false
+    }
 }
 
 #[cfg(feature = "xla")]

@@ -47,6 +47,9 @@
 //! | `fishdbc_bridge_coverage_lag` | gauge | items | items not yet covered by insert-time bridging (paper §4's cross-shard recall risk when high) |
 //! | `fishdbc_tombstone_ratio{shard=..}` | gauge | ratio | tombstoned / stored per shard (compaction pressure) |
 //! | `fishdbc_epoch_age_seconds` | gauge | s | staleness of the served clustering |
+//! | `fishdbc_serve_requests_total` | counter | frames | framed requests handled by `fishdbc serve` (per-op splits: `serve_{ping,stats,label,ingest,remove}_ops_total`) |
+//! | `fishdbc_serve_busy_total` | counter | frames | requests refused with `Busy` (bounded-queue backpressure made visible) |
+//! | `fishdbc_serve_request_seconds` | histogram | s | per-request network-serving latency, decode to encode |
 //!
 //! All histogram samples are recorded in nanoseconds internally and
 //! exported in seconds (Prometheus convention). Quantiles are
@@ -134,6 +137,24 @@ metric_enum! {
             "Engine checkpoints written";
         Loads => "loads",
             "Engine checkpoints restored";
+        ServeConns => "serve_connections",
+            "Connections claimed by the fishdbc serve handler pool";
+        ServeRequests => "serve_requests",
+            "Framed requests handled by fishdbc serve (all ops)";
+        ServePings => "serve_ping_ops",
+            "Ping frames answered";
+        ServeStatsOps => "serve_stats_ops",
+            "Stats frames answered";
+        ServeLabelOps => "serve_label_ops",
+            "Items labeled via Label/LabelBatch frames";
+        ServeIngestOps => "serve_ingest_ops",
+            "Items accepted via Ingest frames";
+        ServeRemoveOps => "serve_remove_ops",
+            "Items tombstoned via Remove frames";
+        ServeBusy => "serve_busy",
+            "Requests refused with a Busy frame (saturated queue or pool)";
+        ServeErrors => "serve_errors",
+            "Requests answered with an Err frame (bad op, codec mismatch)";
     }
 }
 
@@ -156,6 +177,8 @@ metric_enum! {
     HistId {
         Label => "label_latency_seconds",
             "Per-call online label() latency";
+        Serve => "serve_request_seconds",
+            "Per-request fishdbc serve handling latency (decode to encode)";
         IngestBatch => "ingest_batch_seconds",
             "add_batch call latency including routing and backpressure";
         ShardInsert => "shard_insert_seconds",
@@ -185,7 +208,7 @@ metric_enum! {
 
 /// Stripes per counter — enough to keep S ingest workers plus the merge
 /// and serving threads off each other's cache lines without bloating the
-/// registry (16 counters x 8 stripes x 64 B = 8 KiB).
+/// registry (~25 counters x 8 stripes x 64 B = ~12.5 KiB).
 const STRIPES: usize = 8;
 
 static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);

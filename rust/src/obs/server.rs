@@ -53,10 +53,11 @@ impl MetricsServer {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        // thread-spawn failure (EAGAIN under pid exhaustion) is an io
+        // error like any other bind failure: propagate, don't panic
         let accept = std::thread::Builder::new()
             .name("fishdbc-metrics".into())
-            .spawn(move || accept_loop(listener, stop2, render))
-            .expect("spawn metrics accept thread");
+            .spawn(move || accept_loop(listener, stop2, render))?;
         Ok(MetricsServer { addr, stop, accept: Some(accept) })
     }
 
@@ -148,25 +149,51 @@ fn handle_conn(mut stream: TcpStream, render: &Arc<Render>) -> io::Result<()> {
     let mut parts = head.lines().next().unwrap_or("").split_whitespace();
     let method = parts.next().unwrap_or("");
     let path = parts.next().unwrap_or("/");
-    if method != "GET" {
-        return respond(
+    // HEAD (load-balancer health probes) gets the same status line and
+    // headers — Content-Length included — with the body suppressed
+    let head_only = method == "HEAD";
+    if method != "GET" && !head_only {
+        // RFC 7231 §6.5.5: a 405 must name the allowed methods
+        return respond_with(
             &mut stream,
             405,
             "Method Not Allowed",
             "text/plain",
-            "only GET is supported\n",
+            "only GET and HEAD are supported\n",
+            &[("Allow", "GET, HEAD")],
+            false,
         );
     }
     // ignore any query string: /metrics?x=1 is still /metrics
     let path = path.split('?').next().unwrap_or(path);
     match render(path) {
-        Some((body, ctype)) => respond(&mut stream, 200, "OK", ctype, &body),
-        None => respond(&mut stream, 404, "Not Found", "text/plain", "not found\n"),
+        Some((body, ctype)) => {
+            respond_with(&mut stream, 200, "OK", ctype, &body, &[], head_only)
+        }
+        None => respond_with(
+            &mut stream,
+            404,
+            "Not Found",
+            "text/plain",
+            "not found\n",
+            &[],
+            head_only,
+        ),
     }
 }
 
+/// Offset one past the blank line ending the headers, or `None` if the
+/// buffer does not contain a complete header block yet. Accepts both the
+/// canonical `\r\n\r\n` terminator and a bare-LF `\n\n` one (RFC 7230
+/// §3.5 says a robust parser MAY tolerate LF alone); with mixed endings
+/// (`...\r\n\n`) the earlier terminator wins.
 fn find_headers_end(buf: &[u8]) -> Option<usize> {
-    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+    let crlf = buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4);
+    let lf = buf.windows(2).position(|w| w == b"\n\n").map(|p| p + 2);
+    match (crlf, lf) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
+    }
 }
 
 fn respond(
@@ -176,13 +203,37 @@ fn respond(
     ctype: &str,
     body: &str,
 ) -> io::Result<()> {
-    let head = format!(
+    respond_with(stream, code, reason, ctype, body, &[], false)
+}
+
+/// Write a response; `extra` headers follow the fixed ones, and
+/// `head_only` keeps the advertised `Content-Length` while suppressing
+/// the body itself (HEAD semantics).
+fn respond_with(
+    stream: &mut TcpStream,
+    code: u16,
+    reason: &str,
+    ctype: &str,
+    body: &str,
+    extra: &[(&str, &str)],
+    head_only: bool,
+) -> io::Result<()> {
+    let mut head = format!(
         "HTTP/1.1 {code} {reason}\r\nContent-Type: {ctype}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
+    for (name, value) in extra {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
+    if !head_only {
+        stream.write_all(body.as_bytes())?;
+    }
     stream.flush()
 }
 
@@ -244,6 +295,42 @@ mod tests {
         let resp =
             get(srv.addr(), "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(resp.starts_with("HTTP/1.1 405"), "got: {resp}");
+        // RFC 7231 §6.5.5: the 405 must carry an Allow header
+        assert!(resp.contains("Allow: GET, HEAD"), "got: {resp}");
+    }
+
+    #[test]
+    fn bare_lf_requests_answer_without_stalling() {
+        // `printf 'GET /metrics HTTP/1.0\n\n' | nc` — RFC 7230 §3.5 bare
+        // LF tolerance; before the fix this stalled for the full
+        // IO_TIMEOUT and then got a 400
+        let srv = start();
+        let t0 = std::time::Instant::now();
+        let resp = get(srv.addr(), "GET /metrics HTTP/1.0\n\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "got: {resp}");
+        assert!(resp.contains("fishdbc_up 1"));
+        assert!(
+            t0.elapsed() < IO_TIMEOUT,
+            "bare-LF request waited out the read timeout: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn head_serves_headers_only_with_body_length() {
+        let srv = start();
+        let resp = get(srv.addr(), "HEAD /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "got: {resp}");
+        // Content-Length advertises the GET body ("fishdbc_up 1\n" = 13
+        // bytes) but the body itself is suppressed
+        assert!(resp.contains("Content-Length: 13"), "got: {resp}");
+        assert!(!resp.contains("fishdbc_up"), "HEAD leaked a body: {resp}");
+        assert!(resp.ends_with("\r\n\r\n"), "got: {resp:?}");
+        // HEAD on an unknown path keeps 404 semantics
+        let missing =
+            get(srv.addr(), "HEAD /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404"), "got: {missing}");
+        assert!(!missing.contains("not found\n"), "got: {missing:?}");
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Blocking client for the `fishdbc serve` framed protocol — used by the
+//! CLI `--client-probe` mode, the `serving_latency` bench's traffic
+//! threads, and the integration tests. One request in flight per
+//! connection (the protocol has no stream multiplexing; open more
+//! connections for more concurrency, that is what the server's pool is
+//! for).
+
+use std::io::{self, Read};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::persist::{BinReader, ItemCodec};
+
+use super::frame;
+
+/// Outcome of an `Ingest` request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IngestReply {
+    /// The whole batch was admitted; ids are assigned and the insert is
+    /// queued (an `Engine::flush` barrier on the server makes it
+    /// searchable). This acknowledgment is durable across a graceful
+    /// server drain.
+    Accepted(u64),
+    /// The engine's bounded queues were full; nothing was admitted.
+    /// Resend the same batch later.
+    Busy,
+}
+
+/// A connected protocol client. `T` is inferred per call from the codec.
+pub struct Client<C> {
+    stream: TcpStream,
+    codec: C,
+}
+
+impl<C> Client<C> {
+    /// Connect and disable Nagle (the protocol is request/response; 40 ms
+    /// delayed-ACK stalls would dominate every latency measurement).
+    pub fn connect<A: ToSocketAddrs>(addr: A, codec: C) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream, codec })
+    }
+
+    /// Optional client-side guard against a wedged server.
+    pub fn set_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        self.stream.set_read_timeout(t)?;
+        self.stream.set_write_timeout(t)
+    }
+
+    /// One round-trip: send a request payload, read the response payload.
+    fn rpc(&mut self, payload: &[u8]) -> io::Result<Vec<u8>> {
+        frame::write_frame(&mut self.stream, payload)?;
+        frame::read_frame(&mut self.stream)?.ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            )
+        })
+    }
+
+    /// Split a response into (status, body), surfacing `Err` frames as
+    /// `io::Error` and leaving `Busy` to the caller.
+    fn split(resp: Vec<u8>) -> io::Result<(u8, Vec<u8>)> {
+        let Some((&status, body)) = resp.split_first() else {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "empty response frame",
+            ));
+        };
+        if status == frame::ST_ERR {
+            let mut r = BinReader::new(body);
+            let msg = r.str().unwrap_or_else(|_| "malformed Err frame".into());
+            return Err(io::Error::other(format!("server error: {msg}")));
+        }
+        Ok((status, body.to_vec()))
+    }
+
+    fn expect_ok(resp: Vec<u8>) -> io::Result<Vec<u8>> {
+        let (status, body) = Self::split(resp)?;
+        if status != frame::ST_OK {
+            return Err(io::Error::other(format!(
+                "unexpected response status 0x{status:02x}"
+            )));
+        }
+        Ok(body)
+    }
+
+    /// `Ping`: (items accepted so far, latest published epoch).
+    pub fn ping(&mut self) -> io::Result<(u64, u64)> {
+        let body = Self::expect_ok(self.rpc(&frame::encode_ping())?)?;
+        let mut r = BinReader::new(&body[..]);
+        Ok((r.u64()?, r.u64()?))
+    }
+
+    /// `Stats`: the engine's `fishdbc-stats-v1` JSON document.
+    pub fn stats_json(&mut self) -> io::Result<String> {
+        let body = Self::expect_ok(self.rpc(&frame::encode_stats())?)?;
+        let mut r = BinReader::new(&body[..]);
+        r.str()
+    }
+
+    /// `Label` one item with `k` voters (`k = 0`: server `min_pts`).
+    pub fn label<T>(&mut self, item: &T, k: usize) -> io::Result<i32>
+    where
+        C: ItemCodec<T>,
+    {
+        let req = frame::encode_label(&self.codec, item, k)?;
+        let body = Self::expect_ok(self.rpc(&req)?)?;
+        let mut r = BinReader::new(&body[..]);
+        Ok(r.u32()? as i32)
+    }
+
+    /// `LabelBatch`: one label per item, in order.
+    pub fn label_batch<T>(
+        &mut self,
+        items: &[T],
+        k: usize,
+    ) -> io::Result<Vec<i32>>
+    where
+        C: ItemCodec<T>,
+    {
+        let req = frame::encode_label_batch(&self.codec, items, k)?;
+        let body = Self::expect_ok(self.rpc(&req)?)?;
+        let mut r = BinReader::new(&body[..]);
+        let n = r.u32()? as usize;
+        let mut labels = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            labels.push(r.u32()? as i32);
+        }
+        Ok(labels)
+    }
+
+    /// `Ingest`: all-or-nothing batch admission; [`IngestReply::Busy`]
+    /// means resend later.
+    pub fn ingest<T>(&mut self, items: &[T]) -> io::Result<IngestReply>
+    where
+        C: ItemCodec<T>,
+    {
+        let req = frame::encode_ingest(&self.codec, items)?;
+        let (status, body) = Self::split(self.rpc(&req)?)?;
+        match status {
+            frame::ST_BUSY => Ok(IngestReply::Busy),
+            frame::ST_OK => {
+                let mut r = BinReader::new(&body[..]);
+                Ok(IngestReply::Accepted(r.u64()?))
+            }
+            other => Err(io::Error::other(format!(
+                "unexpected ingest status 0x{other:02x}"
+            ))),
+        }
+    }
+
+    /// `Ingest` with bounded retry on `Busy`; returns the accepted count.
+    pub fn ingest_retrying<T>(
+        &mut self,
+        items: &[T],
+        backoff: Duration,
+        attempts: usize,
+    ) -> io::Result<u64>
+    where
+        C: ItemCodec<T>,
+    {
+        for _ in 0..attempts.max(1) {
+            match self.ingest(items)? {
+                IngestReply::Accepted(n) => return Ok(n),
+                IngestReply::Busy => std::thread::sleep(backoff),
+            }
+        }
+        Err(io::Error::other("server still Busy after retries"))
+    }
+
+    /// `Remove`: tombstone every stored item equal to one of `items`;
+    /// returns how many were removed.
+    pub fn remove<T>(&mut self, items: &[T]) -> io::Result<u64>
+    where
+        C: ItemCodec<T>,
+    {
+        let req = frame::encode_remove(&self.codec, items)?;
+        let body = Self::expect_ok(self.rpc(&req)?)?;
+        let mut r = BinReader::new(&body[..]);
+        r.u64()
+    }
+
+    /// True once the server has closed the connection (half-duplex
+    /// check used by drain tests; consumes nothing on an open stream).
+    pub fn at_eof(&mut self) -> bool {
+        let mut b = [0u8; 1];
+        self.stream
+            .set_read_timeout(Some(Duration::from_millis(50)))
+            .ok();
+        matches!(self.stream.read(&mut b), Ok(0))
+    }
+}

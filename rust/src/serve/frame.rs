@@ -1,0 +1,303 @@
+//! Length-prefixed binary frames — the `fishdbc serve` wire protocol.
+//!
+//! One frame per request, one frame per response, over a plain TCP
+//! stream:
+//!
+//! ```text
+//! frame            := len:u32-LE payload[len]
+//! request payload  := op:u8 body
+//!   0x01 Ping        (empty)
+//!   0x02 Stats       (empty)
+//!   0x03 Label       k:u32 item
+//!   0x04 LabelBatch  k:u32 count:u32 item*count
+//!   0x05 Ingest      count:u32 item*count
+//!   0x06 Remove      count:u32 item*count
+//! response payload := status:u8 body
+//!   0x00 Ok          Ping   -> items:u64 epoch:u64
+//!                    Stats  -> json:str
+//!                    Label  -> label:i32 (two's-complement u32)
+//!                    LabelBatch -> count:u32 label:i32*count
+//!                    Ingest -> accepted:u64
+//!                    Remove -> removed:u64
+//!   0x01 Busy        (empty — resend later; ingest backpressure, or the
+//!                     whole connection was refused by a saturated pool)
+//!   0x02 Err         msg:str (the server closes the connection after)
+//! ```
+//!
+//! All integers are little-endian; `str` is the [`BinWriter::str`]
+//! encoding (`u64` length + UTF-8 bytes). Items are encoded through the
+//! same [`ItemCodec`] seam the persistence layer uses, so anything an
+//! engine can checkpoint it can also serve over the network, with one
+//! codec definition. A `Label` response of `-1` means noise/unknown,
+//! exactly like [`Engine::label`](crate::engine::Engine::label).
+//!
+//! `k = 0` in `Label`/`LabelBatch` means "use the server's configured
+//! `min_pts`" — clients need not know the engine's parameters.
+
+use std::io::{self, Read, Write};
+
+use crate::persist::{BinReader, BinWriter, ItemCodec};
+
+/// Hard cap on a single frame's payload; larger lengths are a protocol
+/// error (defends the server against hostile 4 GiB allocations).
+pub const MAX_FRAME: usize = 64 << 20;
+/// Hard cap on the item count in one batched request.
+pub const MAX_BATCH: usize = 1 << 20;
+
+pub const OP_PING: u8 = 0x01;
+pub const OP_STATS: u8 = 0x02;
+pub const OP_LABEL: u8 = 0x03;
+pub const OP_LABEL_BATCH: u8 = 0x04;
+pub const OP_INGEST: u8 = 0x05;
+pub const OP_REMOVE: u8 = 0x06;
+
+pub const ST_OK: u8 = 0x00;
+pub const ST_BUSY: u8 = 0x01;
+pub const ST_ERR: u8 = 0x02;
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Write one `len + payload` frame and flush it.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(bad("frame exceeds MAX_FRAME"));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one byte, distinguishing clean EOF (`Ok(None)`) from errors.
+/// The serve loop uses this to poll for the next frame's first length
+/// byte in short timeout slices without losing stream sync.
+pub fn read_byte<R: Read>(r: &mut R) -> io::Result<Option<u8>> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(b[0])),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Read the rest of a frame whose first length byte was already consumed
+/// by [`read_byte`].
+pub fn read_frame_rest<R: Read>(
+    first: u8,
+    r: &mut R,
+) -> io::Result<Vec<u8>> {
+    let mut len = [first, 0, 0, 0];
+    r.read_exact(&mut len[1..])?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(bad("frame exceeds MAX_FRAME"));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Read one whole frame; `Ok(None)` on clean EOF before any length byte.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
+    match read_byte(r)? {
+        None => Ok(None),
+        Some(first) => read_frame_rest(first, r).map(Some),
+    }
+}
+
+/// A decoded request, server side.
+#[derive(Debug)]
+pub enum Request<T> {
+    Ping,
+    Stats,
+    Label { k: usize, item: T },
+    LabelBatch { k: usize, items: Vec<T> },
+    Ingest { items: Vec<T> },
+    Remove { items: Vec<T> },
+}
+
+fn read_items<T, C: ItemCodec<T>>(
+    r: &mut BinReader<&[u8]>,
+    codec: &C,
+) -> io::Result<Vec<T>> {
+    let n = r.u32()? as usize;
+    if n > MAX_BATCH {
+        return Err(bad("batch exceeds MAX_BATCH"));
+    }
+    let mut items = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        items.push(codec.read_item(r)?);
+    }
+    Ok(items)
+}
+
+/// Decode a request payload (everything after the length prefix).
+pub fn decode_request<T, C: ItemCodec<T>>(
+    payload: &[u8],
+    codec: &C,
+) -> io::Result<Request<T>> {
+    let mut r = BinReader::new(payload);
+    match r.u8()? {
+        OP_PING => Ok(Request::Ping),
+        OP_STATS => Ok(Request::Stats),
+        OP_LABEL => {
+            let k = r.u32()? as usize;
+            let item = codec.read_item(&mut r)?;
+            Ok(Request::Label { k, item })
+        }
+        OP_LABEL_BATCH => {
+            let k = r.u32()? as usize;
+            let items = read_items(&mut r, codec)?;
+            Ok(Request::LabelBatch { k, items })
+        }
+        OP_INGEST => {
+            let items = read_items(&mut r, codec)?;
+            Ok(Request::Ingest { items })
+        }
+        OP_REMOVE => {
+            let items = read_items(&mut r, codec)?;
+            Ok(Request::Remove { items })
+        }
+        op => Err(bad(&format!("unknown op 0x{op:02x}"))),
+    }
+}
+
+fn write_items<T, C: ItemCodec<T>>(
+    w: &mut BinWriter<Vec<u8>>,
+    codec: &C,
+    items: &[T],
+) -> io::Result<()> {
+    if items.len() > MAX_BATCH {
+        return Err(bad("batch exceeds MAX_BATCH"));
+    }
+    w.u32(items.len() as u32)?;
+    for item in items {
+        codec.write_item(w, item)?;
+    }
+    Ok(())
+}
+
+/// Encode a `Ping` request payload.
+pub fn encode_ping() -> Vec<u8> {
+    vec![OP_PING]
+}
+
+/// Encode a `Stats` request payload.
+pub fn encode_stats() -> Vec<u8> {
+    vec![OP_STATS]
+}
+
+/// Encode a `Label` request payload (`k = 0`: server-side `min_pts`).
+pub fn encode_label<T, C: ItemCodec<T>>(
+    codec: &C,
+    item: &T,
+    k: usize,
+) -> io::Result<Vec<u8>> {
+    let mut w = BinWriter::new(vec![OP_LABEL]);
+    w.u32(k as u32)?;
+    codec.write_item(&mut w, item)?;
+    Ok(w.into_inner())
+}
+
+/// Encode a `LabelBatch` request payload.
+pub fn encode_label_batch<T, C: ItemCodec<T>>(
+    codec: &C,
+    items: &[T],
+    k: usize,
+) -> io::Result<Vec<u8>> {
+    let mut w = BinWriter::new(vec![OP_LABEL_BATCH]);
+    w.u32(k as u32)?;
+    write_items(&mut w, codec, items)?;
+    Ok(w.into_inner())
+}
+
+/// Encode an `Ingest` request payload.
+pub fn encode_ingest<T, C: ItemCodec<T>>(
+    codec: &C,
+    items: &[T],
+) -> io::Result<Vec<u8>> {
+    let mut w = BinWriter::new(vec![OP_INGEST]);
+    write_items(&mut w, codec, items)?;
+    Ok(w.into_inner())
+}
+
+/// Encode a `Remove` request payload.
+pub fn encode_remove<T, C: ItemCodec<T>>(
+    codec: &C,
+    items: &[T],
+) -> io::Result<Vec<u8>> {
+    let mut w = BinWriter::new(vec![OP_REMOVE]);
+    write_items(&mut w, codec, items)?;
+    Ok(w.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::Item;
+    use crate::persist::FrameworkCodec;
+
+    #[test]
+    fn frames_round_trip_through_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_not_allocated() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn requests_decode_back_to_what_was_encoded() {
+        let codec = FrameworkCodec;
+        let items =
+            vec![Item::Dense(vec![1.0, 2.0]), Item::Dense(vec![3.0, 4.0])];
+
+        match decode_request::<Item, _>(&encode_ping(), &codec).unwrap() {
+            Request::Ping => {}
+            other => panic!("got {other:?}"),
+        }
+        let p = encode_label(&codec, &items[0], 7).unwrap();
+        match decode_request(&p, &codec).unwrap() {
+            Request::Label { k: 7, item } => assert_eq!(item, items[0]),
+            other => panic!("got {other:?}"),
+        }
+        let p = encode_ingest(&codec, &items).unwrap();
+        match decode_request(&p, &codec).unwrap() {
+            Request::Ingest { items: got } => assert_eq!(got, items),
+            other => panic!("got {other:?}"),
+        }
+        let p = encode_label_batch(&codec, &items, 0).unwrap();
+        match decode_request(&p, &codec).unwrap() {
+            Request::LabelBatch { k: 0, items: got } => {
+                assert_eq!(got, items)
+            }
+            other => panic!("got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_op_and_truncated_payloads_error() {
+        let codec = FrameworkCodec;
+        assert!(decode_request::<Item, _>(&[0xEE], &codec).is_err());
+        assert!(decode_request::<Item, _>(&[], &codec).is_err());
+        // a Label header with no item bytes behind it
+        assert!(
+            decode_request::<Item, _>(&[OP_LABEL, 1, 0, 0, 0], &codec)
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,475 @@
+//! `fishdbc serve` — the zero-dependency network front-end that turns
+//! the embedded engine into a deployable system.
+//!
+//! The ROADMAP's north star is serving labels to a live workload while
+//! ingestion and background re-merges run; until now every caller had to
+//! live inside the engine's process. This module grows the networking
+//! out of [`obs::server`](crate::obs::server)'s responder brick into a
+//! real request path, still on nothing but [`std::net`]:
+//!
+//! * **Framing** ([`frame`]) — length-prefixed binary request/response
+//!   frames carrying `Ping`, `Stats`, `Label`, `LabelBatch`, `Ingest`
+//!   and `Remove` ops, items encoded through the persistence layer's
+//!   [`ItemCodec`] seam (one codec definition covers checkpoints *and*
+//!   the wire).
+//! * **A fixed handler pool** ([`pool`]) — `threads` workers multiplex
+//!   every connection; accepted-but-unclaimed connections wait in a
+//!   bounded queue and overflow is refused with a `Busy` frame. No
+//!   thread-per-connection: fan-in cannot grow the process.
+//! * **Engine mapping** — label ops pin the engine's current
+//!   [`latest()`](crate::engine::Engine::latest) epoch (lock-free `Arc`
+//!   clone) and run the read-only query path, so a background merge
+//!   never pauses serving; ingest goes through the non-blocking
+//!   [`try_add_batch`](crate::engine::Engine::try_add_batch) and a full
+//!   queue answers `Busy` instead of wedging a pool thread on
+//!   backpressure.
+//! * **Graceful drain** — [`Server::shutdown`] (also run by `Drop`,
+//!   poison-tolerant like the engine teardown it reuses) stops
+//!   accepting, lets each worker finish the request it is serving,
+//!   drops never-read queued connections, joins everything, then runs
+//!   an [`Engine::flush`](crate::engine::Engine::flush) barrier — so
+//!   every *acknowledged* ingest is applied before the process exits.
+//!   A SIGTERM'd `fishdbc serve` loses nothing it acked.
+//!
+//! Request handling is panic-isolated: a poisoned request (e.g. an item
+//! the engine's metric rejects) gets an `Err` frame and costs one
+//! connection, never a pool thread.
+
+pub mod client;
+pub mod frame;
+mod pool;
+
+pub use client::{Client, IngestReply};
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::distances::Metric;
+use crate::engine::{Engine, EngineItem, EngineSnapshot};
+use crate::obs::{CounterId, HistId};
+use crate::persist::{BinWriter, ItemCodec};
+
+use frame::Request;
+use pool::ConnQueue;
+
+/// Accept-loop poll interval while idle (mirrors `obs::server`).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Between-request poll slice: how long a worker waits for the next
+/// frame's first byte before re-checking the stop flag. Bounds how long
+/// shutdown waits on idle connections without dropping slow ones.
+const FRAME_POLL: Duration = Duration::from_millis(100);
+
+/// Tuning for the framed TCP front-end.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Fixed connection-handler pool size.
+    pub threads: usize,
+    /// Bound on accepted-but-unclaimed connections; overflow is refused
+    /// with a `Busy` frame instead of piling up.
+    pub max_pending_conns: usize,
+    /// Socket timeout for reading the rest of a started frame and for
+    /// writing responses (a stalled client cannot hold a pool thread
+    /// longer than this).
+    pub io_timeout: Duration,
+    /// Graceful-drain bound: on shutdown, the rest-of-frame read for an
+    /// in-flight request is capped by the remaining drain window.
+    pub drain_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            threads: 4,
+            max_pending_conns: 64,
+            io_timeout: Duration::from_secs(5),
+            drain_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// What a graceful drain observed (printed by the CLI's exit line).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DrainReport {
+    /// Accepted connections discarded unclaimed — nothing was ever read
+    /// from them, so nothing was acknowledged on them.
+    pub dropped_pending_conns: usize,
+}
+
+struct Shared<T, M, C> {
+    engine: Arc<Engine<T, M>>,
+    codec: C,
+    cfg: ServeConfig,
+    queue: ConnQueue,
+    stop: AtomicBool,
+    /// Set (before `stop`) by the drain path: in-flight rest-of-frame
+    /// reads are capped by the time remaining to this deadline.
+    deadline: Mutex<Option<Instant>>,
+}
+
+/// A running `fishdbc serve` front-end. Dropping it runs the same
+/// graceful drain as [`Server::shutdown`].
+pub struct Server<T, M, C> {
+    addr: SocketAddr,
+    shared: Arc<Shared<T, M, C>>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    drained: bool,
+}
+
+impl<T, M, C> Server<T, M, C>
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T> + Send + Sync + 'static,
+{
+    /// Bind `addr` (port 0 picks a free port — read it back from
+    /// [`Server::addr`]) and serve the engine until shutdown/drop.
+    pub fn start(
+        engine: Arc<Engine<T, M>>,
+        codec: C,
+        addr: &str,
+        cfg: ServeConfig,
+    ) -> io::Result<Server<T, M, C>> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            engine,
+            codec,
+            cfg,
+            queue: ConnQueue::new(cfg.max_pending_conns),
+            stop: AtomicBool::new(false),
+            deadline: Mutex::new(None),
+        });
+        let accept_shared = Arc::clone(&shared);
+        // propagate spawn failure like any other bind error (same fix as
+        // MetricsServer::serve)
+        let accept = std::thread::Builder::new()
+            .name("fishdbc-serve-accept".into())
+            .spawn(move || accept_loop(listener, &accept_shared))?;
+        let mut workers = Vec::with_capacity(cfg.threads.max(1));
+        for i in 0..cfg.threads.max(1) {
+            let worker_shared = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("fishdbc-serve-{i}"))
+                .spawn(move || worker_loop(&worker_shared));
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // partial pool: tear down what started, then report
+                    shared.stop.store(true, Ordering::SeqCst);
+                    shared.queue.stop();
+                    let _ = accept.join();
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(Server { addr, shared, accept: Some(accept), workers, drained: false })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting, discard never-read queued
+    /// connections, let every worker finish its in-flight request
+    /// (bounded by `drain_timeout`), join all threads, then run an
+    /// ingest flush barrier — after this returns, every acknowledged
+    /// ingest batch is applied to the engine.
+    pub fn shutdown(mut self) -> DrainReport {
+        self.drain()
+    }
+
+    fn drain(&mut self) -> DrainReport {
+        if self.drained {
+            return DrainReport::default();
+        }
+        self.drained = true;
+        // deadline first, then the stop flag: a worker that observes
+        // `stop` must always find the drain window already armed
+        *self.shared.deadline.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(Instant::now() + self.shared.cfg.drain_timeout);
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let dropped = self.shared.queue.stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // the durability barrier: acknowledged == enqueued, and the
+        // shard channels are FIFO, so a flush applies everything acked
+        self.shared.engine.flush();
+        DrainReport { dropped_pending_conns: dropped }
+    }
+}
+
+impl<T, M, C> Drop for Server<T, M, C> {
+    fn drop(&mut self) {
+        if self.drained {
+            return;
+        }
+        self.drained = true;
+        *self.shared.deadline.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(Instant::now() + self.shared.cfg.drain_timeout);
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.queue.stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // no flush here: `Drop` is unbounded (it must run for every
+        // instantiation, poisoned or not) and the engine's own drop /
+        // shutdown performs the final drain of its queues anyway
+    }
+}
+
+fn accept_loop<T, M, C>(listener: TcpListener, shared: &Shared<T, M, C>)
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+{
+    while !shared.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if let Err(refused) = shared.queue.push(stream) {
+                    // saturated pool: tell the client, don't queue
+                    refuse_busy(refused);
+                    shared.engine.registry().inc(CounterId::ServeBusy);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Best-effort `Busy` frame to a connection the pool cannot take.
+fn refuse_busy(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+    let _ = frame::write_frame(&mut stream, &[frame::ST_BUSY]);
+}
+
+fn worker_loop<T, M, C>(shared: &Shared<T, M, C>)
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T>,
+{
+    while let Some(stream) = shared.queue.pop() {
+        shared.engine.registry().inc(CounterId::ServeConns);
+        let _ = handle_conn(shared, stream);
+    }
+}
+
+/// True for the error kinds a timed-out socket read produces.
+fn timed_out(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// Serve one connection until clean EOF, error, or shutdown. Between
+/// requests the worker polls for the next frame's first byte in
+/// `FRAME_POLL` slices so it notices `stop` promptly; once a frame has
+/// started, it is read to completion (bounded by `io_timeout`, and
+/// during a drain by the remaining drain window) and answered — the
+/// in-flight request always gets its acknowledgment.
+fn handle_conn<T, M, C>(
+    shared: &Shared<T, M, C>,
+    mut stream: TcpStream,
+) -> io::Result<()>
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T>,
+{
+    stream.set_nodelay(true).ok();
+    stream.set_write_timeout(Some(shared.cfg.io_timeout))?;
+    loop {
+        // poll for the next request
+        stream.set_read_timeout(Some(FRAME_POLL))?;
+        let first = loop {
+            match frame::read_byte(&mut stream) {
+                Ok(None) => return Ok(()), // client closed cleanly
+                Ok(Some(b)) => break b,
+                Err(e) if timed_out(&e) => {
+                    if shared.stop.load(Ordering::Relaxed) {
+                        // idle at shutdown: no request in flight, close
+                        return Ok(());
+                    }
+                }
+                Err(_) => return Ok(()), // reset/teardown: drop conn
+            }
+        };
+        // a frame has started: read the rest under the io timeout,
+        // tightened to the drain window while shutting down
+        let mut rest_timeout = shared.cfg.io_timeout;
+        if shared.stop.load(Ordering::Relaxed) {
+            let deadline =
+                *shared.deadline.lock().unwrap_or_else(|e| e.into_inner());
+            match deadline.and_then(|d| d.checked_duration_since(Instant::now()))
+            {
+                Some(left) => rest_timeout = rest_timeout.min(left),
+                None => return Ok(()), // drain window exhausted
+            }
+        }
+        stream
+            .set_read_timeout(Some(rest_timeout.max(Duration::from_millis(1))))?;
+        let payload = match frame::read_frame_rest(first, &mut stream) {
+            Ok(p) => p,
+            Err(_) => return Ok(()), // stalled or hostile: drop conn
+        };
+
+        let t0 = Instant::now();
+        let (resp, close_after) = handle_request(shared, &payload);
+        let obs = shared.engine.registry();
+        obs.inc(CounterId::ServeRequests);
+        obs.record(HistId::Serve, t0.elapsed());
+        frame::write_frame(&mut stream, &resp)?;
+        if close_after {
+            return Ok(());
+        }
+    }
+}
+
+/// Decode + execute one request, panic-isolated. Returns the response
+/// payload and whether the connection must close afterwards (protocol
+/// errors poison stream state — re-sync is not attempted).
+fn handle_request<T, M, C>(
+    shared: &Shared<T, M, C>,
+    payload: &[u8],
+) -> (Vec<u8>, bool)
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T>,
+{
+    let outcome =
+        catch_unwind(AssertUnwindSafe(|| run_request(shared, payload)));
+    let obs = shared.engine.registry();
+    match outcome {
+        Ok(Ok(resp)) => (resp, false),
+        Ok(Err(e)) => {
+            obs.inc(CounterId::ServeErrors);
+            (err_payload(&e.to_string()), true)
+        }
+        // a panicking request (e.g. Metric::check_item on a mismatched
+        // item) costs this connection, never the pool thread
+        Err(_) => {
+            obs.inc(CounterId::ServeErrors);
+            (err_payload("internal error: request handler panicked"), true)
+        }
+    }
+}
+
+fn err_payload(msg: &str) -> Vec<u8> {
+    let mut w = BinWriter::new(vec![frame::ST_ERR]);
+    // writes into a Vec cannot fail
+    w.str(msg).expect("in-memory write");
+    w.into_inner()
+}
+
+/// The label ops' epoch pin: the latest published snapshot, extracting
+/// one lazily on a never-merged engine (same semantics as
+/// [`Engine::label`](crate::engine::Engine::label)).
+fn pinned_snapshot<T, M, C>(shared: &Shared<T, M, C>) -> Arc<EngineSnapshot>
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+{
+    match shared.engine.latest() {
+        Some(snap) => snap,
+        None => shared.engine.inner().cluster(shared.engine.config().mcs),
+    }
+}
+
+fn run_request<T, M, C>(
+    shared: &Shared<T, M, C>,
+    payload: &[u8],
+) -> io::Result<Vec<u8>>
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T>,
+{
+    let engine = &shared.engine;
+    let obs = engine.registry();
+    let min_pts = engine.config().fishdbc.min_pts;
+    match frame::decode_request(payload, &shared.codec)? {
+        Request::Ping => {
+            obs.inc(CounterId::ServePings);
+            let mut w = BinWriter::new(vec![frame::ST_OK]);
+            w.u64(engine.len() as u64)?;
+            w.u64(engine.epoch())?;
+            Ok(w.into_inner())
+        }
+        Request::Stats => {
+            obs.inc(CounterId::ServeStatsOps);
+            // non-flushing: a stats scrape must not become an ingest
+            // barrier on the serving path
+            let doc = engine.inner().stats_json(false);
+            let mut w = BinWriter::new(vec![frame::ST_OK]);
+            w.str(&doc)?;
+            Ok(w.into_inner())
+        }
+        Request::Label { k, item } => {
+            let k = if k == 0 { min_pts } else { k };
+            let snap = pinned_snapshot(shared);
+            let label = engine.label_against(&item, &snap, k);
+            obs.inc(CounterId::ServeLabelOps);
+            let mut w = BinWriter::new(vec![frame::ST_OK]);
+            w.u32(label as u32)?;
+            Ok(w.into_inner())
+        }
+        Request::LabelBatch { k, items } => {
+            let k = if k == 0 { min_pts } else { k };
+            // pin one epoch for the whole batch: consistent answers
+            // even if a merge publishes mid-request
+            let snap = pinned_snapshot(shared);
+            let mut w = BinWriter::new(vec![frame::ST_OK]);
+            w.u32(items.len() as u32)?;
+            for item in &items {
+                w.u32(engine.label_against(item, &snap, k) as u32)?;
+            }
+            obs.counter(CounterId::ServeLabelOps).add(items.len() as u64);
+            Ok(w.into_inner())
+        }
+        Request::Ingest { items } => {
+            let n = items.len() as u64;
+            match engine.try_add_batch(items) {
+                Ok(()) => {
+                    obs.counter(CounterId::ServeIngestOps).add(n);
+                    let mut w = BinWriter::new(vec![frame::ST_OK]);
+                    w.u64(n)?;
+                    Ok(w.into_inner())
+                }
+                Err(_rejected) => {
+                    obs.inc(CounterId::ServeBusy);
+                    Ok(vec![frame::ST_BUSY])
+                }
+            }
+        }
+        Request::Remove { items } => {
+            let removed = engine.remove_batch(&items) as u64;
+            obs.counter(CounterId::ServeRemoveOps).add(removed);
+            let mut w = BinWriter::new(vec![frame::ST_OK]);
+            w.u64(removed)?;
+            Ok(w.into_inner())
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Bounded hand-off queue between the accept loop and the fixed worker
+//! pool. Thread-per-connection is exactly what `fishdbc serve` avoids —
+//! under fan-in the pool size bounds CPU and the queue bound bounds
+//! memory; past both, the accept loop refuses with a `Busy` frame
+//! instead of letting connections pile up unobserved.
+
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::sync::{Condvar, Mutex};
+
+pub(crate) struct ConnQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    cap: usize,
+}
+
+struct QueueState {
+    conns: VecDeque<TcpStream>,
+    stopping: bool,
+}
+
+impl ConnQueue {
+    pub fn new(cap: usize) -> ConnQueue {
+        ConnQueue {
+            state: Mutex::new(QueueState {
+                conns: VecDeque::new(),
+                stopping: false,
+            }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Offer an accepted connection to the pool; hands the stream back
+    /// when the queue is full or the server is stopping (the accept loop
+    /// then refuses it with a `Busy` frame).
+    pub fn push(&self, s: TcpStream) -> Result<(), TcpStream> {
+        let mut q = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if q.stopping || q.conns.len() >= self.cap {
+            return Err(s);
+        }
+        q.conns.push_back(s);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block until a connection is available; `None` once the queue is
+    /// stopping (workers exit). After stop, queued-but-unclaimed
+    /// connections are *not* handed out — nothing was read from them, so
+    /// nothing was acknowledged, and dropping them loses no admitted
+    /// work.
+    pub fn pop(&self) -> Option<TcpStream> {
+        let mut q = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if q.stopping {
+                return None;
+            }
+            if let Some(s) = q.conns.pop_front() {
+                return Some(s);
+            }
+            q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Flip to stopping, wake every waiter, and drop whatever was still
+    /// queued; returns how many unclaimed connections were discarded.
+    pub fn stop(&self) -> usize {
+        let mut q = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        q.stopping = true;
+        let dropped = q.conns.len();
+        q.conns.clear();
+        self.cv.notify_all();
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn stream_pair() -> TcpStream {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        TcpStream::connect(l.local_addr().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn queue_bounds_and_stop_drop_unclaimed() {
+        let q = ConnQueue::new(2);
+        assert!(q.push(stream_pair()).is_ok());
+        assert!(q.push(stream_pair()).is_ok());
+        assert!(q.push(stream_pair()).is_err(), "third must bounce");
+        assert!(q.pop().is_some());
+        assert!(q.push(stream_pair()).is_ok(), "slot freed by pop");
+        assert_eq!(q.stop(), 2, "both queued conns discarded on stop");
+        assert!(q.pop().is_none(), "stopped queue releases workers");
+        assert!(q.push(stream_pair()).is_err(), "stopped queue refuses");
+    }
+
+    #[test]
+    fn stop_wakes_blocked_workers() {
+        let q = std::sync::Arc::new(ConnQueue::new(1));
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.stop();
+        assert!(h.join().unwrap().is_none());
+    }
+}
