@@ -1,0 +1,131 @@
+//! Extraction sweep — hierarchy-as-a-service re-extraction cost vs the
+//! merge that built the hierarchy (ISSUE 9 acceptance).
+//!
+//! Protocol: ingest n blob points and merge once (from scratch), then add
+//! 1% more and merge again (the delta baseline). Then sweep `relabel_at`
+//! over mcs {5, 10, 25} × {stability, leaf, hybrid-eps} twice. The sweep
+//! runs entirely against the pinned epoch's cached dendrogram, so the
+//! acceptance asserts: **zero** extra metric calls across the whole
+//! sweep, every second-pass extraction hits the memo, and the slowest
+//! single extraction is still cheaper than the from-scratch merge.
+//!
+//! Run: `cargo bench --bench extraction_sweep` (optional first arg
+//! overrides n, e.g. `-- 2000` for the CI smoke pass).
+
+use std::time::Instant;
+
+use fishdbc::engine::{
+    Engine, EngineConfig, ExtractionMode, ExtractionParams,
+};
+use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::util::bench::emit_bench_json;
+use fishdbc::{datasets, Item, MetricKind};
+
+fn main() {
+    let n: usize = std::env::args()
+        .skip(1)
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(50_000);
+    let dim = 16;
+    let delta = (n / 100).max(1);
+    let ds = datasets::blobs::generate(n + delta, dim, 10, 42);
+
+    let engine: Engine<Item, MetricKind> =
+        Engine::spawn(ds.metric, EngineConfig {
+            fishdbc: FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
+            shards: 4,
+            mcs: 10,
+            ..Default::default()
+        });
+    println!(
+        "# extraction sweep: blobs n={n} (+{delta} = 1% delta), dim={dim}, \
+         4 shards, MinPts=10 ef=20"
+    );
+
+    for chunk in ds.items[..n].chunks(512) {
+        engine.add_batch(chunk.to_vec());
+    }
+    engine.flush();
+    let t0 = Instant::now();
+    engine.cluster(10);
+    let full_secs = t0.elapsed().as_secs_f64();
+
+    for chunk in ds.items[n..].chunks(512) {
+        engine.add_batch(chunk.to_vec());
+    }
+    engine.flush();
+    let t1 = Instant::now();
+    let merged = engine.cluster(10);
+    let inc_secs = t1.elapsed().as_secs_f64();
+    println!(
+        "full merge {full_secs:8.3}s | delta merge {inc_secs:8.3}s \
+         (epoch {})",
+        merged.epoch
+    );
+
+    // the sweep proper: every (mcs, mode) pair twice, pinned to the
+    // delta merge's epoch, with the metric-call odometer watched
+    let modes = [
+        ExtractionMode::Stability,
+        ExtractionMode::Leaf,
+        ExtractionMode::HybridEps,
+    ];
+    let calls0 = engine.stats().metric_calls;
+    let mut max_extract = 0.0f64;
+    let mut repeats_hit = true;
+    println!(
+        "{:<10} {:<5} {:>8} {:>10} {:>9} {:>12}",
+        "mode", "mcs", "clusters", "clustered", "memo_hit", "extract(s)"
+    );
+    for pass in 0..2 {
+        for mode in modes {
+            for mcs in [5usize, 10, 25] {
+                let eps = match mode {
+                    ExtractionMode::HybridEps => 0.5,
+                    _ => 0.0,
+                };
+                let r = engine.relabel_at(ExtractionParams { mcs, eps, mode });
+                max_extract = max_extract.max(r.secs);
+                if pass == 1 && !r.memo_hit {
+                    repeats_hit = false;
+                }
+                println!(
+                    "{:<10} {:<5} {:>8} {:>10} {:>9} {:>12.6}{}",
+                    mode.name(),
+                    mcs,
+                    r.clustering.n_clusters,
+                    r.clustering.n_clustered(),
+                    r.memo_hit,
+                    r.secs,
+                    if pass == 1 { "  (repeat)" } else { "" },
+                );
+            }
+        }
+    }
+    let sweep_calls = engine.stats().metric_calls - calls0;
+    let es = engine.stats();
+
+    println!(
+        "# sweep: {} extractions ({} memo hits), {sweep_calls} metric calls, \
+         slowest {max_extract:.6}s vs from-scratch merge {full_secs:.3}s",
+        es.pipeline.extractions, es.pipeline.extract_memo_hits,
+    );
+    let pass = sweep_calls == 0 && repeats_hit && max_extract < full_secs;
+    println!("# acceptance: {}", if pass { "PASS" } else { "FAIL" });
+
+    emit_bench_json("extraction_sweep", |w| {
+        w.usize("n", n)
+            .usize("shards", 4)
+            .f64("full_secs", full_secs)
+            .f64("delta_secs", inc_secs)
+            .f64("max_extract_secs", max_extract)
+            .u64("sweep_metric_calls", sweep_calls)
+            .u64("extractions", es.pipeline.extractions)
+            .u64("extract_memo_hits", es.pipeline.extract_memo_hits)
+            .str("acceptance", if pass { "PASS" } else { "FAIL" });
+    });
+    engine.shutdown();
+    if !pass {
+        std::process::exit(1);
+    }
+}

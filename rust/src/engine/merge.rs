@@ -60,6 +60,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::distances::Metric;
+use crate::hdbscan::ExtractionMode;
 use crate::mst::{Edge, Msf};
 use crate::obs::{CacheKind, CounterId, HistId, JournalEvent, Registry};
 use crate::util::fasthash::{FastMap, FastSet};
@@ -96,6 +97,16 @@ pub(crate) struct MergeState {
     pub pipeline: Pipeline,
     pub cache: Option<MergeCache>,
     pub merges: u64,
+    /// Epoch number the cached forest was published under. Kept here
+    /// (not in [`MergeCache`], which persistence rebuilds with no epoch
+    /// memory) so on-demand extraction (`Engine::relabel_at`) can pin
+    /// its result to the exact epoch of the forest it reads — `latest()`
+    /// can lag this by a moment, since snapshots publish after the merge
+    /// lock drops.
+    pub last_epoch: u64,
+    /// Cumulative deleted-gid list of that epoch, for label masking on
+    /// the on-demand extraction path (same mask the merge applied).
+    pub last_removed: Vec<u32>,
 }
 
 impl Default for MergeState {
@@ -106,12 +117,24 @@ impl Default for MergeState {
 
 impl MergeState {
     pub fn new() -> MergeState {
-        MergeState { pipeline: Pipeline::new(), cache: None, merges: 0 }
+        MergeState {
+            pipeline: Pipeline::new(),
+            cache: None,
+            merges: 0,
+            last_epoch: 0,
+            last_removed: Vec::new(),
+        }
     }
 
     /// Rebuild from persisted epoch state (FISHENG v2).
     pub fn resumed(cache: Option<MergeCache>) -> MergeState {
-        MergeState { pipeline: Pipeline::new(), cache, merges: 0 }
+        MergeState {
+            pipeline: Pipeline::new(),
+            cache,
+            merges: 0,
+            last_epoch: 0,
+            last_removed: Vec::new(),
+        }
     }
 
     /// Re-home the back-half pipeline onto the engine's shared telemetry
@@ -208,6 +231,8 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         let n_msf_edges = msf.edges().len();
         ms.cache = Some(MergeCache { global: msf, n, stamps });
         ms.merges += 1;
+        ms.last_epoch = epoch;
+        ms.last_removed = removed.clone();
         drop(ms);
 
         // deleted ids label -1 in every epoch (they are edge-free
@@ -242,6 +267,18 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
             CacheKind::Scratch => CounterId::MergeScratch,
         });
         obs.record(HistId::Merge, total);
+        // the merge's own flat cut is an extraction like any other: it
+        // gets the same audit-trail event the parameterized paths push
+        obs.journal.push(
+            obs.uptime_secs(),
+            JournalEvent::ExtractionEnd {
+                epoch,
+                mcs,
+                eps: 0.0,
+                mode: ExtractionMode::Stability.name(),
+                cache_hit: stages.reused_clustering,
+            },
+        );
         obs.journal.push(
             obs.uptime_secs(),
             JournalEvent::MergeEnd {
@@ -258,8 +295,9 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
 }
 
 /// Force every deleted global id to the noise label (shared by the delta
-/// merge and the reference merge so the two cannot drift).
-fn mask_deleted(labels: &mut [i32], removed: &[u32]) {
+/// merge, the reference merge, and the parameterized extraction path
+/// `Engine::relabel_at`, so the three cannot drift).
+pub(crate) fn mask_deleted(labels: &mut [i32], removed: &[u32]) {
     for &gid in removed {
         if let Some(l) = labels.get_mut(gid as usize) {
             *l = -1;

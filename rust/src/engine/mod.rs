@@ -100,12 +100,15 @@ use crate::obs::{
     JournalEvent, MetricsServer, Registry, RegistrySnapshot,
 };
 use crate::util::fasthash::{FastHasher, FastMap, FastSet};
-use merge::MergeState;
+use merge::{mask_deleted, MergeState};
 use pipeline::{PipelineRun, PipelineStats};
 use shard::{
     compact_shard, BridgeCtxSeed, BridgeState, Shard, ShardCmd, ShardSnap,
     ShardState, Snaps,
 };
+
+pub use crate::hdbscan::ExtractionMode;
+pub use pipeline::ExtractionParams;
 
 /// Deterministic content hash for shard routing: the same item always
 /// hashes to the same value, across threads, processes and restarts (the
@@ -268,6 +271,81 @@ pub struct EngineSnapshot {
     pub stages: PipelineRun,
     /// Seconds spent on the whole merge + extraction.
     pub extract_secs: f64,
+}
+
+/// One node of the condensed cluster hierarchy, in the flat form the
+/// hierarchy-as-a-service surface exports ([`EngineSnapshot::tree`], the
+/// `Tree` wire frame). Node ids are the condensed tree's own cluster ids
+/// (`n_points` = root, children ascending), so they are stable for the
+/// lifetime of the epoch: every extraction of the same epoch selects
+/// among exactly these ids.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TreeNode {
+    /// Cluster id (`>= n_points`; `n_points` itself is the root).
+    pub id: u32,
+    /// Parent cluster id; the root points at itself.
+    pub parent: u32,
+    /// Density λ at which this cluster is born (0 for the root).
+    pub lambda_birth: f64,
+    /// Excess-of-Mass stability (the flat-cut selection score).
+    pub stability: f64,
+    /// Points under the node at birth (root: the label-space size, which
+    /// includes deleted slots).
+    pub size: u32,
+}
+
+impl EngineSnapshot {
+    /// The epoch's condensed hierarchy as flat nodes with stable ids —
+    /// the read side of hierarchy-as-a-service. Derived entirely from the
+    /// snapshot's cached condensed tree: no locks, no distance calls.
+    pub fn tree(&self) -> Vec<TreeNode> {
+        let t = &self.clustering.condensed;
+        let root = t.root();
+        let mut nodes: Vec<TreeNode> = (0..t.n_cluster_ids as u32)
+            .map(|i| TreeNode {
+                id: root + i,
+                parent: root + i,
+                lambda_birth: 0.0,
+                stability: 0.0,
+                size: 0,
+            })
+            .collect();
+        if nodes.is_empty() {
+            return nodes;
+        }
+        nodes[0].size = t.n_points as u32;
+        for r in &t.rows {
+            if (r.child as usize) >= t.n_points {
+                let i = (r.child - root) as usize;
+                nodes[i].parent = r.parent;
+                nodes[i].size = r.size;
+            }
+        }
+        let birth = t.birth_lambdas();
+        let stab = t.stabilities();
+        for (i, node) in nodes.iter_mut().enumerate() {
+            node.lambda_birth = birth[i];
+            node.stability = stab[i];
+        }
+        nodes
+    }
+}
+
+/// The result of one parameterized extraction ([`Engine::relabel_at`]):
+/// a full labeling pinned to one published epoch's cached forest.
+#[derive(Clone, Debug)]
+pub struct Relabeling {
+    /// Epoch (= cached global forest) the labeling was extracted from.
+    pub epoch: u64,
+    /// The extraction parameters that produced it.
+    pub params: ExtractionParams,
+    /// Global labeling under `params` (same label-space alignment as
+    /// [`EngineSnapshot::clustering`]; deleted ids stay `-1`).
+    pub clustering: Clustering,
+    /// Whether the bounded extraction memo answered without recomputing.
+    pub memo_hit: bool,
+    /// End-to-end wall seconds (memo lookup included).
+    pub secs: f64,
 }
 
 /// Counters aggregated across shards.
@@ -556,6 +634,25 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     /// `bridge_refresh > 0`, on that item cadence).
     pub fn refresh_bridges(&self) {
         self.inner.refresh_snaps();
+    }
+
+    /// RELABEL: extract a full labeling under arbitrary [`ExtractionParams`]
+    /// from the latest epoch's cached global forest — hierarchy-as-a-service.
+    /// The hierarchy is built once per epoch; this call only re-runs the
+    /// cheap selection stages (dendrogram and condensed-tree caches keyed by
+    /// forest content, bounded extraction memo keyed by the full parameter
+    /// tuple — see `engine::pipeline`'s extraction-lifecycle notes), so
+    /// sweeping `mcs`/`eps`/mode over a pinned epoch adds **zero** distance
+    /// calls: `EngineStats::metric_calls` is provably unchanged, because no
+    /// stage downstream of the forest ever evaluates the metric.
+    ///
+    /// If no epoch exists yet, one merge runs first (same lazy-bootstrap
+    /// rule as [`Engine::label`]). The result is pinned to the epoch whose
+    /// forest answered it, which a concurrent merge cannot disturb:
+    /// extraction runs under the merge lock against that epoch's cached
+    /// forest and deletion mask.
+    pub fn relabel_at(&self, params: ExtractionParams) -> Relabeling {
+        self.inner.relabel_at(params)
     }
 
     /// Aggregated counters. Flushes first, so this doubles as an ingestion
@@ -1066,6 +1163,43 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         self.obs.record(HistId::IngestBatch, t_ingest.elapsed());
     }
 
+    /// Parameterized extraction against the latest epoch's cached forest
+    /// (see [`Engine::relabel_at`] for the contract). Bootstraps the first
+    /// epoch if none exists; after that the whole call runs under the
+    /// merge lock, touching only the pipeline's tree caches — never a
+    /// shard, never the metric.
+    pub(crate) fn relabel_at(&self, params: ExtractionParams) -> Relabeling {
+        // extraction needs a published forest: bootstrap the first epoch
+        // (fresh engine), or re-stamp one on a resumed engine whose
+        // persisted cache predates this process's epoch bookkeeping
+        if self.merge.lock().unwrap().last_epoch == 0 {
+            self.cluster(self.config.mcs);
+        }
+        let t0 = Instant::now();
+        let mut ms = self.merge.lock().unwrap();
+        let MergeState { pipeline, cache, last_epoch, last_removed, .. } =
+            &mut *ms;
+        let cache = cache.as_ref().expect("cluster() always leaves a cache");
+        let (mut clustering, run) =
+            pipeline.extract_at(cache.global.edges(), cache.n, params, false);
+        let epoch = *last_epoch;
+        let memo_hit = run.reused_clustering;
+        mask_deleted(&mut clustering.labels, last_removed);
+        drop(ms);
+        let secs = t0.elapsed().as_secs_f64();
+        self.obs.journal.push(
+            self.obs.uptime_secs(),
+            JournalEvent::ExtractionEnd {
+                epoch,
+                mcs: params.mcs,
+                eps: params.eps,
+                mode: params.mode.name(),
+                cache_hit: memo_hit,
+            },
+        );
+        Relabeling { epoch, params, clustering, memo_hit, secs }
+    }
+
     /// Refresh every shard's frozen snapshot from its live state (taking
     /// each read lock briefly, one shard at a time).
     pub(crate) fn refresh_snaps(&self) {
@@ -1240,6 +1374,8 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         w.obj(Some("pipeline"))
             .u64("runs", stats.pipeline.runs)
             .u64("short_circuits", stats.pipeline.short_circuits)
+            .u64("extractions", stats.pipeline.extractions)
+            .u64("extract_memo_hits", stats.pipeline.extract_memo_hits)
             .u64("dendrogram_reuses", stats.pipeline.dendrogram_reuses)
             .f64("dendrogram_secs", stats.pipeline.dendrogram_secs)
             .f64("condense_secs", stats.pipeline.condense_secs)
@@ -1308,6 +1444,13 @@ fn journal_entry_json(w: &mut export::JsonW, e: &JournalEntry) {
                 .usize("n_items", *n_items)
                 .usize("n_deleted", *n_deleted)
                 .f64("secs", *secs);
+        }
+        JournalEvent::ExtractionEnd { epoch, mcs, eps, mode, cache_hit } => {
+            w.u64("epoch", *epoch)
+                .usize("mcs", *mcs)
+                .f64("eps", *eps)
+                .str("mode", mode)
+                .bool("cache_hit", *cache_hit);
         }
         JournalEvent::Compaction { shard, survivors } => {
             w.usize("shard", *shard).usize("survivors", *survivors);
@@ -2115,6 +2258,74 @@ mod tests {
         let stats = engine.stats();
         assert_eq!(stats.merges, 2);
         assert_eq!(stats.pipeline.short_circuits, 1);
+        engine.shutdown();
+    }
+
+    /// Tentpole: `relabel_at` serves arbitrary extraction parameters from
+    /// the pinned epoch's cached forest — the merge-mcs request is bit-
+    /// identical to the published snapshot, repeat requests hit the memo,
+    /// and the whole exchange adds zero distance calls.
+    #[test]
+    fn relabel_at_pins_epoch_and_adds_no_metric_calls() {
+        let items = blob_items(400, 43);
+        let engine = Engine::spawn(MetricKind::Euclidean, EngineConfig {
+            fishdbc: FishdbcParams { min_pts: 5, ef: 20, ..Default::default() },
+            shards: 2,
+            mcs: 5,
+            ..Default::default()
+        });
+        engine.add_batch(items);
+        let snap = engine.cluster(5);
+        let calls_before = engine.stats().metric_calls;
+
+        // merge-mcs request: answered from the memo the merge populated,
+        // bit-identical to the published labeling
+        let same = engine.relabel_at(ExtractionParams::stability(5));
+        assert_eq!(same.epoch, snap.epoch);
+        assert!(same.memo_hit, "merge at mcs 5 pre-populated the memo");
+        assert_eq!(same.clustering.labels, snap.clustering.labels);
+
+        // a parameter sweep over the pinned epoch: fresh params compute
+        // (memo miss), repeats hit, and the epoch never moves
+        for params in [
+            ExtractionParams::stability(10),
+            ExtractionParams { mcs: 5, eps: 0.0, mode: ExtractionMode::Leaf },
+            ExtractionParams {
+                mcs: 5,
+                eps: 0.5,
+                mode: ExtractionMode::HybridEps,
+            },
+        ] {
+            let first = engine.relabel_at(params);
+            assert_eq!(first.epoch, snap.epoch);
+            assert_eq!(
+                first.clustering.labels.len(),
+                snap.clustering.labels.len()
+            );
+            let again = engine.relabel_at(params);
+            assert!(again.memo_hit, "repeat of {params:?} must memo-hit");
+            assert_eq!(again.clustering.labels, first.clustering.labels);
+        }
+        assert_eq!(
+            engine.stats().metric_calls,
+            calls_before,
+            "extraction is tree-only: the sweep must not touch the metric"
+        );
+
+        // the hierarchy surface: root present, children well-formed
+        let tree = snap.tree();
+        assert!(!tree.is_empty());
+        let root = tree[0];
+        assert_eq!(root.id, root.parent, "root parents itself");
+        assert_eq!(root.size as usize, snap.clustering.labels.len());
+        for node in &tree[1..] {
+            assert!(node.parent >= root.id && node.parent < node.id);
+            assert!(node.lambda_birth >= 0.0 && node.size >= 2);
+        }
+        assert!(
+            tree.len() > snap.clustering.n_clusters,
+            "hierarchy holds more nodes than any flat cut selects"
+        );
         engine.shutdown();
     }
 }

@@ -72,15 +72,106 @@
 //! non-Euclidean workloads (Jaro-Winkler text, sparse cosine) — and
 //! asserts every published epoch equals `Engine::reference_cluster`: a
 //! from-scratch merge of the same state that bypasses every cache above.
+//!
+//! ## Extraction lifecycle (hierarchy as a service)
+//!
+//! The back half above the forest — dendrogram → condense → extract — is
+//! *parameterized*: the paper's whole point is that the hierarchy "can be
+//! expanded to a tree structure", so one cached dendrogram should serve
+//! **every** granularity, not the single `(mcs, eps)` the engine was
+//! configured with. The unit of request is [`ExtractionParams`]: a
+//! minimum cluster size `mcs`, an eps threshold, and an
+//! [`ExtractionMode`] (EoM stability, leaf, or Malzer & Baum's hybrid
+//! eps+stability selection). Every extraction flows through one memo
+//! chain, keyed by content hashes so the caches can never serve stale
+//! structure:
+//!
+//! 1. **forest hash** (`edges_hash`) — identifies the epoch's global MSF;
+//! 2. **dendrogram cache** (1 entry) — keyed by forest hash; survives
+//!    across every `(mcs, eps, mode)` so a parameter sweep re-runs
+//!    condense/extract only;
+//! 3. **condensed-tree LRU** (keyed `(forest, mcs)`) — an eps/mode sweep
+//!    at fixed `mcs` re-runs selection only;
+//! 4. **extraction memo** (bounded LRU keyed
+//!    `(forest, mcs, eps, mode, allow_single)`) — a repeated request is a
+//!    pure cache hit returning a bit-identical [`Clustering`].
+//!
+//! None of these stages ever evaluates the user metric: re-extraction at
+//! new parameters adds **zero** `metric_calls` by construction (the
+//! paper's cost model — only searches pay distance calls). The engine
+//! merge path ([`Pipeline::run`]) and the on-demand path
+//! ([`Pipeline::extract_at`], serving `Engine::relabel_at` /
+//! `Engine::label_at` and the `Tree`/`LabelAt`/`RelabelAt` wire ops) are
+//! the same code; they differ only in which counters they bump
+//! ([`CounterId::PipelineRuns`]/[`CounterId::PipelineShortCircuits`] vs
+//! [`CounterId::Extractions`]/[`CounterId::ExtractMemoHits`], with
+//! [`HistId::ExtractCall`] timing every request end to end).
 
 use std::hash::Hasher;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::hdbscan::{extract, Clustering, CondensedTree, Dendrogram};
+use crate::hdbscan::{
+    extract, Clustering, CondensedTree, Dendrogram, ExtractionMode,
+};
 use crate::mst::Edge;
 use crate::obs::{CounterId, HistId, Registry};
 use crate::util::fasthash::FastHasher;
+
+/// One parameterized extraction request: everything the back half of the
+/// algorithm needs beyond the forest itself. See the module-level
+/// *extraction lifecycle* notes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExtractionParams {
+    /// Minimum cluster size for the condensed tree.
+    pub mcs: usize,
+    /// Eps threshold for [`ExtractionMode::HybridEps`]; ignored by the
+    /// other modes (conventionally 0 there, which hybrid treats as "no
+    /// threshold").
+    pub eps: f64,
+    /// Flat-selection policy.
+    pub mode: ExtractionMode,
+}
+
+impl ExtractionParams {
+    /// The engine merge path's defaults: pure EoM stability at `mcs`.
+    pub fn stability(mcs: usize) -> ExtractionParams {
+        ExtractionParams { mcs, eps: 0.0, mode: ExtractionMode::Stability }
+    }
+}
+
+/// Full memo key of one extraction. `eps` is keyed by bit pattern so the
+/// key stays `Eq` (and `NaN` probes memoize like any other value).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct MemoKey {
+    forest: u64,
+    mcs: usize,
+    eps_bits: u64,
+    mode: ExtractionMode,
+    allow_single: bool,
+}
+
+impl MemoKey {
+    fn new(forest: u64, p: ExtractionParams, allow_single: bool) -> MemoKey {
+        MemoKey {
+            forest,
+            mcs: p.mcs,
+            eps_bits: p.eps.to_bits(),
+            mode: p.mode,
+            allow_single,
+        }
+    }
+}
+
+/// Bounded LRU of memoized extractions: a small sweep (a handful of
+/// tenants at different resolutions — e.g. the `extraction_sweep` bench's
+/// 3 modes × 3 mcs values plus the merge's own cut) stays fully cached
+/// without letting a parameter scan hold every labeling of every epoch
+/// alive.
+const EXTRACT_MEMO_CAP: usize = 16;
+/// Bounded LRU of condensed trees (keyed `(forest, mcs)`): an eps/mode
+/// sweep at fixed `mcs` re-runs selection only.
+const CONDENSED_CACHE_CAP: usize = 4;
 
 /// Content hash of an MSF edge list (plus the node count): the cache key
 /// for every downstream stage. Edges are hashed in order, which is stable
@@ -109,6 +200,13 @@ pub struct PipelineStats {
     /// Runs that reused the cached dendrogram (identical forest, new
     /// `mcs`): only condense/extract re-ran.
     pub dendrogram_reuses: u64,
+    /// Parameterized extraction requests through the memo chain — both
+    /// merge-path [`Pipeline::run`]s and on-demand
+    /// [`Pipeline::extract_at`]s.
+    pub extractions: u64,
+    /// Extraction requests answered bit-identically from the bounded
+    /// memo (no condense, no extract, zero metric calls).
+    pub extract_memo_hits: u64,
     /// Cumulative seconds spent building dendrograms.
     pub dendrogram_secs: f64,
     /// Cumulative seconds spent condensing.
@@ -147,7 +245,9 @@ pub struct PipelineRun {
 }
 
 /// Memoizing MSF → clustering pipeline (one instance per serving loop;
-/// the caches hold exactly one entry — the previous epoch).
+/// the dendrogram cache holds the previous epoch, the condensed and
+/// extraction caches are small bounded LRUs over recent parameters — see
+/// the module-level *extraction lifecycle* notes).
 ///
 /// All counters and stage timings land in an [`obs::Registry`]
 /// (span histograms [`HistId::Dendrogram`] / [`HistId::Condense`] /
@@ -164,9 +264,10 @@ pub struct Pipeline {
     obs: Arc<Registry>,
     /// `(input hash, dendrogram)` of the last non-cached run.
     dendro: Option<(u64, Dendrogram)>,
-    /// `(input hash, mcs, allow_single_cluster, clustering)` of the last
-    /// non-cached run.
-    out: Option<(u64, usize, bool, Clustering)>,
+    /// LRU (front = oldest) of condensed trees keyed `(forest, mcs)`.
+    condensed: Vec<((u64, usize), CondensedTree)>,
+    /// LRU (front = oldest) of finished extractions, full-key memoized.
+    memo: Vec<(MemoKey, Clustering)>,
 }
 
 impl Default for Pipeline {
@@ -184,7 +285,12 @@ impl Pipeline {
 
     /// A pipeline recording into a shared registry (the engine path).
     pub fn with_registry(obs: Arc<Registry>) -> Pipeline {
-        Pipeline { obs, dendro: None, out: None }
+        Pipeline {
+            obs,
+            dendro: None,
+            condensed: Vec::new(),
+            memo: Vec::new(),
+        }
     }
 
     /// Legacy cumulative counters, assembled as a thin view over the
@@ -202,6 +308,11 @@ impl Pipeline {
                 .obs
                 .counter(CounterId::DendrogramReuses)
                 .get(),
+            extractions: self.obs.counter(CounterId::Extractions).get(),
+            extract_memo_hits: self
+                .obs
+                .counter(CounterId::ExtractMemoHits)
+                .get(),
             dendrogram_secs: self.obs.hist(HistId::Dendrogram).sum_ns() as f64
                 / 1e9,
             condense_secs: self.obs.hist(HistId::Condense).sum_ns() as f64
@@ -212,8 +323,10 @@ impl Pipeline {
     }
 
     /// Run (or short-circuit) the back half of the algorithm over a
-    /// minimum spanning forest. `edges` must be the complete forest,
-    /// weight-ascending (both `Msf::edges` producers guarantee this).
+    /// minimum spanning forest — the engine/coordinator *merge* path,
+    /// always pure stability selection at the configured `mcs`. `edges`
+    /// must be the complete forest, weight-ascending (both `Msf::edges`
+    /// producers guarantee this).
     pub fn run(
         &mut self,
         edges: &[Edge],
@@ -221,28 +334,69 @@ impl Pipeline {
         mcs: usize,
         allow_single_cluster: bool,
     ) -> (Clustering, PipelineRun) {
-        let n = n_points.max(1);
-        let key = edges_hash(edges, n);
         self.obs.inc(CounterId::PipelineRuns);
+        let params = ExtractionParams::stability(mcs);
+        let (clustering, run, hit) =
+            self.extract_impl(edges, n_points, params, allow_single_cluster);
+        if hit {
+            self.obs.inc(CounterId::PipelineShortCircuits);
+        }
+        (clustering, run)
+    }
 
-        if let Some((k, m, a, c)) = &self.out {
-            if *k == key && *m == mcs && *a == allow_single_cluster {
-                self.obs.inc(CounterId::PipelineShortCircuits);
-                return (
-                    c.clone(),
-                    PipelineRun {
-                        reused_clustering: true,
-                        reused_dendrogram: true,
-                        ..Default::default()
-                    },
-                );
-            }
+    /// On-demand parameterized extraction over the same memo chain — the
+    /// `Engine::relabel_at` / `Tree` / `RelabelAt` path. Does **not**
+    /// count as a pipeline run (the merge-cadence counters stay
+    /// meaningful); every call bumps [`CounterId::Extractions`] and, when
+    /// served from the memo, [`CounterId::ExtractMemoHits`]. Never
+    /// evaluates the user metric.
+    pub fn extract_at(
+        &mut self,
+        edges: &[Edge],
+        n_points: usize,
+        params: ExtractionParams,
+        allow_single_cluster: bool,
+    ) -> (Clustering, PipelineRun) {
+        let (clustering, run, _) =
+            self.extract_impl(edges, n_points, params, allow_single_cluster);
+        (clustering, run)
+    }
+
+    /// The shared memo chain (see the module-level lifecycle notes):
+    /// extraction memo → dendrogram cache → condensed LRU → mode
+    /// dispatch. Returns `(clustering, stage timings, memo_hit)`.
+    fn extract_impl(
+        &mut self,
+        edges: &[Edge],
+        n_points: usize,
+        params: ExtractionParams,
+        allow_single_cluster: bool,
+    ) -> (Clustering, PipelineRun, bool) {
+        let wall = Instant::now();
+        let n = n_points.max(1);
+        let key = MemoKey::new(edges_hash(edges, n), params, allow_single_cluster);
+        self.obs.inc(CounterId::Extractions);
+
+        if let Some(c) = self.memo_lookup(&key) {
+            self.obs.inc(CounterId::ExtractMemoHits);
+            self.obs.record(HistId::ExtractCall, wall.elapsed());
+            return (
+                c,
+                PipelineRun {
+                    reused_clustering: true,
+                    reused_dendrogram: true,
+                    ..Default::default()
+                },
+                true,
+            );
         }
 
         let mut run = PipelineRun::default();
 
-        // dendrogram: reusable across mcs changes on the same forest
-        let reuse_dendro = matches!(&self.dendro, Some((k, _)) if *k == key);
+        // dendrogram: reusable across every (mcs, eps, mode) on the same
+        // forest
+        let reuse_dendro =
+            matches!(&self.dendro, Some((k, _)) if *k == key.forest);
         if reuse_dendro {
             self.obs.inc(CounterId::DendrogramReuses);
             run.reused_dendrogram = true;
@@ -252,24 +406,62 @@ impl Pipeline {
             let el = t.elapsed();
             run.dendrogram_secs = el.as_secs_f64();
             self.obs.record(HistId::Dendrogram, el);
-            self.dendro = Some((key, d));
+            self.dendro = Some((key.forest, d));
         }
         let dendro = &self.dendro.as_ref().expect("dendrogram cached").1;
 
-        let t = Instant::now();
-        let condensed = CondensedTree::from_dendrogram(dendro, mcs);
-        let el = t.elapsed();
-        run.condense_secs = el.as_secs_f64();
-        self.obs.record(HistId::Condense, el);
+        // condensed tree: reusable across eps/mode sweeps at fixed mcs
+        let ckey = (key.forest, key.mcs);
+        let condensed = match self.condensed.iter().position(|(k, _)| *k == ckey)
+        {
+            Some(i) => {
+                let entry = self.condensed.remove(i);
+                self.condensed.push(entry);
+                self.condensed.last().expect("just pushed").1.clone()
+            }
+            None => {
+                let t = Instant::now();
+                let tree = CondensedTree::from_dendrogram(dendro, params.mcs);
+                let el = t.elapsed();
+                run.condense_secs = el.as_secs_f64();
+                self.obs.record(HistId::Condense, el);
+                if self.condensed.len() >= CONDENSED_CACHE_CAP {
+                    self.condensed.remove(0);
+                }
+                self.condensed.push((ckey, tree.clone()));
+                tree
+            }
+        };
 
         let t = Instant::now();
-        let clustering = extract::extract_flat_opts(&condensed, allow_single_cluster);
+        let clustering = match params.mode {
+            ExtractionMode::Stability => {
+                extract::extract_flat_opts(&condensed, allow_single_cluster)
+            }
+            ExtractionMode::Leaf => extract::extract_leaf(&condensed),
+            ExtractionMode::HybridEps => {
+                extract::extract_hybrid(&condensed, params.eps, allow_single_cluster)
+            }
+        };
         let el = t.elapsed();
         run.extract_secs = el.as_secs_f64();
         self.obs.record(HistId::Extract, el);
 
-        self.out = Some((key, mcs, allow_single_cluster, clustering.clone()));
-        (clustering, run)
+        if self.memo.len() >= EXTRACT_MEMO_CAP {
+            self.memo.remove(0);
+        }
+        self.memo.push((key, clustering.clone()));
+        self.obs.record(HistId::ExtractCall, wall.elapsed());
+        (clustering, run, false)
+    }
+
+    /// Linear-scan LRU lookup (the cap is single-digit; a map would cost
+    /// more in constants than it saves): hit moves the entry to the back.
+    fn memo_lookup(&mut self, key: &MemoKey) -> Option<Clustering> {
+        let i = self.memo.iter().position(|(k, _)| k == key)?;
+        let entry = self.memo.remove(i);
+        self.memo.push(entry);
+        Some(self.memo.last().expect("just pushed").1.clone())
     }
 }
 
@@ -349,6 +541,137 @@ mod tests {
         let mut p = Pipeline::new();
         let (c, _) = p.run(&[], 0, 5, false);
         assert_eq!(c.n_clusters, 0);
+    }
+
+    /// Satellite contract: re-extraction at an already-seen
+    /// `(mcs, eps, mode)` is a memo hit returning a **bit-identical**
+    /// labeling — across random forests and all three modes.
+    #[test]
+    fn prop_extract_at_memo_hit_is_bit_identical() {
+        use crate::util::proptest::check;
+        check("extract-memo-hit", 20, |rng, _| {
+            let n = 6 + rng.below(80);
+            let mut edges = Vec::new();
+            for i in 1..n as u32 {
+                let parent = rng.below(i as usize) as u32;
+                edges.push(Edge::new(parent, i, rng.f64() * 5.0 + 0.01));
+            }
+            edges.sort_unstable_by(|x, y| x.w.total_cmp(&y.w));
+            let mut p = Pipeline::new();
+            let mode = match rng.below(3) {
+                0 => ExtractionMode::Stability,
+                1 => ExtractionMode::Leaf,
+                _ => ExtractionMode::HybridEps,
+            };
+            let params = ExtractionParams {
+                mcs: 2 + rng.below(5),
+                eps: rng.f64() * 4.0,
+                mode,
+            };
+            let (a, first) = p.extract_at(&edges, n, params, false);
+            assert!(!first.reused_clustering);
+            let hits0 = p.stats().extract_memo_hits;
+            let (b, again) = p.extract_at(&edges, n, params, false);
+            assert!(again.reused_clustering, "second request must memo-hit");
+            assert_eq!(p.stats().extract_memo_hits, hits0 + 1);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.n_clusters, b.n_clusters);
+            assert_eq!(a.selected, b.selected);
+        });
+    }
+
+    #[test]
+    fn eps_mode_sweep_reuses_dendrogram_and_condensed_tree() {
+        let (edges, n) = forest();
+        let mut p = Pipeline::new();
+        let _ = p.extract_at(&edges, n, ExtractionParams::stability(3), false);
+        // same mcs, different mode: condense must be skipped entirely
+        let (_, run) = p.extract_at(
+            &edges,
+            n,
+            ExtractionParams { mcs: 3, eps: 0.0, mode: ExtractionMode::Leaf },
+            false,
+        );
+        assert!(run.reused_dendrogram);
+        assert!(!run.reused_clustering);
+        assert_eq!(run.condense_secs, 0.0, "condensed tree was rebuilt");
+        // different mcs: condense re-runs, dendrogram still cached
+        let (_, run) = p.extract_at(
+            &edges,
+            n,
+            ExtractionParams::stability(4),
+            false,
+        );
+        assert!(run.reused_dendrogram);
+        assert!(run.condense_secs > 0.0);
+    }
+
+    #[test]
+    fn extract_at_modes_match_direct_extraction() {
+        let (edges, n) = forest();
+        let d = Dendrogram::from_msf(&edges, n);
+        let t = CondensedTree::from_dendrogram(&d, 3);
+        let mut p = Pipeline::new();
+        let (stab, _) =
+            p.extract_at(&edges, n, ExtractionParams::stability(3), false);
+        assert_eq!(stab.labels, extract::extract_flat_opts(&t, false).labels);
+        let (leaf, _) = p.extract_at(
+            &edges,
+            n,
+            ExtractionParams { mcs: 3, eps: 0.0, mode: ExtractionMode::Leaf },
+            false,
+        );
+        assert_eq!(leaf.labels, extract::extract_leaf(&t).labels);
+        let (hyb, _) = p.extract_at(
+            &edges,
+            n,
+            ExtractionParams {
+                mcs: 3,
+                eps: 2.0,
+                mode: ExtractionMode::HybridEps,
+            },
+            false,
+        );
+        assert_eq!(hyb.labels, extract::extract_hybrid(&t, 2.0, false).labels);
+    }
+
+    #[test]
+    fn memo_and_condensed_caches_stay_bounded() {
+        let (edges, n) = forest();
+        let mut p = Pipeline::new();
+        for mcs in 2..2 + 2 * EXTRACT_MEMO_CAP {
+            let _ = p.extract_at(&edges, n, ExtractionParams::stability(mcs), false);
+        }
+        assert!(p.memo.len() <= EXTRACT_MEMO_CAP);
+        assert!(p.condensed.len() <= CONDENSED_CACHE_CAP);
+        // the most recent entries are retained: the last mcs still hits
+        let last = 2 * EXTRACT_MEMO_CAP + 1;
+        let hits0 = p.stats().extract_memo_hits;
+        let (_, run) =
+            p.extract_at(&edges, n, ExtractionParams::stability(last), false);
+        assert!(run.reused_clustering);
+        assert_eq!(p.stats().extract_memo_hits, hits0 + 1);
+    }
+
+    /// `run` (the merge path) and `extract_at` share one memo: a merge
+    /// at the engine's configured mcs pre-populates the sweep's first
+    /// probe, and a repeated `run` still reports its legacy
+    /// short-circuit counter.
+    #[test]
+    fn run_and_extract_at_share_the_memo() {
+        let (edges, n) = forest();
+        let mut p = Pipeline::new();
+        let (a, _) = p.run(&edges, n, 3, false);
+        let (b, run) =
+            p.extract_at(&edges, n, ExtractionParams::stability(3), false);
+        assert!(run.reused_clustering);
+        assert_eq!(a.labels, b.labels);
+        // extract_at must NOT count as a pipeline run / short-circuit
+        let s = p.stats();
+        assert_eq!(s.runs, 1);
+        assert_eq!(s.short_circuits, 0);
+        assert_eq!(s.extractions, 2);
+        assert_eq!(s.extract_memo_hits, 1);
     }
 
     #[test]

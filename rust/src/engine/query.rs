@@ -12,7 +12,7 @@ use crate::distances::Metric;
 use crate::fishdbc::majority_vote;
 use crate::obs::{CounterId, HistId};
 
-use super::{Engine, EngineItem, EngineSnapshot};
+use super::{Engine, EngineItem, EngineSnapshot, ExtractionParams};
 
 impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
     /// Label an external item against the latest snapshot (extracting one
@@ -67,6 +67,29 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
         snap: &EngineSnapshot,
         k: usize,
     ) -> i32 {
+        self.vote_against(item, &snap.clustering.labels, k)
+    }
+
+    /// Online probe under arbitrary [`ExtractionParams`] — the
+    /// hierarchy-as-a-service twin of [`Engine::label`]: "which cluster
+    /// would this item join *at this mcs/eps/mode*?" The labeling comes
+    /// from [`Engine::relabel_at`] (pinned to the latest epoch's cached
+    /// forest, memoized, zero extra distance calls), then the probe's own
+    /// HNSW search runs exactly like `label_against` — that one search
+    /// does evaluate the metric, like every online label query.
+    pub fn label_at(
+        &self,
+        item: &T,
+        k: usize,
+        params: ExtractionParams,
+    ) -> i32 {
+        let relabeling = self.inner().relabel_at(params);
+        self.vote_against(item, &relabeling.clustering.labels, k)
+    }
+
+    /// Shared serving tail: k nearest per shard, merged to the global k
+    /// nearest, majority vote through the supplied labeling.
+    fn vote_against(&self, item: &T, labels: &[i32], k: usize) -> i32 {
         let t0 = Instant::now();
         let k = k.max(1);
         // k nearest per shard, then merge to the global k nearest
@@ -80,9 +103,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
         hits.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
         let label = majority_vote(
             hits.iter()
-                .filter_map(|&(_, gid)| {
-                    snap.clustering.labels.get(gid as usize).copied()
-                })
+                .filter_map(|&(_, gid)| labels.get(gid as usize).copied())
                 .take(k),
         );
         let obs = self.inner().obs();
@@ -274,6 +295,30 @@ mod tests {
         assert!(removed > 0, "victims must exist");
         let got = engine.label_against(probe, &snap, 5);
         assert_eq!(got, want, "churn flipped a pinned-label probe");
+        engine.shutdown();
+    }
+
+    /// `label_at` with the merge's own parameters reproduces `label`
+    /// exactly (same labeling via the memo), and other parameter tuples
+    /// answer within their own labeling's range.
+    #[test]
+    fn label_at_matches_label_at_merge_params() {
+        use crate::engine::{ExtractionMode, ExtractionParams};
+        let (engine, items) = engine_on_blobs(300, 2, 45);
+        let snap = engine.cluster(5);
+        let want = engine.label_against(&items[0], &snap, 5);
+        let got =
+            engine.label_at(&items[0], 5, ExtractionParams::stability(5));
+        assert_eq!(got, want, "merge-params probe must match label()");
+        let leaf = ExtractionParams {
+            mcs: 5,
+            eps: 0.0,
+            mode: ExtractionMode::Leaf,
+        };
+        let relabeling = engine.relabel_at(leaf);
+        let l = engine.label_at(&items[0], 5, leaf);
+        assert!(l >= -1);
+        assert!((l as i64) < relabeling.clustering.n_clusters as i64);
         engine.shutdown();
     }
 

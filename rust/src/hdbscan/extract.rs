@@ -8,47 +8,86 @@
 use super::condense::CondensedTree;
 use super::Clustering;
 
-/// Select clusters and produce flat labels (root never selected — the
-/// paper's Lemma 3.3 semantics and hdbscan's default).
-pub fn extract_flat(tree: &CondensedTree) -> Clustering {
-    extract_flat_opts(tree, false)
+/// How a flat clustering is selected from the condensed hierarchy. The
+/// paper's "H" axis: one cached hierarchy serves every granularity, so
+/// the selection policy is a runtime parameter of extraction, not a
+/// build-time choice of the tree.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ExtractionMode {
+    /// Excess-of-Mass stability maximization (Campello et al. \[4\]; the
+    /// HDBSCAN\* default, [`extract_flat`]).
+    #[default]
+    Stability,
+    /// Every leaf of the condensed tree ([`extract_leaf`]): the finest
+    /// granularity the hierarchy supports.
+    Leaf,
+    /// Malzer & Baum's hybrid eps+stability selection (HDBSCAN(ε̂),
+    /// arxiv 1911.02282; [`extract_hybrid`]): EoM selection first, then
+    /// every selected cluster born below the eps threshold climbs to the
+    /// first ancestor born above it.
+    HybridEps,
 }
 
-/// Like [`extract_flat`], but `allow_single_cluster = true` lets the root
-/// compete for selection (hdbscan's `allow_single_cluster=True`): datasets
-/// that are one uniform cluster then return that cluster instead of
-/// all-noise.
-pub fn extract_flat_opts(
-    tree: &CondensedTree,
-    allow_single_cluster: bool,
-) -> Clustering {
-    let n = tree.n_points;
-    let root = tree.root();
-    let k = tree.n_cluster_ids;
-
-    // children clusters per cluster (offset ids)
-    let mut child_clusters: Vec<Vec<u32>> = vec![Vec::new(); k];
-    for r in &tree.rows {
-        if (r.child as usize) >= n {
-            child_clusters[(r.parent - root) as usize].push(r.child);
+impl ExtractionMode {
+    /// Stable lowercase name (journal events, stats JSON, CLI tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExtractionMode::Stability => "stability",
+            ExtractionMode::Leaf => "leaf",
+            ExtractionMode::HybridEps => "hybrid_eps",
         }
     }
 
+    /// Inverse of [`ExtractionMode::name`] (plus common aliases).
+    pub fn parse(s: &str) -> Option<ExtractionMode> {
+        match s {
+            "stability" | "eom" => Some(ExtractionMode::Stability),
+            "leaf" => Some(ExtractionMode::Leaf),
+            "hybrid_eps" | "hybrid" => Some(ExtractionMode::HybridEps),
+            _ => None,
+        }
+    }
+}
+
+/// Child *cluster* lists per cluster (indexed by offset id `id - root`).
+fn child_cluster_lists(tree: &CondensedTree) -> Vec<Vec<u32>> {
+    let n = tree.n_points;
+    let root = tree.root();
+    let mut kids: Vec<Vec<u32>> = vec![Vec::new(); tree.n_cluster_ids];
+    for r in &tree.rows {
+        if (r.child as usize) >= n {
+            kids[(r.parent - root) as usize].push(r.child);
+        }
+    }
+    kids
+}
+
+/// The EoM selection bitmap with descendants of selected clusters
+/// unselected (only the highest selected clusters survive) — the shared
+/// front half of [`extract_flat_opts`] and [`extract_hybrid`].
+fn eom_final_selection(
+    tree: &CondensedTree,
+    allow_single_cluster: bool,
+    kids: &[Vec<u32>],
+) -> Vec<bool> {
+    let root = tree.root();
+    let k = tree.n_cluster_ids;
     let stability = tree.stabilities();
     // process ids descending (children always have larger ids than parents)
     let mut selected = vec![false; k];
     let mut propagated = stability.clone();
     for idx in (0..k).rev() {
-        let kids = &child_clusters[idx];
+        let ks = &kids[idx];
         if idx == 0 && !allow_single_cluster {
             // root: never selected, just propagates
             continue;
         }
-        if kids.is_empty() {
+        if ks.is_empty() {
             selected[idx] = true; // leaf cluster: provisionally selected
             continue;
         }
-        let kid_sum: f64 = kids.iter().map(|&c| propagated[(c - root) as usize]).sum();
+        let kid_sum: f64 =
+            ks.iter().map(|&c| propagated[(c - root) as usize]).sum();
         if stability[idx] >= kid_sum {
             selected[idx] = true;
             propagated[idx] = stability[idx];
@@ -62,16 +101,32 @@ pub fn extract_flat_opts(
     let mut stack: Vec<u32> = if allow_single_cluster {
         vec![root]
     } else {
-        child_clusters[0].clone()
+        kids[0].clone()
     };
     while let Some(c) = stack.pop() {
         let idx = (c - root) as usize;
         if selected[idx] {
             final_selected[idx] = true;
         } else {
-            stack.extend(child_clusters[idx].iter().copied());
+            stack.extend(kids[idx].iter().copied());
         }
     }
+    final_selected
+}
+
+/// Turn a selection bitmap into the flat [`Clustering`]: dense labels in
+/// ascending cluster-id order, each point labeled by the *innermost*
+/// selected ancestor of the cluster it fell out of (nesting only arises
+/// in the hybrid mode; for an antichain selection this is simply "the
+/// selected ancestor"). Shared by every extraction mode so the label
+/// assignment semantics cannot drift between them.
+fn clustering_from_selection(
+    tree: &CondensedTree,
+    final_selected: &[bool],
+) -> Clustering {
+    let n = tree.n_points;
+    let root = tree.root();
+    let k = tree.n_cluster_ids;
 
     // assign dense flat labels to selected clusters
     let mut label_of = vec![-1i32; k];
@@ -126,6 +181,119 @@ pub fn extract_flat_opts(
     }
 }
 
+/// Select clusters and produce flat labels (root never selected — the
+/// paper's Lemma 3.3 semantics and hdbscan's default).
+pub fn extract_flat(tree: &CondensedTree) -> Clustering {
+    extract_flat_opts(tree, false)
+}
+
+/// Like [`extract_flat`], but `allow_single_cluster = true` lets the root
+/// compete for selection (hdbscan's `allow_single_cluster=True`): datasets
+/// that are one uniform cluster then return that cluster instead of
+/// all-noise.
+pub fn extract_flat_opts(
+    tree: &CondensedTree,
+    allow_single_cluster: bool,
+) -> Clustering {
+    let kids = child_cluster_lists(tree);
+    let final_selected = eom_final_selection(tree, allow_single_cluster, &kids);
+    clustering_from_selection(tree, &final_selected)
+}
+
+/// Malzer & Baum's hybrid eps+stability extraction (HDBSCAN(ε̂), arxiv
+/// 1911.02282): run EoM stability selection, then let every selected
+/// cluster *born below the eps threshold* (birth distance
+/// `1 / birth_lambda < eps`) climb to the first ancestor born above the
+/// threshold. The effect is a DBSCAN\*-style minimum granularity — micro
+/// clusters that only exist below `eps` are merged — while clusters
+/// already coarser than `eps` keep their EoM selection untouched.
+///
+/// Two boundary contracts (unit-tested):
+/// - `eps <= 0` (or `NaN`) imposes no threshold and must reduce
+///   **bit-identically** to [`extract_flat_opts`].
+/// - `eps = +inf` must honor the same finite-weight guard as
+///   [`cut_at_distance`]: clusters created by the forest's virtual `+∞`
+///   merges are born at `lambda = 0`, i.e. at birth distance `+∞`, and
+///   `∞ < ∞` is false — so no climb ever crosses a sanitized `+∞`
+///   sentinel boundary and disconnected components are never glued.
+pub fn extract_hybrid(
+    tree: &CondensedTree,
+    eps: f64,
+    allow_single_cluster: bool,
+) -> Clustering {
+    if !(eps > 0.0) {
+        // no threshold: pure stability selection, bit-identical
+        return extract_flat_opts(tree, allow_single_cluster);
+    }
+    let n = tree.n_points;
+    let root = tree.root();
+    let k = tree.n_cluster_ids;
+    let kids = child_cluster_lists(tree);
+    let eom = eom_final_selection(tree, allow_single_cluster, &kids);
+
+    // birth distance per cluster: 1 / birth_lambda, with lambda = 0 (the
+    // root and any cluster created by a virtual +inf merge) mapping to
+    // +inf — never `< eps`, so sentinel boundaries stop every climb.
+    let birth_eps: Vec<f64> = tree
+        .birth_lambdas()
+        .iter()
+        .map(|&l| if l > 0.0 { 1.0 / l } else { f64::INFINITY })
+        .collect();
+
+    let mut parent_of: Vec<u32> = vec![root; k];
+    for r in &tree.rows {
+        if (r.child as usize) >= n {
+            parent_of[(r.child - root) as usize] = r.parent;
+        }
+    }
+
+    let mut final_selected = vec![false; k];
+    // clusters already covered by a climbed-to ancestor (hdbscan's
+    // `processed` set): skip their own climbs
+    let mut covered = vec![false; k];
+    for idx in 0..k {
+        if !eom[idx] {
+            continue;
+        }
+        if !(birth_eps[idx] < eps) {
+            // born at or above the threshold: keep the EoM choice
+            final_selected[idx] = true;
+            continue;
+        }
+        if covered[idx] {
+            continue;
+        }
+        // climb to the first ancestor born above the threshold
+        // (hdbscan's traverse_upwards: the root check comes first; when
+        // the parent is the root, keep the highest non-root node — or the
+        // root itself iff a single cluster is allowed)
+        let mut at = idx;
+        loop {
+            let parent = parent_of[at];
+            if parent == root {
+                if allow_single_cluster {
+                    at = 0;
+                }
+                break;
+            }
+            let pi = (parent - root) as usize;
+            at = pi;
+            if birth_eps[pi] > eps {
+                break;
+            }
+        }
+        final_selected[at] = true;
+        // everything inside the chosen ancestor is covered by it
+        let mut stack = kids[at].clone();
+        while let Some(c) = stack.pop() {
+            let ci = (c - root) as usize;
+            covered[ci] = true;
+            stack.extend(kids[ci].iter().copied());
+        }
+    }
+    clustering_from_selection(tree, &final_selected)
+}
+
 /// Leaf extraction: select every *leaf* of the condensed tree instead of
 /// maximizing stability — yields the finest-grained clustering the
 /// hierarchy supports (hdbscan's `cluster_selection_method="leaf"`).
@@ -133,41 +301,15 @@ pub fn extract_flat_opts(
 /// cluster (the flip side of the paper's "fewer larger clusters"
 /// regularization observation).
 pub fn extract_leaf(tree: &CondensedTree) -> Clustering {
-    let n = tree.n_points;
-    let root = tree.root();
     let k = tree.n_cluster_ids;
-
-    let mut has_child_cluster = vec![false; k];
-    for r in &tree.rows {
-        if (r.child as usize) >= n {
-            has_child_cluster[(r.parent - root) as usize] = true;
-        }
-    }
+    let kids = child_cluster_lists(tree);
     // leaves, root excluded (and excluding the degenerate single-cluster
     // case where the root is the only node)
-    let mut label_of = vec![-1i32; k];
-    let mut next = 0i32;
+    let mut final_selected = vec![false; k];
     for idx in 1..k {
-        if !has_child_cluster[idx] {
-            label_of[idx] = next;
-            next += 1;
-        }
+        final_selected[idx] = kids[idx].is_empty();
     }
-    let mut labels = vec![-1i32; n];
-    for r in &tree.rows {
-        if (r.child as usize) < n {
-            labels[r.child as usize] = label_of[(r.parent - root) as usize];
-        }
-    }
-    Clustering {
-        labels,
-        n_clusters: next as usize,
-        condensed: tree.clone(),
-        selected: (1..k)
-            .filter(|&i| label_of[i] >= 0)
-            .map(|i| root + i as u32)
-            .collect(),
-    }
+    clustering_from_selection(tree, &final_selected)
 }
 
 /// DBSCAN\*-style flat cut: connected components of the MSF restricted to
@@ -387,6 +529,146 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// Satellite bugfix contract: `eps = 0` (and `NaN`) impose no
+    /// threshold and must reduce **bit-identically** to pure stability
+    /// selection — same labels, same cluster count, same selected ids.
+    #[test]
+    fn prop_hybrid_eps_zero_is_bitwise_stability() {
+        check("hybrid-eps-zero", 30, |rng, _| {
+            let n = 6 + rng.below(100);
+            let mut edges = Vec::new();
+            for i in 1..n as u32 {
+                let parent = rng.below(i as usize) as u32;
+                edges.push(Edge::new(parent, i, rng.f64() * 5.0 + 0.01));
+            }
+            let mcs = 2 + rng.below(6);
+            let d = Dendrogram::from_msf(&edges, n);
+            let t = CondensedTree::from_dendrogram(&d, mcs);
+            for allow_single in [false, true] {
+                let eom = extract_flat_opts(&t, allow_single);
+                for eps in [0.0, -1.0, f64::NAN] {
+                    let h = extract_hybrid(&t, eps, allow_single);
+                    assert_eq!(h.labels, eom.labels, "eps={eps}");
+                    assert_eq!(h.n_clusters, eom.n_clusters, "eps={eps}");
+                    assert_eq!(h.selected, eom.selected, "eps={eps}");
+                }
+            }
+        });
+    }
+
+    /// Satellite bugfix contract: `eps = +inf` must honor the same
+    /// finite-weight guard as `cut_at_distance` — components joined only
+    /// through sanitized `+∞` sentinel edges (forest virtual merges) are
+    /// born at birth distance `+∞` and must never be glued, even by the
+    /// "merge everything" probe.
+    #[test]
+    fn hybrid_eps_inf_respects_infinite_sentinels() {
+        // two finite chains joined only by a +inf sentinel edge: the MSF
+        // is a forest at every finite density level
+        let mut edges = Vec::new();
+        for i in 0..7u32 {
+            edges.push(Edge::new(i, i + 1, 1.0)); // component A: 0-7
+            edges.push(Edge::new(8 + i, 9 + i, 1.0)); // component B: 8-15
+        }
+        edges.push(Edge::new(7, 8, f64::INFINITY));
+        let d = Dendrogram::from_msf(&edges, 16);
+        let t = CondensedTree::from_dendrogram(&d, 3);
+        let h = extract_hybrid(&t, f64::INFINITY, false);
+        // eps=+inf merges everything *within* a component, but must not
+        // cross the sentinel: A and B stay distinct clusters
+        assert!(
+            h.labels[..8].iter().all(|&l| l >= 0 && l == h.labels[0]),
+            "component A fragmented: {:?}",
+            h.labels
+        );
+        assert!(
+            h.labels[8..].iter().all(|&l| l >= 0 && l == h.labels[8]),
+            "component B fragmented: {:?}",
+            h.labels
+        );
+        assert_ne!(
+            h.labels[0], h.labels[8],
+            "+inf eps glued across the sentinel edge"
+        );
+    }
+
+    #[test]
+    fn hybrid_merges_clusters_born_below_threshold() {
+        // tight blobs A (0-4) and B (5-9) bridged at 2.0, far cloud C
+        // (10-14) bridged at 50: A and B are born at distance 2.0 when
+        // their super-cluster splits; C and A∪B are born at 50.
+        let mut edges = Vec::new();
+        for i in 0..4u32 {
+            edges.push(Edge::new(i, i + 1, 0.1));
+            edges.push(Edge::new(5 + i, 6 + i, 0.1));
+            edges.push(Edge::new(10 + i, 11 + i, 0.1));
+        }
+        edges.push(Edge::new(4, 5, 2.0));
+        edges.push(Edge::new(9, 10, 50.0));
+        let d = Dendrogram::from_msf(&edges, 15);
+        let t = CondensedTree::from_dendrogram(&d, 3);
+
+        // below the A/B birth distance: EoM untouched — A, B, C distinct
+        let fine = extract_hybrid(&t, 1.0, false);
+        assert_eq!(fine.labels, extract_flat(&t).labels);
+        assert_ne!(fine.labels[0], fine.labels[5]);
+
+        // above it (but below 50): A and B glue into their super-cluster,
+        // C keeps its own label
+        let coarse = extract_hybrid(&t, 5.0, false);
+        assert_eq!(coarse.labels[0], coarse.labels[9], "A+B not merged");
+        assert!(coarse.labels[10] >= 0);
+        assert_ne!(coarse.labels[0], coarse.labels[10], "C glued at eps=5");
+    }
+
+    /// Hybrid labels stay structurally valid across random forests and
+    /// eps values: in range, and never splitting a cluster the pure EoM
+    /// selection kept whole (climbing can only coarsen).
+    #[test]
+    fn prop_hybrid_only_coarsens_eom() {
+        check("hybrid-coarsens", 25, |rng, _| {
+            let n = 6 + rng.below(80);
+            let mut edges = Vec::new();
+            for i in 1..n as u32 {
+                let parent = rng.below(i as usize) as u32;
+                edges.push(Edge::new(parent, i, rng.f64() * 5.0 + 0.01));
+            }
+            let mcs = 2 + rng.below(5);
+            let d = Dendrogram::from_msf(&edges, n);
+            let t = CondensedTree::from_dendrogram(&d, mcs);
+            let eom = extract_flat(&t);
+            let eps = rng.f64() * 8.0;
+            let h = extract_hybrid(&t, eps, false);
+            assert!(h
+                .labels
+                .iter()
+                .all(|&l| l >= -1 && (l as i64) < h.n_clusters as i64));
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if eom.labels[i] >= 0 && eom.labels[i] == eom.labels[j] {
+                        assert!(
+                            h.labels[i] == h.labels[j],
+                            "hybrid(eps={eps}) split an EoM cluster at ({i},{j})"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn extraction_mode_names_round_trip() {
+        for m in [
+            ExtractionMode::Stability,
+            ExtractionMode::Leaf,
+            ExtractionMode::HybridEps,
+        ] {
+            assert_eq!(ExtractionMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ExtractionMode::parse("eom"), Some(ExtractionMode::Stability));
+        assert_eq!(ExtractionMode::parse("nope"), None);
     }
 
     #[test]

@@ -15,6 +15,10 @@ pub mod extract;
 
 pub use condense::{CondensedRow, CondensedTree, Dendrogram};
 pub use export::{cluster_report, clustering_to_json, ClusterReport};
+pub use extract::{
+    extract_flat, extract_flat_opts, extract_hybrid, extract_leaf,
+    ExtractionMode,
+};
 
 /// Final clustering output: flat labels + the full hierarchy.
 #[derive(Clone, Debug)]

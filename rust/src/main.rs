@@ -20,7 +20,7 @@
 use fishdbc::cli;
 use fishdbc::coordinator::{Coordinator, CoordinatorConfig};
 use fishdbc::datasets;
-use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::engine::{Engine, EngineConfig, ExtractionMode, ExtractionParams};
 use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
 use fishdbc::hdbscan::exact::{exact_hdbscan, ExactParams};
 use fishdbc::metrics::{internal, score_external};
@@ -37,7 +37,7 @@ const VALUE_KEYS: &[&str] = &[
     "load", "out", "labels-out", "efs", "shards", "bridge-k", "bridge-fanout",
     "bridge-refresh", "churn", "compact-at", "metrics-addr", "stats-json",
     "hold-secs", "addr", "threads", "max-conns", "drain-secs", "preload",
-    "probe-n", "queue-depth",
+    "probe-n", "queue-depth", "sweep-mcs", "write-timeout",
 ];
 
 fn main() {
@@ -127,6 +127,11 @@ labels):
                     probe query still answers (exit 1 otherwise)
   --compact-at R    per-shard tombstone ratio that triggers compaction
                     (rebuild without tombstones; default 0.25, 0 = never)
+  --sweep-mcs LIST  after the final merge, re-extract flat partitions at
+                    each comma-separated minimum cluster size from the
+                    pinned epoch's cached dendrogram (two passes; the
+                    second hits the extraction memo). Self-checks that
+                    the sweep adds zero metric calls and exits 1 if not
   --stats           print per-stage pipeline timings, cache counters,
                     snapshot copied-vs-shared chunk counts, churn
                     (removed/tombstoned/compactions) counters, and the
@@ -149,13 +154,17 @@ labels):
   --quality         external metrics vs the generator labels (fresh runs)
 
 serve options (framed TCP protocol over a live engine; Label/LabelBatch/
-Ingest/Remove/Stats/Ping — see src/serve/frame.rs for the wire format):
+Ingest/Remove/Stats/Ping plus the hierarchy surface Tree/LabelAt/
+RelabelAt — see src/serve/frame.rs for the wire format):
   --addr A          listen address (default 127.0.0.1:7979; port 0 = any)
   --threads T       connection-handler pool size (default 4)
   --max-conns Q     accepted-but-unclaimed connection queue bound
                     (default 64; beyond it new connections get Busy)
   --drain-secs S    graceful-drain window on SIGTERM/SIGINT (default 2.0;
                     in-flight requests finish, acked ingests are flushed)
+  --write-timeout S response-write deadline in seconds (default 5.0;
+                    distinct from the read-side idle timeout — a stalled
+                    reader can only pin a pool thread this long)
   --queue-depth D   per-shard ingest queue depth (default 16; full queues
                     answer Ingest with Busy instead of blocking)
   --preload N       generate + ingest N items from --dataset before
@@ -163,8 +172,9 @@ Ingest/Remove/Stats/Ping — see src/serve/frame.rs for the wire format):
                     from the first request)
   --shards/--recluster-every/--metrics-addr/--hold-secs as for `engine`
   --client-probe    be a client instead: connect to --addr, ping, ingest
-                    --probe-n items (default 64), label, remove, stats;
-                    exit 0 iff every acked ingest is visible",
+                    --probe-n items (default 64), label, remove, stats,
+                    then walk the hierarchy surface (tree, relabel-at,
+                    label-at); exit 0 iff every acked ingest is visible",
         names = datasets::DATASET_NAMES.join("|")
     );
 }
@@ -612,6 +622,50 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
         );
     }
 
+    // --sweep-mcs LIST: hierarchy-as-a-service — re-extract flat
+    // partitions at several minimum cluster sizes from the epoch pinned
+    // by the merge above. Pure tree surgery over the cached dendrogram:
+    // the whole sweep must not evaluate the metric once (self-checked,
+    // exits 1 on violation; CI greps the OK line)
+    if let Some(list) = args.get("sweep-mcs") {
+        let sweep: Vec<usize> = list
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|_| format!("bad mcs {s:?}")))
+            .collect::<Result<_, _>>()?;
+        let calls0 = engine.stats().metric_calls;
+        println!(
+            "mcs sweep (epoch {} pinned, two passes — the second hits the \
+             extraction memo):",
+            snap.epoch
+        );
+        println!(
+            "  {:<6} {:>8} {:>10} {:>9} {:>12}",
+            "mcs", "clusters", "clustered", "memo_hit", "extract(s)"
+        );
+        for pass in 0..2 {
+            for &m in &sweep {
+                let r = engine.relabel_at(ExtractionParams::stability(m));
+                println!(
+                    "  {:<6} {:>8} {:>10} {:>9} {:>12.6}{}",
+                    m,
+                    r.clustering.n_clusters,
+                    r.clustering.n_clustered(),
+                    r.memo_hit,
+                    r.secs,
+                    if pass == 1 { "  (repeat)" } else { "" },
+                );
+            }
+        }
+        let delta = engine.stats().metric_calls - calls0;
+        if delta != 0 {
+            return Err(format!(
+                "sweep-mcs: {delta} metric calls during re-extraction \
+                 (must be tree surgery only)"
+            ));
+        }
+        println!("sweep-mcs: OK (0 metric calls across the sweep)");
+    }
+
     // global ids are arrival order, so labels align with the dataset —
     // unless we resumed on top of pre-existing items
     if !resumed {
@@ -875,6 +929,9 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         drain_timeout: std::time::Duration::from_secs_f64(
             args.f64_or("drain-secs", 2.0)?,
         ),
+        write_timeout: std::time::Duration::from_secs_f64(
+            args.f64_or("write-timeout", 5.0)?,
+        ),
         ..ServeConfig::default()
     };
     let server =
@@ -979,6 +1036,44 @@ fn cmd_serve_probe(args: &cli::Args) -> Result<(), String> {
     if !stats.contains("fishdbc-stats-v1") {
         return Err("stats response is not a fishdbc-stats-v1 document".into());
     }
+
+    // hierarchy-as-a-service surface: Tree, RelabelAt, LabelAt — all
+    // answered from the pinned epoch's cached dendrogram
+    let (tree_epoch, tree) =
+        client.tree().map_err(|e| format!("tree: {e}"))?;
+    if tree.is_empty() {
+        return Err("tree: empty hierarchy".into());
+    }
+    let (re_epoch, n_clusters, relabels) = client
+        .relabel_at(ExtractionParams::stability(5))
+        .map_err(|e| format!("relabel_at: {e}"))?;
+    if relabels.is_empty() {
+        return Err("relabel_at: empty labeling".into());
+    }
+    if relabels
+        .iter()
+        .any(|&l| l != -1 && (l as i64) >= n_clusters as i64)
+    {
+        return Err("relabel_at: label out of contract".into());
+    }
+    let leaf = ExtractionParams {
+        mcs: 5,
+        eps: 0.0,
+        mode: ExtractionMode::Leaf,
+    };
+    let l_at = client
+        .label_at(&items[2], 0, leaf)
+        .map_err(|e| format!("label_at: {e}"))?;
+    if l_at < -1 {
+        return Err(format!("label_at: label {l_at} out of contract"));
+    }
+    println!(
+        "probe: hierarchy OK (tree epoch {tree_epoch}: {} nodes | relabel \
+         epoch {re_epoch}: {n_clusters} clusters over {} labels | leaf \
+         label_at {l_at})",
+        tree.len(),
+        relabels.len()
+    );
 
     // ids are monotone (removal tombstones, it never reuses ids), so the
     // durability check is a plain inequality

@@ -200,6 +200,13 @@ impl JsonW {
         self
     }
 
+    pub fn bool(&mut self, key: &str, v: bool) -> &mut Self {
+        self.sep();
+        self.push_key(key);
+        self.out.push_str(if v { "true" } else { "false" });
+        self
+    }
+
     pub fn str(&mut self, key: &str, v: &str) -> &mut Self {
         self.sep();
         self.push_key(key);

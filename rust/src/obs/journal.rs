@@ -74,6 +74,21 @@ pub enum JournalEvent {
         /// End-to-end merge wall time in seconds.
         secs: f64,
     },
+    /// A parameterized extraction finished (`Engine::relabel_at`, the
+    /// `Tree`/`LabelAt`/`RelabelAt` wire ops, or a merge's own
+    /// extraction) — the hierarchy-as-a-service audit trail.
+    ExtractionEnd {
+        /// Epoch (= cached forest) the extraction was pinned to.
+        epoch: u64,
+        /// Minimum cluster size requested.
+        mcs: usize,
+        /// Eps threshold requested (0 outside the hybrid mode).
+        eps: f64,
+        /// Extraction mode name (`stability`/`leaf`/`hybrid_eps`).
+        mode: &'static str,
+        /// Whether the bounded extraction memo answered the request.
+        cache_hit: bool,
+    },
     /// A shard compacted its tombstones away.
     Compaction {
         shard: usize,
@@ -99,6 +114,7 @@ impl JournalEvent {
         match self {
             JournalEvent::MergeStart { .. } => "merge_start",
             JournalEvent::MergeEnd { .. } => "merge_end",
+            JournalEvent::ExtractionEnd { .. } => "extraction_end",
             JournalEvent::Compaction { .. } => "compaction",
             JournalEvent::DeletionWindow { .. } => "deletion_window",
             JournalEvent::SnapshotRefresh { .. } => "snapshot_refresh",

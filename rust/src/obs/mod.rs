@@ -44,6 +44,10 @@
 //! | `fishdbc_label_latency_seconds` | histogram | s | per-call `label()` latency — the serving p50/p99 |
 //! | `fishdbc_ingest_batch_seconds` | histogram | s | `add_batch` call latency (incl. backpressure) |
 //! | `fishdbc_span_*_seconds` | histogram | s | per-phase merge breakdown: bridge catch-up, window re-search, Kruskal fold, dendrogram, condense, extract, snapshot capture, compaction |
+//! | `fishdbc_extract_seconds` | histogram | s | end-to-end parameterized extraction latency (`relabel_at`/`Tree`/`RelabelAt`; memo hits included — this is the "hierarchy as a service" serving cost) |
+//! | `fishdbc_extractions_total` | counter | calls | parameterized extraction requests through the memo chain (merge path + on-demand) |
+//! | `fishdbc_extract_memo_hits_total` | counter | calls | extraction requests answered bit-identically from the bounded memo |
+//! | `fishdbc_serve_keepalive_requests_total` | counter | frames | requests after the first on a kept-alive `fishdbc serve` connection |
 //! | `fishdbc_bridge_coverage_lag` | gauge | items | items not yet covered by insert-time bridging (paper §4's cross-shard recall risk when high) |
 //! | `fishdbc_tombstone_ratio{shard=..}` | gauge | ratio | tombstoned / stored per shard (compaction pressure) |
 //! | `fishdbc_epoch_age_seconds` | gauge | s | staleness of the served clustering |
@@ -127,6 +131,10 @@ metric_enum! {
             "Pipeline runs answered from the clustering cache";
         DendrogramReuses => "pipeline_dendrogram_reuses",
             "Pipeline runs that reused the cached dendrogram";
+        Extractions => "extractions",
+            "Parameterized extraction requests through the memo chain";
+        ExtractMemoHits => "extract_memo_hits",
+            "Extraction requests answered from the bounded extraction memo";
         SnapshotRefreshes => "snapshot_refreshes",
             "Mid-epoch frozen-snapshot refresh rounds";
         Compactions => "compactions",
@@ -151,6 +159,12 @@ metric_enum! {
             "Items accepted via Ingest frames";
         ServeRemoveOps => "serve_remove_ops",
             "Items tombstoned via Remove frames";
+        ServeTreeOps => "serve_tree_ops",
+            "Condensed-hierarchy Tree frames answered";
+        ServeRelabelOps => "serve_relabel_ops",
+            "Items labeled via LabelAt/RelabelAt parameterized frames";
+        ServeKeepaliveRequests => "serve_keepalive_requests",
+            "Framed requests after the first on a kept-alive connection";
         ServeBusy => "serve_busy",
             "Requests refused with a Busy frame (saturated queue or pool)";
         ServeErrors => "serve_errors",
@@ -197,6 +211,8 @@ metric_enum! {
             "Pipeline span: condensed-tree construction";
         Extract => "span_extract_seconds",
             "Pipeline span: stable cluster extraction + labeling";
+        ExtractCall => "extract_seconds",
+            "End-to-end parameterized extraction latency (memo hits included)";
         SnapshotCapture => "span_snapshot_capture_seconds",
             "Span: chunked copy-on-write shard snapshot capture round";
         Compaction => "span_compaction_seconds",

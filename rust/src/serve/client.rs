@@ -9,6 +9,7 @@ use std::io::{self, Read};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
+use crate::engine::{ExtractionParams, TreeNode};
 use crate::persist::{BinReader, ItemCodec};
 
 use super::frame;
@@ -179,6 +180,64 @@ impl<C> Client<C> {
         let body = Self::expect_ok(self.rpc(&req)?)?;
         let mut r = BinReader::new(&body[..]);
         r.u64()
+    }
+
+    /// `Tree`: the latest epoch's condensed hierarchy as flat nodes with
+    /// stable ids — `(epoch, nodes)`. Floats travel as IEEE-754 bits, so
+    /// the nodes compare bit-identically to the in-process
+    /// [`EngineSnapshot::tree`](crate::engine::EngineSnapshot::tree).
+    pub fn tree(&mut self) -> io::Result<(u64, Vec<TreeNode>)> {
+        let body = Self::expect_ok(self.rpc(&frame::encode_tree())?)?;
+        let mut r = BinReader::new(&body[..]);
+        let epoch = r.u64()?;
+        let n = r.u32()? as usize;
+        let mut nodes = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            nodes.push(TreeNode {
+                id: r.u32()?,
+                parent: r.u32()?,
+                lambda_birth: r.f64()?,
+                stability: r.f64()?,
+                size: r.u32()?,
+            });
+        }
+        Ok((epoch, nodes))
+    }
+
+    /// `LabelAt`: label one item under arbitrary extraction parameters
+    /// (`k = 0`: server `min_pts`).
+    pub fn label_at<T>(
+        &mut self,
+        item: &T,
+        k: usize,
+        params: ExtractionParams,
+    ) -> io::Result<i32>
+    where
+        C: ItemCodec<T>,
+    {
+        let req = frame::encode_label_at(&self.codec, item, k, params)?;
+        let body = Self::expect_ok(self.rpc(&req)?)?;
+        let mut r = BinReader::new(&body[..]);
+        Ok(r.u32()? as i32)
+    }
+
+    /// `RelabelAt`: a full labeling of the latest epoch under arbitrary
+    /// extraction parameters — `(epoch, n_clusters, labels)`.
+    pub fn relabel_at(
+        &mut self,
+        params: ExtractionParams,
+    ) -> io::Result<(u64, usize, Vec<i32>)> {
+        let req = frame::encode_relabel_at(params)?;
+        let body = Self::expect_ok(self.rpc(&req)?)?;
+        let mut r = BinReader::new(&body[..]);
+        let epoch = r.u64()?;
+        let n_clusters = r.u32()? as usize;
+        let n = r.u32()? as usize;
+        let mut labels = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            labels.push(r.u32()? as i32);
+        }
+        Ok((epoch, n_clusters, labels))
     }
 
     /// True once the server has closed the connection (half-duplex

@@ -12,6 +12,11 @@
 //!   0x04 LabelBatch  k:u32 count:u32 item*count
 //!   0x05 Ingest      count:u32 item*count
 //!   0x06 Remove      count:u32 item*count
+//!   0x07 Tree        (empty)
+//!   0x08 LabelAt     k:u32 params item
+//!   0x09 RelabelAt   params
+//! params           := mcs:u32 eps:f64-bits mode:u8
+//!   mode 0x00 stability | 0x01 leaf | 0x02 hybrid_eps
 //! response payload := status:u8 body
 //!   0x00 Ok          Ping   -> items:u64 epoch:u64
 //!                    Stats  -> json:str
@@ -19,23 +24,35 @@
 //!                    LabelBatch -> count:u32 label:i32*count
 //!                    Ingest -> accepted:u64
 //!                    Remove -> removed:u64
+//!                    Tree   -> epoch:u64 count:u32 node*count
+//!                      node := id:u32 parent:u32 lambda:f64-bits
+//!                              stability:f64-bits size:u32
+//!                    LabelAt -> label:i32 (two's-complement u32)
+//!                    RelabelAt -> epoch:u64 n_clusters:u32 count:u32
+//!                                 label:i32*count
 //!   0x01 Busy        (empty — resend later; ingest backpressure, or the
 //!                     whole connection was refused by a saturated pool)
 //!   0x02 Err         msg:str (the server closes the connection after)
 //! ```
 //!
 //! All integers are little-endian; `str` is the [`BinWriter::str`]
-//! encoding (`u64` length + UTF-8 bytes). Items are encoded through the
-//! same [`ItemCodec`] seam the persistence layer uses, so anything an
-//! engine can checkpoint it can also serve over the network, with one
-//! codec definition. A `Label` response of `-1` means noise/unknown,
+//! encoding (`u64` length + UTF-8 bytes); `f64-bits` is the IEEE-754
+//! bit pattern as `u64` (bit-exact, so an `eps` round-trips into the
+//! server's extraction memo key unchanged). Items are encoded through
+//! the same [`ItemCodec`] seam the persistence layer uses, so anything
+//! an engine can checkpoint it can also serve over the network, with
+//! one codec definition. A `Label` response of `-1` means noise/unknown,
 //! exactly like [`Engine::label`](crate::engine::Engine::label).
 //!
-//! `k = 0` in `Label`/`LabelBatch` means "use the server's configured
-//! `min_pts`" — clients need not know the engine's parameters.
+//! `k = 0` in `Label`/`LabelBatch`/`LabelAt` means "use the server's
+//! configured `min_pts`" — clients need not know the engine's
+//! parameters. `Tree`/`LabelAt`/`RelabelAt` are the wire surface of
+//! hierarchy-as-a-service: all three pin the latest epoch exactly like
+//! `Label`, and `Tree`/`RelabelAt` never evaluate the metric.
 
 use std::io::{self, Read, Write};
 
+use crate::engine::{ExtractionMode, ExtractionParams};
 use crate::persist::{BinReader, BinWriter, ItemCodec};
 
 /// Hard cap on a single frame's payload; larger lengths are a protocol
@@ -50,6 +67,9 @@ pub const OP_LABEL: u8 = 0x03;
 pub const OP_LABEL_BATCH: u8 = 0x04;
 pub const OP_INGEST: u8 = 0x05;
 pub const OP_REMOVE: u8 = 0x06;
+pub const OP_TREE: u8 = 0x07;
+pub const OP_LABEL_AT: u8 = 0x08;
+pub const OP_RELABEL_AT: u8 = 0x09;
 
 pub const ST_OK: u8 = 0x00;
 pub const ST_BUSY: u8 = 0x01;
@@ -57,6 +77,41 @@ pub const ST_ERR: u8 = 0x02;
 
 fn bad(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Wire code for an extraction mode (see the grammar above).
+pub fn mode_code(mode: ExtractionMode) -> u8 {
+    match mode {
+        ExtractionMode::Stability => 0x00,
+        ExtractionMode::Leaf => 0x01,
+        ExtractionMode::HybridEps => 0x02,
+    }
+}
+
+/// Decode a wire mode code; unknown codes are a protocol error.
+pub fn mode_from_code(code: u8) -> io::Result<ExtractionMode> {
+    match code {
+        0x00 => Ok(ExtractionMode::Stability),
+        0x01 => Ok(ExtractionMode::Leaf),
+        0x02 => Ok(ExtractionMode::HybridEps),
+        c => Err(bad(&format!("unknown extraction mode 0x{c:02x}"))),
+    }
+}
+
+fn write_params(
+    w: &mut BinWriter<Vec<u8>>,
+    params: ExtractionParams,
+) -> io::Result<()> {
+    w.u32(params.mcs as u32)?;
+    w.f64(params.eps)?;
+    w.u8(mode_code(params.mode))
+}
+
+fn read_params(r: &mut BinReader<&[u8]>) -> io::Result<ExtractionParams> {
+    let mcs = r.u32()? as usize;
+    let eps = r.f64()?;
+    let mode = mode_from_code(r.u8()?)?;
+    Ok(ExtractionParams { mcs, eps, mode })
 }
 
 /// Write one `len + payload` frame and flush it.
@@ -118,6 +173,9 @@ pub enum Request<T> {
     LabelBatch { k: usize, items: Vec<T> },
     Ingest { items: Vec<T> },
     Remove { items: Vec<T> },
+    Tree,
+    LabelAt { k: usize, params: ExtractionParams, item: T },
+    RelabelAt { params: ExtractionParams },
 }
 
 fn read_items<T, C: ItemCodec<T>>(
@@ -161,6 +219,17 @@ pub fn decode_request<T, C: ItemCodec<T>>(
         OP_REMOVE => {
             let items = read_items(&mut r, codec)?;
             Ok(Request::Remove { items })
+        }
+        OP_TREE => Ok(Request::Tree),
+        OP_LABEL_AT => {
+            let k = r.u32()? as usize;
+            let params = read_params(&mut r)?;
+            let item = codec.read_item(&mut r)?;
+            Ok(Request::LabelAt { k, params, item })
+        }
+        OP_RELABEL_AT => {
+            let params = read_params(&mut r)?;
+            Ok(Request::RelabelAt { params })
         }
         op => Err(bad(&format!("unknown op 0x{op:02x}"))),
     }
@@ -235,6 +304,32 @@ pub fn encode_remove<T, C: ItemCodec<T>>(
     Ok(w.into_inner())
 }
 
+/// Encode a `Tree` request payload.
+pub fn encode_tree() -> Vec<u8> {
+    vec![OP_TREE]
+}
+
+/// Encode a `LabelAt` request payload (`k = 0`: server-side `min_pts`).
+pub fn encode_label_at<T, C: ItemCodec<T>>(
+    codec: &C,
+    item: &T,
+    k: usize,
+    params: ExtractionParams,
+) -> io::Result<Vec<u8>> {
+    let mut w = BinWriter::new(vec![OP_LABEL_AT]);
+    w.u32(k as u32)?;
+    write_params(&mut w, params)?;
+    codec.write_item(&mut w, item)?;
+    Ok(w.into_inner())
+}
+
+/// Encode a `RelabelAt` request payload.
+pub fn encode_relabel_at(params: ExtractionParams) -> io::Result<Vec<u8>> {
+    let mut w = BinWriter::new(vec![OP_RELABEL_AT]);
+    write_params(&mut w, params)?;
+    Ok(w.into_inner())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,5 +394,53 @@ mod tests {
             decode_request::<Item, _>(&[OP_LABEL, 1, 0, 0, 0], &codec)
                 .is_err()
         );
+    }
+
+    /// Hierarchy-as-a-service frames: parameters round-trip bit-exactly
+    /// (eps travels as IEEE-754 bits, so the server's memo key sees the
+    /// client's exact float), and unknown mode codes are rejected.
+    #[test]
+    fn extraction_frames_round_trip_params_bit_exactly() {
+        let codec = FrameworkCodec;
+        let item = Item::Dense(vec![1.0, 2.0]);
+
+        match decode_request::<Item, _>(&encode_tree(), &codec).unwrap() {
+            Request::Tree => {}
+            other => panic!("got {other:?}"),
+        }
+
+        for mode in [
+            ExtractionMode::Stability,
+            ExtractionMode::Leaf,
+            ExtractionMode::HybridEps,
+        ] {
+            assert_eq!(mode_from_code(mode_code(mode)).unwrap(), mode);
+            // an eps that is not exactly representable in decimal: the
+            // bit pattern must survive the wire unchanged
+            let params = ExtractionParams { mcs: 25, eps: 0.1 + 0.2, mode };
+            let p = encode_label_at(&codec, &item, 4, params).unwrap();
+            match decode_request(&p, &codec).unwrap() {
+                Request::LabelAt { k: 4, params: got, item: it } => {
+                    assert_eq!(got.mcs, params.mcs);
+                    assert_eq!(got.eps.to_bits(), params.eps.to_bits());
+                    assert_eq!(got.mode, mode);
+                    assert_eq!(it, item);
+                }
+                other => panic!("got {other:?}"),
+            }
+            let p = encode_relabel_at(params).unwrap();
+            match decode_request::<Item, _>(&p, &codec).unwrap() {
+                Request::RelabelAt { params: got } => {
+                    assert_eq!(got.eps.to_bits(), params.eps.to_bits());
+                    assert_eq!(got.mode, mode);
+                }
+                other => panic!("got {other:?}"),
+            }
+        }
+        assert!(mode_from_code(0x7F).is_err(), "unknown mode must error");
+        // a RelabelAt header with a bad mode byte behind valid mcs/eps
+        let mut p = encode_relabel_at(ExtractionParams::stability(5)).unwrap();
+        *p.last_mut().unwrap() = 0x7F;
+        assert!(decode_request::<Item, _>(&p, &codec).is_err());
     }
 }

@@ -8,8 +8,9 @@
 //! real request path, still on nothing but [`std::net`]:
 //!
 //! * **Framing** ([`frame`]) — length-prefixed binary request/response
-//!   frames carrying `Ping`, `Stats`, `Label`, `LabelBatch`, `Ingest`
-//!   and `Remove` ops, items encoded through the persistence layer's
+//!   frames carrying `Ping`, `Stats`, `Label`, `LabelBatch`, `Ingest`,
+//!   `Remove` and the hierarchy-as-a-service trio `Tree`/`LabelAt`/
+//!   `RelabelAt`, items encoded through the persistence layer's
 //!   [`ItemCodec`] seam (one codec definition covers checkpoints *and*
 //!   the wire).
 //! * **A fixed handler pool** ([`pool`]) — `threads` workers multiplex
@@ -72,10 +73,17 @@ pub struct ServeConfig {
     /// Bound on accepted-but-unclaimed connections; overflow is refused
     /// with a `Busy` frame instead of piling up.
     pub max_pending_conns: usize,
-    /// Socket timeout for reading the rest of a started frame and for
-    /// writing responses (a stalled client cannot hold a pool thread
-    /// longer than this).
+    /// Socket timeout for reading the rest of a started frame (a client
+    /// that stalls mid-frame cannot hold a pool thread longer than this).
     pub io_timeout: Duration,
+    /// Per-connection **write** deadline, distinct from the read-side
+    /// `io_timeout`: a client that stops *reading* (stalled reader, full
+    /// receive window) blocks the server's response write once the TCP
+    /// buffers fill, and only this deadline frees the pool thread. Reads
+    /// and writes stall for different reasons — a slow sender deserves
+    /// the full frame-read window, while a response to a reader that has
+    /// gone away is already lost — so the two bounds are tuned apart.
+    pub write_timeout: Duration,
     /// Graceful-drain bound: on shutdown, the rest-of-frame read for an
     /// in-flight request is capped by the remaining drain window.
     pub drain_timeout: Duration,
@@ -87,6 +95,7 @@ impl Default for ServeConfig {
             threads: 4,
             max_pending_conns: 64,
             io_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
             drain_timeout: Duration::from_secs(2),
         }
     }
@@ -299,7 +308,8 @@ where
     C: ItemCodec<T>,
 {
     stream.set_nodelay(true).ok();
-    stream.set_write_timeout(Some(shared.cfg.io_timeout))?;
+    stream.set_write_timeout(Some(shared.cfg.write_timeout))?;
+    let mut served = 0u64;
     loop {
         // poll for the next request
         stream.set_read_timeout(Some(FRAME_POLL))?;
@@ -339,6 +349,11 @@ where
         let (resp, close_after) = handle_request(shared, &payload);
         let obs = shared.engine.registry();
         obs.inc(CounterId::ServeRequests);
+        if served > 0 {
+            // connection reuse actually happening (vs one-shot clients)
+            obs.inc(CounterId::ServeKeepaliveRequests);
+        }
+        served += 1;
         obs.record(HistId::Serve, t0.elapsed());
         frame::write_frame(&mut stream, &resp)?;
         if close_after {
@@ -469,6 +484,45 @@ where
             obs.counter(CounterId::ServeRemoveOps).add(removed);
             let mut w = BinWriter::new(vec![frame::ST_OK]);
             w.u64(removed)?;
+            Ok(w.into_inner())
+        }
+        Request::Tree => {
+            // same epoch pin as Label: the nodes returned are exactly the
+            // ids any LabelAt/RelabelAt of this epoch selects among
+            obs.inc(CounterId::ServeTreeOps);
+            let snap = pinned_snapshot(shared);
+            let tree = snap.tree();
+            let mut w = BinWriter::new(vec![frame::ST_OK]);
+            w.u64(snap.epoch)?;
+            w.u32(tree.len() as u32)?;
+            for node in &tree {
+                w.u32(node.id)?;
+                w.u32(node.parent)?;
+                w.f64(node.lambda_birth)?;
+                w.f64(node.stability)?;
+                w.u32(node.size)?;
+            }
+            Ok(w.into_inner())
+        }
+        Request::LabelAt { k, params, item } => {
+            let k = if k == 0 { min_pts } else { k };
+            let label = engine.label_at(&item, k, params);
+            obs.inc(CounterId::ServeRelabelOps);
+            let mut w = BinWriter::new(vec![frame::ST_OK]);
+            w.u32(label as u32)?;
+            Ok(w.into_inner())
+        }
+        Request::RelabelAt { params } => {
+            let relabeling = engine.relabel_at(params);
+            obs.counter(CounterId::ServeRelabelOps)
+                .add(relabeling.clustering.labels.len() as u64);
+            let mut w = BinWriter::new(vec![frame::ST_OK]);
+            w.u64(relabeling.epoch)?;
+            w.u32(relabeling.clustering.n_clusters as u32)?;
+            w.u32(relabeling.clustering.labels.len() as u32)?;
+            for &l in &relabeling.clustering.labels {
+                w.u32(l as u32)?;
+            }
             Ok(w.into_inner())
         }
     }

@@ -652,6 +652,73 @@ fn deletions_flip_only_their_own_shards_stamp() {
     engine.shutdown();
 }
 
+/// ISSUE 9 acceptance: an mcs sweep through `relabel_at` over the pinned
+/// epoch's cached dendrogram is pure tree surgery — the metric-call
+/// odometer must not move — repeating a sweep entry hits the extraction
+/// memo bit-identically, and the merge's own flat cut is one of the memo
+/// entries (so `stability(mcs)` at the merge's mcs costs a lookup).
+#[test]
+fn relabel_sweep_adds_zero_metric_calls_and_memo_hits() {
+    use fishdbc::engine::{ExtractionMode, ExtractionParams};
+
+    let ds = blobs(1200, 77);
+    let engine = spawn_engine(3);
+    for chunk in ds.items.chunks(200) {
+        engine.add_batch(chunk.to_vec());
+    }
+    let snap = engine.cluster(10);
+    let before = engine.stats();
+
+    let sweep = [5usize, 10, 25];
+    let mut first_pass = Vec::new();
+    for &m in &sweep {
+        let r = engine.relabel_at(ExtractionParams::stability(m));
+        assert_eq!(r.epoch, snap.epoch, "sweep must pin the merge's epoch");
+        assert_eq!(r.clustering.labels.len(), snap.clustering.labels.len());
+        first_pass.push(r);
+    }
+    // the merge's own flat cut (stability at mcs 10) is already memoized
+    assert!(first_pass[1].memo_hit, "merge params must hit the memo");
+    assert_eq!(first_pass[1].clustering.labels, snap.clustering.labels);
+
+    // second pass: every entry comes out of the memo, bit-identically
+    for (r1, &m) in first_pass.iter().zip(&sweep) {
+        let r2 = engine.relabel_at(ExtractionParams::stability(m));
+        assert!(r2.memo_hit, "mcs {m} repeat missed the extraction memo");
+        assert_eq!(r2.clustering.labels, r1.clustering.labels);
+        assert_eq!(r2.clustering.n_clusters, r1.clustering.n_clusters);
+    }
+
+    // a different mode at the same mcs is its own memo entry
+    let leaf =
+        ExtractionParams { mcs: 10, eps: 0.0, mode: ExtractionMode::Leaf };
+    let l1 = engine.relabel_at(leaf);
+    assert!(!l1.memo_hit, "leaf at mcs 10 is a distinct memo key");
+    let l2 = engine.relabel_at(leaf);
+    assert!(l2.memo_hit);
+    assert_eq!(l2.clustering.labels, l1.clustering.labels);
+
+    // the acceptance proper: the whole sweep evaluated the metric zero
+    // times, and the pipeline counters saw every extraction
+    let after = engine.stats();
+    assert_eq!(
+        after.metric_calls, before.metric_calls,
+        "re-extraction must be tree surgery only"
+    );
+    assert_eq!(
+        after.pipeline.extractions,
+        before.pipeline.extractions + 8,
+        "every relabel_at lands in the extraction counter"
+    );
+    assert!(
+        after.pipeline.extract_memo_hits >= before.pipeline.extract_memo_hits + 5,
+        "memo hits: {} -> {}",
+        before.pipeline.extract_memo_hits,
+        after.pipeline.extract_memo_hits
+    );
+    engine.shutdown();
+}
+
 #[test]
 fn incompatible_items_rejected_in_caller() {
     let engine = spawn_engine(2);

@@ -322,6 +322,138 @@ fn labels_complete_within_bound_under_heavy_ingest() {
     );
 }
 
+/// ISSUE 9 acceptance: the hierarchy-as-a-service trio over the wire
+/// matches the in-process calls exactly — `Tree` bit-for-bit (floats
+/// travel as IEEE-754 bit patterns), `RelabelAt` label-for-label with a
+/// non-representable eps round-tripping into the *same* extraction memo
+/// key, and `LabelAt` agreeing with `Engine::label_at` (k = 0 resolving
+/// to the server's min_pts).
+#[test]
+fn hierarchy_frames_match_in_process_bit_exactly() {
+    use fishdbc::engine::{ExtractionMode, ExtractionParams};
+
+    let (engine, items) = blob_engine(300, 2);
+    let server = Server::start(
+        Arc::clone(&engine),
+        FrameworkCodec,
+        "127.0.0.1:0",
+        ServeConfig::default(),
+    )
+    .expect("server start");
+    let mut client =
+        Client::connect(server.addr(), FrameworkCodec).expect("connect");
+    client.set_timeout(Some(Duration::from_secs(20))).unwrap();
+
+    // Tree: the wire nodes equal the pinned snapshot's, bit for bit
+    let snap = engine.latest().expect("epoch");
+    let (epoch, got) = client.tree().expect("tree");
+    assert_eq!(epoch, snap.epoch);
+    let want = snap.tree();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.id, w.id);
+        assert_eq!(g.parent, w.parent);
+        assert_eq!(g.lambda_birth.to_bits(), w.lambda_birth.to_bits());
+        assert_eq!(g.stability.to_bits(), w.stability.to_bits());
+        assert_eq!(g.size, w.size);
+    }
+
+    // RelabelAt first over the wire (populating the memo), then the same
+    // params in-process: a memo hit proves the wire-decoded key is
+    // bit-identical (0.1 + 0.2 has no short decimal representation)
+    let params = ExtractionParams {
+        mcs: 10,
+        eps: 0.1 + 0.2,
+        mode: ExtractionMode::HybridEps,
+    };
+    let (re_epoch, n_clusters, labels) =
+        client.relabel_at(params).expect("relabel_at");
+    let again = engine.relabel_at(params);
+    assert!(again.memo_hit, "wire eps decoded to a different memo key");
+    assert_eq!(re_epoch, again.epoch);
+    assert_eq!(n_clusters, again.clustering.n_clusters);
+    assert_eq!(labels, again.clustering.labels);
+
+    // LabelAt: agrees with the in-process probe; k = 0 -> server min_pts
+    let leaf =
+        ExtractionParams { mcs: 5, eps: 0.0, mode: ExtractionMode::Leaf };
+    let got_l = client.label_at(&items[3], 0, leaf).expect("label_at");
+    let k = engine.config().fishdbc.min_pts;
+    assert_eq!(got_l, engine.label_at(&items[3], k, leaf));
+
+    // counter semantics: Tree counts ops, Relabel counts labeled items
+    // (the full relabeling plus the single probe), and requests 2..n on
+    // one connection land in the keep-alive counter
+    let reg = engine.registry();
+    assert_eq!(reg.counter(CounterId::ServeTreeOps).get(), 1);
+    assert_eq!(
+        reg.counter(CounterId::ServeRelabelOps).get(),
+        labels.len() as u64 + 1
+    );
+    assert_eq!(reg.counter(CounterId::ServeKeepaliveRequests).get(), 2);
+    server.shutdown();
+}
+
+/// ISSUE 9 satellite: the response-write deadline. A client that floods
+/// requests but never reads its responses ("stalled reader") eventually
+/// blocks the handler's response write once the TCP buffers fill; the
+/// read-side idle timeout never fires (the pipe stays full of queued
+/// requests), so only `write_timeout` can free the pool thread. With one
+/// handler thread, a second client's ping completing promptly proves it
+/// did.
+#[test]
+fn stalled_reader_hits_write_deadline_and_frees_the_pool_thread() {
+    let (engine, _) = blob_engine(300, 2);
+    let server = Server::start(
+        Arc::clone(&engine),
+        FrameworkCodec,
+        "127.0.0.1:0",
+        ServeConfig {
+            threads: 1,
+            io_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_millis(200),
+            ..Default::default()
+        },
+    )
+    .expect("server start");
+
+    // raw stalled reader: queue thousands of Stats requests (each answer
+    // is a multi-KB document) and never read a byte back
+    let mut stalled =
+        std::net::TcpStream::connect(server.addr()).expect("connect");
+    stalled
+        .set_write_timeout(Some(Duration::from_millis(500)))
+        .unwrap();
+    let req = frame::encode_stats();
+    for _ in 0..20_000 {
+        // errors once the server drops the stalled connection — that is
+        // the point of the test, keep going until then
+        if frame::write_frame(&mut stalled, &req).is_err() {
+            break;
+        }
+    }
+
+    // the single pool thread must come back well before the 30 s read
+    // timeout could possibly have freed it
+    let t0 = Instant::now();
+    let mut c2 =
+        Client::connect(server.addr(), FrameworkCodec).expect("connect");
+    c2.set_timeout(Some(Duration::from_secs(25))).unwrap();
+    let (n, _) = c2.ping().expect("ping while the stalled conn is live");
+    assert_eq!(n, 300);
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "write deadline did not free the handler: {:?}",
+        t0.elapsed()
+    );
+    let reg = engine.registry();
+    assert!(
+        reg.counter(CounterId::ServeKeepaliveRequests).get() > 0,
+        "the stalled connection served requests before wedging"
+    );
+    server.shutdown();
+}
+
 /// Protocol errors answer a well-formed `Err` frame, then the server
 /// closes the connection (no resync guessing on a corrupt stream).
 #[test]
