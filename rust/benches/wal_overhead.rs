@@ -1,0 +1,114 @@
+//! WAL overhead — durable vs volatile ingest (ISSUE 10 acceptance).
+//!
+//! Protocol: ingest n blob points into a plain (volatile) engine, then
+//! into a WAL-journaled engine with an fsync after every batch (the
+//! serve layer's durable ack cadence — the worst case for the WAL).
+//! Reports both throughputs, the overhead ratio, the fsync latency
+//! quantiles, and the cost of one checkpoint over the full state.
+//!
+//! Run: `cargo bench --bench wal_overhead` (optional first arg
+//! overrides n, e.g. `-- 2000` for the CI smoke pass).
+
+use std::time::Instant;
+
+use fishdbc::durable::{Durable, DurabilityConfig};
+use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::obs::{CounterId, HistId};
+use fishdbc::util::bench::emit_bench_json;
+use fishdbc::{datasets, MetricKind};
+
+const CHUNK: usize = 256;
+
+fn config(shards: usize) -> EngineConfig {
+    EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
+        shards,
+        mcs: 10,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let n: usize = std::env::args()
+        .skip(1)
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(20_000);
+    let shards = 4;
+    let dim = 16;
+    let ds = datasets::blobs::generate(n, dim, 10, 42);
+    println!("# wal overhead: blobs n={n}, dim={dim}, {shards} shards, fsync per {CHUNK}-item batch");
+
+    // volatile baseline: the engine as it was before ISSUE 10
+    let engine = Engine::spawn(MetricKind::Euclidean, config(shards));
+    let t0 = Instant::now();
+    for chunk in ds.items.chunks(CHUNK) {
+        engine.add_batch(chunk.to_vec());
+    }
+    engine.flush();
+    let volatile_secs = t0.elapsed().as_secs_f64();
+    let volatile_rate = n as f64 / volatile_secs.max(1e-9);
+    engine.shutdown();
+    println!("volatile ingest: {volatile_secs:8.3}s  ({volatile_rate:9.0} items/s)");
+
+    // durable run: journal + fsync every batch before offering the next
+    let dir = std::env::temp_dir()
+        .join(format!("fishdbc_wal_overhead_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let d = Durable::open_framework(
+        MetricKind::Euclidean,
+        config(shards),
+        DurabilityConfig::new(&dir),
+    )
+    .expect("open WAL");
+    let t1 = Instant::now();
+    for chunk in ds.items.chunks(CHUNK) {
+        d.engine().add_batch(chunk.to_vec());
+        d.sync().expect("WAL fsync");
+    }
+    d.engine().flush();
+    let durable_secs = t1.elapsed().as_secs_f64();
+    let durable_rate = n as f64 / durable_secs.max(1e-9);
+    let overhead = durable_secs / volatile_secs.max(1e-9);
+
+    let reg = d.engine().registry().snapshot();
+    let fsyncs = reg.counter(CounterId::WalFsyncs);
+    let appends = reg.counter(CounterId::WalAppends);
+    let bytes = reg.counter(CounterId::WalBytes);
+    let fsync = reg.hist(HistId::WalFsync);
+    let p50_us = fsync.quantile_ns(0.50) as f64 / 1e3;
+    let p99_us = fsync.quantile_ns(0.99) as f64 / 1e3;
+    println!(
+        "durable  ingest: {durable_secs:8.3}s  ({durable_rate:9.0} items/s)  \
+         {overhead:5.2}x volatile"
+    );
+    println!(
+        "wal: {appends} appends, {bytes} bytes, {fsyncs} fsyncs \
+         (p50 {p50_us:.0}us p99 {p99_us:.0}us)"
+    );
+
+    let t2 = Instant::now();
+    let stats = d.checkpoint().expect("checkpoint");
+    let checkpoint_secs = t2.elapsed().as_secs_f64();
+    println!(
+        "checkpoint: {checkpoint_secs:8.3}s at watermark {} \
+         ({} segments trimmed)",
+        stats.watermark, stats.trimmed_segments
+    );
+    d.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    emit_bench_json("wal_overhead", |w| {
+        w.usize("n", n)
+            .usize("shards", shards)
+            .f64("volatile_items_per_sec", volatile_rate)
+            .f64("durable_items_per_sec", durable_rate)
+            .f64("overhead_x", overhead)
+            .u64("wal_appends", appends)
+            .u64("wal_bytes", bytes)
+            .u64("fsyncs", fsyncs)
+            .f64("fsync_p50_us", p50_us)
+            .f64("fsync_p99_us", p99_us)
+            .f64("checkpoint_secs", checkpoint_secs);
+    });
+}

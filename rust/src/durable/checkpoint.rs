@@ -1,0 +1,654 @@
+//! Checkpointing and crash recovery on top of the [`Wal`].
+//!
+//! # Checkpoint file layout
+//!
+//! A checkpoint is the *unchanged* `FISHENG` engine container (v3, as
+//! written by `Engine::save_with` — fixtures stay byte-identical)
+//! followed by a 24-byte trailer:
+//!
+//! ```text
+//! trailer := "FISHCKPT" cut_seq:u64-le watermark:u64-le
+//! ```
+//!
+//! `cut_seq` is the WAL sequence the serialized state covers: every
+//! record with `seq <= cut_seq` (ingests *and* removals) is fully
+//! reflected in the container, every later record is not. A legacy
+//! FISHENG file (v1/v2/v3, written by plain `save`) simply ends at the
+//! container: [`read_checkpoint_with`] maps EOF-after-container to
+//! `cut_seq = 0`, so old files load byte-identically as "checkpoint
+//! covering nothing in the WAL".
+//!
+//! # Consistent cuts under concurrent ingest
+//!
+//! [`write_checkpoint`] freezes the WAL mutex, which stops id
+//! reservation and removal application, then drives
+//! `Engine::save_cut_with` with `required_watermark` = the frozen WAL
+//! watermark. The cut loop inside the engine flushes shard queues until
+//! the stored id space is dense *and* equal to that watermark — without
+//! the second condition a batch that was journaled but not yet enqueued
+//! could hold the highest ids while the stored prefix still looks dense,
+//! and the cut would silently exclude a batch the WAL believes is below
+//! `cut_seq` (lost on the next trim). Once the cut is pinned (shard
+//! locks held, `next_global` read) the engine calls back `on_cut` and
+//! the WAL mutex is released — serialization of the locked states
+//! proceeds concurrently with new appends.
+//!
+//! # Recovery
+//!
+//! [`Durable::open`] loads the newest published checkpoint (if any),
+//! opens the WAL with torn-tail repair, replays every record with
+//! `seq > cut_seq` through the *normal* ingest path — so conformance vs
+//! `Engine::reference_cluster` holds by construction — and only then
+//! installs the [`DurabilitySink`], so replay never re-journals. Cost is
+//! O(records since the last checkpoint), surfaced by the `wal_replayed`
+//! counter.
+
+use std::cell::Cell;
+use std::fs::{self, File};
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::engine::{Engine, EngineConfig, EngineItem};
+use crate::obs::journal::JournalEvent;
+use crate::obs::{CounterId, HistId};
+use crate::persist::{FrameworkCodec, ItemCodec};
+use crate::{Item, Metric, MetricKind};
+
+use super::wal::{Wal, KIND_INGEST};
+use super::{atomic_replace, bad, DurabilityConfig, DurabilitySink};
+
+/// Trailer magic appended after the FISHENG container.
+pub(crate) const TRAILER_MAGIC: &[u8; 8] = b"FISHCKPT";
+/// The published checkpoint's file name inside the WAL directory.
+pub const CHECKPOINT_FILE: &str = "checkpoint.fisheng";
+/// Scratch name the checkpoint is built under before the atomic publish.
+const CHECKPOINT_TMP: &str = "checkpoint.fisheng.tmp";
+
+/// What one [`write_checkpoint`] accomplished.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckpointStats {
+    /// Ingest watermark (= items ever assigned) the checkpoint covers.
+    pub watermark: u64,
+    /// WAL sequence the checkpoint covers (replay starts after it).
+    pub cut_seq: u64,
+    /// WAL segments reclaimed by the post-publish trim.
+    pub trimmed_segments: usize,
+    /// End-to-end wall time in seconds.
+    pub secs: f64,
+}
+
+/// Serialize a consistent cut of `engine` to a temp file in `dir`,
+/// fsync, atomically publish it as [`CHECKPOINT_FILE`], and trim WAL
+/// segments below the cut. See the module docs for the cut protocol.
+pub fn write_checkpoint<T, M, C>(
+    engine: &Engine<T, M>,
+    wal: &Wal<T, C>,
+    metric_name: &str,
+    dir: &Path,
+) -> io::Result<CheckpointStats>
+where
+    T: EngineItem,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T>,
+{
+    let t0 = Instant::now();
+    let tmp = dir.join(CHECKPOINT_TMP);
+    let dest = dir.join(CHECKPOINT_FILE);
+    let result = (|| -> io::Result<CheckpointStats> {
+        let mut w = BufWriter::new(File::create(&tmp)?);
+
+        // Freeze the WAL: no id reservations, no removal applications.
+        // `required` is the watermark the cut must reach exactly; the
+        // guard is handed to `on_cut`, which records the cut sequence
+        // and releases it the moment the shard locks are pinned.
+        let mut guard = Some(wal.lock());
+        let required = guard.as_ref().expect("guard just set").watermark();
+        let cut_seq = Cell::new(0u64);
+        let watermark = engine.save_cut_with(
+            metric_name,
+            wal.codec(),
+            &mut w,
+            Some(required),
+            |_next_global| {
+                if let Some(g) = guard.take() {
+                    cut_seq.set(g.last_seq());
+                }
+            },
+        )?;
+        drop(guard); // no-op on success; releases the freeze on a pre-cut error
+        debug_assert_eq!(
+            watermark, required,
+            "cut watermark must equal the frozen WAL watermark"
+        );
+
+        w.write_all(TRAILER_MAGIC)?;
+        w.write_all(&cut_seq.get().to_le_bytes())?;
+        w.write_all(&watermark.to_le_bytes())?;
+        let file = w.into_inner().map_err(|e| e.into_error())?;
+        file.sync_all()?;
+        drop(file);
+        atomic_replace(&tmp, &dest)?;
+
+        let trimmed = wal.trim(cut_seq.get());
+        Ok(CheckpointStats {
+            watermark,
+            cut_seq: cut_seq.get(),
+            trimmed_segments: trimmed,
+            secs: t0.elapsed().as_secs_f64(),
+        })
+    })();
+    match result {
+        Ok(stats) => {
+            let obs = engine.registry();
+            obs.inc(CounterId::Checkpoints);
+            obs.record_secs(HistId::Checkpoint, stats.secs);
+            obs.journal.push(obs.uptime_secs(), JournalEvent::CheckpointEnd {
+                items: stats.watermark as usize,
+                watermark: stats.watermark,
+                secs: stats.secs,
+                trimmed_segments: stats.trimmed_segments,
+            });
+            Ok(stats)
+        }
+        Err(e) => {
+            let _ = fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+/// Read `n <= buf.len()` bytes, stopping early only at EOF.
+fn read_up_to<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<usize> {
+    let mut n = 0;
+    while n < buf.len() {
+        match r.read(&mut buf[n..]) {
+            Ok(0) => break,
+            Ok(k) => n += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(n)
+}
+
+/// Load a checkpoint (or any legacy `FISHENG` v1/v2/v3 file — both read
+/// byte-identically through this one entry point). Returns the engine
+/// plus `(cut_seq, watermark)` from the trailer; a legacy file without a
+/// trailer yields `cut_seq = 0` and the engine's own item count.
+pub fn read_checkpoint_with<T, M, C, F, R>(
+    codec: &C,
+    resolve: F,
+    mut r: R,
+) -> io::Result<(Engine<T, M>, u64, u64)>
+where
+    T: EngineItem,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T>,
+    F: FnOnce(&str) -> io::Result<M>,
+    R: Read,
+{
+    // `load_with` consumes exactly the container bytes, leaving `r`
+    // positioned at the trailer (or at EOF for a legacy file)
+    let engine = Engine::load_with(codec, resolve, &mut r)?;
+    let mut magic = [0u8; 8];
+    let n = read_up_to(&mut r, &mut magic)?;
+    if n == 0 {
+        let watermark = engine.len() as u64;
+        return Ok((engine, 0, watermark));
+    }
+    if n < magic.len() || &magic != TRAILER_MAGIC {
+        engine.shutdown();
+        return Err(bad("bad checkpoint trailer magic"));
+    }
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    let cut_seq = u64::from_le_bytes(b);
+    r.read_exact(&mut b)?;
+    let watermark = u64::from_le_bytes(b);
+    if watermark != engine.len() as u64 {
+        engine.shutdown();
+        return Err(bad("checkpoint trailer watermark disagrees with container"));
+    }
+    Ok((engine, cut_seq, watermark))
+}
+
+struct Ctx<T, M, C> {
+    engine: Arc<Engine<T, M>>,
+    wal: Arc<Wal<T, C>>,
+    metric_name: String,
+    dir: PathBuf,
+    /// Auto-checkpoint after this many newly journaled items (0 = off).
+    every: u64,
+    /// Watermark covered by the last completed checkpoint.
+    last_ckpt: AtomicU64,
+    stop: Mutex<bool>,
+    wake: Condvar,
+}
+
+fn run_checkpoint<T, M, C>(ctx: &Ctx<T, M, C>) -> io::Result<CheckpointStats>
+where
+    T: EngineItem,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T>,
+{
+    let stats =
+        write_checkpoint(&ctx.engine, &ctx.wal, &ctx.metric_name, &ctx.dir)?;
+    ctx.last_ckpt.store(stats.watermark, Ordering::Relaxed);
+    Ok(stats)
+}
+
+/// Background policy thread: poll the journaled watermark and checkpoint
+/// once `every` new items have accumulated. Errors are surfaced
+/// (`wal_errors` counter + sticky `last_error`), never panicked on —
+/// mirrors the engine's own `recluster_loop` shape.
+fn checkpoint_loop<T, M, C>(ctx: &Ctx<T, M, C>)
+where
+    T: EngineItem,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T>,
+{
+    loop {
+        {
+            let stop = ctx.stop.lock().unwrap_or_else(|e| e.into_inner());
+            if *stop {
+                return;
+            }
+            let (stop, _) = ctx
+                .wake
+                .wait_timeout(stop, Duration::from_millis(50))
+                .unwrap_or_else(|e| e.into_inner());
+            if *stop {
+                return;
+            }
+        }
+        let watermark = ctx.wal.watermark();
+        let last = ctx.last_ckpt.load(Ordering::Relaxed);
+        if watermark.saturating_sub(last) >= ctx.every {
+            if let Err(e) = run_checkpoint(ctx) {
+                ctx.wal.note_error(&format!("checkpoint failed: {e}"));
+            }
+        }
+    }
+}
+
+/// A durably-persisted engine: WAL-journaled writes, automatic crash
+/// recovery on open, and (optionally) background checkpointing. The
+/// default type instantiation is the CLI's `Item`/`MetricKind`/
+/// [`FrameworkCodec`] stack; any `Engine<T, M>` works with a matching
+/// codec.
+pub struct Durable<T = Item, M = MetricKind, C = FrameworkCodec>
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T> + Send + Sync + 'static,
+{
+    ctx: Arc<Ctx<T, M, C>>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl<T, M, C> Durable<T, M, C>
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T> + Send + Sync + 'static,
+{
+    /// Open (or create) a durable engine under `dcfg.wal_dir`:
+    ///
+    /// 1. load the published checkpoint if one exists (else spawn a
+    ///    fresh engine from `metric` + `config`),
+    /// 2. open the WAL, repairing any torn tail,
+    /// 3. replay every record past the checkpoint's cut through the
+    ///    normal `add_batch`/`remove_batch` path (sink not yet
+    ///    installed — nothing is re-journaled),
+    /// 4. install the WAL as the engine's [`DurabilitySink`] and start
+    ///    the background checkpoint thread (if `checkpoint_every > 0`).
+    ///
+    /// Recovery is idempotent: crashing *during* recovery and reopening
+    /// replays the same suffix onto the same checkpoint.
+    pub fn open<F>(
+        metric: M,
+        metric_name: &str,
+        config: EngineConfig,
+        codec: C,
+        dcfg: DurabilityConfig,
+        resolve: F,
+    ) -> io::Result<Self>
+    where
+        F: FnOnce(&str) -> io::Result<M>,
+    {
+        fs::create_dir_all(&dcfg.wal_dir)?;
+        let ckpt_path = dcfg.wal_dir.join(CHECKPOINT_FILE);
+        let (engine, cut_seq, ckpt_watermark) = if ckpt_path.exists() {
+            let f = BufReader::new(File::open(&ckpt_path)?);
+            read_checkpoint_with(&codec, resolve, f)?
+        } else {
+            (Engine::spawn(metric, config), 0, 0)
+        };
+        let checkpoint_items = engine.len();
+
+        let (wal, records) = Wal::open(
+            &dcfg.wal_dir,
+            codec,
+            dcfg.segment_bytes,
+            cut_seq,
+            ckpt_watermark,
+        )?;
+
+        let mut replayed_batches = 0usize;
+        let mut replayed_items = 0usize;
+        for rec in records {
+            if rec.seq <= cut_seq {
+                continue; // already inside the checkpoint
+            }
+            if rec.kind == KIND_INGEST {
+                let base = rec.watermark_after - rec.items.len() as u64;
+                if base != engine.len() as u64 {
+                    engine.shutdown();
+                    return Err(bad("WAL suffix does not continue this checkpoint"));
+                }
+                replayed_items += rec.items.len();
+                engine.add_batch(rec.items);
+            } else {
+                engine.remove_batch(&rec.items);
+            }
+            engine.registry().inc(CounterId::WalReplayed);
+            replayed_batches += 1;
+        }
+        engine.flush();
+
+        if wal.watermark() != engine.len() as u64 {
+            engine.shutdown();
+            return Err(bad("WAL watermark disagrees with recovered engine"));
+        }
+
+        if checkpoint_items > 0 || replayed_batches > 0 {
+            let obs = engine.registry();
+            obs.journal.push(obs.uptime_secs(), JournalEvent::Recovery {
+                checkpoint_items,
+                replayed_batches,
+                replayed_items,
+            });
+        }
+
+        let engine = Arc::new(engine);
+        let wal = Arc::new(wal);
+        engine.install_durability(Arc::clone(&wal) as Arc<dyn DurabilitySink<T>>);
+
+        let ctx = Arc::new(Ctx {
+            engine,
+            wal,
+            metric_name: metric_name.to_string(),
+            dir: dcfg.wal_dir.clone(),
+            every: dcfg.checkpoint_every,
+            last_ckpt: AtomicU64::new(ckpt_watermark),
+            stop: Mutex::new(false),
+            wake: Condvar::new(),
+        });
+        let thread = if dcfg.checkpoint_every > 0 {
+            let ctx2 = Arc::clone(&ctx);
+            Some(
+                std::thread::Builder::new()
+                    .name("fishdbc-ckpt".into())
+                    .spawn(move || checkpoint_loop(&ctx2))
+                    .expect("spawn checkpoint thread"),
+            )
+        } else {
+            None
+        };
+        Ok(Durable { ctx, thread })
+    }
+
+    /// The recovered (or fresh) engine. Clone the `Arc` to share it with
+    /// a server; keep the `Durable` alive for as long as writes should
+    /// be journaled.
+    pub fn engine(&self) -> &Arc<Engine<T, M>> {
+        &self.ctx.engine
+    }
+
+    /// Ingest watermark after the last journaled record.
+    pub fn watermark(&self) -> u64 {
+        self.ctx.wal.watermark()
+    }
+
+    /// Fsync the WAL (group commit); returns the durable watermark.
+    pub fn sync(&self) -> io::Result<u64> {
+        self.ctx.wal.sync_now()
+    }
+
+    /// Take a checkpoint right now (also resets the background
+    /// accumulation counter).
+    pub fn checkpoint(&self) -> io::Result<CheckpointStats> {
+        run_checkpoint(&self.ctx)
+    }
+
+    fn stop_thread(&mut self) {
+        if let Some(h) = self.thread.take() {
+            *self.ctx.stop.lock().unwrap_or_else(|e| e.into_inner()) = true;
+            self.ctx.wake.notify_all();
+            let _ = h.join();
+        }
+    }
+
+    /// Stop the background thread and fsync the WAL tail, then drop this
+    /// handle's engine `Arc` — when the caller holds no clone of
+    /// [`Durable::engine`], the engine's own `Drop` joins every shard
+    /// worker before this returns. Deliberately *not* a final
+    /// checkpoint: shutdown must stay O(tail), and the WAL suffix
+    /// replays on the next open anyway.
+    pub fn shutdown(mut self) {
+        self.stop_thread();
+        let _ = self.ctx.wal.sync_now();
+    }
+}
+
+impl<T, M, C> Drop for Durable<T, M, C>
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+    C: ItemCodec<T> + Send + Sync + 'static,
+{
+    fn drop(&mut self) {
+        self.stop_thread();
+        let _ = self.ctx.wal.sync_now();
+    }
+}
+
+impl Durable {
+    /// [`Durable::open`] for the framework stack (`Item` under a named
+    /// [`MetricKind`], framed by [`FrameworkCodec`]) — what `fishdbc
+    /// engine --wal-dir` and `fishdbc serve --wal-dir` use.
+    pub fn open_framework(
+        metric: MetricKind,
+        config: EngineConfig,
+        dcfg: DurabilityConfig,
+    ) -> io::Result<Self> {
+        let name = metric.name();
+        Durable::open(metric, name, config, FrameworkCodec, dcfg, |stored| {
+            MetricKind::parse(stored)
+                .ok_or_else(|| bad(&format!("unknown metric `{stored}` in checkpoint")))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fishdbc_ckpt_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn points(n: usize, off: f32) -> Vec<Item> {
+        (0..n)
+            .map(|i| Item::Dense(vec![off + (i % 10) as f32, (i / 10) as f32]))
+            .collect()
+    }
+
+    fn config() -> EngineConfig {
+        EngineConfig { shards: 2, ..Default::default() }
+    }
+
+    fn dcfg(dir: &Path) -> DurabilityConfig {
+        DurabilityConfig::new(dir)
+    }
+
+    #[test]
+    fn fresh_open_checkpoint_reopen_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        {
+            let d = Durable::open_framework(
+                MetricKind::Euclidean,
+                config(),
+                dcfg(&dir),
+            )
+            .unwrap();
+            d.engine().add_batch(points(40, 0.0));
+            d.engine().flush();
+            assert_eq!(d.watermark(), 40, "journaled watermark tracks ingest");
+            let stats = d.checkpoint().unwrap();
+            assert_eq!(stats.watermark, 40);
+            assert!(stats.cut_seq >= 1);
+            // post-checkpoint delta, journaled but not checkpointed
+            d.engine().add_batch(points(10, 100.0));
+            d.sync().unwrap();
+            d.shutdown();
+        }
+        let d =
+            Durable::open_framework(MetricKind::Euclidean, config(), dcfg(&dir))
+                .unwrap();
+        assert_eq!(d.engine().len(), 50, "checkpoint + replayed suffix");
+        // O(Δ): only the post-checkpoint batch replays
+        let replayed = d
+            .engine()
+            .registry()
+            .counter(CounterId::WalReplayed)
+            .get();
+        assert_eq!(replayed, 1);
+        d.shutdown();
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_trims_wal_and_replay_stays_o_delta() {
+        let dir = tmp_dir("trim");
+        let mut dc = dcfg(&dir);
+        dc.segment_bytes = 256; // force rotation so trim has segments to eat
+        {
+            let d = Durable::open_framework(
+                MetricKind::Euclidean,
+                config(),
+                dc.clone(),
+            )
+            .unwrap();
+            for chunk in points(60, 0.0).chunks(5) {
+                d.engine().add_batch(chunk.to_vec());
+            }
+            d.engine().flush();
+            let stats = d.checkpoint().unwrap();
+            assert!(
+                stats.trimmed_segments > 0,
+                "rotated segments below the cut must be reclaimed"
+            );
+            d.shutdown();
+        }
+        let d =
+            Durable::open_framework(MetricKind::Euclidean, config(), dc).unwrap();
+        assert_eq!(d.engine().len(), 60);
+        assert_eq!(
+            d.engine().registry().counter(CounterId::WalReplayed).get(),
+            0,
+            "everything was inside the checkpoint"
+        );
+        d.shutdown();
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_engine_file_reads_as_cut_zero() {
+        let dir = tmp_dir("legacy");
+        // a plain Engine::save file (no trailer) *is* a valid checkpoint
+        let engine: Engine = Engine::spawn(MetricKind::Euclidean, config());
+        engine.add_batch(points(25, 0.0));
+        let mut buf = Vec::new();
+        engine.save(&mut buf).unwrap();
+        engine.shutdown();
+        let (reloaded, cut_seq, watermark) = read_checkpoint_with(
+            &FrameworkCodec,
+            |name| {
+                MetricKind::parse(name)
+                    .ok_or_else(|| bad(&format!("unknown metric `{name}`")))
+            },
+            buf.as_slice(),
+        )
+        .unwrap();
+        assert_eq!(cut_seq, 0, "legacy file covers nothing in the WAL");
+        assert_eq!(watermark, 25);
+        assert_eq!(reloaded.len(), 25);
+        reloaded.shutdown();
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn background_thread_checkpoints_on_watermark_accumulation() {
+        let dir = tmp_dir("bg");
+        let mut dc = dcfg(&dir);
+        dc.checkpoint_every = 20;
+        let d =
+            Durable::open_framework(MetricKind::Euclidean, config(), dc).unwrap();
+        d.engine().add_batch(points(30, 0.0));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if d.engine().registry().counter(CounterId::Checkpoints).get() > 0 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "background checkpoint never fired"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(dir.join(CHECKPOINT_FILE).exists());
+        d.shutdown();
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn removals_survive_recovery() {
+        let dir = tmp_dir("removes");
+        let items = points(30, 0.0);
+        {
+            let d = Durable::open_framework(
+                MetricKind::Euclidean,
+                config(),
+                dcfg(&dir),
+            )
+            .unwrap();
+            d.engine().add_batch(items.clone());
+            let removed = d.engine().remove_batch(&items[..5]);
+            assert_eq!(removed, 5);
+            d.shutdown();
+        }
+        let d =
+            Durable::open_framework(MetricKind::Euclidean, config(), dcfg(&dir))
+                .unwrap();
+        assert_eq!(d.engine().len(), 30, "slots are stable across recovery");
+        assert_eq!(
+            d.engine().deleted_globals().len(),
+            5,
+            "the journaled removal replayed"
+        );
+        d.shutdown();
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

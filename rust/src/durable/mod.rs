@@ -1,0 +1,191 @@
+//! Durable incremental persistence: a write-ahead log of ingest/remove
+//! batches plus background epoch checkpointing, turning `Engine::save`'s
+//! full-state rewrite into an O(Δ)-recovery subsystem.
+//!
+//! # Why this layer exists
+//!
+//! The paper's incremental axis — lightweight updates when few items are
+//! added — stopped at the process boundary: a checkpoint was a monolithic
+//! rewrite of the whole engine, and a crash lost everything since the
+//! last one. That is unacceptable for the serving layer, which acks
+//! ingests over the wire: an acknowledged batch should survive `kill -9`,
+//! not just a graceful drain. The same delta-cost principle that makes
+//! incremental DBSCAN maintenance cheap (Chakraborty & Nagwani,
+//! arXiv 1406.4754) must hold for durability: recovery cost is
+//! O(Δ since the last checkpoint), never O(n).
+//!
+//! # Pieces
+//!
+//! * [`wal::Wal`] — an append-only log of length-prefixed, checksummed
+//!   batch records (through the existing [`ItemCodec`] seam), with
+//!   segment rotation, group-commit fsync, and torn-tail truncation on
+//!   open. It implements [`DurabilitySink`], the seam the engine's write
+//!   path journals through.
+//! * [`checkpoint`] — serializes a consistent cut of the engine into the
+//!   unchanged `FISHENG` container (plus a small trailer recording the
+//!   cut's WAL sequence number), fsyncs, atomically publishes it over the
+//!   previous checkpoint, and trims WAL segments below the cut.
+//! * [`Durable`] — the controller tying both together: open-or-recover,
+//!   replay the WAL suffix through the normal ingest path, install the
+//!   sink, and run the background checkpoint thread.
+//!
+//! # The write-order invariant
+//!
+//! Correct replay needs WAL order to equal global-id order. Both the id
+//! reservation (the engine's `next_global` bump) and the record append
+//! happen under one WAL mutex ([`DurabilitySink::log_add`]), so a record
+//! at sequence `s` always covers ids strictly after every record before
+//! `s`. Removals are journaled *and applied* under the same mutex hold
+//! ([`DurabilitySink::log_remove`]), which is what lets a checkpoint cut
+//! (taken under that mutex) know that every remove at or below its cut
+//! sequence is fully reflected in the serialized state.
+//!
+//! # Durability modes
+//!
+//! An `Ok` ingest ack means, in order of increasing strength:
+//!
+//! * **volatile** (no WAL): ids assigned, batch FIFO-queued — durable
+//!   across a graceful drain only.
+//! * **journaled** (WAL attached, `--durable` off): the record is in the
+//!   OS page cache when the ack is written; a process crash keeps it, a
+//!   power loss may not.
+//! * **durable** (`--durable`): the ack is written only after the
+//!   record's fsync returns — the batch survives `kill -9` and power
+//!   loss, bounded by the disk's own write-cache honesty.
+//!
+//! [`ItemCodec`]: crate::persist::ItemCodec
+
+pub mod checkpoint;
+pub mod wal;
+
+pub use checkpoint::{
+    read_checkpoint_with, write_checkpoint, CheckpointStats, Durable,
+    CHECKPOINT_FILE,
+};
+pub use wal::{Wal, WalRecord};
+
+use std::fs::File;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::obs::Registry;
+
+pub(crate) fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Configuration for the durability subsystem. Deliberately *not* part of
+/// [`EngineConfig`](crate::engine::EngineConfig): that struct is `Copy`,
+/// persisted inside every checkpoint header, and constructed exhaustively
+/// across the codebase — durability is a property of the deployment
+/// (where the log lives), not of the clustering state.
+#[derive(Clone, Debug)]
+pub struct DurabilityConfig {
+    /// Directory holding the WAL segments and the checkpoint file.
+    pub wal_dir: PathBuf,
+    /// Checkpoint automatically after this many newly journaled items
+    /// (0 = only explicit [`Durable::checkpoint`] calls).
+    pub checkpoint_every: u64,
+    /// Rotate the active WAL segment once it grows past this many bytes.
+    pub segment_bytes: u64,
+}
+
+impl DurabilityConfig {
+    /// Defaults for a WAL under `wal_dir`: no automatic checkpoints,
+    /// 64 MiB segments.
+    pub fn new(wal_dir: impl Into<PathBuf>) -> Self {
+        DurabilityConfig {
+            wal_dir: wal_dir.into(),
+            checkpoint_every: 0,
+            segment_bytes: 64 << 20,
+        }
+    }
+}
+
+/// Atomically publish `tmp` at `dest`: rename, then fsync the parent
+/// directory — POSIX only makes the *rename itself* durable once the
+/// directory entry is on disk, so skipping the second step can resurrect
+/// the old file after a power loss. Every file publish in this module
+/// (checkpoints today, any future artifact) goes through here.
+pub fn atomic_replace(tmp: &Path, dest: &Path) -> io::Result<()> {
+    std::fs::rename(tmp, dest)?;
+    sync_parent_dir(dest)
+}
+
+/// Fsync the directory containing `path` (no-op target: directories are
+/// not a syncable handle everywhere, but they are on the platforms the
+/// engine serves from).
+pub(crate) fn sync_parent_dir(path: &Path) -> io::Result<()> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    File::open(parent)?.sync_all()
+}
+
+/// The seam the engine's write path journals through. Installed with
+/// [`Engine::install_durability`](crate::engine::Engine::install_durability);
+/// [`wal::Wal`] is the only production implementation, but tests stub it.
+///
+/// Append failures are *absorbed*, not propagated: by the time a record
+/// can fail, its ids are already assigned, and dropping the in-memory
+/// batch would break the dense-id invariant persistence relies on. They
+/// are surfaced instead — a `wal_errors` counter, the sticky
+/// [`DurabilitySink::last_error`] message (exported via `EngineStats`),
+/// and a failed [`DurabilitySink::sync`] for any ack that depended on the
+/// lost record.
+pub trait DurabilitySink<T>: Send + Sync {
+    /// Late-bind the engine's telemetry registry (called once by
+    /// `install_durability`; appends before binding are simply uncounted).
+    fn bind_registry(&self, _obs: Arc<Registry>) {}
+
+    /// Journal an ingest batch. `assign` is the engine's id-range
+    /// reservation; it runs *under the sink's internal mutex, before the
+    /// append*, so WAL order equals id order and a panicking reservation
+    /// (id space exhausted) never leaves a phantom record. Returns the
+    /// base global id `assign` produced.
+    fn log_add(&self, items: &[T], assign: &mut dyn FnMut(usize) -> u64) -> u64;
+
+    /// Journal a removal batch and run `apply` (the engine's tombstoning
+    /// pass) under the same mutex hold, so a checkpoint cut that covers
+    /// this record's sequence also covers its effects. Returns `apply`'s
+    /// removed count.
+    fn log_remove(&self, items: &[T], apply: &mut dyn FnMut() -> usize) -> usize;
+
+    /// Flush and fsync everything appended so far (group commit). Returns
+    /// the ingest watermark now guaranteed durable; errors if the fsync
+    /// failed *or* any append since the previous sync was lost, so a
+    /// durable ack can never cover a missing record.
+    fn sync(&self) -> io::Result<u64>;
+
+    /// Ingest watermark (global ids assigned) through the last appended
+    /// record.
+    fn watermark(&self) -> u64;
+
+    /// Most recent append/fsync error, if any (sticky; for
+    /// `EngineStats::wal_last_error`).
+    fn last_error(&self) -> Option<String> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_replace_publishes_and_survives_reread() {
+        let dir = std::env::temp_dir()
+            .join(format!("fishdbc_atomic_replace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let dest = dir.join("out.bin");
+        std::fs::write(&dest, b"old").unwrap();
+        let tmp = dir.join("out.bin.tmp");
+        std::fs::write(&tmp, b"new contents").unwrap();
+        atomic_replace(&tmp, &dest).unwrap();
+        assert_eq!(std::fs::read(&dest).unwrap(), b"new contents");
+        assert!(!tmp.exists(), "tmp must be consumed by the rename");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,812 @@
+//! Segmented write-ahead log of ingest/remove batches.
+//!
+//! # On-disk grammar
+//!
+//! A WAL directory holds segments named `wal-<start_seq:016x>.log`
+//! (hex-padded so lexicographic order equals sequence order) plus the
+//! checkpoint file. Each segment is:
+//!
+//! ```text
+//! header  := "FISHWAL\0" version:u32-le start_seq:u64-le      (20 bytes)
+//! record  := len:u32-le checksum:u64-le payload[len]
+//! payload := seq:u64 kind:u8 watermark_after:u64 count:len items...
+//! ```
+//!
+//! `checksum` is [`FastHasher`] over the payload bytes. The payload is
+//! written with the persistence layer's [`BinWriter`] primitives and the
+//! items with the engine's [`ItemCodec`] — the WAL never invents its own
+//! item encoding. `kind` is 0 for an ingest batch, 1 for a removal
+//! batch; `watermark_after` is the engine's ingest watermark (total
+//! global ids assigned) *after* the record, so any single record restores
+//! the watermark during a scan. Sequence numbers start at 1 and increase
+//! by exactly 1 across the whole log (`cut_seq = 0` in a checkpoint
+//! trailer therefore means "nothing checkpointed").
+//!
+//! # Torn tails
+//!
+//! [`Wal::open`] replays the segments in order and stops at the first
+//! invalid record — short frame, over-long length prefix, checksum
+//! mismatch, undecodable payload, or sequence discontinuity. The broken
+//! segment is truncated in place to its last valid record and every later
+//! segment is deleted (they are beyond the logical end of the log). The
+//! result is always the longest valid record *prefix*: a half-written
+//! batch is never replayed, and recovery never panics on torn bytes.
+
+use std::fs::{self, File, OpenOptions};
+use std::hash::Hasher;
+use std::io::{self, BufWriter, Read, Write};
+use std::marker::PhantomData;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::obs::{CounterId, HistId, Registry};
+use crate::persist::{BinReader, BinWriter, ItemCodec};
+use crate::util::fasthash::FastHasher;
+
+use super::{bad, sync_parent_dir, DurabilitySink};
+
+pub(crate) const SEGMENT_MAGIC: &[u8; 8] = b"FISHWAL\0";
+pub(crate) const SEGMENT_VERSION: u32 = 1;
+/// Segment header size: magic + version + start_seq.
+pub(crate) const SEGMENT_HEADER: usize = 8 + 4 + 8;
+/// Frame overhead per record: length prefix + checksum.
+const FRAME_OVERHEAD: u64 = 4 + 8;
+/// Sanity cap on a record's payload — guards scans against a corrupt
+/// length prefix asking for gigabytes.
+const MAX_RECORD: u32 = 1 << 30;
+
+/// Record kind: an ingest batch (ids `watermark_after - count ..
+/// watermark_after`).
+pub const KIND_INGEST: u8 = 0;
+/// Record kind: a removal batch (by item value, like
+/// `Engine::remove_batch`).
+pub const KIND_REMOVE: u8 = 1;
+
+/// One decoded WAL record, as produced by [`Wal::open`]'s scan.
+#[derive(Debug)]
+pub struct WalRecord<T> {
+    /// Log-wide sequence number (first record ever written is 1).
+    pub seq: u64,
+    /// [`KIND_INGEST`] or [`KIND_REMOVE`].
+    pub kind: u8,
+    /// Engine ingest watermark after this record's batch.
+    pub watermark_after: u64,
+    /// The batch itself, decoded through the [`ItemCodec`].
+    pub items: Vec<T>,
+}
+
+pub(crate) struct WalInner {
+    /// Active segment writer — always the file behind `segments.last()`.
+    file: BufWriter<File>,
+    /// Bytes in the active segment, header included (rotation trigger).
+    seg_bytes: u64,
+    /// Live segments, ascending by start seq; the last one is active.
+    segments: Vec<(u64, PathBuf)>,
+    /// Sequence number the next appended record receives.
+    next_seq: u64,
+    /// Ingest watermark after the last appended record.
+    watermark: u64,
+    /// Watermark covered by the last successful fsync.
+    durable_watermark: u64,
+    /// Records appended since the last fsync.
+    dirty: bool,
+    /// An append since the last sync failed — the next [`Wal::sync`]
+    /// must error so no durable ack covers the lost record.
+    append_failed: bool,
+    /// Most recent append/fsync error message (sticky).
+    last_error: Option<String>,
+    /// Engine telemetry, bound at `install_durability` time.
+    obs: Option<Arc<Registry>>,
+}
+
+impl WalInner {
+    /// Sequence of the most recently appended record (0 if none yet).
+    pub(crate) fn last_seq(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    /// Ingest watermark after the most recently appended record.
+    pub(crate) fn watermark(&self) -> u64 {
+        self.watermark
+    }
+}
+
+/// The write-ahead log. See the module docs for the on-disk grammar and
+/// [`DurabilitySink`] for how the engine journals through it.
+pub struct Wal<T, C> {
+    dir: PathBuf,
+    segment_bytes: u64,
+    codec: C,
+    inner: Mutex<WalInner>,
+    _items: PhantomData<fn(T)>,
+}
+
+fn segment_name(start_seq: u64) -> String {
+    format!("wal-{start_seq:016x}.log")
+}
+
+/// Create a fresh segment file: header written, fsynced, and its
+/// directory entry fsynced, so a later `sync_data` on the file alone is
+/// enough to make appended records durable.
+fn create_segment(path: &Path, start_seq: u64) -> io::Result<File> {
+    let mut f = OpenOptions::new()
+        .create(true)
+        .write(true)
+        .truncate(true)
+        .open(path)?;
+    f.write_all(SEGMENT_MAGIC)?;
+    f.write_all(&SEGMENT_VERSION.to_le_bytes())?;
+    f.write_all(&start_seq.to_le_bytes())?;
+    f.sync_all()?;
+    sync_parent_dir(path)?;
+    Ok(f)
+}
+
+fn encode_payload<T, C: ItemCodec<T>>(
+    codec: &C,
+    seq: u64,
+    kind: u8,
+    watermark_after: u64,
+    items: &[T],
+) -> io::Result<Vec<u8>> {
+    let mut w = BinWriter::new(Vec::with_capacity(64 + items.len() * 16));
+    w.u64(seq)?;
+    w.u8(kind)?;
+    w.u64(watermark_after)?;
+    w.len(items.len())?;
+    for item in items {
+        codec.write_item(&mut w, item)?;
+    }
+    Ok(w.into_inner())
+}
+
+/// Decode one payload, requiring full consumption — trailing bytes mean
+/// the frame length lied, which counts as corruption.
+fn decode_payload<T, C: ItemCodec<T>>(
+    codec: &C,
+    payload: &[u8],
+) -> io::Result<WalRecord<T>> {
+    let mut cursor = payload;
+    let mut r = BinReader::new(&mut cursor);
+    let seq = r.u64()?;
+    let kind = r.u8()?;
+    if kind != KIND_INGEST && kind != KIND_REMOVE {
+        return Err(bad("unknown WAL record kind"));
+    }
+    let watermark_after = r.u64()?;
+    let count = r.len()?;
+    let mut items = Vec::with_capacity(count.min(1 << 16));
+    for _ in 0..count {
+        items.push(codec.read_item(&mut r)?);
+    }
+    drop(r);
+    if !cursor.is_empty() {
+        return Err(bad("WAL record payload has trailing bytes"));
+    }
+    Ok(WalRecord { seq, kind, watermark_after, items })
+}
+
+fn checksum(payload: &[u8]) -> u64 {
+    let mut h = FastHasher::default();
+    h.write(payload);
+    h.finish()
+}
+
+/// Outcome of scanning one segment during [`Wal::open`].
+enum SegScan {
+    /// Every record valid through end-of-file.
+    Clean,
+    /// Valid prefix up to `valid_len` bytes, then a torn/corrupt tail.
+    Torn { valid_len: u64 },
+    /// Header unusable (or the file vanished) — the segment carries no
+    /// recoverable records.
+    Dead,
+}
+
+/// Scan one segment, pushing every valid record. `expected_seq` carries
+/// the cross-segment continuity requirement: `None` until the first
+/// record anywhere in the log fixes the base (a trimmed log may start at
+/// any sequence), then strict +1 per record.
+fn scan_segment<T, C: ItemCodec<T>>(
+    path: &Path,
+    codec: &C,
+    name_start: u64,
+    expected_seq: &mut Option<u64>,
+    records: &mut Vec<WalRecord<T>>,
+) -> SegScan {
+    let mut buf = Vec::new();
+    if File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut buf))
+        .is_err()
+    {
+        return SegScan::Dead;
+    }
+    if buf.len() < SEGMENT_HEADER || &buf[..8] != SEGMENT_MAGIC {
+        return SegScan::Dead;
+    }
+    let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let hdr_start = u64::from_le_bytes(buf[12..20].try_into().unwrap());
+    if version != SEGMENT_VERSION || hdr_start != name_start {
+        return SegScan::Dead;
+    }
+    let mut off = SEGMENT_HEADER;
+    loop {
+        if off == buf.len() {
+            return SegScan::Clean;
+        }
+        let valid_len = off as u64;
+        if buf.len() - off < FRAME_OVERHEAD as usize {
+            return SegScan::Torn { valid_len };
+        }
+        let len = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+        let sum = u64::from_le_bytes(buf[off + 4..off + 12].try_into().unwrap());
+        if len > MAX_RECORD {
+            return SegScan::Torn { valid_len };
+        }
+        let body = off + FRAME_OVERHEAD as usize;
+        if buf.len() - body < len as usize {
+            return SegScan::Torn { valid_len };
+        }
+        let payload = &buf[body..body + len as usize];
+        if checksum(payload) != sum {
+            return SegScan::Torn { valid_len };
+        }
+        let rec = match decode_payload(codec, payload) {
+            Ok(rec) => rec,
+            Err(_) => return SegScan::Torn { valid_len },
+        };
+        if let Some(exp) = *expected_seq {
+            if rec.seq != exp {
+                return SegScan::Torn { valid_len };
+            }
+        }
+        *expected_seq = Some(rec.seq + 1);
+        records.push(rec);
+        off = body + len as usize;
+    }
+}
+
+impl<T, C: ItemCodec<T>> Wal<T, C> {
+    /// Open (or create) the WAL under `dir`, recovering the longest valid
+    /// record prefix (see the module docs). `floor_seq`/`floor_watermark`
+    /// come from the checkpoint the caller loaded first: a fully trimmed
+    /// (or fresh) log must continue numbering *after* the checkpoint's
+    /// cut, not restart at 1. Returns the appendable WAL plus every
+    /// recovered record in order.
+    pub fn open(
+        dir: &Path,
+        codec: C,
+        segment_bytes: u64,
+        floor_seq: u64,
+        floor_watermark: u64,
+    ) -> io::Result<(Self, Vec<WalRecord<T>>)> {
+        fs::create_dir_all(dir)?;
+        let mut found: Vec<(u64, PathBuf)> = Vec::new();
+        for entry in fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy().into_owned();
+            if let Some(hex) = name
+                .strip_prefix("wal-")
+                .and_then(|s| s.strip_suffix(".log"))
+            {
+                if let Ok(start) = u64::from_str_radix(hex, 16) {
+                    found.push((start, entry.path()));
+                }
+            }
+        }
+        found.sort_unstable();
+
+        let mut records: Vec<WalRecord<T>> = Vec::new();
+        let mut expected_seq: Option<u64> = None;
+        let mut live: Vec<(u64, PathBuf)> = Vec::new();
+        let mut log_ended = false;
+        for (start, path) in found {
+            if log_ended {
+                // beyond the first corruption everything is unreachable
+                // dead weight — drop it so it can never resurrect
+                let _ = fs::remove_file(&path);
+                continue;
+            }
+            match scan_segment(&path, &codec, start, &mut expected_seq, &mut records) {
+                SegScan::Clean => live.push((start, path)),
+                SegScan::Torn { valid_len } => {
+                    let f = OpenOptions::new().write(true).open(&path)?;
+                    f.set_len(valid_len)?;
+                    f.sync_all()?;
+                    live.push((start, path));
+                    log_ended = true;
+                }
+                SegScan::Dead => {
+                    let _ = fs::remove_file(&path);
+                    log_ended = true;
+                }
+            }
+        }
+
+        let next_seq = expected_seq.unwrap_or(1).max(floor_seq + 1);
+        let watermark = records
+            .last()
+            .map(|r| r.watermark_after)
+            .unwrap_or(0)
+            .max(floor_watermark);
+
+        // reopen (or create) the active segment for appending
+        let (file, seg_bytes) = match live.last() {
+            Some((_, path)) => {
+                let f = OpenOptions::new().append(true).open(path)?;
+                let len = f.metadata()?.len();
+                (f, len)
+            }
+            None => {
+                let start = next_seq;
+                let path = dir.join(segment_name(start));
+                let f = create_segment(&path, start)?;
+                live.push((start, path));
+                (f, SEGMENT_HEADER as u64)
+            }
+        };
+
+        let wal = Wal {
+            dir: dir.to_path_buf(),
+            segment_bytes: segment_bytes.max(SEGMENT_HEADER as u64 + 1),
+            codec,
+            inner: Mutex::new(WalInner {
+                file: BufWriter::new(file),
+                seg_bytes,
+                segments: live,
+                next_seq,
+                watermark,
+                durable_watermark: watermark,
+                dirty: false,
+                append_failed: false,
+                last_error: None,
+                obs: None,
+            }),
+            _items: PhantomData,
+        };
+        Ok((wal, records))
+    }
+
+    /// The codec items are framed through (shared with the checkpoint
+    /// writer).
+    pub fn codec(&self) -> &C {
+        &self.codec
+    }
+
+    /// Take the WAL mutex. While held, no ids can be reserved and no
+    /// removal can apply — the checkpoint's consistent cut depends on
+    /// exactly that freeze.
+    pub(crate) fn lock(&self) -> MutexGuard<'_, WalInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record an out-of-band durability error (e.g. a failed checkpoint)
+    /// against this WAL's sticky error + counter.
+    pub(crate) fn note_error(&self, msg: &str) {
+        let mut g = self.lock();
+        self.record_error(&mut g, msg);
+    }
+
+    fn record_error(&self, g: &mut WalInner, msg: &str) {
+        g.last_error = Some(msg.to_string());
+        if let Some(obs) = &g.obs {
+            obs.inc(CounterId::WalErrors);
+        }
+    }
+
+    /// Start a new segment whose first record will be `start_seq`. The
+    /// closing segment is flushed and fsynced first, so [`Wal::sync`]
+    /// only ever needs to touch the active file.
+    fn rotate(&self, g: &mut WalInner, start_seq: u64) -> io::Result<()> {
+        g.file.flush()?;
+        g.file.get_ref().sync_data()?;
+        let path = self.dir.join(segment_name(start_seq));
+        let f = create_segment(&path, start_seq)?;
+        g.file = BufWriter::new(f);
+        g.seg_bytes = SEGMENT_HEADER as u64;
+        g.segments.push((start_seq, path));
+        Ok(())
+    }
+
+    /// Append one record under an already-held lock. Failures are
+    /// absorbed per the [`DurabilitySink`] contract: counted, stickied,
+    /// and fused into the next [`Wal::sync`].
+    fn append_locked(&self, g: &mut WalInner, kind: u8, items: &[T], watermark_after: u64) {
+        let seq = g.next_seq;
+        let result = encode_payload(&self.codec, seq, kind, watermark_after, items)
+            .and_then(|payload| {
+                if g.seg_bytes >= self.segment_bytes {
+                    self.rotate(g, seq)?;
+                }
+                let sum = checksum(&payload);
+                g.file.write_all(&(payload.len() as u32).to_le_bytes())?;
+                g.file.write_all(&sum.to_le_bytes())?;
+                g.file.write_all(&payload)?;
+                Ok(payload.len() as u64)
+            });
+        match result {
+            Ok(payload_len) => {
+                g.seg_bytes += FRAME_OVERHEAD + payload_len;
+                g.next_seq = seq + 1;
+                g.watermark = watermark_after;
+                g.dirty = true;
+                if let Some(obs) = &g.obs {
+                    obs.inc(CounterId::WalAppends);
+                    obs.counter(CounterId::WalBytes)
+                        .add(FRAME_OVERHEAD + payload_len);
+                }
+            }
+            Err(e) => {
+                g.append_failed = true;
+                self.record_error(g, &format!("wal append failed: {e}"));
+            }
+        }
+    }
+
+    fn sync_impl(&self) -> io::Result<u64> {
+        let mut g = self.lock();
+        if g.append_failed {
+            g.append_failed = false;
+            return Err(io::Error::other(
+                "a WAL append since the last sync failed; batch not durable",
+            ));
+        }
+        if !g.dirty {
+            return Ok(g.durable_watermark);
+        }
+        let t0 = Instant::now();
+        let res = g
+            .file
+            .flush()
+            .and_then(|_| g.file.get_ref().sync_data());
+        match res {
+            Ok(()) => {
+                g.dirty = false;
+                g.durable_watermark = g.watermark;
+                if let Some(obs) = &g.obs {
+                    obs.inc(CounterId::WalFsyncs);
+                    obs.record(HistId::WalFsync, t0.elapsed());
+                }
+                Ok(g.durable_watermark)
+            }
+            Err(e) => {
+                self.record_error(&mut g, &format!("wal fsync failed: {e}"));
+                Err(e)
+            }
+        }
+    }
+
+    /// Delete every segment fully covered by a checkpoint at `cut_seq`:
+    /// segment *i* goes once segment *i+1* starts at or below
+    /// `cut_seq + 1` (all of *i*'s records then have `seq <= cut_seq`).
+    /// The active segment always stays. Returns how many were removed.
+    pub fn trim(&self, cut_seq: u64) -> usize {
+        let mut g = self.lock();
+        let mut removed = 0;
+        while g.segments.len() >= 2 && g.segments[1].0 <= cut_seq + 1 {
+            let (_, path) = g.segments.remove(0);
+            let _ = fs::remove_file(&path);
+            removed += 1;
+        }
+        removed
+    }
+
+    /// Live segment count (active included).
+    pub fn n_segments(&self) -> usize {
+        self.lock().segments.len()
+    }
+
+    /// Ingest watermark after the last appended record.
+    pub fn watermark(&self) -> u64 {
+        self.lock().watermark
+    }
+
+    /// Sequence of the most recently appended record (0 if none).
+    pub fn last_seq(&self) -> u64 {
+        self.lock().last_seq()
+    }
+
+    /// See [`DurabilitySink::sync`] (also reachable without the trait in
+    /// scope).
+    pub fn sync_now(&self) -> io::Result<u64> {
+        self.sync_impl()
+    }
+}
+
+impl<T, C> DurabilitySink<T> for Wal<T, C>
+where
+    T: Send + Sync,
+    C: ItemCodec<T> + Send + Sync,
+{
+    fn bind_registry(&self, obs: Arc<Registry>) {
+        self.lock().obs = Some(obs);
+    }
+
+    fn log_add(&self, items: &[T], assign: &mut dyn FnMut(usize) -> u64) -> u64 {
+        let mut g = self.lock();
+        // reserve first: if the id space is exhausted `assign` panics and
+        // no phantom record claiming unassigned ids ever hits the log
+        let base = assign(items.len());
+        debug_assert_eq!(
+            base,
+            g.watermark,
+            "id reservation must continue the journaled watermark"
+        );
+        let after = base + items.len() as u64;
+        self.append_locked(&mut g, KIND_INGEST, items, after);
+        base
+    }
+
+    fn log_remove(&self, items: &[T], apply: &mut dyn FnMut() -> usize) -> usize {
+        let mut g = self.lock();
+        let watermark = g.watermark;
+        self.append_locked(&mut g, KIND_REMOVE, items, watermark);
+        // applied under the same hold: a checkpoint cut covering this
+        // record's seq provably covers its tombstones too
+        apply()
+    }
+
+    fn sync(&self) -> io::Result<u64> {
+        self.sync_impl()
+    }
+
+    fn watermark(&self) -> u64 {
+        self.lock().watermark
+    }
+
+    fn last_error(&self) -> Option<String> {
+        self.lock().last_error.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::FrameworkCodec;
+    use crate::util::proptest;
+    use crate::Item;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fishdbc_wal_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn item(x: f32, y: f32) -> Item {
+        Item::Dense(vec![x, y])
+    }
+
+    fn open(dir: &Path, segment_bytes: u64) -> (Wal<Item, FrameworkCodec>, Vec<WalRecord<Item>>) {
+        Wal::open(dir, FrameworkCodec, segment_bytes, 0, 0).unwrap()
+    }
+
+    /// Append `batches` through the sink seam (so watermark bookkeeping
+    /// matches production) and fsync.
+    fn fill(wal: &Wal<Item, FrameworkCodec>, batches: &[Vec<Item>]) {
+        let mut next = wal.watermark();
+        for b in batches {
+            let mut assign = |n: usize| {
+                let base = next;
+                next += n as u64;
+                base
+            };
+            wal.log_add(b, &mut assign);
+        }
+        wal.sync_now().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_records_in_order() {
+        let dir = tmp_dir("roundtrip");
+        {
+            let (wal, recovered) = open(&dir, 64 << 20);
+            assert!(recovered.is_empty());
+            fill(
+                &wal,
+                &[
+                    vec![item(0.0, 1.0), item(2.0, 3.0)],
+                    vec![item(4.0, 5.0)],
+                ],
+            );
+            let mut apply = || 1usize;
+            wal.log_remove(&[item(0.0, 1.0)], &mut apply);
+            wal.sync_now().unwrap();
+        }
+        let (wal, recovered) = open(&dir, 64 << 20);
+        assert_eq!(recovered.len(), 3);
+        assert_eq!(recovered[0].seq, 1);
+        assert_eq!(recovered[0].kind, KIND_INGEST);
+        assert_eq!(recovered[0].watermark_after, 2);
+        assert_eq!(recovered[0].items, vec![item(0.0, 1.0), item(2.0, 3.0)]);
+        assert_eq!(recovered[1].watermark_after, 3);
+        assert_eq!(recovered[2].kind, KIND_REMOVE);
+        assert_eq!(recovered[2].seq, 3);
+        assert_eq!(recovered[2].watermark_after, 3, "removes keep the watermark");
+        assert_eq!(wal.watermark(), 3);
+        assert_eq!(wal.last_seq(), 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_spreads_records_over_segments_and_trim_reclaims() {
+        let dir = tmp_dir("rotate");
+        let (wal, _) = open(&dir, 128); // tiny budget: rotate almost every record
+        let batches: Vec<Vec<Item>> = (0..20)
+            .map(|i| vec![item(i as f32, -(i as f32))])
+            .collect();
+        fill(&wal, &batches);
+        assert!(wal.n_segments() > 2, "expected rotation to occur");
+        // nothing checkpointed: nothing trimmable
+        assert_eq!(wal.trim(0), 0);
+        // checkpoint at seq 10: every segment fully below it goes away
+        let trimmed = wal.trim(10);
+        assert!(trimmed > 0);
+        drop(wal);
+        let (_, recovered) = open(&dir, 128);
+        // the surviving suffix still contains every record past the cut
+        assert!(recovered.iter().any(|r| r.seq == 11));
+        assert_eq!(recovered.last().unwrap().seq, 20);
+        for w in recovered.windows(2) {
+            assert_eq!(w[1].seq, w[0].seq + 1, "suffix must stay contiguous");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fresh_wal_continues_after_checkpoint_floor() {
+        let dir = tmp_dir("floor");
+        // a checkpoint at cut_seq=7 / watermark=42 with a fully trimmed
+        // log: new records must number from 8 and keep the watermark
+        let (wal, recovered) =
+            Wal::<Item, _>::open(&dir, FrameworkCodec, 64 << 20, 7, 42).unwrap();
+        assert!(recovered.is_empty());
+        assert_eq!(wal.watermark(), 42);
+        let mut assign = |n: usize| {
+            assert_eq!(n, 1);
+            42
+        };
+        wal.log_add(&[item(1.0, 2.0)], &mut assign);
+        assert_eq!(wal.last_seq(), 8);
+        drop(wal);
+        // reopening with the same floor still sees the suffix record
+        let (_, recovered) =
+            Wal::<Item, _>::open(&dir, FrameworkCodec, 64 << 20, 7, 42).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].seq, 8);
+        assert_eq!(recovered[0].watermark_after, 43);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sync_is_idempotent_and_reports_watermark() {
+        let dir = tmp_dir("sync");
+        let (wal, _) = open(&dir, 64 << 20);
+        assert_eq!(wal.sync_now().unwrap(), 0, "empty log syncs to watermark 0");
+        fill(&wal, &[vec![item(1.0, 1.0)]]);
+        assert_eq!(wal.sync_now().unwrap(), 1);
+        assert_eq!(wal.sync_now().unwrap(), 1, "clean log: fast path");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Satellite: random prefix truncation of a valid log recovers the
+    /// longest valid record prefix — never panics, never yields a half
+    /// batch, never resurrects anything past the tear.
+    #[test]
+    fn torn_tail_property_prefix_truncation() {
+        proptest::check("wal_torn_tail", 40, |rng, _case| {
+            let dir = tmp_dir(&format!("torn_{}", rng.below(1 << 30)));
+            let n_batches = 1 + rng.below(8);
+            let batches: Vec<Vec<Item>> = (0..n_batches)
+                .map(|b| {
+                    (0..1 + rng.below(5))
+                        .map(|i| item(b as f32 + i as f32 * 0.25, rng.f32()))
+                        .collect()
+                })
+                .collect();
+            // small segment budget so tears land in any segment
+            let seg_bytes = if rng.bool(0.5) { 96 } else { 64 << 20 };
+            {
+                let (wal, _) = open(&dir, seg_bytes);
+                fill(&wal, &batches);
+            }
+            // record where each segment's valid record boundaries are
+            let (_, all) = open(&dir, seg_bytes);
+            assert_eq!(all.len(), n_batches);
+
+            // truncate a random suffix of a random segment's bytes
+            let mut segs: Vec<PathBuf> = fs::read_dir(&dir)
+                .unwrap()
+                .map(|e| e.unwrap().path())
+                .filter(|p| {
+                    p.file_name()
+                        .unwrap()
+                        .to_string_lossy()
+                        .starts_with("wal-")
+                })
+                .collect();
+            segs.sort();
+            let victim = rng.below(segs.len());
+            let len = fs::metadata(&segs[victim]).unwrap().len();
+            let cut = rng.below(len as usize + 1) as u64;
+            OpenOptions::new()
+                .write(true)
+                .open(&segs[victim])
+                .unwrap()
+                .set_len(cut)
+                .unwrap();
+
+            let (_, recovered) = open(&dir, seg_bytes);
+            // 1. never a half batch: every recovered record is bit-exact
+            //    one of the originals, in order, from the start
+            assert!(recovered.len() <= n_batches);
+            for (i, rec) in recovered.iter().enumerate() {
+                assert_eq!(rec.seq, i as u64 + 1, "prefix must stay contiguous");
+                assert_eq!(rec.items, batches[i], "record {i} must be intact");
+            }
+            // 2. longest valid prefix: everything strictly before the
+            //    damaged segment must survive
+            let (_, check) = open(&dir, seg_bytes);
+            assert_eq!(check.len(), recovered.len(), "reopen is idempotent");
+            let _ = fs::remove_dir_all(&dir);
+        });
+    }
+
+    /// Corrupting bytes mid-record (not just truncating) also tears the
+    /// log at that record, and reopening after the repair-truncation is
+    /// stable.
+    #[test]
+    fn torn_tail_property_bitflip() {
+        proptest::check("wal_bitflip", 30, |rng, _case| {
+            let dir = tmp_dir(&format!("flip_{}", rng.below(1 << 30)));
+            let batches: Vec<Vec<Item>> = (0..4)
+                .map(|b| vec![item(b as f32, 1.0), item(b as f32, 2.0)])
+                .collect();
+            {
+                let (wal, _) = open(&dir, 64 << 20);
+                fill(&wal, &batches);
+            }
+            let seg = dir.join(segment_name(1));
+            let mut bytes = fs::read(&seg).unwrap();
+            // flip one byte somewhere past the header
+            let pos = SEGMENT_HEADER + rng.below(bytes.len() - SEGMENT_HEADER);
+            bytes[pos] ^= 1 << rng.below(8);
+            fs::write(&seg, &bytes).unwrap();
+
+            let (_, recovered) = open(&dir, 64 << 20);
+            assert!(recovered.len() < batches.len(), "a flip must tear the log");
+            for (i, rec) in recovered.iter().enumerate() {
+                assert_eq!(rec.items, batches[i]);
+            }
+            let (_, again) = open(&dir, 64 << 20);
+            assert_eq!(again.len(), recovered.len());
+            let _ = fs::remove_dir_all(&dir);
+        });
+    }
+
+    #[test]
+    fn dead_header_truncates_to_empty_log() {
+        let dir = tmp_dir("deadhdr");
+        {
+            let (wal, _) = open(&dir, 64 << 20);
+            fill(&wal, &[vec![item(1.0, 2.0)]]);
+        }
+        let seg = dir.join(segment_name(1));
+        let mut bytes = fs::read(&seg).unwrap();
+        bytes[0] = b'X'; // destroy the magic
+        fs::write(&seg, &bytes).unwrap();
+        let (wal, recovered) = open(&dir, 64 << 20);
+        assert!(recovered.is_empty(), "a dead header yields no records");
+        // and the log is usable again from scratch
+        fill(&wal, &[vec![item(3.0, 4.0)]]);
+        drop(wal);
+        let (_, recovered) = open(&dir, 64 << 20);
+        assert_eq!(recovered.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

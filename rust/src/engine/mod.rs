@@ -93,6 +93,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::distances::{Counting, Item, Metric, MetricKind};
+use crate::durable::DurabilitySink;
 use crate::fishdbc::{FishdbcParams, FishdbcStats};
 use crate::hdbscan::Clustering;
 use crate::obs::{
@@ -419,6 +420,17 @@ pub struct EngineStats {
     pub merges: u64,
     /// Shared pipeline counters (runs, short-circuits, stage seconds).
     pub pipeline: PipelineStats,
+    /// WAL append/fsync/checkpoint failures so far (0 when no durability
+    /// sink is installed). Non-zero means at least one batch was *not*
+    /// made durable — see [`EngineStats::wal_last_error`].
+    pub wal_errors: u64,
+    /// Highest ingest watermark the WAL has journaled (0 when volatile).
+    /// After a [`crate::durable::DurabilitySink::sync`] this is the
+    /// crash-recovery floor: every id below it replays on restart.
+    pub wal_watermark: u64,
+    /// The most recent WAL/checkpoint error message, if any — surfaced
+    /// here instead of being swallowed so drains and operators see it.
+    pub wal_last_error: Option<String>,
 }
 
 /// Shared engine internals: everything the public handle, the shard
@@ -449,6 +461,11 @@ pub(crate) struct EngineInner<T, M> {
     obs: Arc<Registry>,
     /// Baseline for [`Engine::stats_delta`]'s snapshot-and-diff window.
     window: Mutex<StatsWindow>,
+    /// Write-ahead journaling seam (see [`crate::durable`]): when
+    /// installed, every `add_batch` reserves its ids *through* the sink
+    /// (so WAL order equals id order) and every `remove_batch` applies
+    /// under the sink's mutex. `None` runs the historical volatile path.
+    durability: Mutex<Option<Arc<dyn DurabilitySink<T>>>>,
     /// Shutdown flag + wakeup for the recluster thread.
     stop: Mutex<bool>,
     wake: Condvar,
@@ -526,6 +543,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             merge: Mutex::new(merge_state),
             obs,
             window,
+            durability: Mutex::new(None),
             stop: Mutex::new(false),
             wake: Condvar::new(),
         })
@@ -584,6 +602,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             merge: Mutex::new(merge_state),
             obs,
             window,
+            durability: Mutex::new(None),
             stop: Mutex::new(false),
             wake: Condvar::new(),
         })
@@ -895,6 +914,31 @@ impl<T, M> Engine<T, M> {
         self.inner.deleted_globals()
     }
 
+    /// Attach a durability sink (the WAL): from now on every accepted
+    /// `add_batch`/`remove_batch` is journaled *before* it becomes
+    /// visible to the pipeline. Installed once by
+    /// [`crate::durable::Durable::open`] **after** recovery replay has
+    /// finished, so replayed batches are never re-journaled. The sink is
+    /// handed this engine's registry so WAL metrics land in the same
+    /// scrape.
+    pub fn install_durability(
+        &self,
+        sink: Arc<dyn crate::durable::DurabilitySink<T>>,
+    ) {
+        sink.bind_registry(Arc::clone(&self.inner.obs));
+        *self.inner.durability.lock().unwrap() = Some(sink);
+    }
+
+    /// Fsync the attached WAL, returning the ingest watermark that is
+    /// now durable. `None` when no durability sink is installed (the
+    /// volatile engine); `Some(Err)` when the fsync — or any append
+    /// since the previous sync — failed, meaning the most recent batches
+    /// must NOT be acked as durable.
+    pub fn durability_sync(&self) -> Option<std::io::Result<u64>> {
+        let sink = self.inner.durability.lock().unwrap().clone();
+        sink.map(|s| s.sync())
+    }
+
     /// Shut down, waiting for the recluster thread and every shard worker
     /// to finish outstanding work.
     pub fn shutdown(mut self) {
@@ -1052,6 +1096,18 @@ impl<T, M> EngineInner<T, M> {
     pub(crate) fn deleted_registry(&self) -> &Mutex<FastSet<u32>> {
         &self.deleted
     }
+
+    /// Atomically reserve `n` consecutive global ids, returning the base.
+    /// Panics (without consuming ids) when the u32 id space would
+    /// overflow — the dense-id invariant persistence relies on.
+    fn reserve_ids(&self, n: usize) -> u64 {
+        self.next_global
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                cur.checked_add(n as u64)
+                    .filter(|&next| next <= u32::MAX as u64)
+            })
+            .expect("engine capacity (u32 item ids) exceeded")
+    }
 }
 
 impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
@@ -1119,15 +1175,16 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
     /// them itself and blocks on a full queue (backpressure).
     fn commit_batch(&self, items: Vec<T>, slots_reserved: bool, t_ingest: Instant) {
         let s = self.shards.len();
-        // reserve the id range atomically, rejecting before committing: a
-        // panic here must not consume ids (dense-id invariant)
-        let base = self
-            .next_global
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
-                cur.checked_add(items.len() as u64)
-                    .filter(|&next| next <= u32::MAX as u64)
-            })
-            .expect("engine capacity (u32 item ids) exceeded");
+        // With a durability sink installed, the id reservation runs
+        // inside `log_add`, under the sink's mutex and before the record
+        // append — WAL order provably equals global-id order, which is
+        // what makes replay-in-file-order correct.
+        let sink = self.durability.lock().unwrap().clone();
+        let mut reserve = |n: usize| self.reserve_ids(n);
+        let base = match &sink {
+            Some(sink) => sink.log_add(&items, &mut reserve),
+            None => reserve(items.len()),
+        };
         let n_items = items.len() as u64;
         let mut routed: Vec<Vec<(u32, T)>> = (0..s).map(|_| Vec::new()).collect();
         for (i, item) in items.into_iter().enumerate() {
@@ -1303,6 +1360,11 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
         stats.pipeline.snapshot_bytes_copied = bytes;
         stats.metric_calls = self.metric.calls();
         stats.pipeline.metric_calls = stats.metric_calls;
+        stats.wal_errors = self.obs.counter(CounterId::WalErrors).get();
+        if let Some(sink) = self.durability.lock().unwrap().clone() {
+            stats.wal_watermark = sink.watermark();
+            stats.wal_last_error = sink.last_error();
+        }
         stats
     }
 
@@ -1360,7 +1422,8 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> EngineInner<T, M> {
             .u64("batch_evals", stats.batch_evals)
             .u64("batches", stats.batches)
             .u64("merges", stats.merges)
-            .f64("build_secs", stats.build_secs);
+            .f64("build_secs", stats.build_secs)
+            .u64("wal_watermark", stats.wal_watermark);
         w.obj(Some("bridges"))
             .usize("edges", stats.bridge_edges)
             .u64("insert_edges", stats.bridge_insert_edges)
@@ -1464,6 +1527,26 @@ fn journal_entry_json(w: &mut export::JsonW, e: &JournalEntry) {
         JournalEvent::Save { items } | JournalEvent::Load { items } => {
             w.usize("items", *items);
         }
+        JournalEvent::CheckpointEnd {
+            items,
+            watermark,
+            secs,
+            trimmed_segments,
+        } => {
+            w.usize("items", *items)
+                .u64("watermark", *watermark)
+                .f64("secs", *secs)
+                .usize("trimmed_segments", *trimmed_segments);
+        }
+        JournalEvent::Recovery {
+            checkpoint_items,
+            replayed_batches,
+            replayed_items,
+        } => {
+            w.usize("checkpoint_items", *checkpoint_items)
+                .usize("replayed_batches", *replayed_batches)
+                .usize("replayed_items", *replayed_items);
+        }
     }
     w.end_obj();
 }
@@ -1474,8 +1557,33 @@ impl<T: EngineItem + PartialEq, M: Metric<T> + Clone + 'static> EngineInner<T, M
             return 0;
         }
         // queued inserts become visible to value matching (remove-after-add
-        // within one thread always finds its target)
+        // within one thread always finds its target); the flush runs
+        // *before* the WAL lock so a journaled-but-queued ingest can
+        // drain (workers never touch the WAL — no lock cycle)
         self.flush();
+        let sink = self.durability.lock().unwrap().clone();
+        let total = match &sink {
+            Some(sink) => {
+                let mut apply = || self.apply_remove(items);
+                sink.log_remove(items, &mut apply)
+            }
+            None => self.apply_remove(items),
+        };
+        if total > 0 {
+            self.obs.inc(CounterId::DeletionWindows);
+            self.obs.journal.push(
+                self.obs.uptime_secs(),
+                JournalEvent::DeletionWindow { removed: total },
+            );
+        }
+        total
+    }
+
+    /// Route `items` to their shards and tombstone matches — the
+    /// journal-free body of [`EngineInner::remove_batch`], run under the
+    /// WAL lock when a durability sink is installed so the tombstones
+    /// land in WAL order.
+    fn apply_remove(&self, items: &[T]) -> usize {
         let s = self.shards.len();
         let mut routed: Vec<Vec<&T>> = (0..s).map(|_| Vec::new()).collect();
         for item in items {
@@ -1490,13 +1598,6 @@ impl<T: EngineItem + PartialEq, M: Metric<T> + Clone + 'static> EngineInner<T, M
             if !targets.is_empty() {
                 total += self.remove_from_shard(si, shard, targets);
             }
-        }
-        if total > 0 {
-            self.obs.inc(CounterId::DeletionWindows);
-            self.obs.journal.push(
-                self.obs.uptime_secs(),
-                JournalEvent::DeletionWindow { removed: total },
-            );
         }
         total
     }

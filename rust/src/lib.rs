@@ -103,6 +103,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod datasets;
 pub mod distances;
+pub mod durable;
 pub mod engine;
 pub mod fishdbc;
 pub mod hdbscan;

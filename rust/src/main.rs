@@ -20,6 +20,7 @@
 use fishdbc::cli;
 use fishdbc::coordinator::{Coordinator, CoordinatorConfig};
 use fishdbc::datasets;
+use fishdbc::durable::{Durable, DurabilityConfig};
 use fishdbc::engine::{Engine, EngineConfig, ExtractionMode, ExtractionParams};
 use fishdbc::fishdbc::{Fishdbc, FishdbcParams};
 use fishdbc::hdbscan::exact::{exact_hdbscan, ExactParams};
@@ -37,7 +38,8 @@ const VALUE_KEYS: &[&str] = &[
     "load", "out", "labels-out", "efs", "shards", "bridge-k", "bridge-fanout",
     "bridge-refresh", "churn", "compact-at", "metrics-addr", "stats-json",
     "hold-secs", "addr", "threads", "max-conns", "drain-secs", "preload",
-    "probe-n", "queue-depth", "sweep-mcs", "write-timeout",
+    "probe-n", "queue-depth", "sweep-mcs", "write-timeout", "wal-dir",
+    "checkpoint-every",
 ];
 
 fn main() {
@@ -151,6 +153,15 @@ labels):
                     (v3 container: bridge buffers + cached MSF +
                     tombstone state)
   --load PATH       resume a saved engine state (then add items on top)
+  --wal-dir DIR     durable persistence: journal every batch to a
+                    write-ahead log under DIR and recover automatically
+                    on the next run (checkpoint + WAL-suffix replay); a
+                    final checkpoint is taken before exit
+  --checkpoint-every N  with --wal-dir, also checkpoint in the background
+                    every N newly journaled items (default 0 = only the
+                    final checkpoint)
+  --durable         with --wal-dir, fsync the WAL after every ingest
+                    batch (each batch is crash-durable before the next)
   --quality         external metrics vs the generator labels (fresh runs)
 
 serve options (framed TCP protocol over a live engine; Label/LabelBatch/
@@ -169,7 +180,15 @@ RelabelAt — see src/serve/frame.rs for the wire format):
                     answer Ingest with Busy instead of blocking)
   --preload N       generate + ingest N items from --dataset before
                     binding, then publish an initial epoch (labels work
-                    from the first request)
+                    from the first request; skipped when --wal-dir
+                    recovered a non-empty engine)
+  --wal-dir DIR     journal accepted writes to a WAL under DIR; on
+                    restart the engine recovers (checkpoint + replay)
+                    before binding
+  --checkpoint-every N  background checkpoint period in items (0 = off)
+  --durable         durable acks: Ingest/Remove OK frames are written
+                    only after the batch's WAL record is fsynced — an
+                    acked batch survives kill -9, not just SIGTERM
   --shards/--recluster-every/--metrics-addr/--hold-secs as for `engine`
   --client-probe    be a client instead: connect to --addr, ping, ingest
                     --probe-n items (default 64), label, remove, stats,
@@ -412,42 +431,87 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
         return Err("--churn expects a percentage in [0, 100]".into());
     }
 
-    let (engine, resumed): (Engine, bool) = match args.get("load") {
-        Some(path) => {
-            let e = Engine::load_from_path(path)
-                .map_err(|e| format!("loading engine state {path}: {e}"))?;
-            if *e.metric() != metric {
-                return Err(format!(
-                    "engine state {path} was built with metric {}, but the \
-                     dataset/--metric selects {} — refusing to mix",
-                    e.metric().name(),
-                    metric.name()
-                ));
-            }
-            println!(
-                "resumed engine: {} shards, {} items already indexed \
-                 (state fixes --shards/--ef/--min-pts/--bridge-k/\
-                 --bridge-fanout; those flags are ignored)",
-                e.n_shards(),
-                e.len()
-            );
-            (e, true)
-        }
-        None => (
-            Engine::spawn(metric, EngineConfig {
-                fishdbc: params,
-                shards,
-                mcs,
-                bridge_k,
-                bridge_fanout,
-                queue_depth: 16,
-                recluster_every,
-                bridge_refresh,
-                compact_at,
-            }),
-            false,
-        ),
+    let econfig = EngineConfig {
+        fishdbc: params,
+        shards,
+        mcs,
+        bridge_k,
+        bridge_fanout,
+        queue_depth: 16,
+        recluster_every,
+        bridge_refresh,
+        compact_at,
     };
+    // three ways to an engine: durable (--wal-dir, with automatic
+    // crash recovery), resumed (--load), or fresh
+    let mut durable: Option<Durable> = None;
+    let mut engine_owned: Option<Engine> = None;
+    let mut resumed = false;
+    if let Some(dir) = args.get("wal-dir") {
+        if args.get("load").is_some() {
+            return Err(
+                "--wal-dir recovers from its own checkpoint + WAL; \
+                 combining it with --load is ambiguous"
+                    .into(),
+            );
+        }
+        let mut dcfg = DurabilityConfig::new(dir);
+        dcfg.checkpoint_every = args.u64_or("checkpoint-every", 0)?;
+        let d = Durable::open_framework(metric, econfig, dcfg)
+            .map_err(|e| format!("opening --wal-dir {dir}: {e}"))?;
+        let recovered = d.engine().len();
+        if recovered > 0 {
+            let replayed = d
+                .engine()
+                .registry()
+                .counter(CounterId::WalReplayed)
+                .get();
+            println!(
+                "durable: recovered {recovered} items from {dir} \
+                 ({replayed} WAL records replayed past the checkpoint)"
+            );
+            resumed = true;
+        } else {
+            println!("durable: fresh WAL at {dir}");
+        }
+        durable = Some(d);
+    } else {
+        match args.get("load") {
+            Some(path) => {
+                let e = Engine::load_from_path(path)
+                    .map_err(|e| format!("loading engine state {path}: {e}"))?;
+                if *e.metric() != metric {
+                    return Err(format!(
+                        "engine state {path} was built with metric {}, but the \
+                         dataset/--metric selects {} — refusing to mix",
+                        e.metric().name(),
+                        metric.name()
+                    ));
+                }
+                println!(
+                    "resumed engine: {} shards, {} items already indexed \
+                     (state fixes --shards/--ef/--min-pts/--bridge-k/\
+                     --bridge-fanout; those flags are ignored)",
+                    e.n_shards(),
+                    e.len()
+                );
+                engine_owned = Some(e);
+                resumed = true;
+            }
+            None => engine_owned = Some(Engine::spawn(metric, econfig)),
+        }
+    }
+    let engine: &Engine = match &durable {
+        Some(d) => d.engine().as_ref(),
+        None => engine_owned.as_ref().expect("one handle is always set"),
+    };
+    // --durable: fsync the WAL after every ingest batch, so each batch
+    // is crash-durable before the next is offered (the CLI analogue of
+    // the serve layer's durable ack mode)
+    let sync_every_batch = args.flag("durable");
+    if sync_every_batch && durable.is_none() {
+        return Err("--durable needs --wal-dir".into());
+    }
 
     // serve /metrics before the first batch, so the endpoint is live
     // concurrently with ingest and recluster traffic from the start
@@ -482,6 +546,11 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
     let mut seen_epoch = 0u64;
     for batch in ds.items.chunks(chunk) {
         engine.add_batch(batch.to_vec());
+        if sync_every_batch {
+            if let Some(Err(e)) = engine.durability_sync() {
+                return Err(format!("WAL fsync failed: {e}"));
+            }
+        }
         // the background serving loop publishes epochs while we ingest
         if engine.config().recluster_every > 0 {
             if let Some(snap) = engine.latest() {
@@ -759,7 +828,24 @@ fn cmd_engine(args: &cli::Args) -> Result<(), String> {
         std::thread::sleep(std::time::Duration::from_secs_f64(hold));
     }
     drop(metrics);
-    engine.shutdown();
+    match durable {
+        Some(d) => {
+            // final checkpoint: the next open replays only what lands
+            // after this run (keeps recovery O(Δ) across CLI sessions)
+            match d.checkpoint() {
+                Ok(s) => println!(
+                    "durable: checkpoint at watermark {} ({} WAL segments \
+                     trimmed, {:.3}s)",
+                    s.watermark, s.trimmed_segments, s.secs
+                ),
+                Err(e) => eprintln!("durable: final checkpoint failed: {e}"),
+            }
+            d.shutdown();
+        }
+        None => engine_owned
+            .expect("owned when not durable")
+            .shutdown(),
+    }
     Ok(())
 }
 
@@ -883,22 +969,57 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         (metric, Vec::new())
     };
 
-    let engine: std::sync::Arc<Engine> =
-        std::sync::Arc::new(Engine::spawn(metric, EngineConfig {
-            fishdbc: params,
-            shards,
-            mcs,
-            bridge_k: args.usize_or("bridge-k", 3)?,
-            bridge_fanout: args
-                .usize_or("bridge-fanout", shards.saturating_sub(1).max(1))?,
-            queue_depth: args.usize_or("queue-depth", 16)?,
-            recluster_every: args.usize_or("recluster-every", 0)?,
-            bridge_refresh: args.usize_or("bridge-refresh", 0)?,
-            compact_at: args
-                .f64_or("compact-at", EngineConfig::default().compact_at)?,
-        }));
+    let econfig = EngineConfig {
+        fishdbc: params,
+        shards,
+        mcs,
+        bridge_k: args.usize_or("bridge-k", 3)?,
+        bridge_fanout: args
+            .usize_or("bridge-fanout", shards.saturating_sub(1).max(1))?,
+        queue_depth: args.usize_or("queue-depth", 16)?,
+        recluster_every: args.usize_or("recluster-every", 0)?,
+        bridge_refresh: args.usize_or("bridge-refresh", 0)?,
+        compact_at: args
+            .f64_or("compact-at", EngineConfig::default().compact_at)?,
+    };
+    // --wal-dir: recover (checkpoint + WAL replay) and journal every
+    // accepted write from here on; the Durable handle must outlive the
+    // server so the sink stays installed for the whole serving life
+    let durable: Option<Durable> = match args.get("wal-dir") {
+        Some(dir) => {
+            let mut dcfg = DurabilityConfig::new(dir);
+            dcfg.checkpoint_every = args.u64_or("checkpoint-every", 0)?;
+            let d = Durable::open_framework(metric, econfig, dcfg)
+                .map_err(|e| format!("opening --wal-dir {dir}: {e}"))?;
+            let recovered = d.engine().len();
+            if recovered > 0 {
+                let replayed = d
+                    .engine()
+                    .registry()
+                    .counter(CounterId::WalReplayed)
+                    .get();
+                println!(
+                    "durable: recovered {recovered} items from {dir} \
+                     ({replayed} WAL records replayed past the checkpoint)"
+                );
+            } else {
+                println!("durable: fresh WAL at {dir}");
+            }
+            Some(d)
+        }
+        None => None,
+    };
+    if args.flag("durable") && durable.is_none() {
+        return Err("--durable needs --wal-dir".into());
+    }
+    let engine: std::sync::Arc<Engine> = match &durable {
+        Some(d) => std::sync::Arc::clone(d.engine()),
+        None => std::sync::Arc::new(Engine::spawn(metric, econfig)),
+    };
 
-    if !preload_items.is_empty() {
+    // a recovered engine already has its items — re-preloading would
+    // double-ingest them (and re-journal the duplicates)
+    if !preload_items.is_empty() && engine.is_empty() {
         for chunk in preload_items.chunks(512) {
             engine.add_batch(chunk.to_vec());
         }
@@ -908,6 +1029,11 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
             engine.len(),
             snap.epoch,
             snap.clustering.n_clusters
+        );
+    } else if !preload_items.is_empty() {
+        println!(
+            "preload: skipped ({} recovered items take precedence)",
+            engine.len()
         );
     }
 
@@ -932,6 +1058,7 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         write_timeout: std::time::Duration::from_secs_f64(
             args.f64_or("write-timeout", 5.0)?,
         ),
+        durable: args.flag("durable"),
         ..ServeConfig::default()
     };
     let server =
@@ -961,11 +1088,18 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
     }
 
     let report = server.shutdown();
+    // final WAL sync: whatever the drain flushed is also made durable
+    // (errors surface on the exit line, not silently swallowed)
+    if let Some(Err(e)) = engine.durability_sync() {
+        eprintln!("serve: final WAL sync failed: {e}");
+    }
+    let es = engine.stats();
     let reg = engine.registry();
     let c = |id: CounterId| reg.counter(id).get();
     println!(
         "serve: drained cleanly | accepted_ids={} requests={} labels={} \
-         ingested={} removed={} busy={} errors={} dropped_conns={}",
+         ingested={} removed={} busy={} errors={} dropped_conns={} \
+         wal_watermark={} wal_errors={}",
         engine.len(),
         c(CounterId::ServeRequests),
         c(CounterId::ServeLabelOps),
@@ -974,8 +1108,17 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         c(CounterId::ServeBusy),
         c(CounterId::ServeErrors),
         report.dropped_pending_conns,
+        es.wal_watermark,
+        es.wal_errors,
     );
+    if let Some(err) = es.wal_last_error {
+        eprintln!("serve: last WAL error: {err}");
+    }
     drop(metrics);
+    drop(engine);
+    if let Some(d) = durable {
+        d.shutdown();
+    }
     Ok(())
 }
 

@@ -106,6 +106,30 @@ pub enum JournalEvent {
     Save { items: usize },
     /// The engine was restored from a checkpoint.
     Load { items: usize },
+    /// The durability layer published a checkpoint (consistent cut →
+    /// fsync → atomic rename → WAL trim).
+    CheckpointEnd {
+        /// Items covered by the published cut.
+        items: usize,
+        /// Ingest watermark the checkpoint covers (replay resumes after
+        /// the matching WAL sequence).
+        watermark: u64,
+        /// End-to-end checkpoint wall time in seconds.
+        secs: f64,
+        /// WAL segments reclaimed by the post-publish trim.
+        trimmed_segments: usize,
+    },
+    /// The engine was rebuilt at open: checkpoint load + WAL-suffix
+    /// replay (`Durable::open`). `replayed_batches` is the O(Δ) recovery
+    /// cost the `wal_replayed` counter also witnesses.
+    Recovery {
+        /// Items restored from the checkpoint container.
+        checkpoint_items: usize,
+        /// WAL records (ingest + remove) replayed past the cut.
+        replayed_batches: usize,
+        /// Items inside the replayed ingest records.
+        replayed_items: usize,
+    },
 }
 
 impl JournalEvent {
@@ -120,6 +144,8 @@ impl JournalEvent {
             JournalEvent::SnapshotRefresh { .. } => "snapshot_refresh",
             JournalEvent::Save { .. } => "save",
             JournalEvent::Load { .. } => "load",
+            JournalEvent::CheckpointEnd { .. } => "checkpoint_end",
+            JournalEvent::Recovery { .. } => "recovery",
         }
     }
 }

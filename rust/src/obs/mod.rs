@@ -54,6 +54,13 @@
 //! | `fishdbc_serve_requests_total` | counter | frames | framed requests handled by `fishdbc serve` (per-op splits: `serve_{ping,stats,label,ingest,remove}_ops_total`) |
 //! | `fishdbc_serve_busy_total` | counter | frames | requests refused with `Busy` (bounded-queue backpressure made visible) |
 //! | `fishdbc_serve_request_seconds` | histogram | s | per-request network-serving latency, decode to encode |
+//! | `fishdbc_wal_appends_total` / `fishdbc_wal_bytes_total` | counter | records / bytes | write-ahead-log journaling volume (durability layer) |
+//! | `fishdbc_wal_fsyncs_total` | counter | calls | WAL group-commit fsyncs (one per durable ack round) |
+//! | `fishdbc_wal_errors_total` | counter | failures | WAL append/fsync/checkpoint failures (sticky detail in `EngineStats::wal_last_error`) |
+//! | `fishdbc_wal_replayed_total` | counter | records | records replayed at recovery — the O(Δ since checkpoint) witness |
+//! | `fishdbc_checkpoints_total` | counter | files | durable checkpoints published (atomic rename + WAL trim) |
+//! | `fishdbc_wal_fsync_seconds` | histogram | s | per-call WAL fsync latency (the durable-ack tax) |
+//! | `fishdbc_checkpoint_seconds` | histogram | s | end-to-end checkpoint wall time |
 //!
 //! All histogram samples are recorded in nanoseconds internally and
 //! exported in seconds (Prometheus convention). Quantiles are
@@ -169,6 +176,18 @@ metric_enum! {
             "Requests refused with a Busy frame (saturated queue or pool)";
         ServeErrors => "serve_errors",
             "Requests answered with an Err frame (bad op, codec mismatch)";
+        WalAppends => "wal_appends",
+            "Batch records appended to the write-ahead log";
+        WalBytes => "wal_bytes",
+            "Bytes appended to the write-ahead log (frames included)";
+        WalFsyncs => "wal_fsyncs",
+            "WAL group-commit fsync calls";
+        WalErrors => "wal_errors",
+            "WAL append/fsync/checkpoint failures (see EngineStats::wal_last_error)";
+        WalReplayed => "wal_replayed",
+            "WAL records replayed during crash recovery (O(delta) witness)";
+        Checkpoints => "checkpoints",
+            "Durable checkpoints published (WAL-trimming epoch snapshots)";
     }
 }
 
@@ -217,6 +236,10 @@ metric_enum! {
             "Span: chunked copy-on-write shard snapshot capture round";
         Compaction => "span_compaction_seconds",
             "Span: one shard compaction (survivor replay)";
+        WalFsync => "wal_fsync_seconds",
+            "Per-call WAL group-commit fsync latency";
+        Checkpoint => "checkpoint_seconds",
+            "End-to-end durable checkpoint wall time (cut to publish + trim)";
     }
 }
 

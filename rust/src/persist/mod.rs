@@ -666,6 +666,39 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
         codec: &C,
         w: W,
     ) -> io::Result<()> {
+        self.save_cut_with(metric_name, codec, w, None, |_| ()).map(|_| ())
+    }
+
+    /// [`Engine::save_with`] with the cut protocol exposed — the seam the
+    /// durability layer's checkpointer drives
+    /// ([`write_checkpoint`](crate::durable::write_checkpoint)):
+    ///
+    /// * `required_watermark` — when `Some(w)`, the cut additionally
+    ///   waits until the stored id space reaches exactly `w` ids. A
+    ///   WAL-journaled batch that has reserved the *highest* ids but is
+    ///   not yet enqueued leaves the stored prefix dense (the plain
+    ///   `max_gid == total` check passes spuriously), and a checkpoint
+    ///   cut there would exclude a batch the WAL places at or below its
+    ///   cut sequence — lost forever after the post-checkpoint trim.
+    ///   Pinning the cut to the caller's frozen watermark closes that
+    ///   hole. The caller must guarantee no ids *past* `w` get assigned
+    ///   until `on_cut` runs (the checkpointer holds the WAL mutex), or
+    ///   the loop may never converge.
+    /// * `on_cut(next_global)` — fired exactly once, after the shard
+    ///   locks are pinned and the cut's id count is known but before any
+    ///   bytes are written. The checkpointer uses it to record the cut's
+    ///   WAL sequence and release the WAL freeze, so ingest resumes
+    ///   while serialization streams out under the shard read locks.
+    ///
+    /// Returns the number of ids the written cut covers.
+    pub fn save_cut_with<C: ItemCodec<T>, W: Write, F: FnOnce(u64)>(
+        &self,
+        metric_name: &str,
+        codec: &C,
+        w: W,
+        required_watermark: Option<u64>,
+        on_cut: F,
+    ) -> io::Result<u64> {
         // Consistent cut under concurrent ingest: barrier, lock every
         // shard, then verify the locked states form a dense id space
         // 0..total (a batch routed between the barrier and the locks
@@ -702,7 +735,9 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
                 })
                 .max()
                 .map_or(0, |m| m as usize + 1);
-            if max_gid == total {
+            if max_gid == total
+                && required_watermark.map_or(true, |r| total as u64 == r)
+            {
                 break guards;
             }
             drop(guards);
@@ -713,6 +748,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
                 (g.f.len() + g.removed_globals.len() - g.f.n_tombstoned()) as u64
             })
             .sum();
+        on_cut(next_global);
 
         let mut w = BinWriter::new(w);
         w.w.write_all(ENGINE_MAGIC)?;
@@ -792,7 +828,7 @@ impl<T: EngineItem, M: Metric<T> + Clone + 'static> Engine<T, M> {
             obs.uptime_secs(),
             crate::obs::JournalEvent::Save { items: next_global as usize },
         );
-        Ok(())
+        Ok(next_global)
     }
 
     /// Reload an engine previously written by [`Engine::save_with`] (v2,

@@ -87,6 +87,13 @@ pub struct ServeConfig {
     /// Graceful-drain bound: on shutdown, the rest-of-frame read for an
     /// in-flight request is capped by the remaining drain window.
     pub drain_timeout: Duration,
+    /// Durable ack mode: when true (and the engine has a WAL installed
+    /// via [`crate::durable::Durable::open`]), an `Ingest`/`Remove` `OK`
+    /// frame is written only after the batch's WAL record is fsynced —
+    /// an acked batch then survives `kill -9`, not just graceful drain.
+    /// A failed fsync answers `Err` instead of a hollow `OK`. No-op on a
+    /// volatile engine.
+    pub durable: bool,
 }
 
 impl Default for ServeConfig {
@@ -97,6 +104,7 @@ impl Default for ServeConfig {
             io_timeout: Duration::from_secs(5),
             write_timeout: Duration::from_secs(5),
             drain_timeout: Duration::from_secs(2),
+            durable: false,
         }
     }
 }
@@ -413,6 +421,25 @@ where
     }
 }
 
+/// The durable-ack gate for mutating ops: when [`ServeConfig::durable`]
+/// is set and the engine carries a WAL, fsync it before the `OK` frame
+/// goes out. An engine without a sink (volatile deployment) passes
+/// through — `durable: true` then degrades to the graceful-drain
+/// guarantee, exactly as documented on the flag.
+fn durable_barrier<T, M, C>(shared: &Shared<T, M, C>) -> io::Result<()>
+where
+    T: EngineItem + PartialEq,
+    M: Metric<T> + Clone + 'static,
+{
+    if !shared.cfg.durable {
+        return Ok(());
+    }
+    match shared.engine.durability_sync() {
+        None | Some(Ok(_)) => Ok(()),
+        Some(Err(e)) => Err(e),
+    }
+}
+
 fn run_request<T, M, C>(
     shared: &Shared<T, M, C>,
     payload: &[u8],
@@ -468,6 +495,11 @@ where
             let n = items.len() as u64;
             match engine.try_add_batch(items) {
                 Ok(()) => {
+                    // durable mode: the OK frame is the fsync receipt —
+                    // a failed sync surfaces as an Err frame, never a
+                    // hollow ack (the record may exist but is not known
+                    // durable, so the client must retry/alert)
+                    durable_barrier(shared)?;
                     obs.counter(CounterId::ServeIngestOps).add(n);
                     let mut w = BinWriter::new(vec![frame::ST_OK]);
                     w.u64(n)?;
@@ -481,6 +513,7 @@ where
         }
         Request::Remove { items } => {
             let removed = engine.remove_batch(&items) as u64;
+            durable_barrier(shared)?;
             obs.counter(CounterId::ServeRemoveOps).add(removed);
             let mut w = BinWriter::new(vec![frame::ST_OK]);
             w.u64(removed)?;

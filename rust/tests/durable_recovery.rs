@@ -1,0 +1,219 @@
+//! Durable-persistence integration tests (ISSUE 10 acceptance): a
+//! checkpoint plus WAL-suffix replay must rebuild an engine that is
+//! partition-identical to `Engine::reference_cluster` over the surviving
+//! set — including a deletion journaled *after* the checkpoint — with
+//! O(Δ) replay cost witnessed by the `wal_replayed` counter, and the
+//! pre-WAL FISHENG fixtures must keep loading byte-identically through
+//! the new checkpoint reader.
+
+use std::path::{Path, PathBuf};
+
+use fishdbc::datasets;
+use fishdbc::distances::{Item, MetricKind};
+use fishdbc::durable::{read_checkpoint_with, Durable, DurabilityConfig};
+use fishdbc::engine::{Engine, EngineConfig};
+use fishdbc::fishdbc::FishdbcParams;
+use fishdbc::metrics::canonical_labels as canon;
+use fishdbc::obs::CounterId;
+use fishdbc::persist::FrameworkCodec;
+
+fn blobs(n: usize, seed: u64) -> datasets::Dataset {
+    datasets::blobs::generate(n, 32, 5, seed)
+}
+
+fn config(shards: usize) -> EngineConfig {
+    EngineConfig {
+        fishdbc: FishdbcParams { min_pts: 10, ef: 20, ..Default::default() },
+        shards,
+        mcs: 10,
+        ..Default::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fishdbc_recovery_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn open(dir: &Path) -> Durable {
+    Durable::open_framework(
+        MetricKind::Euclidean,
+        config(3),
+        DurabilityConfig::new(dir),
+    )
+    .unwrap()
+}
+
+fn fixture(name: &str) -> Vec<u8> {
+    let path = format!("{}/tests/data/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+/// The tentpole acceptance: ingest, checkpoint mid-stream, keep
+/// ingesting and delete a scattered subset (both journaled past the
+/// cut), stop *without* a final checkpoint, reopen. Recovery must
+/// replay exactly the post-checkpoint window (O(Δ), not O(n)), rebuild
+/// the same surviving set, and the recovered merge must be
+/// partition-identical to the from-scratch reference over survivors
+/// with every deleted id labeling -1.
+#[test]
+fn checkpoint_plus_replay_matches_reference_with_mid_window_deletion() {
+    let dir = tmp_dir("midwindow");
+    let ds = blobs(900, 17);
+    let victims: Vec<Item> = ds.items.iter().step_by(9).cloned().collect();
+
+    let (labels_before, deleted) = {
+        let d = open(&dir);
+        let e = d.engine();
+        for chunk in ds.items[..600].chunks(128) {
+            e.add_batch(chunk.to_vec());
+        }
+        e.flush();
+        let stats = d.checkpoint().unwrap();
+        assert_eq!(stats.watermark, 600, "cut covers the journaled prefix");
+
+        // the post-checkpoint window: more ingest + a deletion, living
+        // only in the WAL suffix until the next checkpoint
+        for chunk in ds.items[600..].chunks(128) {
+            e.add_batch(chunk.to_vec());
+        }
+        assert_eq!(e.remove_batch(&victims), victims.len());
+        d.sync().unwrap();
+
+        let deleted = e.deleted_globals();
+        let snap = e.cluster(10);
+        let labels = snap.clustering.labels.clone();
+        d.shutdown(); // deliberately no final checkpoint
+        (labels, deleted)
+    };
+
+    let d = open(&dir);
+    let e = d.engine();
+    assert_eq!(e.len(), 900, "checkpoint + replayed suffix");
+    assert_eq!(e.deleted_globals(), deleted, "the deletion replayed");
+
+    // O(Δ): only the records past the cut replay — the post-checkpoint
+    // ingest batches plus the one removal record
+    let replayed = e.registry().counter(CounterId::WalReplayed).get();
+    let suffix_batches = ds.items[600..].chunks(128).count() as u64 + 1;
+    assert!(replayed >= 1, "the suffix must actually replay");
+    assert!(
+        replayed <= suffix_batches,
+        "replayed {replayed} records, but only {suffix_batches} were \
+         journaled after the checkpoint"
+    );
+
+    let snap = e.cluster(10);
+    assert_eq!(snap.clustering.labels.len(), 900, "slots are stable");
+    assert_eq!(snap.n_deleted, victims.len());
+    for gid in &deleted {
+        assert_eq!(snap.clustering.labels[*gid as usize], -1);
+    }
+    // conformance by construction: replay used the normal ingest path
+    let reference = e.reference_cluster(10);
+    assert_eq!(reference.n_items, snap.n_items);
+    assert_eq!(snap.n_msf_edges, reference.n_msf_edges);
+    assert_eq!(
+        canon(&snap.clustering.labels),
+        canon(&reference.clustering.labels),
+        "recovered merge != from-scratch reference merge"
+    );
+    // and the recovered partition is the pre-crash partition
+    assert_eq!(canon(&snap.clustering.labels), canon(&labels_before));
+    d.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A WAL-only history (no checkpoint was ever taken) recovers purely by
+/// replay, and a second reopen after a checkpoint replays nothing —
+/// the two ends of the O(Δ) spectrum.
+#[test]
+fn full_replay_without_checkpoint_then_none_after_one() {
+    let dir = tmp_dir("spectrum");
+    let ds = blobs(300, 23);
+    {
+        let d = open(&dir);
+        for chunk in ds.items.chunks(64) {
+            d.engine().add_batch(chunk.to_vec());
+        }
+        d.sync().unwrap();
+        d.shutdown();
+    }
+    {
+        let d = open(&dir);
+        assert_eq!(d.engine().len(), 300);
+        let replayed =
+            d.engine().registry().counter(CounterId::WalReplayed).get();
+        assert_eq!(
+            replayed,
+            ds.items.chunks(64).count() as u64,
+            "no checkpoint: every journaled batch replays"
+        );
+        d.checkpoint().unwrap();
+        d.shutdown();
+    }
+    let d = open(&dir);
+    assert_eq!(d.engine().len(), 300);
+    assert_eq!(
+        d.engine().registry().counter(CounterId::WalReplayed).get(),
+        0,
+        "everything is inside the checkpoint: nothing replays"
+    );
+    d.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The checked-in FISHENG v1/v2 fixtures (and a freshly saved v3
+/// buffer) must read through `read_checkpoint_with` exactly as they do
+/// through `Engine::load`: trailer-less files are "checkpoints covering
+/// nothing in the WAL" (`cut_seq = 0`), and re-saving the engine loaded
+/// either way produces the same bytes.
+#[test]
+fn legacy_fisheng_fixtures_read_byte_identically() {
+    let resolve = |m: &str| {
+        MetricKind::parse(m).ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unknown metric {m:?}"),
+            )
+        })
+    };
+    // the two checked-in containers, plus a current (v3) save
+    let mut cases: Vec<(String, Vec<u8>)> = vec![
+        ("fisheng_v1.bin".into(), fixture("fisheng_v1.bin")),
+        ("fisheng_v2.bin".into(), fixture("fisheng_v2.bin")),
+    ];
+    {
+        let engine: Engine = Engine::spawn(MetricKind::Euclidean, config(2));
+        engine.add_batch(blobs(40, 31).items);
+        engine.flush();
+        let mut v3 = Vec::new();
+        engine.save(&mut v3).unwrap();
+        engine.shutdown();
+        cases.push(("fresh v3 save".into(), v3));
+    }
+    for (name, bytes) in cases {
+        let via_load = Engine::load(bytes.as_slice()).unwrap();
+        let n = via_load.len();
+        let mut want = Vec::new();
+        via_load.save(&mut want).unwrap();
+        via_load.shutdown();
+
+        let (via_ckpt, cut_seq, watermark): (Engine, u64, u64) =
+            read_checkpoint_with(&FrameworkCodec, resolve, bytes.as_slice())
+                .unwrap();
+        assert_eq!(cut_seq, 0, "{name}: no trailer means cut 0");
+        assert_eq!(watermark as usize, n, "{name}: watermark is the count");
+        assert_eq!(via_ckpt.len(), n);
+        let mut got = Vec::new();
+        via_ckpt.save(&mut got).unwrap();
+        via_ckpt.shutdown();
+        assert_eq!(
+            got, want,
+            "{name}: the checkpoint reader changed the container bytes"
+        );
+    }
+}
